@@ -1,0 +1,47 @@
+//! Diversity analysis (Figure 4): why sample diversity decides whether a
+//! dataset meets the asynch-SGBDT requirements.
+//!
+//! Prints Ω, Δ, ρ and the expected Q′ density across sampling rates for
+//! the paper's two illustrative corpora plus the three benchmark
+//! datasets' synthetic stand-ins.
+//!
+//! ```bash
+//! cargo run --release --example diversity_analysis
+//! ```
+
+use asgbdt::data::stats::diversity_report;
+use asgbdt::data::synthetic;
+
+fn main() {
+    let datasets = vec![
+        ("fig4a: 3 species x {10k,20k,30k}", synthetic::fig4_low_diversity(1)),
+        ("fig4b: 14k singletons", synthetic::fig4_high_diversity(1)),
+        ("realsim-like (4k)", synthetic::realsim_like(4_000, 2)),
+        ("higgs-like (4k)", synthetic::higgs_like(4_000, 2)),
+        ("e2006-like (2k)", synthetic::e2006_like(2_000, 2)),
+    ];
+    let rates = [0.000005f64, 0.001, 0.01, 0.1, 0.5, 0.8];
+
+    for (name, ds) in &datasets {
+        println!("\n=== {name} ===");
+        println!(
+            "rows {}  species {}  diversity ratio {:.4}",
+            ds.n_rows(),
+            ds.n_species(),
+            ds.n_species() as f64 / ds.n_rows() as f64
+        );
+        println!(
+            "{:>10} {:>8} {:>8} {:>10} {:>8}",
+            "rate", "delta", "rho", "q'density", "omega"
+        );
+        for &r in &rates {
+            let rep = diversity_report(ds, r);
+            println!(
+                "{:>10} {:>8.4} {:>8.4} {:>10.5} {:>8}",
+                r, rep.delta, rep.rho, rep.qprime_density, rep.omega
+            );
+        }
+    }
+    println!("\nReading: low-diversity sets keep Q' dense (delta→1) even at tiny");
+    println!("rates — high ρ/Δ — so they are sensitive to asynchrony (paper §V.B).");
+}

@@ -1,0 +1,66 @@
+//! Speedup study (Figure 10): simulate the paper's 32-machine cluster for
+//! all three systems, plus a real-thread asynch-SGBDT scaling measurement
+//! on this machine.
+//!
+//! ```bash
+//! cargo run --release --example speedup_sim
+//! ```
+
+use asgbdt::config::TrainConfig;
+use asgbdt::coordinator::train_async;
+use asgbdt::data::synthetic;
+use asgbdt::simulator::{eq13_upper_bound, speedup_sweep, ClusterSpec, PhaseTimes};
+
+fn main() -> anyhow::Result<()> {
+    // ---- simulated cluster (the paper's Era testbed substitute)
+    for (name, times) in [
+        ("real-sim", PhaseTimes::realsim_like()),
+        ("E2006-log1p", PhaseTimes::e2006_like()),
+    ] {
+        println!("\n=== simulated cluster: {name} ===");
+        println!(
+            "Eq.13 worker upper bound: {:.1}",
+            eq13_upper_bound(&times, &ClusterSpec::new(32))
+        );
+        println!(
+            "{:<14} {:>7} {:>9} {:>9}",
+            "system", "workers", "speedup", "tau_mean"
+        );
+        for row in speedup_sweep(&times, &[1, 2, 4, 8, 16, 32], 200, 0.15, 42) {
+            println!(
+                "{:<14} {:>7} {:>9.2} {:>9.2}",
+                row.system.as_str(),
+                row.workers,
+                row.speedup,
+                row.mean_staleness
+            );
+        }
+    }
+
+    // ---- real threads on this machine (like the paper's validity runs)
+    println!("\n=== real threads (asynch-SGBDT, this machine) ===");
+    let ds = synthetic::realsim_like(4_000, 11);
+    let mut base_tps = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = workers;
+        cfg.n_trees = 60;
+        cfg.step_length = 0.1;
+        cfg.tree.max_leaves = 32;
+        cfg.max_bins = 32;
+        cfg.eval_every = 60;
+        let rep = train_async(&cfg, &ds, None)?;
+        let tps = rep.trees_per_sec();
+        if workers == 1 {
+            base_tps = tps;
+        }
+        println!(
+            "  workers {:>2}: {:>6.2} trees/s  speedup {:>5.2}  staleness mean {:.2}",
+            workers,
+            tps,
+            tps / base_tps,
+            rep.staleness.mean()
+        );
+    }
+    Ok(())
+}

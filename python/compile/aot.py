@@ -1,0 +1,113 @@
+"""AOT emitter: lower the L2 model functions to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(``rust/src/runtime/``) loads the text with ``HloModuleProto::from_text_file``
+and compiles it on the PJRT CPU client. Python is never on the request path.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts are emitted per batch-size *bucket*; the Rust side pads each
+request to the smallest bucket >= N. Padding rows carry weight 0 and are
+exact no-ops in every model function.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.grad_hess import BLOCK
+from compile.model import MODEL_FNS, example_args
+
+#: Default bucket sizes (samples). Chosen so the smallest covers unit-test
+#: datasets and the largest covers the paper-scale synthetic corpora
+#: (real-sim ~72k rows, Higgs subsets) with <2x padding waste.
+DEFAULT_BUCKETS = (4096, 16384, 65536, 131072, 262144)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, n: int) -> str:
+    """Lower MODEL_FNS[name] at bucket size n to HLO text."""
+    fn, _doc = MODEL_FNS[name]
+    lowered = jax.jit(fn).lower(*example_args(n))
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: str, buckets=DEFAULT_BUCKETS, names=None, verbose=True) -> dict:
+    """Emit all artifacts + manifest.json into out_dir. Returns manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    names = list(names or MODEL_FNS.keys())
+    entries = []
+    for name in names:
+        fn, doc = MODEL_FNS[name]
+        for n in buckets:
+            text = lower_entry(name, n)
+            fname = f"{name}_{n}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as fh:
+                fh.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "doc": doc,
+                    "n": n,
+                    "block": BLOCK,
+                    "file": fname,
+                    "inputs": ["f", "y", "w"],
+                    "dtype": "f32",
+                }
+            )
+            if verbose:
+                print(f"  wrote {fname} ({len(text)} chars)", file=sys.stderr)
+    manifest = {
+        "format": "hlo-text",
+        "version": 1,
+        "buckets": list(buckets),
+        "block": BLOCK,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated bucket sizes (multiples of %d)" % BLOCK,
+    )
+    ap.add_argument("--only", default=None, help="emit a single model fn")
+    args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    names = [args.only] if args.only else None
+    manifest = emit(args.out, buckets=buckets, names=names)
+    print(
+        f"emitted {len(manifest['entries'])} artifacts "
+        f"({len(manifest['buckets'])} buckets) to {args.out}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""L1 — Pallas kernel: fused logistic gradient / hessian / loss.
+
+This is the compute hot-spot of asynch-SGBDT's "produce the target"
+sub-step (server side, Algorithm 3 step 4): given the forest's prediction
+vector ``F``, labels ``y`` and per-sample stochastic weights
+``w_i = m'_i = sum_j Q_ij / R_ij`` (Eq. 10 of the paper), produce
+
+    g_i    = w_i * l'(y_i, F_i)   = w_i * 2 (p_i - y_i)
+    h_i    = w_i * l''(y_i, F_i)  = w_i * 4 p_i (1 - p_i)
+    loss_i = w_i * l(y_i, F_i)
+
+with the paper's logistic loss (Section III.A):
+
+    p = e^F / (e^F + e^-F) = sigmoid(2F)
+    l(y, F) = -y log p - (1 - y) log(1 - p)
+            = y softplus(-2F) + (1 - y) softplus(2F)
+
+Padding rows carry ``w = 0`` and therefore contribute exactly zero to every
+output, which is what lets the Rust runtime pad batches to fixed bucket
+sizes.
+
+The kernel is purely element-wise and streams over the sample axis in
+``BLOCK``-sized tiles via ``BlockSpec`` — on a real TPU this is a
+VPU/bandwidth-bound kernel (3 input + 3 output f32 blocks = 24 KiB of VMEM
+per grid step at BLOCK=1024; no MXU involvement). ``interpret=True`` is
+mandatory here: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+interpret mode lowers the kernel to plain HLO so the same artifact runs
+everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Minimum tile size along the sample axis. All AOT bucket sizes are
+# multiples of this, so the grid always divides evenly and no masking is
+# needed inside the kernel (padding is handled by w == 0).
+BLOCK = 1024
+
+# Interpret-mode pallas_call lowers the grid to an XLA while-loop whose
+# body updates the full output via dynamic-update-slice — O(n) per grid
+# step, i.e. O(n * grid) total. Capping the grid at GRID_TARGET steps by
+# scaling the block with n keeps the lowered module linear in n
+# (EXPERIMENTS.md §Perf, L1 item). On a real TPU the same cap keeps VMEM
+# working sets well under budget (7 f32 arrays x 32k lanes = 896 KiB at
+# the largest bucket).
+GRID_TARGET = 8
+
+
+def pick_block(n: int) -> int:
+    """Block size for a padded length n: grid <= GRID_TARGET, block >= BLOCK."""
+    if n % BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of BLOCK={BLOCK}")
+    block = max(BLOCK, n // GRID_TARGET)
+    # ensure the block divides n (n and BLOCK are powers-of-two multiples)
+    while n % block != 0:
+        block += BLOCK
+    return block
+
+
+def _softplus(x):
+    """Numerically stable softplus: max(x, 0) + log1p(exp(-|x|))."""
+    return jnp.maximum(x, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(x)))
+
+
+def _grad_hess_loss_kernel(f_ref, y_ref, w_ref, g_ref, h_ref, loss_ref):
+    """Element-wise fused body. All refs are (BLOCK,) f32 tiles."""
+    f = f_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+
+    # p = sigmoid(2F); express grad/hess in terms of p.
+    p = jax.nn.sigmoid(2.0 * f)
+    g_ref[...] = w * (2.0 * (p - y))
+    h_ref[...] = w * (4.0 * p * (1.0 - p))
+    # loss = y*softplus(-2F) + (1-y)*softplus(2F), stable for |F| >> 1.
+    two_f = 2.0 * f
+    loss_ref[...] = w * (y * _softplus(-two_f) + (1.0 - y) * _softplus(two_f))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def grad_hess_loss_pallas(f, y, w, *, block: int = BLOCK):
+    """Run the fused kernel over length-N f32 vectors (N % block == 0).
+
+    Returns ``(g, h, loss_elem)`` — per-element outputs; reductions are done
+    by the caller (L2) so XLA can fuse them into the same pass.
+    """
+    n = f.shape[0]
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _grad_hess_loss_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(f, y, w)
+
+
+def _eval_kernel(f_ref, y_ref, w_ref, loss_ref, err_ref):
+    """Evaluation pass: per-element weighted loss and 0/1 error."""
+    f = f_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+    two_f = 2.0 * f
+    loss_ref[...] = w * (y * _softplus(-two_f) + (1.0 - y) * _softplus(two_f))
+    # predicted class = 1 iff F > 0; mismatch indicator, weighted.
+    pred = (f > 0.0).astype(jnp.float32)
+    err_ref[...] = w * jnp.abs(pred - y)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def eval_pallas(f, y, w, *, block: int = BLOCK):
+    """Fused evaluation kernel: returns (loss_elem, err_elem)."""
+    n = f.shape[0]
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _eval_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(f, y, w)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fused logistic grad/hess/loss kernel.
+
+This module intentionally contains no Pallas: it is the ground truth the
+kernel (and, transitively, the Rust fallback in ``rust/src/loss/``) is
+validated against. Keep the math here boring and obviously correct.
+
+Paper loss (Section III.A): p = e^F/(e^F + e^-F) = sigmoid(2F),
+l(y, F) = -y log p - (1-y) log(1-p), y in {0, 1}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_prob(f):
+    """p = sigmoid(2F)."""
+    return jax.nn.sigmoid(2.0 * f)
+
+
+def ref_loss_elem(f, y, w):
+    """Per-element weighted logistic loss, numerically stable."""
+    two_f = 2.0 * f
+    sp_pos = jnp.logaddexp(0.0, two_f)   # softplus(2F)
+    sp_neg = jnp.logaddexp(0.0, -two_f)  # softplus(-2F)
+    return w * (y * sp_neg + (1.0 - y) * sp_pos)
+
+
+def ref_grad_elem(f, y, w):
+    """g = w * 2(p - y)."""
+    return w * 2.0 * (ref_prob(f) - y)
+
+
+def ref_hess_elem(f, y, w):
+    """h = w * 4 p (1-p)."""
+    p = ref_prob(f)
+    return w * 4.0 * p * (1.0 - p)
+
+
+def ref_grad_hess_loss(f, y, w):
+    """Oracle counterpart of kernels.grad_hess.grad_hess_loss_pallas."""
+    return ref_grad_elem(f, y, w), ref_hess_elem(f, y, w), ref_loss_elem(f, y, w)
+
+
+def ref_err_elem(f, y, w):
+    """Weighted 0/1 error, threshold F > 0."""
+    pred = (f > 0.0).astype(jnp.float32)
+    return w * jnp.abs(pred - y)
+
+
+def ref_autodiff_grad(f, y, w):
+    """Gradient of the summed loss via jax autodiff — independent check
+    that the closed-form g equals d(sum loss)/dF."""
+    return jax.grad(lambda ff: jnp.sum(ref_loss_elem(ff, y, w)))(f)

@@ -1,0 +1,71 @@
+"""L2 — the JAX "model" of asynch-SGBDT's produce-target sub-step.
+
+For a GBDT the paper's compute graph on the server hot path is not a neural
+forward/backward but the stochastic-gradient construction of Eq. 10:
+
+    L'_random = [m'_1 l'_1, ..., m'_N l'_N]
+
+plus the loss/error reductions used for convergence monitoring. Both are
+expressed here as jitted JAX functions that call the L1 Pallas kernel, so
+that kernel and reductions lower into one HLO module per batch-size bucket
+(``aot.py``). The Rust runtime executes these artifacts via PJRT; Python is
+never on the training path.
+
+All functions take fixed-shape padded f32 vectors; padding rows carry
+weight 0 and are exact no-ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.grad_hess import (
+    BLOCK,
+    eval_pallas,
+    grad_hess_loss_pallas,
+    pick_block,
+)
+
+
+def grad_hess_loss(f, y, w):
+    """Server produce-target step.
+
+    Args:
+      f: (N,) f32 — forest predictions F_i (padded).
+      y: (N,) f32 — labels in {0, 1} (padding value irrelevant).
+      w: (N,) f32 — stochastic weights m'_i = sum_j Q_ij / R_ij; 0 on padding.
+
+    Returns (tuple of 4):
+      g: (N,) f32 — stochastic gradient target  m'_i * l'_i.
+      h: (N,) f32 — stochastic hessian          m'_i * l''_i.
+      loss_sum: () f32 — sum_i w_i * l(y_i, F_i).
+      w_sum:    () f32 — sum_i w_i (normaliser for the mean loss).
+    """
+    g, h, loss_elem = grad_hess_loss_pallas(f, y, w, block=pick_block(f.shape[0]))
+    return g, h, jnp.sum(loss_elem), jnp.sum(w)
+
+
+def eval_metrics(f, y, w):
+    """Held-out evaluation: weighted logloss + 0/1 error sums.
+
+    Returns (loss_sum, err_sum, w_sum), all scalar f32.
+    """
+    loss_elem, err_elem = eval_pallas(f, y, w, block=pick_block(f.shape[0]))
+    return jnp.sum(loss_elem), jnp.sum(err_elem), jnp.sum(w)
+
+
+def example_args(n: int):
+    """ShapeDtypeStructs for lowering at bucket size ``n``."""
+    if n % BLOCK != 0:
+        raise ValueError(f"bucket n={n} must be a multiple of BLOCK={BLOCK}")
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return (spec, spec, spec)
+
+
+#: The artifact catalogue: name -> (callable, doc). aot.py lowers each entry
+#: once per bucket size.
+MODEL_FNS = {
+    "grad_hess": (grad_hess_loss, "produce-target: (f,y,w) -> (g,h,loss_sum,w_sum)"),
+    "eval": (eval_metrics, "evaluation: (f,y,w) -> (loss_sum,err_sum,w_sum)"),
+}

@@ -1,0 +1,190 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the stack.
+
+Everything downstream (the AOT artifacts the Rust server executes, and the
+Rust fallback implementation) is validated against ``kernels.ref``; this
+file pins the Pallas kernel to that oracle across shapes, value ranges and
+adversarial inputs, with hypothesis driving the sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.grad_hess import (
+    BLOCK,
+    eval_pallas,
+    grad_hess_loss_pallas,
+)
+from compile.kernels import ref
+
+ATOL = 1e-5
+RTOL = 1e-5
+
+
+def _rand(n, seed, scale=5.0):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(0.0, scale, n).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    w = rng.exponential(1.0, n).astype(np.float32)
+    return jnp.asarray(f), jnp.asarray(y), jnp.asarray(w)
+
+
+def assert_matches_ref(f, y, w):
+    g, h, loss = grad_hess_loss_pallas(f, y, w)
+    rg, rh, rloss = ref.ref_grad_hess_loss(f, y, w)
+    np.testing.assert_allclose(g, rg, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(h, rh, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(loss, rloss, atol=ATOL, rtol=RTOL)
+
+
+# ------------------------------------------------------------------ basic
+
+
+class TestGradHessBasics:
+    def test_single_block(self):
+        assert_matches_ref(*_rand(BLOCK, 0))
+
+    def test_multi_block(self):
+        assert_matches_ref(*_rand(4 * BLOCK, 1))
+
+    def test_zero_logits(self):
+        n = BLOCK
+        f = jnp.zeros(n)
+        y = jnp.ones(n)
+        w = jnp.ones(n)
+        g, h, loss = grad_hess_loss_pallas(f, y, w)
+        # p = 0.5: g = 2(0.5-1) = -1, h = 4*0.25 = 1, loss = log 2
+        np.testing.assert_allclose(g, -np.ones(n), atol=ATOL)
+        np.testing.assert_allclose(h, np.ones(n), atol=ATOL)
+        np.testing.assert_allclose(loss, np.full(n, np.log(2.0)), atol=ATOL)
+
+    def test_padding_rows_are_exact_noops(self):
+        f, y, w = _rand(2 * BLOCK, 2)
+        w = w.at[BLOCK:].set(0.0)
+        g, h, loss = grad_hess_loss_pallas(f, y, w)
+        assert float(jnp.abs(g[BLOCK:]).max()) == 0.0
+        assert float(jnp.abs(h[BLOCK:]).max()) == 0.0
+        assert float(jnp.abs(loss[BLOCK:]).max()) == 0.0
+
+    def test_extreme_logits_are_finite(self):
+        # |F| up to 80 — naive exp overflows f32 at ~88; stable softplus must
+        # stay finite and the saturated grads must be ±2w / 0.
+        n = BLOCK
+        f = jnp.concatenate([jnp.full(n // 2, 80.0), jnp.full(n // 2, -80.0)])
+        y = jnp.concatenate([jnp.zeros(n // 2), jnp.ones(n // 2)])
+        w = jnp.full(n, 3.0)
+        g, h, loss = grad_hess_loss_pallas(f, y, w)
+        assert bool(jnp.isfinite(g).all())
+        assert bool(jnp.isfinite(h).all())
+        assert bool(jnp.isfinite(loss).all())
+        # saturated: p -> 1 (F=80, y=0): g -> +2w; p -> 0 (F=-80, y=1): g -> -2w
+        np.testing.assert_allclose(g[: n // 2], 6.0, atol=1e-3)
+        np.testing.assert_allclose(g[n // 2 :], -6.0, atol=1e-3)
+        np.testing.assert_allclose(h, 0.0, atol=1e-3)
+
+    def test_rejects_non_multiple_of_block(self):
+        f = jnp.zeros(BLOCK + 1)
+        with pytest.raises(ValueError):
+            grad_hess_loss_pallas(f, f, f)
+
+    def test_grad_is_derivative_of_loss(self):
+        # closed-form g must equal autodiff d(sum loss)/dF
+        f, y, w = _rand(BLOCK, 3, scale=2.0)
+        g, _, _ = grad_hess_loss_pallas(f, y, w)
+        ag = ref.ref_autodiff_grad(f, y, w)
+        np.testing.assert_allclose(g, ag, atol=ATOL, rtol=RTOL)
+
+    def test_hess_is_derivative_of_grad(self):
+        f, y, w = _rand(BLOCK, 4, scale=2.0)
+        _, h, _ = grad_hess_loss_pallas(f, y, w)
+        # d g / d F elementwise via jacfwd of the ref grad
+        dg = jax.vmap(jax.grad(lambda ff, yy, ww: ref.ref_grad_elem(ff, yy, ww)))(
+            f, y, w
+        )
+        np.testing.assert_allclose(h, dg, atol=ATOL, rtol=RTOL)
+
+
+# ------------------------------------------------------------------ eval
+
+
+class TestEvalKernel:
+    def test_matches_ref(self):
+        f, y, w = _rand(2 * BLOCK, 5)
+        loss, err = eval_pallas(f, y, w)
+        np.testing.assert_allclose(loss, ref.ref_loss_elem(f, y, w), atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(err, ref.ref_err_elem(f, y, w), atol=ATOL, rtol=RTOL)
+
+    def test_perfect_classifier_zero_error(self):
+        n = BLOCK
+        y = (np.arange(n) % 2).astype(np.float32)
+        f = jnp.asarray((y - 0.5) * 10.0)
+        y = jnp.asarray(y)
+        w = jnp.ones(n)
+        _, err = eval_pallas(f, y, w)
+        assert float(err.sum()) == 0.0
+
+    def test_anti_classifier_full_error(self):
+        n = BLOCK
+        y = (np.arange(n) % 2).astype(np.float32)
+        f = jnp.asarray((0.5 - y) * 10.0)
+        y = jnp.asarray(y)
+        w = jnp.ones(n)
+        _, err = eval_pallas(f, y, w)
+        assert float(err.sum()) == pytest.approx(n)
+
+
+# ------------------------------------------------------------------ hypothesis sweeps
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=0.01, max_value=30.0),
+)
+def test_hypothesis_shapes_and_ranges(blocks, seed, scale):
+    assert_matches_ref(*_rand(blocks * BLOCK, seed, scale))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    frac_pad=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_hypothesis_padding_invariance(seed, frac_pad):
+    """Appending zero-weight padding must not change the reductions."""
+    f, y, w = _rand(BLOCK, seed)
+    n_pad = int(frac_pad * BLOCK)
+    rng = np.random.default_rng(seed + 1)
+    f2 = jnp.concatenate([f, jnp.asarray(rng.normal(0, 50, BLOCK).astype(np.float32))])
+    y2 = jnp.concatenate([y, jnp.asarray((rng.random(BLOCK) < 0.5).astype(np.float32))])
+    w2 = jnp.concatenate([w, jnp.zeros(BLOCK)])
+    del n_pad  # padding is a full extra block (shape must stay divisible)
+    g1, h1, l1 = grad_hess_loss_pallas(f, y, w)
+    g2, h2, l2 = grad_hess_loss_pallas(f2, y2, w2)
+    np.testing.assert_allclose(g1.sum(), g2.sum(), atol=1e-3, rtol=1e-5)
+    np.testing.assert_allclose(h1.sum(), h2.sum(), atol=1e-3, rtol=1e-5)
+    np.testing.assert_allclose(l1.sum(), l2.sum(), atol=1e-3, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_weight_linearity(seed):
+    """Outputs are linear in w: k*w must scale g/h/loss by k exactly."""
+    f, y, w = _rand(BLOCK, seed)
+    g1, h1, l1 = grad_hess_loss_pallas(f, y, w)
+    g2, h2, l2 = grad_hess_loss_pallas(f, y, 2.5 * w)
+    np.testing.assert_allclose(2.5 * g1, g2, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(2.5 * h1, h2, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(2.5 * l1, l2, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_hess_nonneg_loss_nonneg(seed):
+    f, y, w = _rand(2 * BLOCK, seed, scale=10.0)
+    _, h, loss = grad_hess_loss_pallas(f, y, w)
+    assert float(h.min()) >= -ATOL
+    assert float(loss.min()) >= -ATOL

@@ -1,0 +1,90 @@
+"""L2 model tests: reductions, shapes, and lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.grad_hess import BLOCK
+from compile.kernels import ref
+from compile.model import MODEL_FNS, eval_metrics, example_args, grad_hess_loss
+
+
+def _rand(n, seed, scale=3.0):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(0.0, scale, n).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    w = rng.exponential(1.0, n).astype(np.float32)
+    return jnp.asarray(f), jnp.asarray(y), jnp.asarray(w)
+
+
+class TestGradHessLoss:
+    def test_output_shapes(self):
+        f, y, w = _rand(BLOCK, 0)
+        g, h, loss_sum, w_sum = grad_hess_loss(f, y, w)
+        assert g.shape == (BLOCK,)
+        assert h.shape == (BLOCK,)
+        assert loss_sum.shape == ()
+        assert w_sum.shape == ()
+
+    def test_reductions_match_ref(self):
+        f, y, w = _rand(2 * BLOCK, 1)
+        _, _, loss_sum, w_sum = grad_hess_loss(f, y, w)
+        rl = ref.ref_loss_elem(f, y, w)
+        np.testing.assert_allclose(loss_sum, rl.sum(), rtol=1e-5)
+        np.testing.assert_allclose(w_sum, w.sum(), rtol=1e-6)
+
+    def test_mean_loss_at_f0_is_log2(self):
+        n = BLOCK
+        f = jnp.zeros(n)
+        y = jnp.asarray((np.arange(n) % 2).astype(np.float32))
+        w = jnp.ones(n)
+        _, _, loss_sum, w_sum = grad_hess_loss(f, y, w)
+        assert float(loss_sum / w_sum) == pytest.approx(np.log(2.0), rel=1e-6)
+
+    def test_jit_lowerable_at_all_example_shapes(self):
+        for n in (BLOCK, 4 * BLOCK):
+            lowered = jax.jit(grad_hess_loss).lower(*example_args(n))
+            assert lowered is not None
+
+    def test_example_args_rejects_bad_bucket(self):
+        with pytest.raises(ValueError):
+            example_args(BLOCK + 7)
+
+
+class TestEvalMetrics:
+    def test_eval_sums(self):
+        f, y, w = _rand(BLOCK, 2)
+        loss_sum, err_sum, w_sum = eval_metrics(f, y, w)
+        np.testing.assert_allclose(loss_sum, ref.ref_loss_elem(f, y, w).sum(), rtol=1e-5)
+        np.testing.assert_allclose(err_sum, ref.ref_err_elem(f, y, w).sum(), rtol=1e-5)
+        np.testing.assert_allclose(w_sum, w.sum(), rtol=1e-6)
+
+    def test_error_rate_random_classifier_near_half(self):
+        n = 16 * BLOCK
+        f, y, w = _rand(n, 3)
+        w = jnp.ones(n)
+        _, err_sum, w_sum = eval_metrics(f, y, w)
+        rate = float(err_sum / w_sum)
+        assert 0.45 < rate < 0.55
+
+
+class TestCatalogue:
+    def test_model_fns_catalogue(self):
+        assert set(MODEL_FNS) == {"grad_hess", "eval"}
+        for name, (fn, doc) in MODEL_FNS.items():
+            assert callable(fn)
+            assert isinstance(doc, str) and doc
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_loss_decreases_along_negative_gradient(seed):
+    """One explicit gradient step on F must reduce the summed loss —
+    the foundational property the whole SGBDT iteration relies on."""
+    f, y, w = _rand(BLOCK, seed, scale=1.5)
+    g, _, loss0, _ = grad_hess_loss(f, y, w)
+    step = 0.05
+    _, _, loss1, _ = grad_hess_loss(f - step * g, y, w)
+    assert float(loss1) <= float(loss0) + 1e-6

@@ -1,0 +1,24 @@
+//! Ablation bench: step-length x workers, leaves x sensitivity, bounded
+//! staleness (DESIGN.md SS5 ablations row).
+use asgbdt::bench_harness::Runner;
+use asgbdt::experiments::{self, Scale};
+
+fn main() {
+    let mut r = Runner::new("ablation");
+        // experiments are deterministic: one full run is the measurement
+    let single = asgbdt::bench_harness::BenchConfig {
+        warmup_secs: 0.0,
+        measure_secs: 0.0,
+        min_iters: 1,
+        max_iters: 1,
+    };
+    let mut r = r.with_config(single);
+    let scale = Scale::from_env();
+    let out = std::path::Path::new("results");
+    let mut summary = None;
+    r.bench("experiment/ablation_full", || {
+        summary = Some(experiments::run("ablation", scale, out).expect("ablation"));
+    });
+    println!("summary: {}", summary.unwrap());
+    r.write_csv().unwrap();
+}

@@ -1,0 +1,27 @@
+//! Figure 10 bench: end-to-end speedup — asynch-SGBDT vs LightGBM
+//! feature-parallel vs DimBoost on calibrated cluster simulations, plus
+//! the per-system 32-worker headline numbers.
+use asgbdt::bench_harness::Runner;
+use asgbdt::experiments::{self, Scale};
+use asgbdt::simulator::{simulate_async_ps, ClusterSpec, PhaseTimes};
+
+fn main() {
+    let mut r = Runner::new("fig10_speedup");
+    // microbench the simulator itself
+    let times = PhaseTimes::realsim_like();
+    r.bench("simulate/async_32w_200trees", || {
+        simulate_async_ps(&ClusterSpec::new(32), &times, 200)
+    });
+    // full figure (includes a real calibration training run)
+    let mut r = r.with_config(asgbdt::bench_harness::BenchConfig {
+        warmup_secs: 0.0, measure_secs: 0.0, min_iters: 1, max_iters: 1,
+    });
+    let scale = Scale::from_env();
+    let out = std::path::Path::new("results");
+    let mut summary = None;
+    r.bench("experiment/fig10_full", || {
+        summary = Some(experiments::run("fig10", scale, out).expect("fig10"));
+    });
+    println!("summary: {}", summary.unwrap());
+    r.write_csv().unwrap();
+}

@@ -1,0 +1,25 @@
+//! Figure 4 bench: regenerates the diversity/Q'-sparsity data and times
+//! the species-table + analytic report machinery.
+use asgbdt::bench_harness::Runner;
+use asgbdt::data::stats::{diversity_report, SpeciesTable};
+use asgbdt::data::synthetic;
+use asgbdt::experiments::{self, Scale};
+
+fn main() {
+    let mut r = Runner::new("fig4_diversity");
+    let lo = synthetic::fig4_low_diversity(1);
+    let hi = synthetic::fig4_high_diversity(1);
+    r.bench("species_table/fig4a_60k_rows", || SpeciesTable::build(&lo));
+    r.bench("species_table/fig4b_14k_rows", || SpeciesTable::build(&hi));
+    r.bench("diversity_report/fig4b_rate_1e-3", || diversity_report(&hi, 0.001));
+    // full figure regeneration
+    let mut r = r.with_config(asgbdt::bench_harness::BenchConfig {
+        warmup_secs: 0.0, measure_secs: 0.0, min_iters: 1, max_iters: 1,
+    });
+    let scale = Scale::from_env();
+    let out = std::path::Path::new("results");
+    r.bench("experiment/fig4_full", || {
+        experiments::run("fig4", scale, out).expect("fig4")
+    });
+    r.write_csv().unwrap();
+}

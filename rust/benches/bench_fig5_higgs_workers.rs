@@ -1,0 +1,24 @@
+//! Figure 5 bench: Higgs-like convergence vs worker count (fixed rate).
+//! Prints the per-variant loss summaries and regenerates fig5_higgs_workers.csv.
+use asgbdt::bench_harness::Runner;
+use asgbdt::experiments::{self, Scale};
+
+fn main() {
+    let mut r = Runner::new("fig5_higgs_workers");
+        // experiments are deterministic: one full run is the measurement
+    let single = asgbdt::bench_harness::BenchConfig {
+        warmup_secs: 0.0,
+        measure_secs: 0.0,
+        min_iters: 1,
+        max_iters: 1,
+    };
+    let mut r = r.with_config(single);
+    let scale = Scale::from_env();
+    let out = std::path::Path::new("results");
+    let mut summary = None;
+    r.bench("experiment/fig5_full", || {
+        summary = Some(experiments::run("fig5", scale, out).expect("fig5"));
+    });
+    println!("summary: {}", summary.unwrap());
+    r.write_csv().unwrap();
+}

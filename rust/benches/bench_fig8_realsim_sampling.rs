@@ -1,0 +1,23 @@
+//! Figure 8 bench: real-sim-like convergence vs sampling rate (fixed workers).
+use asgbdt::bench_harness::Runner;
+use asgbdt::experiments::{self, Scale};
+
+fn main() {
+    let mut r = Runner::new("fig8_realsim_sampling");
+        // experiments are deterministic: one full run is the measurement
+    let single = asgbdt::bench_harness::BenchConfig {
+        warmup_secs: 0.0,
+        measure_secs: 0.0,
+        min_iters: 1,
+        max_iters: 1,
+    };
+    let mut r = r.with_config(single);
+    let scale = Scale::from_env();
+    let out = std::path::Path::new("results");
+    let mut summary = None;
+    r.bench("experiment/fig8_full", || {
+        summary = Some(experiments::run("fig8", scale, out).expect("fig8"));
+    });
+    println!("summary: {}", summary.unwrap());
+    r.write_csv().unwrap();
+}

@@ -1,0 +1,29 @@
+//! Figure 9 bench: sensitivity at normal (0.6) vs extremely small sampling
+//! rate; reports the worker-sensitivity gap per rate.
+use asgbdt::bench_harness::Runner;
+use asgbdt::experiments::fig9;
+use asgbdt::experiments::{self, Scale};
+
+fn main() {
+    let mut r = Runner::new("fig9_small_rate");
+        // experiments are deterministic: one full run is the measurement
+    let single = asgbdt::bench_harness::BenchConfig {
+        warmup_secs: 0.0,
+        measure_secs: 0.0,
+        min_iters: 1,
+        max_iters: 1,
+    };
+    let mut r = r.with_config(single);
+    let scale = Scale::from_env();
+    let out = std::path::Path::new("results");
+    let mut summary = None;
+    r.bench("experiment/fig9_full", || {
+        summary = Some(experiments::run("fig9", scale, out).expect("fig9"));
+    });
+    let summary = summary.unwrap();
+    if let Some(gap) = fig9::sensitivity_gap(&summary, "rate=0.6") {
+        println!("sensitivity gap at rate 0.6: {gap:.5}");
+    }
+    println!("summary: {summary}");
+    r.write_csv().unwrap();
+}

@@ -1,0 +1,40 @@
+//! Produce-target hot path: AOT (PJRT-executed JAX/Pallas HLO) vs the
+//! pure-Rust fallback, across batch sizes — the L1/L2 perf measurement
+//! recorded in EXPERIMENTS.md §Perf.
+use asgbdt::bench_harness::Runner;
+use asgbdt::runtime::{EngineKind, GradientEngine};
+use asgbdt::util::Rng;
+
+fn inputs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let f: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let w: Vec<f32> = (0..n).map(|_| rng.exponential() as f32).collect();
+    (f, y, w)
+}
+
+fn main() {
+    let mut r = Runner::new("grad_pipeline");
+    let dir = std::path::Path::new("artifacts");
+    for n in [4_096usize, 65_536, 262_144] {
+        let (f, y, w) = inputs(n, 7);
+        let mut native = GradientEngine::native();
+        r.bench(&format!("native/grad_hess_loss/{n}"), || {
+            native.grad_hess_loss(&f, &y, &w).unwrap()
+        });
+        let mut auto = GradientEngine::auto(dir);
+        if auto.kind() == EngineKind::Aot {
+            // warm the executable cache outside the timing loop
+            auto.grad_hess_loss(&f, &y, &w).unwrap();
+            r.bench(&format!("aot-pjrt/grad_hess_loss/{n}"), || {
+                auto.grad_hess_loss(&f, &y, &w).unwrap()
+            });
+            r.bench(&format!("aot-pjrt/eval_sums/{n}"), || {
+                auto.eval_sums(&f, &y, &w).unwrap()
+            });
+        } else {
+            println!("(artifacts missing — run `make artifacts` for the AOT rows)");
+        }
+    }
+    r.write_csv().unwrap();
+}

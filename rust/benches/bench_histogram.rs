@@ -1,0 +1,36 @@
+//! Histogram building — the worker-side hot loop (>90% of tree build).
+use asgbdt::bench_harness::Runner;
+use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::loss::logistic;
+use asgbdt::tree::histogram::Histogram;
+
+fn main() {
+    let mut r = Runner::new("histogram");
+    for (name, ds) in [
+        ("realsim_4k", synthetic::realsim_like(4_000, 1)),
+        ("higgs_4k", synthetic::higgs_like(4_000, 1)),
+    ] {
+        let b = BinnedDataset::from_dataset(&ds, 64).unwrap();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let mut hist = Histogram::zeros(b.total_bins());
+        r.bench(&format!("build/{name}/full"), || {
+            hist.build(&b, &rows, &gh.grad, &gh.hess)
+        });
+        let half: Vec<u32> = rows.iter().copied().step_by(2).collect();
+        r.bench(&format!("build/{name}/half_rows"), || {
+            hist.build(&b, &half, &gh.grad, &gh.hess)
+        });
+        let mut parent = Histogram::zeros(b.total_bins());
+        parent.build(&b, &rows, &gh.grad, &gh.hess);
+        let mut sib = Histogram::zeros(b.total_bins());
+        sib.build(&b, &half, &gh.grad, &gh.hess);
+        let mut child = Histogram::zeros(b.total_bins());
+        r.bench(&format!("subtract/{name}"), || {
+            child.subtract_from(&parent, &sib)
+        });
+    }
+    r.write_csv().unwrap();
+}

@@ -1,0 +1,53 @@
+//! Parameter-server throughput: accepted trees/sec end-to-end by worker
+//! count — the real-thread half of the Figure 10 story, plus board
+//! pull/publish micro-latencies.
+use asgbdt::bench_harness::Runner;
+use asgbdt::config::TrainConfig;
+use asgbdt::coordinator::train_async;
+use asgbdt::data::synthetic;
+use asgbdt::ps::{Board, TargetSnapshot};
+use std::sync::Arc;
+
+fn main() {
+    let mut r = Runner::new("ps_throughput");
+    // micro: board pull/publish
+    let board = Board::new();
+    let n = 100_000;
+    board.publish(TargetSnapshot {
+        version: 1,
+        grad: Arc::new(vec![0.0; n]),
+        hess: Arc::new(vec![0.0; n]),
+        rows: Arc::new((0..n as u32).collect()),
+    });
+    r.bench("board/pull", || board.pull());
+    r.bench("board/publish", || {
+        board.publish(TargetSnapshot {
+            version: 2,
+            grad: Arc::new(Vec::new()),
+            hess: Arc::new(Vec::new()),
+            rows: Arc::new(Vec::new()),
+        })
+    });
+    // end-to-end trees/sec by worker count
+    let ds = synthetic::realsim_like(3_000, 9);
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = workers;
+        cfg.n_trees = 40;
+        cfg.step_length = 0.1;
+        cfg.tree.max_leaves = 32;
+        cfg.max_bins = 32;
+        cfg.eval_every = 40;
+        let rep = train_async(&cfg, &ds, None).unwrap();
+        r.record(
+            &format!("train_async/trees_per_sec_w{workers} (1/x)"),
+            1.0 / rep.trees_per_sec(),
+        );
+        println!(
+            "  workers {workers}: {:.2} trees/s, staleness mean {:.2}",
+            rep.trees_per_sec(),
+            rep.staleness.mean()
+        );
+    }
+    r.write_csv().unwrap();
+}

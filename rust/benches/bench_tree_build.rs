@@ -1,0 +1,31 @@
+//! Full tree builds: serial vs fork-join, by leaves and dataset shape.
+use asgbdt::bench_harness::Runner;
+use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::loss::logistic;
+use asgbdt::tree::{build_tree, build_tree_forkjoin, TreeParams};
+use asgbdt::util::Rng;
+
+fn main() {
+    let mut r = Runner::new("tree_build");
+    let ds = synthetic::realsim_like(6_000, 3);
+    let b = BinnedDataset::from_dataset(&ds, 64).unwrap();
+    let f = vec![0.0f32; ds.n_rows()];
+    let w = vec![1.0f32; ds.n_rows()];
+    let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    for leaves in [16usize, 64, 256] {
+        let params = TreeParams { max_leaves: leaves, feature_rate: 0.8, ..Default::default() };
+        let mut rng = Rng::new(5);
+        r.bench(&format!("serial/leaves_{leaves}"), || {
+            build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng)
+        });
+    }
+    let params = TreeParams { max_leaves: 64, feature_rate: 0.8, ..Default::default() };
+    for threads in [2usize, 4, 8] {
+        let mut rng = Rng::new(5);
+        r.bench(&format!("forkjoin/threads_{threads}"), || {
+            build_tree_forkjoin(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, threads)
+        });
+    }
+    r.write_csv().unwrap();
+}

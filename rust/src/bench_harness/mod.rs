@@ -1,0 +1,203 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set —
+//! DESIGN.md §7). Used by all `cargo bench` targets (`harness = false`).
+//!
+//! Protocol per benchmark: warm up for `warmup_secs`, then run timed
+//! iterations until `measure_secs` or `max_iters`, report mean ± std and
+//! p50/p99 over per-iteration wall times, with `std::hint::black_box`
+//! guarding against dead-code elimination at the call sites.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Harness configuration (env-tunable: ASGBDT_BENCH_FAST=1 shrinks the
+/// budget for CI smoke runs).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_secs: f64,
+    pub measure_secs: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("ASGBDT_BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup_secs: 0.05,
+                measure_secs: 0.3,
+                min_iters: 3,
+                max_iters: 50,
+            }
+        } else {
+            BenchConfig {
+                warmup_secs: 0.5,
+                measure_secs: 2.0,
+                min_iters: 5,
+                max_iters: 10_000,
+            }
+        }
+    }
+}
+
+/// One benchmark's measured result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs_per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.secs_per_iter.mean
+    }
+
+    /// criterion-ish one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{:>10}, p50 {:>10}, p99 {:>10}, n={})",
+            self.name,
+            fmt_secs(self.secs_per_iter.mean),
+            fmt_secs(self.secs_per_iter.std),
+            fmt_secs(self.secs_per_iter.p50),
+            fmt_secs(self.secs_per_iter.p99),
+            self.iters
+        )
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// The bench runner: collects results, prints a table, optionally writes
+/// CSV for EXPERIMENTS.md.
+pub struct Runner {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Runner {
+    pub fn new(group: &str) -> Runner {
+        println!("== bench group: {group} ==");
+        Runner {
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+            group: group.to_string(),
+        }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Runner {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Benchmark a closure. Its return value is black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed().as_secs_f64() < self.cfg.warmup_secs {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut times = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed().as_secs_f64() < self.cfg.measure_secs
+            || times.len() < self.cfg.min_iters)
+            && times.len() < self.cfg.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            secs_per_iter: Summary::of(&times),
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured scalar (e.g. a simulated wall time)
+    /// so it appears in the same table/CSV.
+    pub fn record(&mut self, name: &str, secs: f64) {
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            secs_per_iter: Summary::of(&[secs]),
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write `results/bench_<group>.csv`.
+    pub fn write_csv(&self) -> anyhow::Result<()> {
+        let mut w = crate::io::csv::CsvWriter::new(&[
+            "group", "name", "iters", "mean_s", "std_s", "p50_s", "p99_s",
+        ]);
+        for r in &self.results {
+            w.row(&[
+                self.group.clone(),
+                r.name.clone(),
+                r.iters.to_string(),
+                format!("{:.9}", r.secs_per_iter.mean),
+                format!("{:.9}", r.secs_per_iter.std),
+                format!("{:.9}", r.secs_per_iter.p50),
+                format!("{:.9}", r.secs_per_iter.p99),
+            ]);
+        }
+        let path = std::path::Path::new("results").join(format!("bench_{}.csv", self.group));
+        w.write(&path)?;
+        println!("-- wrote {}", path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> BenchConfig {
+        BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.01,
+            min_iters: 3,
+            max_iters: 10,
+        }
+    }
+
+    #[test]
+    fn bench_measures_and_records() {
+        let mut r = Runner::new("selftest").with_config(fast());
+        let res = r.bench("noop", || 1 + 1).clone();
+        assert!(res.iters >= 3);
+        assert!(res.mean() >= 0.0);
+        r.record("external", 1.5);
+        assert_eq!(r.results().len(), 2);
+        assert!((r.results()[1].mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_secs_scales_units() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+}

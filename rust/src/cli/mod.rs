@@ -1,0 +1,118 @@
+//! Minimal CLI argument parsing (clap is not in the offline vendor set —
+//! DESIGN.md §7).
+//!
+//! Grammar: `asgbdt <command> [positional ...] [--flag] [--opt value]
+//! [key=value ...]`. `key=value` tokens are collected as config overrides.
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: Vec<(String, String)>,
+    /// `key=value` config overrides, applied in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // flag or option: option iff next token exists and is not
+                // another --flag / key=value
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") && !next.contains('=') => {
+                        args.options.push((name.to_string(), it.next().unwrap().clone()));
+                    }
+                    _ => args.flags.push(name.to_string()),
+                }
+            } else if let Some((k, v)) = tok.split_once('=') {
+                if k.is_empty() {
+                    bail!("empty key in override '{tok}'");
+                }
+                args.overrides.push((k.to_string(), v.to_string()));
+            } else {
+                args.positionals.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_positionals_flags_options_overrides() {
+        let a = parse(&[
+            "train", "data.svm", "--scale", "paper", "--verbose", "workers=8",
+            "sampling_rate=0.5",
+        ]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional(0), Some("data.svm"));
+        assert_eq!(a.opt("scale"), Some("paper"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.overrides.len(), 2);
+        assert_eq!(a.overrides[0], ("workers".into(), "8".into()));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.has_flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn option_not_confused_by_override() {
+        let a = parse(&["x", "--out", "dir", "k=v"]);
+        assert_eq!(a.opt("out"), Some("dir"));
+        assert_eq!(a.overrides[0].0, "k");
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse(&["x", "--s", "1", "--s", "2"]);
+        assert_eq!(a.opt("s"), Some("2"));
+    }
+
+    #[test]
+    fn rejects_empty_override_key() {
+        let toks: Vec<String> = vec!["x".into(), "=v".into()];
+        assert!(Args::parse(&toks).is_err());
+    }
+}

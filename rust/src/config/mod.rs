@@ -1,0 +1,296 @@
+//! Typed configuration for trainers, experiments and the CLI.
+//!
+//! Configs load from JSON files (`--config path.json`) with CLI `key=value`
+//! overrides on top; `validate()` centralises the cross-field checks every
+//! entrypoint relies on.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::io::Json;
+use crate::tree::TreeParams;
+
+/// Which trainer drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Asynch-SGBDT on the parameter server (the paper's contribution).
+    Async,
+    /// Fork-join synchronous baseline (LightGBM-style epochs; identical
+    /// convergence to serial, simulated cluster wall-clock).
+    Sync,
+    /// Strictly serial reference.
+    Serial,
+}
+
+impl TrainMode {
+    pub fn parse(s: &str) -> Result<TrainMode> {
+        match s {
+            "async" => Ok(TrainMode::Async),
+            "sync" => Ok(TrainMode::Sync),
+            "serial" => Ok(TrainMode::Serial),
+            other => bail!("unknown mode '{other}' (async|sync|serial)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrainMode::Async => "async",
+            TrainMode::Sync => "sync",
+            TrainMode::Serial => "serial",
+        }
+    }
+}
+
+/// How the tree target is formed from the loss derivatives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradMode {
+    /// Paper setting ("we use gradient step in LightGBM boosting"): trees
+    /// fit the weighted-mean negative gradient (h_i := w_i).
+    Gradient,
+    /// Newton step: h_i = w_i * l''(y_i, F_i) (xgboost-style).
+    Newton,
+}
+
+impl GradMode {
+    pub fn parse(s: &str) -> Result<GradMode> {
+        match s {
+            "gradient" => Ok(GradMode::Gradient),
+            "newton" => Ok(GradMode::Newton),
+            other => bail!("unknown grad mode '{other}' (gradient|newton)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GradMode::Gradient => "gradient",
+            GradMode::Newton => "newton",
+        }
+    }
+}
+
+/// Full training configuration (paper defaults baked in: 400 trees,
+/// v = 0.01, sampling rate 0.8, feature rate 0.8, 100 leaves).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub mode: TrainMode,
+    pub grad_mode: GradMode,
+    /// Total trees the server accepts before stopping (paper: 400/1000).
+    pub n_trees: usize,
+    /// Step length v (paper: 0.01).
+    pub step_length: f32,
+    /// Uniform Bernoulli sampling rate R (paper: 0.2–0.8; extreme 5e-6).
+    pub sampling_rate: f64,
+    /// Number of asynchronous workers (threads, as in the paper's
+    /// validity experiments).
+    pub workers: usize,
+    /// Optional bounded staleness: drop pushes staler than this (None =
+    /// unbounded, the paper's setting).
+    pub max_staleness: Option<u64>,
+    /// Histogram bins per feature.
+    pub max_bins: usize,
+    pub tree: TreeParams,
+    /// Evaluate train/test loss every k accepted trees.
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Where `make artifacts` put the HLO modules.
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            mode: TrainMode::Async,
+            grad_mode: GradMode::Gradient,
+            n_trees: 400,
+            step_length: 0.01,
+            sampling_rate: 0.8,
+            workers: 4,
+            max_staleness: None,
+            max_bins: 64,
+            tree: TreeParams::default(),
+            eval_every: 10,
+            seed: 42,
+            artifact_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_trees == 0 {
+            bail!("n_trees must be > 0");
+        }
+        if !(self.step_length > 0.0) || !self.step_length.is_finite() {
+            bail!("step_length must be positive and finite");
+        }
+        if !(self.sampling_rate > 0.0 && self.sampling_rate <= 1.0) {
+            bail!("sampling_rate must be in (0, 1]");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.max_bins < 2 || self.max_bins > crate::data::binning::MAX_BINS {
+            bail!("max_bins out of range");
+        }
+        if self.tree.max_leaves == 0 {
+            bail!("max_leaves must be >= 1");
+        }
+        if !(self.tree.feature_rate > 0.0 && self.tree.feature_rate <= 1.0) {
+            bail!("feature_rate must be in (0, 1]");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` override (CLI surface).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => self.mode = TrainMode::parse(value)?,
+            "grad_mode" => self.grad_mode = GradMode::parse(value)?,
+            "n_trees" => self.n_trees = value.parse()?,
+            "step_length" | "v" => self.step_length = value.parse()?,
+            "sampling_rate" => self.sampling_rate = value.parse()?,
+            "workers" => self.workers = value.parse()?,
+            "max_staleness" => {
+                self.max_staleness = if value == "none" {
+                    None
+                } else {
+                    Some(value.parse()?)
+                }
+            }
+            "max_bins" => self.max_bins = value.parse()?,
+            "max_leaves" => self.tree.max_leaves = value.parse()?,
+            "max_depth" => self.tree.max_depth = value.parse()?,
+            "min_leaf_count" => self.tree.min_leaf_count = value.parse()?,
+            "lambda" => self.tree.lambda = value.parse()?,
+            "feature_rate" => self.tree.feature_rate = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "artifact_dir" => self.artifact_dir = PathBuf::from(value),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.as_str().into())),
+            ("grad_mode", Json::Str(self.grad_mode.as_str().into())),
+            ("n_trees", Json::Num(self.n_trees as f64)),
+            ("step_length", Json::Num(self.step_length as f64)),
+            ("sampling_rate", Json::Num(self.sampling_rate)),
+            ("workers", Json::Num(self.workers as f64)),
+            (
+                "max_staleness",
+                self.max_staleness
+                    .map(|s| Json::Num(s as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("max_bins", Json::Num(self.max_bins as f64)),
+            ("max_leaves", Json::Num(self.tree.max_leaves as f64)),
+            ("max_depth", Json::Num(self.tree.max_depth as f64)),
+            ("min_leaf_count", Json::Num(self.tree.min_leaf_count as f64)),
+            ("lambda", Json::Num(self.tree.lambda)),
+            ("feature_rate", Json::Num(self.tree.feature_rate)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "artifact_dir",
+                Json::Str(self.artifact_dir.display().to_string()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        if let Some(obj) = j.as_obj() {
+            for (k, v) in obj {
+                let val = match v {
+                    Json::Str(s) => s.clone(),
+                    Json::Null => "none".to_string(),
+                    other => other.to_string(),
+                };
+                c.set(k, &val)?;
+            }
+        } else {
+            bail!("config must be a JSON object");
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<TrainConfig> {
+        TrainConfig::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_paper_setting() {
+        let c = TrainConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.n_trees, 400);
+        assert!((c.step_length - 0.01).abs() < 1e-9);
+        assert!((c.sampling_rate - 0.8).abs() < 1e-12);
+        assert!((c.tree.feature_rate - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_overrides_fields() {
+        let mut c = TrainConfig::default();
+        c.set("workers", "32").unwrap();
+        c.set("mode", "serial").unwrap();
+        c.set("sampling_rate", "0.000005").unwrap();
+        c.set("max_leaves", "400").unwrap();
+        c.set("max_staleness", "16").unwrap();
+        assert_eq!(c.workers, 32);
+        assert_eq!(c.mode, TrainMode::Serial);
+        assert_eq!(c.max_staleness, Some(16));
+        assert_eq!(c.tree.max_leaves, 400);
+        c.set("max_staleness", "none").unwrap();
+        assert_eq!(c.max_staleness, None);
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_values() {
+        let mut c = TrainConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("mode", "quantum").is_err());
+        assert!(c.set("workers", "a lot").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut c = TrainConfig::default();
+        c.n_trees = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.sampling_rate = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.step_length = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.set("workers", "8").unwrap();
+        c.set("grad_mode", "newton").unwrap();
+        let j = c.to_json();
+        let back = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(back.workers, 8);
+        assert_eq!(back.grad_mode, GradMode::Newton);
+        assert_eq!(back.mode, TrainMode::Async);
+        assert_eq!(back.max_staleness, None);
+    }
+}

@@ -1,0 +1,162 @@
+//! The asynch-SGBDT trainer — Algorithm 3 end to end.
+//!
+//! Topology (threads as workers, matching the paper's validity
+//! experiments): the calling thread becomes the *server* (it owns the
+//! PJRT gradient engine, which is not `Send`); `cfg.workers` spawned
+//! threads run the worker loop. Workers pull versioned target snapshots
+//! from the [`crate::ps::Board`] and push trees over an mpsc channel;
+//! the server applies each push (update F → resample → produce target →
+//! publish) and stops after `cfg.n_trees` accepted trees.
+//!
+//! Staleness τ is *measured*, not configured: with more workers, more
+//! pushes race a given target version and τ grows — the knob the paper's
+//! Proposition 1 ties to the required step length.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::{BinnedDataset, Dataset};
+use crate::ps::{run_worker, Board, ServerCore};
+use crate::runtime::GradientEngine;
+use crate::util::stats::Summary;
+use crate::util::Stopwatch;
+
+use super::report::TrainReport;
+
+pub fn train_async(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+) -> Result<TrainReport> {
+    let cfg = cfg.clone();
+    cfg.validate()?;
+    let clock = Stopwatch::new();
+    let binned = Arc::new(BinnedDataset::from_dataset(train, cfg.max_bins)?);
+    let engine = GradientEngine::auto(&cfg.artifact_dir);
+    let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
+
+    let board = Board::new();
+    board.publish(core.snapshot());
+    let (tx, rx) = mpsc::channel();
+
+    let mut build_times: Vec<f64> = Vec::with_capacity(cfg.n_trees);
+
+    std::thread::scope(|s| -> Result<()> {
+        // fork the workers
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let tx = tx.clone();
+            let binned = binned.clone();
+            let board_ref = &board;
+            let params = cfg.tree;
+            let seed = cfg.seed;
+            handles.push(s.spawn(move || run_worker(wid, board_ref, binned, params, tx, seed)));
+        }
+        drop(tx); // server holds only the receiver
+
+        // the server accept loop
+        while core.n_trees() < cfg.n_trees {
+            let push = match rx.recv() {
+                Ok(p) => p,
+                Err(_) => break, // all workers gone (shouldn't happen)
+            };
+            build_times.push(push.build_secs);
+            let outcome = core.apply_tree(push.tree, push.based_on)?;
+            if outcome.accepted {
+                board.publish(core.snapshot());
+            }
+        }
+
+        // stop the world; drain in-flight pushes so senders never block
+        board.request_shutdown();
+        while let Ok(_ignored) = rx.try_recv() {}
+        for h in handles {
+            let _ = h.join();
+        }
+        // final drain (workers may have pushed between drain and join)
+        while let Ok(_ignored) = rx.try_recv() {}
+        Ok(())
+    })?;
+
+    let engine = core.engine_kind();
+    Ok(TrainReport {
+        trees_accepted: core.n_trees(),
+        trees_rejected: core.staleness.rejected,
+        wall_secs: clock.elapsed(),
+        build_times: Summary::of(&build_times),
+        engine,
+        mode: "async".into(),
+        workers: cfg.workers,
+        forest: core.forest,
+        curve: core.curve,
+        staleness: core.staleness,
+        timer: core.timer,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn small_cfg(workers: usize, n_trees: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.n_trees = n_trees;
+        cfg.step_length = 0.2;
+        cfg.sampling_rate = 0.8;
+        cfg.workers = workers;
+        cfg.tree.max_leaves = 8;
+        cfg.max_bins = 16;
+        cfg.eval_every = 10;
+        cfg
+    }
+
+    #[test]
+    fn async_trains_exactly_n_trees_and_descends() {
+        let ds = synthetic::realsim_like(400, 31);
+        let rep = train_async(&small_cfg(4, 30), &ds, None).unwrap();
+        assert_eq!(rep.trees_accepted, 30);
+        assert_eq!(rep.forest.n_trees(), 30);
+        let first = rep.curve.points.first().unwrap().train_loss;
+        let last = rep.curve.points.last().unwrap().train_loss;
+        assert!(last < first, "loss did not descend: {first} -> {last}");
+        assert_eq!(rep.mode, "async");
+    }
+
+    #[test]
+    fn staleness_is_measured_and_bounded() {
+        // NOTE: even one worker can run several versions ahead of the
+        // server (the push channel is unbounded and the worker keeps
+        // rebuilding on the stale target — exactly the delayed-SGD model),
+        // so absolute staleness levels are timing-dependent. The stable
+        // invariants: τ is recorded for every accepted push, τ < n_trees,
+        // and many racing workers produce nonzero staleness.
+        let ds = synthetic::realsim_like(300, 32);
+        let one = train_async(&small_cfg(1, 24), &ds, None).unwrap();
+        let many = train_async(&small_cfg(8, 24), &ds, None).unwrap();
+        assert_eq!(one.staleness.samples.len(), 24);
+        assert_eq!(many.staleness.samples.len(), 24);
+        assert!(one.staleness.max() < 24);
+        assert!(many.staleness.max() < 24);
+        assert!(
+            many.staleness.mean() >= 1.0,
+            "8 racing workers should show real staleness, got {}",
+            many.staleness.mean()
+        );
+    }
+
+    #[test]
+    fn bounded_staleness_rejects_under_pressure() {
+        let ds = synthetic::realsim_like(300, 33);
+        let mut cfg = small_cfg(8, 20);
+        cfg.max_staleness = Some(0); // only fresh pushes accepted
+        let rep = train_async(&cfg, &ds, None).unwrap();
+        assert_eq!(rep.trees_accepted, 20);
+        // with 8 racing workers and tau<=0 required, rejections must occur
+        assert!(rep.trees_rejected > 0, "expected rejected pushes");
+        assert_eq!(rep.staleness.max(), 0); // accepted ones all fresh
+    }
+}

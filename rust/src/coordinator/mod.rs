@@ -1,0 +1,31 @@
+//! Trainers: the asynchronous PS trainer (the paper's contribution) and
+//! the synchronous fork-join / serial baselines, behind one `train()`
+//! entrypoint.
+//!
+//! All three share the same `ServerCore` state machine and the same tree
+//! learner, so convergence differences between modes are attributable to
+//! the parallelisation strategy alone — the comparison the paper makes.
+
+pub mod async_trainer;
+pub mod report;
+pub mod serial_trainer;
+pub mod sync_trainer;
+
+pub use async_trainer::train_async;
+pub use report::TrainReport;
+pub use serial_trainer::train_serial;
+pub use sync_trainer::train_sync;
+
+use anyhow::Result;
+
+use crate::config::{TrainConfig, TrainMode};
+use crate::data::Dataset;
+
+/// Train per `cfg.mode`. `test` enables held-out loss on the curve.
+pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainReport> {
+    match cfg.mode {
+        TrainMode::Async => train_async(cfg, train, test),
+        TrainMode::Sync => train_sync(cfg, train, test),
+        TrainMode::Serial => train_serial(cfg, train, test),
+    }
+}

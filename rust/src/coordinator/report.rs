@@ -1,0 +1,75 @@
+//! The result of a training run: model + telemetry.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::forest::Forest;
+use crate::io::Json;
+use crate::metrics::{LossCurve, StalenessStats};
+use crate::runtime::EngineKind;
+use crate::util::stats::Summary;
+use crate::util::timer::PhaseTimer;
+
+/// Everything a trainer hands back.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub forest: Forest,
+    pub curve: LossCurve,
+    pub staleness: StalenessStats,
+    pub timer: PhaseTimer,
+    /// Total wall-clock of the training loop.
+    pub wall_secs: f64,
+    pub trees_accepted: usize,
+    pub trees_rejected: u64,
+    pub engine: EngineKind,
+    /// Distribution of worker-side tree build times (secs).
+    pub build_times: Summary,
+    /// Mode tag ("async"/"sync"/"serial") + worker count for outputs.
+    pub mode: String,
+    pub workers: usize,
+}
+
+impl TrainReport {
+    /// Trees accepted per wall-clock second — the throughput measure the
+    /// speedup figures are built from.
+    pub fn trees_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.trees_accepted as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Structured summary (dropped next to CSV outputs by experiments).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("engine", Json::Str(self.engine.to_string())),
+            ("trees_accepted", Json::Num(self.trees_accepted as f64)),
+            ("trees_rejected", Json::Num(self.trees_rejected as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("trees_per_sec", Json::Num(self.trees_per_sec())),
+            (
+                "final_train_loss",
+                Json::Num(self.curve.final_train_loss().unwrap_or(f64::NAN)),
+            ),
+            (
+                "final_test_loss",
+                Json::Num(self.curve.final_test_loss().unwrap_or(f64::NAN)),
+            ),
+            ("staleness_mean", Json::Num(self.staleness.mean())),
+            ("staleness_max", Json::Num(self.staleness.max() as f64)),
+            ("build_time_mean", Json::Num(self.build_times.mean)),
+        ])
+    }
+
+    pub fn write_summary(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}

@@ -1,0 +1,169 @@
+//! The labelled dataset container used throughout the trainers.
+//!
+//! Matches the paper's problem setting (§III.A): samples `(x_i, y_i)` with
+//! multiplicity `m_i` — distinct `(x_j, y_j)` are "species" and `m_i`
+//! counts how often each occurs. For file-loaded data every row has
+//! `m_i = 1`; the low-diversity synthetic sets use `m_i > 1` to model the
+//! paper's Figure 4(a) regime.
+
+use anyhow::{bail, Result};
+
+use super::sparse::CsrMatrix;
+use crate::util::Rng;
+
+/// A binary-classification dataset: CSR features, {0,1} labels, and
+/// per-sample multiplicities `m_i` (all 1.0 unless constructed otherwise).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: CsrMatrix,
+    /// Labels in {0.0, 1.0}.
+    pub y: Vec<f32>,
+    /// Multiplicities m_i >= 1 (paper §III.A). The effective loss is
+    /// `sum_i m_i * l(y_i, F_i)`.
+    pub m: Vec<f32>,
+}
+
+impl Dataset {
+    /// Construct with unit multiplicities.
+    pub fn new(name: &str, x: CsrMatrix, y: Vec<f32>) -> Self {
+        let n = x.n_rows();
+        assert_eq!(y.len(), n, "labels/rows mismatch");
+        Self {
+            name: name.to_string(),
+            x,
+            y,
+            m: vec![1.0; n],
+        }
+    }
+
+    /// Construct with explicit multiplicities.
+    pub fn with_multiplicity(
+        name: &str,
+        x: CsrMatrix,
+        y: Vec<f32>,
+        m: Vec<f32>,
+    ) -> Result<Self> {
+        if y.len() != x.n_rows() || m.len() != x.n_rows() {
+            bail!("labels/multiplicity/rows mismatch");
+        }
+        if m.iter().any(|&v| v < 1.0 || !v.is_finite()) {
+            bail!("multiplicities must be finite and >= 1");
+        }
+        Ok(Self {
+            name: name.to_string(),
+            x,
+            y,
+            m,
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Total weighted count `sum_i m_i`.
+    pub fn total_weight(&self) -> f64 {
+        self.m.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Weighted positive-label fraction (used for the base score, the
+    /// paper's initial tree outputs `sum m_i y_i / sum m_i`).
+    pub fn positive_rate(&self) -> f64 {
+        let num: f64 = self
+            .y
+            .iter()
+            .zip(&self.m)
+            .map(|(&y, &m)| (y * m) as f64)
+            .sum();
+        num / self.total_weight()
+    }
+
+    /// Split into (train, test) by a shuffled row partition.
+    pub fn split(&self, test_fraction: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_fraction));
+        let n = self.n_rows();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let n_test = ((n as f64) * test_fraction).round() as usize;
+        let (test_rows, train_rows) = order.split_at(n_test);
+        (self.subset(train_rows, "train"), self.subset(test_rows, "test"))
+    }
+
+    /// Row-subset dataset (suffix appended to the name).
+    pub fn subset(&self, rows: &[usize], suffix: &str) -> Dataset {
+        Dataset {
+            name: format!("{}-{}", self.name, suffix),
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&r| self.y[r]).collect(),
+            m: rows.iter().map(|&r| self.m[r]).collect(),
+        }
+    }
+
+    /// Count distinct feature-row species via fingerprinting — the
+    /// "diversity of the samples in the dataset" the paper's analysis
+    /// keys on (size of Q′ support).
+    pub fn n_species(&self) -> usize {
+        let mut set = std::collections::HashSet::with_capacity(self.n_rows());
+        for r in 0..self.n_rows() {
+            set.insert((self.x.row_fingerprint(r), self.y[r].to_bits()));
+        }
+        set.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = CsrMatrix::from_dense(4, 2, &[1.0, 0.0, 0.0, 2.0, 1.0, 0.0, 3.0, 3.0])
+            .unwrap();
+        Dataset::new("tiny", x, vec![1.0, 0.0, 1.0, 0.0])
+    }
+
+    #[test]
+    fn unit_multiplicity_by_default() {
+        let d = tiny();
+        assert_eq!(d.m, vec![1.0; 4]);
+        assert!((d.total_weight() - 4.0).abs() < 1e-12);
+        assert!((d.positive_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiplicity_weights_positive_rate() {
+        let d = tiny();
+        let d2 = Dataset::with_multiplicity("t", d.x.clone(), d.y.clone(), vec![3.0, 1.0, 1.0, 1.0]).unwrap();
+        // positives: rows 0 (m=3) and 2 (m=1) => 4/6
+        assert!((d2.positive_rate() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_multiplicity() {
+        let d = tiny();
+        assert!(Dataset::with_multiplicity("t", d.x.clone(), d.y.clone(), vec![0.5; 4]).is_err());
+        assert!(Dataset::with_multiplicity("t", d.x.clone(), d.y.clone(), vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = tiny();
+        let mut rng = Rng::new(1);
+        let (tr, te) = d.split(0.25, &mut rng);
+        assert_eq!(tr.n_rows() + te.n_rows(), 4);
+        assert_eq!(te.n_rows(), 1);
+        assert_eq!(tr.n_features(), 2);
+    }
+
+    #[test]
+    fn species_counts_duplicates_once() {
+        // rows 0 and 1 identical, row 2 differs
+        let x = CsrMatrix::from_dense(3, 1, &[1.0, 1.0, 2.0]).unwrap();
+        let d = Dataset::new("s", x, vec![1.0, 1.0, 0.0]);
+        assert_eq!(d.n_species(), 2);
+    }
+}

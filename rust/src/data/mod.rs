@@ -1,0 +1,18 @@
+//! Dataset substrates: sparse matrices, binning, synthetic generators and
+//! diversity statistics.
+//!
+//! The paper evaluates on LIBSVM datasets (real-sim, HIGGS, E2006-log1p)
+//! which are not redistributable here; `synthetic` builds statistical
+//! stand-ins that preserve the properties the theory cares about
+//! (dimensionality, sparsity, sample diversity — see DESIGN.md §3). Real
+//! files can be dropped in via `io::svmlight`.
+
+pub mod binning;
+pub mod dataset;
+pub mod sparse;
+pub mod stats;
+pub mod synthetic;
+
+pub use binning::{BinMapper, BinnedDataset};
+pub use dataset::Dataset;
+pub use sparse::CsrMatrix;

@@ -1,0 +1,235 @@
+//! Compressed sparse row (CSR) matrix of f32 feature values.
+
+use anyhow::{bail, Result};
+
+/// CSR matrix. `indices[indptr[r]..indptr[r+1]]` are the column ids of row
+/// `r`, strictly increasing; `values` are the matching nonzeros.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Validating constructor.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if indptr.len() != n_rows + 1 {
+            bail!("indptr len {} != n_rows+1 {}", indptr.len(), n_rows + 1);
+        }
+        if indices.len() != values.len() {
+            bail!("indices/values length mismatch");
+        }
+        if *indptr.last().unwrap_or(&0) != indices.len() {
+            bail!("indptr tail != nnz");
+        }
+        for r in 0..n_rows {
+            if indptr[r] > indptr[r + 1] {
+                bail!("indptr not monotone at row {r}");
+            }
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("row {r}: column ids not strictly increasing");
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last as usize >= n_cols {
+                    bail!("row {r}: column {last} >= n_cols {n_cols}");
+                }
+            }
+        }
+        Ok(Self { n_rows, n_cols, indptr, indices, values })
+    }
+
+    /// Build from per-row (col, val) pair lists.
+    pub fn from_rows(n_cols: usize, rows: &[Vec<(u32, f32)>]) -> Result<Self> {
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for row in rows {
+            for &(c, v) in row {
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Self::new(rows.len(), n_cols, indptr, indices, values)
+    }
+
+    /// Dense constructor (row-major input), zeros dropped.
+    pub fn from_dense(n_rows: usize, n_cols: usize, data: &[f32]) -> Result<Self> {
+        assert_eq!(data.len(), n_rows * n_cols);
+        let rows: Vec<Vec<(u32, f32)>> = (0..n_rows)
+            .map(|r| {
+                (0..n_cols)
+                    .filter_map(|c| {
+                        let v = data[r * n_cols + c];
+                        (v != 0.0).then_some((c as u32, v))
+                    })
+                    .collect()
+            })
+            .collect();
+        Self::from_rows(n_cols, &rows)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of nonzero entries.
+    pub fn density(&self) -> f64 {
+        if self.n_rows == 0 || self.n_cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+        }
+    }
+
+    /// Iterate a row's (col, value) pairs.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Number of nonzeros in a row.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Value at (r, c) — binary search within the row; 0.0 if absent.
+    pub fn get(&self, r: usize, c: u32) -> f32 {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        match self.indices[lo..hi].binary_search(&c) {
+            Ok(pos) => self.values[lo + pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Select a subset of rows (in the given order) into a new matrix.
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for &r in rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            indices.extend_from_slice(&self.indices[lo..hi]);
+            values.extend_from_slice(&self.values[lo..hi]);
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            n_rows: rows.len(),
+            n_cols: self.n_cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Column-wise nonzero counts.
+    pub fn col_nnz(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// A stable 64-bit fingerprint of a row's sparsity pattern + values,
+    /// used to detect duplicate samples (species) for diversity stats.
+    pub fn row_fingerprint(&self, r: usize) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for (c, v) in self.row(r) {
+            h ^= c as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [[1, 0, 2], [0, 0, 0], [0, 3, 0]]
+        CsrMatrix::new(3, 3, vec![0, 2, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0])
+            .unwrap()
+    }
+
+    #[test]
+    fn basics() {
+        let m = small();
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.n_cols(), 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert!((m.density() - 3.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(CsrMatrix::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // indptr len
+        assert!(CsrMatrix::new(1, 2, vec![0, 2], vec![1, 0], vec![1.0, 1.0]).is_err()); // unsorted
+        assert!(CsrMatrix::new(1, 1, vec![0, 1], vec![5], vec![1.0]).is_err()); // col oob
+        assert!(CsrMatrix::new(1, 1, vec![0, 2], vec![0], vec![1.0]).is_err()); // tail
+    }
+
+    #[test]
+    fn from_dense_drops_zeros() {
+        let m = CsrMatrix::from_dense(2, 2, &[0.0, 1.0, 2.0, 0.0]).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let m = small();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.get(0, 1), 3.0);
+        assert_eq!(s.get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn fingerprints_distinguish_rows() {
+        let m = small();
+        assert_ne!(m.row_fingerprint(0), m.row_fingerprint(2));
+        // identical rows hash identically
+        let d = CsrMatrix::from_dense(2, 2, &[1.0, 2.0, 1.0, 2.0]).unwrap();
+        assert_eq!(d.row_fingerprint(0), d.row_fingerprint(1));
+    }
+
+    #[test]
+    fn col_nnz_counts() {
+        let m = small();
+        assert_eq!(m.col_nnz(), vec![1, 1, 1]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Dataset diversity statistics — the quantities the paper's scalability
+//! analysis is built on (Ω, Δ, and the sparsity of the observed Q′ vector;
+//! §V.B "Analysis: Scalability and Sensitivity" and Figure 4).
+
+use std::collections::HashMap;
+
+use crate::data::Dataset;
+
+/// Species-level view of a dataset: distinct (x, y) rows and how often
+/// each occurs (the paper's m_j multiplicities, recovered from data).
+#[derive(Debug, Clone)]
+pub struct SpeciesTable {
+    /// multiplicity (weighted count) per species
+    pub counts: Vec<f64>,
+    /// species id per row
+    pub row_species: Vec<u32>,
+}
+
+impl SpeciesTable {
+    pub fn build(ds: &Dataset) -> SpeciesTable {
+        let mut ids: HashMap<(u64, u32), u32> = HashMap::new();
+        let mut counts: Vec<f64> = Vec::new();
+        let mut row_species = Vec::with_capacity(ds.n_rows());
+        for r in 0..ds.n_rows() {
+            let key = (ds.x.row_fingerprint(r), ds.y[r].to_bits());
+            let id = *ids.entry(key).or_insert_with(|| {
+                counts.push(0.0);
+                (counts.len() - 1) as u32
+            });
+            counts[id as usize] += ds.m[r] as f64;
+            row_species.push(id);
+        }
+        SpeciesTable { counts, row_species }
+    }
+
+    pub fn n_species(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total weight over species.
+    pub fn total(&self) -> f64 {
+        self.counts.iter().sum()
+    }
+
+    /// Diversity ratio: n_species / n_rows ∈ (0, 1].
+    pub fn diversity_ratio(&self) -> f64 {
+        self.n_species() as f64 / self.row_species.len().max(1) as f64
+    }
+}
+
+/// Analytic diversity report for a dataset under a uniform sampling rate r
+/// (all R_ij = r), matching the paper's notation:
+///
+/// * `omega` — Ω: the number of species (max support of Q′).
+/// * `delta` — Δ = max_i P(Q'_i = 1) = max_i 1 - (1-r)^{m_i}.
+/// * `qprime_density` — E[#(Q'_i = 1)] / Ω: expected density of the
+///   observed Q′ vector in one sampling pass.
+/// * `rho` — probability two independent sampling passes overlap in at
+///   least one species: 1 - Π_i (1 - P(Q'_i=1)^2)... computed in log space.
+#[derive(Debug, Clone)]
+pub struct DiversityReport {
+    pub n_rows: usize,
+    pub omega: usize,
+    pub delta: f64,
+    pub qprime_density: f64,
+    pub rho: f64,
+    pub diversity_ratio: f64,
+}
+
+/// Compute the report for sampling rate `rate`.
+pub fn diversity_report(ds: &Dataset, rate: f64) -> DiversityReport {
+    let table = SpeciesTable::build(ds);
+    report_from_species(&table, rate, ds.n_rows())
+}
+
+/// Same, reusing a prebuilt species table (rate sweeps).
+pub fn report_from_species(
+    table: &SpeciesTable,
+    rate: f64,
+    n_rows: usize,
+) -> DiversityReport {
+    assert!((0.0..=1.0).contains(&rate), "rate must be in [0,1]");
+    let omega = table.n_species();
+    let mut delta: f64 = 0.0;
+    let mut expected_on = 0.0;
+    let mut log_no_overlap = 0.0;
+    for &m in &table.counts {
+        // P(Q'_i = 1) = 1 - (1-r)^m
+        let p_on = 1.0 - (1.0 - rate).powf(m);
+        delta = delta.max(p_on);
+        expected_on += p_on;
+        // overlap of two independent passes on species i: p_on^2
+        let p2 = (p_on * p_on).min(1.0 - 1e-15);
+        log_no_overlap += (1.0 - p2).ln();
+    }
+    DiversityReport {
+        n_rows,
+        omega,
+        delta,
+        qprime_density: if omega > 0 { expected_on / omega as f64 } else { 0.0 },
+        rho: 1.0 - log_no_overlap.exp(),
+        diversity_ratio: table.diversity_ratio(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn species_table_counts_duplicates() {
+        let ds = synthetic::fig4_low_diversity(1);
+        let t = SpeciesTable::build(&ds);
+        assert_eq!(t.n_species(), 3);
+        let mut counts = t.counts.clone();
+        counts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(counts, vec![10_000.0, 20_000.0, 30_000.0]);
+        assert!((t.total() - 60_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_diversity_gives_dense_qprime_and_high_delta() {
+        let lo = synthetic::fig4_low_diversity(1);
+        let hi = synthetic::fig4_high_diversity(1);
+        let r = 0.001; // small sampling rate
+        let rep_lo = diversity_report(&lo, r);
+        let rep_hi = diversity_report(&hi, r);
+        // paper Figure 4: low diversity => Q' dense even at tiny rates
+        assert!(rep_lo.qprime_density > 0.99, "lo density={}", rep_lo.qprime_density);
+        assert!(rep_hi.qprime_density < 0.05, "hi density={}", rep_hi.qprime_density);
+        assert!(rep_lo.delta > 0.99);
+        assert!(rep_hi.delta < 0.05);
+    }
+
+    #[test]
+    fn rho_increases_with_rate() {
+        let ds = synthetic::fig4_high_diversity(2);
+        let lo = diversity_report(&ds, 0.0005);
+        let hi = diversity_report(&ds, 0.5);
+        assert!(lo.rho < hi.rho);
+        assert!(hi.rho > 0.99);
+    }
+
+    #[test]
+    fn rate_zero_turns_everything_off() {
+        let ds = synthetic::fig4_high_diversity(3);
+        let rep = diversity_report(&ds, 0.0);
+        assert_eq!(rep.delta, 0.0);
+        assert_eq!(rep.qprime_density, 0.0);
+        assert!(rep.rho.abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_one_turns_everything_on() {
+        let ds = synthetic::fig4_high_diversity(4);
+        let rep = diversity_report(&ds, 1.0);
+        assert!((rep.delta - 1.0).abs() < 1e-12);
+        assert!((rep.qprime_density - 1.0).abs() < 1e-9);
+        assert!(rep.rho > 1.0 - 1e-9);
+    }
+}

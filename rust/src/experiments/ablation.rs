@@ -1,0 +1,122 @@
+//! Ablations for the §V.B general conclusions not directly covered by the
+//! figures:
+//!
+//! * **step-length × workers** (conclusions 2 & 4): larger v converges
+//!   faster per tree but amplifies staleness noise; the safe v shrinks as
+//!   workers grow.
+//! * **leaves × sensitivity** (conclusion 6): more leaves → higher
+//!   effective sample diversity → lower sensitivity to worker count.
+//! * **bounded staleness** (extension beyond the paper): rejecting stale
+//!   pushes trades throughput for per-tree quality.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::synthetic;
+use crate::io::csv::CsvWriter;
+use crate::io::Json;
+
+use super::common::{base_cfg, convergence_sweep, split, Scale, Variant};
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
+    let n_rows = scale.pick(1_500, 12_000);
+    let ds = synthetic::realsim_like(n_rows, 111);
+    let (train_ds, test_ds) = split(&ds, 0.2, 111);
+    let n_trees = scale.pick(40, 200);
+    let many_workers = scale.pick(4, 16);
+
+    // ---- (a) step length × workers
+    let mut variants = Vec::new();
+    for &v in &scale.pick(vec![0.05f32, 0.3], vec![0.01f32, 0.05, 0.2]) {
+        for workers in [1usize, many_workers] {
+            let mut cfg = base_cfg(scale, 40_000 + workers as u64);
+            cfg.workers = workers;
+            cfg.n_trees = n_trees;
+            cfg.step_length = v;
+            cfg.sampling_rate = 0.8;
+            cfg.tree.max_leaves = scale.pick(16, 64);
+            variants.push(Variant {
+                tag: format!("v={v}_workers={workers}"),
+                cfg,
+            });
+        }
+    }
+    let (_r1, step_summary) =
+        convergence_sweep("ablation_step_length", &train_ds, Some(&test_ds), variants, out_dir)?;
+
+    // ---- (b) leaves × worker sensitivity
+    let mut variants = Vec::new();
+    for &leaves in &scale.pick(vec![4usize, 32], vec![8usize, 64, 400]) {
+        for workers in [1usize, many_workers] {
+            let mut cfg = base_cfg(scale, 41_000 + workers as u64 + leaves as u64);
+            cfg.workers = workers;
+            cfg.n_trees = n_trees;
+            cfg.step_length = scale.pick(0.1, 0.02);
+            cfg.sampling_rate = 0.8;
+            cfg.tree.max_leaves = leaves;
+            variants.push(Variant {
+                tag: format!("leaves={leaves}_workers={workers}"),
+                cfg,
+            });
+        }
+    }
+    let (_r2, leaves_summary) =
+        convergence_sweep("ablation_leaves", &train_ds, Some(&test_ds), variants, out_dir)?;
+
+    // ---- (c) bounded staleness (system extension)
+    let mut variants = Vec::new();
+    for max_tau in [None, Some(2u64), Some(0u64)] {
+        let mut cfg = base_cfg(scale, 42_000);
+        cfg.workers = many_workers;
+        cfg.n_trees = n_trees;
+        cfg.step_length = scale.pick(0.1, 0.02);
+        cfg.sampling_rate = 0.8;
+        cfg.tree.max_leaves = scale.pick(16, 64);
+        cfg.max_staleness = max_tau;
+        variants.push(Variant {
+            tag: format!(
+                "max_tau={}",
+                max_tau.map(|t| t.to_string()).unwrap_or_else(|| "inf".into())
+            ),
+            cfg,
+        });
+    }
+    let (reports, staleness_summary) =
+        convergence_sweep("ablation_bounded_staleness", &train_ds, Some(&test_ds), variants, out_dir)?;
+
+    // rejected-push accounting for the bounded-staleness table
+    let mut csv = CsvWriter::new(&["max_tau", "accepted", "rejected", "trees_per_sec"]);
+    for rep in &reports {
+        csv.row(&[
+            rep.mode.clone(),
+            rep.trees_accepted.to_string(),
+            rep.trees_rejected.to_string(),
+            format!("{:.3}", rep.trees_per_sec()),
+        ]);
+    }
+    csv.write(&out_dir.join("ablation_staleness_throughput.csv"))?;
+
+    Ok(Json::obj(vec![
+        ("step_length", step_summary),
+        ("leaves", leaves_summary),
+        ("bounded_staleness", staleness_summary),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_produces_all_three_studies() {
+        let dir = std::env::temp_dir().join("asgbdt_ablation_test");
+        let j = run(Scale::Smoke, &dir).unwrap();
+        assert!(j.get("step_length").is_some());
+        assert!(j.get("leaves").is_some());
+        assert!(j.get("bounded_staleness").is_some());
+        assert!(dir.join("ablation_step_length.csv").exists());
+        assert!(dir.join("ablation_leaves.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,152 @@
+//! Shared machinery for the figure drivers.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{TrainConfig, TrainMode};
+use crate::coordinator::{train, TrainReport};
+use crate::data::Dataset;
+use crate::io::csv::CsvWriter;
+use crate::io::Json;
+use crate::util::Rng;
+
+/// Experiment size: Smoke for CI/tests, Paper for figure regeneration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Paper,
+}
+
+impl Scale {
+    /// `ASGBDT_SCALE=paper` upgrades benches/CLI runs.
+    pub fn from_env() -> Scale {
+        match std::env::var("ASGBDT_SCALE").as_deref() {
+            Ok("paper") => Scale::Paper,
+            _ => Scale::Smoke,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scale> {
+        match s {
+            "smoke" => Ok(Scale::Smoke),
+            "paper" => Ok(Scale::Paper),
+            other => anyhow::bail!("unknown scale '{other}' (smoke|paper)"),
+        }
+    }
+
+    pub fn pick<T>(&self, smoke: T, paper: T) -> T {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Paper => paper,
+        }
+    }
+}
+
+/// A tagged training variation within a sweep.
+pub struct Variant {
+    pub tag: String,
+    pub cfg: TrainConfig,
+}
+
+/// Run a set of variants on (train, test), appending all loss curves into
+/// one long-format CSV (`<name>.csv`: tag, n_trees, train_loss, ...).
+/// Returns (csv rows, per-variant reports).
+pub fn convergence_sweep(
+    name: &str,
+    train_ds: &Dataset,
+    test_ds: Option<&Dataset>,
+    variants: Vec<Variant>,
+    out_dir: &Path,
+) -> Result<(Vec<TrainReport>, Json)> {
+    let mut csv = CsvWriter::new(&[
+        "tag", "n_trees", "train_loss", "test_loss", "test_error", "wall_secs",
+    ]);
+    let mut reports = Vec::new();
+    let mut summary_items = Vec::new();
+    for v in variants {
+        log::info!("[{name}] running variant {}", v.tag);
+        let rep = train(&v.cfg, train_ds, test_ds)?;
+        for p in &rep.curve.points {
+            csv.row(&[
+                v.tag.clone(),
+                p.n_trees.to_string(),
+                format!("{:.6}", p.train_loss),
+                format!("{:.6}", p.test_loss),
+                format!("{:.6}", p.test_error),
+                format!("{:.4}", p.wall_secs),
+            ]);
+        }
+        summary_items.push((
+            v.tag.clone(),
+            Json::obj(vec![
+                (
+                    "final_train_loss",
+                    Json::Num(rep.curve.final_train_loss().unwrap_or(f64::NAN)),
+                ),
+                ("loss_auc", Json::Num(rep.curve.train_loss_auc())),
+                ("staleness_mean", Json::Num(rep.staleness.mean())),
+                ("trees_per_sec", Json::Num(rep.trees_per_sec())),
+                ("wall_secs", Json::Num(rep.wall_secs)),
+            ]),
+        ));
+        reports.push(rep);
+    }
+    let path = out_dir.join(format!("{name}.csv"));
+    csv.write(&path)?;
+    log::info!("[{name}] wrote {}", path.display());
+    let summary = Json::Obj(
+        summary_items
+            .into_iter()
+            .map(|(k, v)| (k, v))
+            .collect(),
+    );
+    Ok((reports, summary))
+}
+
+/// Baseline async config shared by the convergence figures.
+pub fn base_cfg(scale: Scale, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = TrainMode::Async;
+    cfg.seed = seed;
+    cfg.eval_every = scale.pick(5, 10);
+    cfg.max_bins = scale.pick(32, 64);
+    cfg
+}
+
+/// Split a dataset deterministically for an experiment.
+pub fn split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(seed);
+    ds.split(test_frac, &mut rng)
+}
+
+/// Worker sweep per scale (paper: 1..32).
+pub fn worker_counts(scale: Scale) -> Vec<usize> {
+    scale.pick(vec![1, 2, 4], vec![1, 2, 4, 8, 16, 32])
+}
+
+/// Sampling-rate sweep per scale (paper: 0.2..0.8).
+pub fn sampling_rates(scale: Scale) -> Vec<f64> {
+    scale.pick(vec![0.4, 0.8], vec![0.2, 0.4, 0.6, 0.8])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_pick_and_parse() {
+        assert_eq!(Scale::parse("smoke").unwrap(), Scale::Smoke);
+        assert_eq!(Scale::parse("paper").unwrap(), Scale::Paper);
+        assert!(Scale::parse("huge").is_err());
+        assert_eq!(Scale::Smoke.pick(1, 2), 1);
+        assert_eq!(Scale::Paper.pick(1, 2), 2);
+    }
+
+    #[test]
+    fn sweeps_are_scale_dependent() {
+        assert!(worker_counts(Scale::Paper).contains(&32));
+        assert!(!worker_counts(Scale::Smoke).contains(&32));
+        assert_eq!(sampling_rates(Scale::Paper).len(), 4);
+    }
+}

@@ -1,0 +1,61 @@
+//! Figure 5: Higgs — convergence vs worker count at a fixed sampling rate.
+//!
+//! Paper setting: 1000 trees, 20 leaves, v = 0.01, feature rate 0.8,
+//! sampling rate fixed (0.8). Expected shape: Higgs is low-diversity, so
+//! more workers (more staleness) visibly *slows* convergence per tree —
+//! the paper's negative benchmark.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::synthetic;
+use crate::io::Json;
+
+use super::common::{base_cfg, convergence_sweep, split, worker_counts, Scale, Variant};
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
+    let n_rows = scale.pick(3_000, 60_000);
+    let ds = synthetic::higgs_like(n_rows, 505);
+    let (train_ds, test_ds) = split(&ds, 0.2, 505);
+
+    let variants = worker_counts(scale)
+        .into_iter()
+        .map(|w| {
+            let mut cfg = base_cfg(scale, 5_000 + w as u64);
+            cfg.workers = w;
+            cfg.n_trees = scale.pick(48, 1000);
+            cfg.step_length = scale.pick(0.1, 0.01);
+            cfg.sampling_rate = 0.8;
+            cfg.tree.max_leaves = 20;
+            cfg.tree.feature_rate = 0.8;
+            Variant {
+                tag: format!("workers={w}"),
+                cfg,
+            }
+        })
+        .collect();
+
+    let (_reports, summary) =
+        convergence_sweep("fig5_higgs_workers", &train_ds, Some(&test_ds), variants, out_dir)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_runs_and_all_variants_converge() {
+        let dir = std::env::temp_dir().join("asgbdt_fig5_test");
+        let j = run(Scale::Smoke, &dir).unwrap();
+        let obj = j.as_obj().unwrap();
+        assert!(obj.len() >= 2);
+        for (tag, v) in obj {
+            let loss = v.req_f64("final_train_loss").unwrap();
+            assert!(loss.is_finite() && loss < std::f64::consts::LN_2 + 0.05, "{tag}: {loss}");
+        }
+        assert!(dir.join("fig5_higgs_workers.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure 7: Higgs — convergence vs sampling rate at a fixed worker count.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::synthetic;
+use crate::io::Json;
+
+use super::common::{base_cfg, convergence_sweep, sampling_rates, split, Scale, Variant};
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
+    let n_rows = scale.pick(3_000, 60_000);
+    let ds = synthetic::higgs_like(n_rows, 707);
+    let (train_ds, test_ds) = split(&ds, 0.2, 707);
+    let workers = scale.pick(4, 16);
+
+    let variants = sampling_rates(scale)
+        .into_iter()
+        .map(|rate| {
+            let mut cfg = base_cfg(scale, 7_000 + (rate * 1000.0) as u64);
+            cfg.workers = workers;
+            cfg.n_trees = scale.pick(48, 1000);
+            cfg.step_length = scale.pick(0.1, 0.01);
+            cfg.sampling_rate = rate;
+            cfg.tree.max_leaves = 20;
+            cfg.tree.feature_rate = 0.8;
+            Variant {
+                tag: format!("rate={rate}"),
+                cfg,
+            }
+        })
+        .collect();
+
+    let (_reports, summary) =
+        convergence_sweep("fig7_higgs_sampling", &train_ds, Some(&test_ds), variants, out_dir)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_runs_all_rates() {
+        let dir = std::env::temp_dir().join("asgbdt_fig7_test");
+        let j = run(Scale::Smoke, &dir).unwrap();
+        assert!(j.as_obj().unwrap().len() >= 2);
+        assert!(dir.join("fig7_higgs_sampling.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

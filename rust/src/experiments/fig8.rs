@@ -1,0 +1,62 @@
+//! Figure 8: real-sim — convergence vs sampling rate at a fixed worker
+//! count. Paper observation: "sampling rates between 0.2 and 0.8 exert a
+//! slight effect on the convergence speed in this dataset".
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::synthetic;
+use crate::io::Json;
+
+use super::common::{base_cfg, convergence_sweep, sampling_rates, split, Scale, Variant};
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
+    let n_rows = scale.pick(2_000, 20_000);
+    let ds = synthetic::realsim_like(n_rows, 808);
+    let (train_ds, test_ds) = split(&ds, 0.2, 808);
+    let workers = scale.pick(4, 16);
+
+    let variants = sampling_rates(scale)
+        .into_iter()
+        .map(|rate| {
+            let mut cfg = base_cfg(scale, 8_000 + (rate * 1000.0) as u64);
+            cfg.workers = workers;
+            cfg.n_trees = scale.pick(48, 400);
+            cfg.step_length = scale.pick(0.1, 0.01);
+            cfg.sampling_rate = rate;
+            cfg.tree.max_leaves = scale.pick(16, 100);
+            cfg.tree.feature_rate = 0.8;
+            Variant {
+                tag: format!("rate={rate}"),
+                cfg,
+            }
+        })
+        .collect();
+
+    let (_reports, summary) =
+        convergence_sweep("fig8_realsim_sampling", &train_ds, Some(&test_ds), variants, out_dir)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_rates_within_band_converge_similarly() {
+        let dir = std::env::temp_dir().join("asgbdt_fig8_test");
+        let j = run(Scale::Smoke, &dir).unwrap();
+        let aucs: Vec<f64> = j
+            .as_obj()
+            .unwrap()
+            .values()
+            .map(|v| v.req_f64("loss_auc").unwrap())
+            .collect();
+        let max = aucs.iter().cloned().fold(f64::MIN, f64::max);
+        let min = aucs.iter().cloned().fold(f64::MAX, f64::min);
+        // paper: rates in [0.2, 0.8] barely change real-sim convergence
+        assert!(max - min < 0.15, "rates changed convergence too much: {aucs:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

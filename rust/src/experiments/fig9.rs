@@ -1,0 +1,77 @@
+//! Figure 9: sensitivity at a normal (0.6) vs extremely small sampling
+//! rate (paper: 5e-6 ≈ 500 samples per pass on real-sim).
+//!
+//! Expected shape (paper conclusions 1 & 3): the tiny rate *reduces
+//! sensitivity* to the worker count (curves for 1 vs many workers nearly
+//! coincide) but *slows convergence* overall (distorted trees from ~500
+//! samples).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::synthetic;
+use crate::io::Json;
+
+use super::common::{base_cfg, convergence_sweep, split, Scale, Variant};
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
+    let n_rows = scale.pick(2_000, 20_000);
+    let ds = synthetic::realsim_like(n_rows, 909);
+    let (train_ds, test_ds) = split(&ds, 0.2, 909);
+    // "approximately 500 samples on average in each sampling subdataset"
+    let tiny_rate = (500.0 / train_ds.n_rows() as f64).min(0.5);
+    let normal_rate = 0.6;
+    let worker_pair = scale.pick((1usize, 4usize), (1usize, 16usize));
+
+    let mut variants = Vec::new();
+    for rate in [normal_rate, tiny_rate] {
+        for workers in [worker_pair.0, worker_pair.1] {
+            let mut cfg = base_cfg(scale, 9_000 + workers as u64);
+            cfg.workers = workers;
+            cfg.n_trees = scale.pick(48, 400);
+            cfg.step_length = scale.pick(0.1, 0.01);
+            cfg.sampling_rate = rate;
+            cfg.tree.max_leaves = scale.pick(16, 100);
+            cfg.tree.feature_rate = 0.8;
+            variants.push(Variant {
+                tag: format!("rate={rate:.6}_workers={workers}"),
+                cfg,
+            });
+        }
+    }
+
+    let (_reports, summary) =
+        convergence_sweep("fig9_small_rate", &train_ds, Some(&test_ds), variants, out_dir)?;
+    Ok(summary)
+}
+
+/// Sensitivity measure used by the bench: |AUC(many workers) − AUC(1)|.
+pub fn sensitivity_gap(summary: &Json, rate_prefix: &str) -> Option<f64> {
+    let obj = summary.as_obj()?;
+    let mut aucs: Vec<f64> = obj
+        .iter()
+        .filter(|(k, _)| k.starts_with(rate_prefix))
+        .map(|(_, v)| v.req_f64("loss_auc").ok())
+        .collect::<Option<Vec<_>>>()?;
+    if aucs.len() < 2 {
+        return None;
+    }
+    aucs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(aucs.last()? - aucs.first()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_runs_four_variants() {
+        let dir = std::env::temp_dir().join("asgbdt_fig9_test");
+        let j = run(Scale::Smoke, &dir).unwrap();
+        assert_eq!(j.as_obj().unwrap().len(), 4);
+        // both gaps computable
+        assert!(sensitivity_gap(&j, "rate=0.6").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

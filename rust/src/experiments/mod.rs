@@ -1,0 +1,45 @@
+//! Experiment drivers — one per paper figure (see DESIGN.md §5 for the
+//! index). Each driver regenerates its figure's data as CSV under
+//! `results/` and returns a JSON summary; bench targets and the CLI
+//! (`asgbdt experiment <id>`) are thin wrappers around these.
+//!
+//! Every driver honours [`Scale`]: `Smoke` (seconds; CI and `cargo test`)
+//! vs `Paper` (paper-shaped sizes; minutes).
+
+pub mod ablation;
+pub mod common;
+pub mod fig10;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+pub use common::Scale;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::io::Json;
+
+/// Run an experiment by figure id ("fig4" … "fig10", "ablation").
+pub fn run(id: &str, scale: Scale, out_dir: &Path) -> Result<Json> {
+    match id {
+        "fig4" => fig4::run(scale, out_dir),
+        "fig5" => fig5::run(scale, out_dir),
+        "fig6" => fig6::run(scale, out_dir),
+        "fig7" => fig7::run(scale, out_dir),
+        "fig8" => fig8::run(scale, out_dir),
+        "fig9" => fig9::run(scale, out_dir),
+        "fig10" => fig10::run(scale, out_dir),
+        "ablation" => ablation::run(scale, out_dir),
+        other => bail!("unknown experiment '{other}' (fig4..fig10, ablation)"),
+    }
+}
+
+/// All experiment ids, in paper order.
+pub fn all_ids() -> &'static [&'static str] {
+    &["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablation"]
+}

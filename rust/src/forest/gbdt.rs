@@ -1,0 +1,201 @@
+//! Forest container: base score + v-scaled trees (Algorithm 3's
+//! `F^j(x) = F^{j-1}(x) + v * Tree_{k(j)}`).
+
+use anyhow::Result;
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::BinnedDataset;
+use crate::io::Json;
+use crate::tree::Tree;
+
+/// An additive tree model. `base_score` is the margin of the initial
+/// constant tree (the paper's server init: mean label mapped to margin).
+#[derive(Debug, Clone, Default)]
+pub struct Forest {
+    pub base_score: f32,
+    /// (step length v at push time, tree)
+    pub trees: Vec<(f32, Tree)>,
+}
+
+impl Forest {
+    pub fn new(base_score: f32) -> Forest {
+        Forest {
+            base_score,
+            trees: Vec::new(),
+        }
+    }
+
+    /// Initial margin from a positive rate p: F0 = 0.5 * logit(p) (inverse
+    /// of p = sigmoid(2F)). Clamped for degenerate all-one/all-zero labels.
+    pub fn base_from_positive_rate(p: f64) -> f32 {
+        let p = p.clamp(1e-6, 1.0 - 1e-6);
+        (0.5 * (p / (1.0 - p)).ln()) as f32
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Append a tree with step length v.
+    pub fn push(&mut self, v: f32, tree: Tree) {
+        self.trees.push((v, tree));
+    }
+
+    /// Margin prediction for one raw sparse row.
+    pub fn predict_raw(&self, x: &CsrMatrix, row: usize) -> f32 {
+        let mut f = self.base_score;
+        for (v, t) in &self.trees {
+            f += v * t.predict_raw(x, row);
+        }
+        f
+    }
+
+    /// Margin predictions for all rows of a raw matrix.
+    pub fn predict_all(&self, x: &CsrMatrix) -> Vec<f32> {
+        (0..x.n_rows()).map(|r| self.predict_raw(x, r)).collect()
+    }
+
+    /// Margin predictions on the training (binned) representation.
+    pub fn predict_all_binned(&self, b: &BinnedDataset) -> Vec<f32> {
+        let mut f = vec![self.base_score; b.n_rows];
+        for (v, t) in &self.trees {
+            for (r, fr) in f.iter_mut().enumerate() {
+                *fr += v * t.predict_binned(b, r);
+            }
+        }
+        f
+    }
+
+    /// Staged margins after each tree (loss-curve evaluation).
+    pub fn staged_margins_raw(&self, x: &CsrMatrix, row: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.trees.len() + 1);
+        let mut f = self.base_score;
+        out.push(f);
+        for (v, t) in &self.trees {
+            f += v * t.predict_raw(x, row);
+            out.push(f);
+        }
+        out
+    }
+
+    // ------------------------------------------------------ serialization
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base_score", Json::Num(self.base_score as f64)),
+            (
+                "trees",
+                Json::Arr(
+                    self.trees
+                        .iter()
+                        .map(|(v, t)| {
+                            Json::obj(vec![
+                                ("v", Json::Num(*v as f64)),
+                                ("tree", t.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Forest> {
+        let base_score = j.req_f64("base_score")? as f32;
+        let mut forest = Forest::new(base_score);
+        for item in j
+            .req("trees")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("trees must be array"))?
+        {
+            let v = item.req_f64("v")? as f32;
+            let t = Tree::from_json(item.req("tree")?)?;
+            forest.push(v, t);
+        }
+        Ok(forest)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Forest> {
+        Forest::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::Node;
+
+    fn stump(v: f32) -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Split {
+                    feature: 0,
+                    bin: 0,
+                    threshold: 1.5,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: -v },
+                Node::Leaf { value: v },
+            ],
+        }
+    }
+
+    #[test]
+    fn additive_prediction() {
+        let mut f = Forest::new(0.1);
+        f.push(0.5, stump(1.0));
+        f.push(0.5, stump(2.0));
+        let x = CsrMatrix::from_dense(2, 1, &[1.0, 2.0]).unwrap();
+        // row 0: 0.1 + 0.5*(-1) + 0.5*(-2) = -1.4
+        assert!((f.predict_raw(&x, 0) + 1.4).abs() < 1e-6);
+        // row 1: 0.1 + 0.5*(1) + 0.5*(2) = 1.6
+        assert!((f.predict_raw(&x, 1) - 1.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staged_margins_accumulate() {
+        let mut f = Forest::new(0.0);
+        f.push(1.0, stump(1.0));
+        f.push(1.0, stump(1.0));
+        let x = CsrMatrix::from_dense(1, 1, &[2.0]).unwrap();
+        assert_eq!(f.staged_margins_raw(&x, 0), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn base_from_positive_rate_inverts_sigmoid2f() {
+        for &p in &[0.1f64, 0.5, 0.9] {
+            let f = Forest::base_from_positive_rate(p);
+            let back = crate::loss::logistic::prob(f) as f64;
+            assert!((back - p).abs() < 1e-5, "p={p} back={back}");
+        }
+        // degenerate rates stay finite
+        assert!(Forest::base_from_positive_rate(0.0).is_finite());
+        assert!(Forest::base_from_positive_rate(1.0).is_finite());
+    }
+
+    #[test]
+    fn json_roundtrip_and_file_io() {
+        let mut f = Forest::new(0.25);
+        f.push(0.01, stump(3.0));
+        let j = f.to_json();
+        let back = Forest::from_json(&j).unwrap();
+        assert_eq!(back.base_score, 0.25);
+        assert_eq!(back.n_trees(), 1);
+        assert_eq!(back.trees[0].0, 0.01);
+
+        let path = std::env::temp_dir().join("asgbdt_forest_test.json");
+        f.save(&path).unwrap();
+        let loaded = Forest::load(&path).unwrap();
+        assert_eq!(loaded.n_trees(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

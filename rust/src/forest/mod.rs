@@ -1,0 +1,5 @@
+//! The additive model F(x) — the GBDT forest.
+
+pub mod gbdt;
+
+pub use gbdt::Forest;

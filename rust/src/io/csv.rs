@@ -1,0 +1,122 @@
+//! CSV writer for experiment outputs (`results/*.csv`).
+//!
+//! Quoting follows RFC 4180 for the fields we emit (numbers and simple
+//! identifiers; strings are quoted when they contain separators).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Accumulates rows, writes a CSV file atomically at the end.
+#[derive(Debug, Default)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    fn quote(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    /// Push one row of stringified fields. Panics if the arity differs from
+    /// the header (an arity bug in an experiment driver should be loud).
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience: push a row of f64s formatted with full precision.
+    pub fn row_f64(&mut self, fields: &[f64]) {
+        self.row(&fields.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a CSV string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|h| Self::quote(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|f| Self::quote(f)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("mkdir -p {}", parent.display()))?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "x,y".into()]);
+        w.row_f64(&[2.5, 3.0]);
+        let s = w.to_string();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n2.5,3\n");
+        assert_eq!(w.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("asgbdt_csv_test");
+        let path = dir.join("sub/out.csv");
+        let mut w = CsvWriter::new(&["x"]);
+        w.row(&["quoted \"q\"".into()]);
+        w.write(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "x\n\"quoted \"\"q\"\"\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

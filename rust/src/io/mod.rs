@@ -1,0 +1,11 @@
+//! Minimal IO substrates: JSON (config + artifact manifests + metric
+//! dumps), CSV (experiment outputs), and svmlight/LIBSVM datasets.
+//!
+//! serde is not available in the offline vendor set (see DESIGN.md §7), so
+//! these are small hand-rolled implementations with full tests.
+
+pub mod csv;
+pub mod json;
+pub mod svmlight;
+
+pub use json::Json;

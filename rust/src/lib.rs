@@ -1,0 +1,44 @@
+//! # asynch-sgbdt
+//!
+//! Reproduction of *"Asynch-SGBDT: Train a Stochastic Gradient Boosting
+//! Decision Tree in an Asynchronous Parallel Manner"* (Cheng, Xia, Li,
+//! Zhang) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: a parameter
+//!   server ([`ps`]) on which workers build trees fully asynchronously
+//!   ([`coordinator`]), plus every substrate the paper depends on: the
+//!   histogram decision-tree learner ([`tree`]), dataset machinery
+//!   ([`data`]), Bernoulli sampling + Q′ diversity statistics
+//!   ([`sampling`]), synchronous fork-join / serial baselines, and the
+//!   discrete-event cluster simulator ([`simulator`]) behind the paper's
+//!   speedup study.
+//! * **L2/L1 (build time, `python/`)** — the produce-target sub-step
+//!   (fused logistic grad/hess/loss, Eq. 10) as a JAX function wrapping a
+//!   Pallas kernel, AOT-lowered to HLO-text artifacts.
+//! * **Runtime bridge** ([`runtime`]) — loads those artifacts through the
+//!   PJRT CPU client (`xla` crate) and executes them on the server's hot
+//!   path. Python never runs at training time.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper figure to a module and bench target.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod forest;
+pub mod io;
+pub mod loss;
+pub mod metrics;
+pub mod ps;
+pub mod runtime;
+pub mod sampling;
+pub mod simulator;
+pub mod testkit;
+pub mod tree;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,183 @@
+//! The paper's logistic loss:  p = e^F/(e^F + e^-F) = sigmoid(2F),
+//! l(y, F) = -y log p - (1-y) log(1-p), y ∈ {0, 1}.
+//!
+//! Closed forms: l' = 2(p - y), l'' = 4 p (1 - p).
+
+/// Result of one produce-target pass.
+#[derive(Debug, Clone)]
+pub struct GradHess {
+    /// g_i = w_i * l'(y_i, F_i) — the stochastic target L'_random (Eq. 10).
+    pub grad: Vec<f32>,
+    /// h_i = w_i * l''(y_i, F_i).
+    pub hess: Vec<f32>,
+    /// sum_i w_i * l(y_i, F_i).
+    pub loss_sum: f64,
+    /// sum_i w_i.
+    pub weight_sum: f64,
+}
+
+/// p = sigmoid(2F).
+#[inline]
+pub fn prob(f: f32) -> f32 {
+    let t = 2.0 * f;
+    if t >= 0.0 {
+        let e = (-t).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable softplus.
+#[inline]
+fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Per-element loss l(y, F), stable for |F| >> 1.
+#[inline]
+pub fn loss_elem(f: f32, y: f32) -> f32 {
+    let two_f = 2.0 * f;
+    y * softplus(-two_f) + (1.0 - y) * softplus(two_f)
+}
+
+/// Pure-Rust produce-target pass over padded-free vectors; mirrors the
+/// L2 model function `grad_hess_loss` in `python/compile/model.py`.
+pub fn grad_hess_loss(f: &[f32], y: &[f32], w: &[f32]) -> GradHess {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let n = f.len();
+    let mut grad = vec![0.0f32; n];
+    let mut hess = vec![0.0f32; n];
+    let mut loss_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    for i in 0..n {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue; // padding / unsampled rows are exact no-ops
+        }
+        let p = prob(f[i]);
+        grad[i] = wi * 2.0 * (p - y[i]);
+        hess[i] = wi * 4.0 * p * (1.0 - p);
+        loss_sum += (wi * loss_elem(f[i], y[i])) as f64;
+        weight_sum += wi as f64;
+    }
+    GradHess {
+        grad,
+        hess,
+        loss_sum,
+        weight_sum,
+    }
+}
+
+/// Weighted evaluation pass: (loss_sum, err_sum, weight_sum); mirrors the
+/// L2 `eval_metrics`.
+pub fn eval_sums(f: &[f32], y: &[f32], w: &[f32]) -> (f64, f64, f64) {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let mut loss_sum = 0.0f64;
+    let mut err_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    for i in 0..f.len() {
+        let wi = w[i] as f64;
+        if wi == 0.0 {
+            continue;
+        }
+        loss_sum += wi * loss_elem(f[i], y[i]) as f64;
+        let pred = if f[i] > 0.0 { 1.0 } else { 0.0 };
+        err_sum += wi * (pred - y[i]).abs() as f64;
+        weight_sum += wi;
+    }
+    (loss_sum, err_sum, weight_sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prob_is_sigmoid_2f() {
+        assert!((prob(0.0) - 0.5).abs() < 1e-7);
+        assert!((prob(10.0) - 1.0).abs() < 1e-6);
+        assert!(prob(-10.0) < 1e-6);
+        // symmetric
+        assert!((prob(0.3) + prob(-0.3) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_at_zero_is_log2() {
+        assert!((loss_elem(0.0, 0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+        assert!((loss_elem(0.0, 1.0) - std::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_finite_at_extremes() {
+        for &f in &[-80.0f32, 80.0] {
+            for &y in &[0.0f32, 1.0] {
+                assert!(loss_elem(f, y).is_finite());
+            }
+        }
+        // confident-correct is near zero, confident-wrong is ~2|F|
+        assert!(loss_elem(40.0, 1.0) < 1e-6);
+        assert!((loss_elem(40.0, 0.0) - 80.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let eps = 1e-3f32;
+        for &f in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            for &y in &[0.0f32, 1.0] {
+                let g = 2.0 * (prob(f) - y);
+                let fd = (loss_elem(f + eps, y) - loss_elem(f - eps, y)) / (2.0 * eps);
+                assert!((g - fd).abs() < 1e-3, "f={f} y={y} g={g} fd={fd}");
+            }
+        }
+    }
+
+    #[test]
+    fn hess_matches_finite_difference_of_grad() {
+        let eps = 1e-3f32;
+        for &f in &[-1.5f32, 0.0, 0.9] {
+            let h = {
+                let p = prob(f);
+                4.0 * p * (1.0 - p)
+            };
+            let g = |f: f32| 2.0 * (prob(f) - 1.0);
+            let fd = (g(f + eps) - g(f - eps)) / (2.0 * eps);
+            assert!((h - fd).abs() < 1e-2, "f={f} h={h} fd={fd}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_rows_are_noops() {
+        let gh = grad_hess_loss(&[5.0, -3.0], &[0.0, 1.0], &[0.0, 2.0]);
+        assert_eq!(gh.grad[0], 0.0);
+        assert_eq!(gh.hess[0], 0.0);
+        assert!((gh.weight_sum - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weights_scale_linearly() {
+        let f = [0.3f32, -0.8, 1.2];
+        let y = [1.0f32, 0.0, 1.0];
+        let w1 = [1.0f32, 1.0, 1.0];
+        let w2 = [2.0f32, 2.0, 2.0];
+        let a = grad_hess_loss(&f, &y, &w1);
+        let b = grad_hess_loss(&f, &y, &w2);
+        for i in 0..3 {
+            assert!((2.0 * a.grad[i] - b.grad[i]).abs() < 1e-6);
+            assert!((2.0 * a.hess[i] - b.hess[i]).abs() < 1e-6);
+        }
+        assert!((2.0 * a.loss_sum - b.loss_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_sums_error_counting() {
+        // f>0 predicts 1
+        let (loss, err, w) = eval_sums(&[1.0, -1.0, 1.0], &[1.0, 1.0, 0.0], &[1.0; 3]);
+        assert!((err - 2.0).abs() < 1e-12); // rows 1 and 2 wrong
+        assert!((w - 3.0).abs() < 1e-12);
+        assert!(loss > 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Evaluation metrics on raw margins F (threshold at 0).
+
+use super::logistic::loss_elem;
+
+/// Weighted mean logloss.
+pub fn logloss(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..f.len() {
+        num += (w[i] * loss_elem(f[i], y[i])) as f64;
+        den += w[i] as f64;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Weighted misclassification rate (F > 0 predicts class 1).
+pub fn error_rate(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
+    assert_eq!(f.len(), y.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..f.len() {
+        let pred = if f[i] > 0.0 { 1.0 } else { 0.0 };
+        num += (w[i] * (pred - y[i]).abs()) as f64;
+        den += w[i] as f64;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Weighted accuracy.
+pub fn accuracy(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
+    1.0 - error_rate(f, y, w)
+}
+
+/// Weighted ROC-AUC via the rank statistic (ties get midranks).
+pub fn auc(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
+    assert_eq!(f.len(), y.len());
+    let n = f.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| f[a].partial_cmp(&f[b]).unwrap());
+    // midrank assignment over ties
+    let mut rank = vec![0.0f64; n];
+    let mut i = 0;
+    let mut cum = 0.0f64; // weighted rank position
+    while i < n {
+        let mut j = i;
+        let mut tie_w = 0.0f64;
+        while j < n && f[order[j]] == f[order[i]] {
+            tie_w += w[order[j]] as f64;
+            j += 1;
+        }
+        // weighted midrank: cum + tie_w/2
+        for k in i..j {
+            rank[order[k]] = cum + tie_w / 2.0;
+        }
+        cum += tie_w;
+        i = j;
+    }
+    let mut pos_w = 0.0f64;
+    let mut neg_w = 0.0f64;
+    let mut pos_rank_sum = 0.0f64;
+    for k in 0..n {
+        let wk = w[k] as f64;
+        if y[k] > 0.5 {
+            pos_w += wk;
+            pos_rank_sum += wk * rank[k];
+        } else {
+            neg_w += wk;
+        }
+    }
+    if pos_w == 0.0 || neg_w == 0.0 {
+        return 0.5;
+    }
+    // Wilcoxon–Mann–Whitney with weighted midranks:
+    // AUC = (sum of positive ranks - pos_w^2/2) / (pos_w * neg_w)
+    (pos_rank_sum - pos_w * pos_w / 2.0) / (pos_w * neg_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logloss_random_classifier_is_log2() {
+        let f = vec![0.0f32; 100];
+        let y: Vec<f32> = (0..100).map(|i| (i % 2) as f32).collect();
+        let w = vec![1.0f32; 100];
+        assert!((logloss(&f, &y, &w) - std::f64::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_rate_perfect_and_worst() {
+        let y: Vec<f32> = (0..10).map(|i| (i % 2) as f32).collect();
+        let right: Vec<f32> = y.iter().map(|&v| (v - 0.5) * 4.0).collect();
+        let wrong: Vec<f32> = y.iter().map(|&v| (0.5 - v) * 4.0).collect();
+        let w = vec![1.0f32; 10];
+        assert_eq!(error_rate(&right, &y, &w), 0.0);
+        assert_eq!(error_rate(&wrong, &y, &w), 1.0);
+        assert_eq!(accuracy(&right, &y, &w), 1.0);
+    }
+
+    #[test]
+    fn auc_perfect_separation_is_one() {
+        let f = vec![-2.0f32, -1.0, 1.0, 2.0];
+        let y = vec![0.0f32, 0.0, 1.0, 1.0];
+        let w = vec![1.0f32; 4];
+        assert!((auc(&f, &y, &w) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_reversed_is_zero() {
+        let f = vec![2.0f32, 1.0, -1.0, -2.0];
+        let y = vec![0.0f32, 0.0, 1.0, 1.0];
+        let w = vec![1.0f32; 4];
+        assert!(auc(&f, &y, &w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_ties_give_half() {
+        let f = vec![0.5f32; 6];
+        let y = vec![0.0f32, 1.0, 0.0, 1.0, 0.0, 1.0];
+        let w = vec![1.0f32; 6];
+        assert!((auc(&f, &y, &w) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_degenerate_classes_half() {
+        let f = vec![0.1f32, 0.2];
+        assert_eq!(auc(&f, &[1.0, 1.0], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn weights_matter() {
+        // one heavily weighted wrong sample dominates error rate
+        let f = vec![1.0f32, -1.0];
+        let y = vec![1.0f32, 1.0];
+        assert!((error_rate(&f, &y, &[1.0, 9.0]) - 0.9).abs() < 1e-9);
+    }
+}

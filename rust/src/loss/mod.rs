@@ -1,0 +1,13 @@
+//! Logistic loss (the paper's §III.A parameterisation) and evaluation
+//! metrics.
+//!
+//! `logistic` is the pure-Rust implementation — the cross-check oracle and
+//! fallback for the AOT (JAX/Pallas → HLO) path executed by [`crate::runtime`].
+//! Numerics are pinned to `python/compile/kernels/ref.py` by tests in
+//! `rust/tests/test_runtime.rs`.
+
+pub mod logistic;
+pub mod metrics;
+
+pub use logistic::{grad_hess_loss, GradHess};
+pub use metrics::{accuracy, auc, error_rate, logloss};

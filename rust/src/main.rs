@@ -1,0 +1,283 @@
+//! asgbdt — the asynch-SGBDT launcher.
+//!
+//! ```text
+//! asgbdt train [--data <spec>] [--test-frac 0.2] [--model out.json] [k=v ...]
+//! asgbdt experiment <fig4..fig10|ablation|all> [--scale smoke|paper] [--out results]
+//! asgbdt simulate [--workload realsim|e2006] [--workers 1,2,...] [--trees N]
+//! asgbdt datagen <realsim|higgs|e2006> <n_rows> <out.svm> [--seed N]
+//! asgbdt inspect-artifacts [--dir artifacts]
+//! asgbdt help
+//! ```
+//!
+//! `--data` spec: `synthetic:realsim:20000`, `synthetic:higgs:60000`,
+//! `synthetic:e2006:8000`, or a path to an svmlight file.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use asgbdt::cli::Args;
+use asgbdt::config::TrainConfig;
+use asgbdt::coordinator;
+use asgbdt::data::{synthetic, Dataset};
+use asgbdt::experiments::{self, Scale};
+use asgbdt::io::svmlight;
+use asgbdt::runtime::Manifest;
+use asgbdt::simulator::{speedup_sweep, PhaseTimes};
+use asgbdt::util::Rng;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "experiment" => cmd_experiment(&args),
+        "simulate" => cmd_simulate(&args),
+        "datagen" => cmd_datagen(&args),
+        "inspect-artifacts" => cmd_inspect(&args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (see `asgbdt help`)"),
+    }
+}
+
+const HELP: &str = r#"asgbdt — asynchronous parallel stochastic GBDT on a parameter server
+
+USAGE:
+  asgbdt train [--data <spec>] [--test-frac F] [--config cfg.json]
+               [--model out.json] [--curve out.csv] [key=value ...]
+  asgbdt predict --model model.json --data <spec> [--out preds.csv]
+  asgbdt experiment <fig4..fig10|ablation|all> [--scale smoke|paper] [--out DIR]
+  asgbdt simulate [--workload realsim|e2006] [--workers 1,2,4,...] [--trees N]
+  asgbdt datagen <realsim|higgs|e2006> <n_rows> <out.svm> [--seed N]
+  asgbdt inspect-artifacts [--dir artifacts]
+
+DATA SPECS:
+  synthetic:realsim:<rows> | synthetic:higgs:<rows> | synthetic:e2006:<rows>
+  <path to svmlight file>
+
+CONFIG OVERRIDES (key=value):
+  mode=async|sync|serial   workers=N        n_trees=N      step_length=V
+  sampling_rate=R          max_leaves=N     feature_rate=R max_bins=N
+  grad_mode=gradient|newton max_staleness=N|none  seed=N   eval_every=N
+"#;
+
+fn load_data(spec: &str, seed: u64) -> Result<Dataset> {
+    if let Some(rest) = spec.strip_prefix("synthetic:") {
+        let (kind, rows) = rest
+            .split_once(':')
+            .context("synthetic spec must be synthetic:<kind>:<rows>")?;
+        let n: usize = rows.parse().context("bad row count")?;
+        Ok(match kind {
+            "realsim" => synthetic::realsim_like(n, seed),
+            "higgs" => synthetic::higgs_like(n, seed),
+            "e2006" => synthetic::e2006_like(n, seed),
+            other => bail!("unknown synthetic kind '{other}'"),
+        })
+    } else {
+        svmlight::read_file(Path::new(spec))
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => TrainConfig::load(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    cfg.validate()?;
+
+    let data_spec = args.opt_or("data", "synthetic:realsim:8000");
+    let ds = load_data(data_spec, cfg.seed)?;
+    let test_frac: f64 = args.opt_or("test-frac", "0.2").parse()?;
+    let (train_ds, test_ds) = if test_frac > 0.0 {
+        let mut rng = Rng::new(cfg.seed);
+        let (tr, te) = ds.split(test_frac, &mut rng);
+        (tr, Some(te))
+    } else {
+        (ds, None)
+    };
+
+    println!(
+        "training mode={} workers={} trees={} v={} rate={} leaves={} on {} ({} rows x {} features)",
+        cfg.mode.as_str(),
+        cfg.workers,
+        cfg.n_trees,
+        cfg.step_length,
+        cfg.sampling_rate,
+        cfg.tree.max_leaves,
+        train_ds.name,
+        train_ds.n_rows(),
+        train_ds.n_features()
+    );
+    let report = coordinator::train(&cfg, &train_ds, test_ds.as_ref())?;
+    println!(
+        "done: {} trees in {:.2}s ({:.2} trees/s, engine {}) staleness mean {:.2} max {}",
+        report.trees_accepted,
+        report.wall_secs,
+        report.trees_per_sec(),
+        report.engine,
+        report.staleness.mean(),
+        report.staleness.max()
+    );
+    if let Some(p) = report.curve.points.last() {
+        println!(
+            "final: train_loss {:.5} test_loss {:.5} test_err {:.4}",
+            p.train_loss, p.test_loss, p.test_error
+        );
+    }
+    println!("-- phases --\n{}", report.timer.report());
+    if let Some(path) = args.opt("model") {
+        report.forest.save(Path::new(path))?;
+        println!("model -> {path}");
+    }
+    if let Some(path) = args.opt("curve") {
+        report
+            .curve
+            .write_csv(Path::new(path), &format!("{}x{}", cfg.mode.as_str(), cfg.workers))?;
+        println!("curve -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args.opt("model").context("--model required")?;
+    let forest = asgbdt::forest::Forest::load(Path::new(model_path))?;
+    let spec = args.opt("data").context("--data required")?;
+    let ds = load_data(spec, 0)?;
+    let margins = forest.predict_all(&ds.x);
+    let w = vec![1.0f32; ds.n_rows()];
+    println!(
+        "model: {} trees (base {:.4}); data: {} rows",
+        forest.n_trees(),
+        forest.base_score,
+        ds.n_rows()
+    );
+    println!(
+        "logloss {:.5}  error {:.4}  auc {:.4}",
+        asgbdt::loss::metrics::logloss(&margins, &ds.y, &w),
+        asgbdt::loss::metrics::error_rate(&margins, &ds.y, &w),
+        asgbdt::loss::metrics::auc(&margins, &ds.y, &w),
+    );
+    if let Some(out) = args.opt("out") {
+        let mut csv = asgbdt::io::csv::CsvWriter::new(&["row", "margin", "p", "label"]);
+        for (r, &m) in margins.iter().enumerate() {
+            csv.row(&[
+                r.to_string(),
+                format!("{m:.6}"),
+                format!("{:.6}", asgbdt::loss::logistic::prob(m)),
+                format!("{}", ds.y[r]),
+            ]);
+        }
+        csv.write(Path::new(out))?;
+        println!("predictions -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.positional(0).context("experiment id required")?;
+    let scale = match args.opt("scale") {
+        Some(s) => Scale::parse(s)?,
+        None => Scale::from_env(),
+    };
+    let out_dir = PathBuf::from(args.opt_or("out", "results"));
+    let ids: Vec<&str> = if id == "all" {
+        experiments::all_ids().to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("== experiment {id} (scale {scale:?}) ==");
+        let summary = experiments::run(id, scale, &out_dir)?;
+        println!("{summary}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let workload = args.opt_or("workload", "realsim");
+    let times = match workload {
+        "realsim" => PhaseTimes::realsim_like(),
+        "e2006" => PhaseTimes::e2006_like(),
+        other => bail!("unknown workload '{other}'"),
+    };
+    let workers: Vec<usize> = args
+        .opt_or("workers", "1,2,4,8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse().context("bad worker count"))
+        .collect::<Result<_>>()?;
+    let trees: usize = args.opt_or("trees", "200").parse()?;
+    println!(
+        "simulating {workload}: build={:.3}s target={:.3}s",
+        times.build_secs, times.target_secs
+    );
+    println!(
+        "{:<14} {:>8} {:>10} {:>9} {:>10}",
+        "system", "workers", "wall_s", "speedup", "staleness"
+    );
+    for row in speedup_sweep(&times, &workers, trees, 0.15, 42) {
+        println!(
+            "{:<14} {:>8} {:>10.2} {:>9.2} {:>10.2}",
+            row.system.as_str(),
+            row.workers,
+            row.wall_secs,
+            row.speedup,
+            row.mean_staleness
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let kind = args.positional(0).context("kind required")?;
+    let n: usize = args.positional(1).context("n_rows required")?.parse()?;
+    let out = args.positional(2).context("output path required")?;
+    let seed: u64 = args.opt_or("seed", "42").parse()?;
+    let ds = match kind {
+        "realsim" => synthetic::realsim_like(n, seed),
+        "higgs" => synthetic::higgs_like(n, seed),
+        "e2006" => synthetic::e2006_like(n, seed),
+        other => bail!("unknown kind '{other}'"),
+    };
+    svmlight::write_file(&ds, Path::new(out))?;
+    println!(
+        "wrote {} ({} rows x {} features, density {:.4}%, {} species)",
+        out,
+        ds.n_rows(),
+        ds.n_features(),
+        ds.x.density() * 100.0,
+        ds.n_species()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt_or("dir", "artifacts"));
+    if !Manifest::exists(&dir) {
+        println!("no manifest under {} — run `make artifacts`", dir.display());
+        return Ok(());
+    }
+    let m = Manifest::load(&dir)?;
+    println!("artifact dir: {} (block {})", dir.display(), m.block);
+    println!("buckets: {:?}", m.buckets);
+    for e in &m.entries {
+        let size = std::fs::metadata(dir.join(&e.file))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        println!("  {:<12} n={:<8} {} ({} bytes)", e.name, e.n, e.file, size);
+    }
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Training telemetry: loss curves (the paper's Figures 5–9 raw data) and
+//! staleness statistics (the observed delay τ distribution).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::io::csv::CsvWriter;
+use crate::util::stats::Summary;
+
+/// One evaluation point along training.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Number of trees in the forest when evaluated.
+    pub n_trees: usize,
+    /// Full-train-set mean logloss.
+    pub train_loss: f64,
+    /// Held-out mean logloss (NaN if no test set).
+    pub test_loss: f64,
+    /// Held-out error rate (NaN if no test set).
+    pub test_error: f64,
+    /// Wall-clock seconds since training start.
+    pub wall_secs: f64,
+}
+
+/// A recorded loss curve.
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_train_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.train_loss)
+    }
+
+    pub fn final_test_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.test_loss)
+    }
+
+    /// Smallest n_trees at which train loss drops to `target` or below
+    /// (the "epochs to reach ε" statistic used in convergence comparisons).
+    pub fn trees_to_reach(&self, target: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.train_loss <= target)
+            .map(|p| p.n_trees)
+    }
+
+    /// Area under the (n_trees, train_loss) curve via trapezoids — a
+    /// scalar convergence-speed summary used by the sensitivity benches.
+    pub fn train_loss_auc(&self) -> f64 {
+        let pts = &self.points;
+        if pts.len() < 2 {
+            return pts.first().map(|p| p.train_loss).unwrap_or(0.0);
+        }
+        let mut area = 0.0;
+        for w in pts.windows(2) {
+            let dx = (w[1].n_trees - w[0].n_trees) as f64;
+            area += dx * (w[0].train_loss + w[1].train_loss) / 2.0;
+        }
+        let span = (pts.last().unwrap().n_trees - pts[0].n_trees) as f64;
+        if span > 0.0 {
+            area / span
+        } else {
+            pts[0].train_loss
+        }
+    }
+
+    /// Write as CSV (columns match the paper figures' axes).
+    pub fn write_csv(&self, path: &Path, tag: &str) -> Result<()> {
+        let mut w = CsvWriter::new(&["tag", "n_trees", "train_loss", "test_loss", "test_error", "wall_secs"]);
+        for p in &self.points {
+            w.row(&[
+                tag.to_string(),
+                p.n_trees.to_string(),
+                format!("{:.6}", p.train_loss),
+                format!("{:.6}", p.test_loss),
+                format!("{:.6}", p.test_error),
+                format!("{:.4}", p.wall_secs),
+            ]);
+        }
+        w.write(path)
+    }
+}
+
+/// Observed staleness (τ = server_version_at_apply − version_pulled)
+/// histogram over accepted pushes.
+#[derive(Debug, Clone, Default)]
+pub struct StalenessStats {
+    pub samples: Vec<u64>,
+    /// Pushes rejected by the bounded-staleness filter.
+    pub rejected: u64,
+}
+
+impl StalenessStats {
+    pub fn record(&mut self, tau: u64) {
+        self.samples.push(tau);
+    }
+
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples.iter().map(|&s| s as f64).collect::<Vec<_>>())
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(usize, f64)]) -> LossCurve {
+        LossCurve {
+            points: points
+                .iter()
+                .map(|&(n, l)| CurvePoint {
+                    n_trees: n,
+                    train_loss: l,
+                    test_loss: l,
+                    test_error: 0.1,
+                    wall_secs: n as f64 * 0.1,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn trees_to_reach_finds_first_crossing() {
+        let c = curve(&[(0, 0.7), (10, 0.5), (20, 0.4), (30, 0.35)]);
+        assert_eq!(c.trees_to_reach(0.5), Some(10));
+        assert_eq!(c.trees_to_reach(0.42), Some(20));
+        assert_eq!(c.trees_to_reach(0.1), None);
+    }
+
+    #[test]
+    fn auc_averages_loss() {
+        let c = curve(&[(0, 1.0), (10, 0.0)]);
+        assert!((c.train_loss_auc() - 0.5).abs() < 1e-12);
+        let flat = curve(&[(0, 0.3), (10, 0.3), (20, 0.3)]);
+        assert!((flat.train_loss_auc() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_cases() {
+        assert_eq!(LossCurve::default().train_loss_auc(), 0.0);
+        let single = curve(&[(5, 0.42)]);
+        assert!((single.train_loss_auc() - 0.42).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_written_with_tag() {
+        let c = curve(&[(0, 0.7), (10, 0.6)]);
+        let path = std::env::temp_dir().join("asgbdt_curve_test.csv");
+        c.write_csv(&path, "w4_r0.8").unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("tag,n_trees,train_loss"));
+        assert!(body.contains("w4_r0.8,10,0.600000"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn staleness_stats() {
+        let mut s = StalenessStats::default();
+        for tau in [0u64, 1, 2, 3, 10] {
+            s.record(tau);
+        }
+        s.record_rejected();
+        assert_eq!(s.max(), 10);
+        assert!((s.mean() - 3.2).abs() < 1e-12);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.summary().n, 5);
+    }
+}

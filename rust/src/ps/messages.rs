@@ -1,0 +1,75 @@
+//! PS wire types.
+
+use std::sync::Arc;
+
+use crate::tree::Tree;
+
+/// What workers pull: one version of the stochastic target `L'_random`
+/// (Eq. 10) and the sampled sub-dataset it lives on.
+///
+/// `grad`/`hess` are full-length vectors indexed by global row id (zero
+/// outside the support); `rows` is the sampled support, ascending. Arcs
+/// make a pull an O(1) pointer clone — workers never copy the vectors.
+#[derive(Debug, Clone)]
+pub struct TargetSnapshot {
+    /// Server version j: number of trees accepted when this was published.
+    pub version: u64,
+    pub grad: Arc<Vec<f32>>,
+    pub hess: Arc<Vec<f32>>,
+    /// Sampled rows (support of m' > 0), ascending.
+    pub rows: Arc<Vec<u32>>,
+}
+
+impl TargetSnapshot {
+    /// An empty snapshot (used before the server publishes version 0).
+    pub fn empty() -> TargetSnapshot {
+        TargetSnapshot {
+            version: 0,
+            grad: Arc::new(Vec::new()),
+            hess: Arc::new(Vec::new()),
+            rows: Arc::new(Vec::new()),
+        }
+    }
+
+    pub fn n_sampled(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// What workers push: a tree and the snapshot version it was built from
+/// (`based_on` = k(j) in the paper; the server's accept counter at apply
+/// time minus this is the realised delay τ).
+#[derive(Debug, Clone)]
+pub struct TreePush {
+    pub worker_id: usize,
+    pub based_on: u64,
+    pub tree: Tree,
+    /// Worker-side build time (profiling; calibrates the simulator).
+    pub build_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot() {
+        let s = TargetSnapshot::empty();
+        assert_eq!(s.version, 0);
+        assert_eq!(s.n_sampled(), 0);
+    }
+
+    #[test]
+    fn snapshot_pull_is_pointer_clone() {
+        let s = TargetSnapshot {
+            version: 3,
+            grad: Arc::new(vec![1.0; 1000]),
+            hess: Arc::new(vec![1.0; 1000]),
+            rows: Arc::new((0..1000).collect()),
+        };
+        let t = s.clone();
+        assert!(Arc::ptr_eq(&s.grad, &t.grad));
+        assert_eq!(t.version, 3);
+        assert_eq!(t.n_sampled(), 1000);
+    }
+}

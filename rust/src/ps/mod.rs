@@ -1,0 +1,26 @@
+//! The parameter server (Algorithm 3).
+//!
+//! * [`messages`] — the wire types: versioned target snapshots
+//!   (`L'_random` + sampled support) flowing server → workers, tree pushes
+//!   flowing workers → server.
+//! * [`server`] — `ServerCore`, the server state machine: owns the forest
+//!   `F(x)`, the prediction vector **F**, the gradient engine (AOT/PJRT),
+//!   and the sampler; every accepted tree triggers resample → produce
+//!   target → publish. `Board` is the shared pull/push surface.
+//! * [`worker`] — the worker loop: pull latest target, build a tree on the
+//!   sampled sub-dataset, push. Workers are mutually blind; only the
+//!   pull/build/push order *within* one worker is serialised, exactly the
+//!   paper's asynchrony model.
+//!
+//! Transport is in-process (threads as workers, as in the paper's validity
+//! experiments): an unbounded mpsc channel for pushes and an RwLock'd
+//! `Arc` snapshot for pulls — publish is O(1) pointer swap, pulls never
+//! block publishes for long.
+
+pub mod messages;
+pub mod server;
+pub mod worker;
+
+pub use messages::{TargetSnapshot, TreePush};
+pub use server::{Board, ServerCore};
+pub use worker::run_worker;

@@ -1,0 +1,387 @@
+//! Server side of the PS: state machine + shared board.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::config::{GradMode, TrainConfig};
+use crate::data::sparse::CsrMatrix;
+use crate::data::{BinnedDataset, Dataset};
+use crate::forest::Forest;
+use crate::metrics::{CurvePoint, LossCurve, StalenessStats};
+use crate::runtime::GradientEngine;
+use crate::sampling::BernoulliSampler;
+use crate::tree::Tree;
+use crate::util::timer::PhaseTimer;
+use crate::util::{Rng, Stopwatch};
+
+use super::messages::TargetSnapshot;
+
+/// The shared pull/push surface between server and workers.
+///
+/// Publishing is an Arc pointer swap under a short write lock; pulling is
+/// a pointer clone under a read lock — workers never copy target vectors.
+#[derive(Debug)]
+pub struct Board {
+    snapshot: RwLock<Arc<TargetSnapshot>>,
+    version: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Board {
+    pub fn new() -> Board {
+        Board {
+            snapshot: RwLock::new(Arc::new(TargetSnapshot::empty())),
+            version: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Publish a new target version (server only).
+    pub fn publish(&self, s: TargetSnapshot) {
+        let v = s.version;
+        *self.snapshot.write().unwrap() = Arc::new(s);
+        self.version.store(v, Ordering::Release);
+    }
+
+    /// Pull the current target (workers). O(1).
+    pub fn pull(&self) -> Arc<TargetSnapshot> {
+        self.snapshot.read().unwrap().clone()
+    }
+
+    /// Latest published version without taking the lock.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+}
+
+impl Default for Board {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Held-out evaluation state (margins updated incrementally per tree).
+struct TestSet {
+    x: CsrMatrix,
+    y: Vec<f32>,
+    w: Vec<f32>,
+    f: Vec<f32>,
+}
+
+/// Outcome of applying one pushed tree.
+#[derive(Debug, Clone, Copy)]
+pub struct ApplyOutcome {
+    /// Realised delay τ = version at apply − version pulled.
+    pub staleness: u64,
+    /// False if the bounded-staleness filter dropped the push.
+    pub accepted: bool,
+    /// Trees accepted so far.
+    pub n_trees: usize,
+}
+
+/// The server state machine of Algorithm 3. Owns everything on the
+/// produce-target path; drives the gradient engine (AOT/PJRT when
+/// artifacts are present). Not `Send` (PJRT handles) — lives on the
+/// thread that runs the accept loop.
+pub struct ServerCore {
+    cfg: TrainConfig,
+    binned: Arc<BinnedDataset>,
+    train_y: Vec<f32>,
+    train_m: Vec<f32>,
+    engine: GradientEngine,
+    sampler: BernoulliSampler,
+    rng: Rng,
+    /// Current prediction vector **F** over training rows.
+    f: Vec<f32>,
+    pub forest: Forest,
+    test: Option<TestSet>,
+    pub curve: LossCurve,
+    pub staleness: StalenessStats,
+    pub timer: PhaseTimer,
+    clock: Stopwatch,
+    current: TargetSnapshot,
+}
+
+impl ServerCore {
+    /// Initialise per Algorithm 3's server prologue: constant tree at the
+    /// weighted mean label, then compute and hold `L'^0_random`.
+    pub fn new(
+        cfg: &TrainConfig,
+        train: &Dataset,
+        binned: Arc<BinnedDataset>,
+        test: Option<&Dataset>,
+        engine: GradientEngine,
+    ) -> Result<ServerCore> {
+        cfg.validate()?;
+        let base = Forest::base_from_positive_rate(train.positive_rate());
+        let forest = Forest::new(base);
+        let f = vec![base; train.n_rows()];
+        let sampler = BernoulliSampler::uniform(train, cfg.sampling_rate);
+        let rng = Rng::new(cfg.seed ^ SERVER_SEED_SALT);
+        let test = test.map(|t| TestSet {
+            f: vec![base; t.n_rows()],
+            y: t.y.clone(),
+            w: t.m.clone(),
+            x: t.x.clone(),
+        });
+        let mut core = ServerCore {
+            cfg: cfg.clone(),
+            binned,
+            train_y: train.y.clone(),
+            train_m: train.m.clone(),
+            engine,
+            sampler,
+            rng,
+            f,
+            forest,
+            test,
+            curve: LossCurve::default(),
+            staleness: StalenessStats::default(),
+            timer: PhaseTimer::new(),
+            clock: Stopwatch::new(),
+            current: TargetSnapshot::empty(),
+        };
+        core.produce_target(0)?;
+        core.eval_point()?; // curve point at 0 trees
+        Ok(core)
+    }
+
+    /// The engine kind actually in use (logging / EXPERIMENTS.md).
+    pub fn engine_kind(&self) -> crate::runtime::EngineKind {
+        self.engine.kind()
+    }
+
+    /// Current target snapshot (version = #accepted trees).
+    pub fn snapshot(&self) -> TargetSnapshot {
+        self.current.clone()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.forest.n_trees()
+    }
+
+    /// Apply one pushed tree (Algorithm 3 server steps 1–5). Returns the
+    /// outcome; on acceptance the new target has been produced and
+    /// `snapshot()` reflects version j+1.
+    pub fn apply_tree(&mut self, tree: Tree, based_on: u64) -> Result<ApplyOutcome> {
+        let version = self.forest.n_trees() as u64;
+        let tau = version.saturating_sub(based_on);
+        if let Some(max_tau) = self.cfg.max_staleness {
+            if tau > max_tau {
+                self.staleness.record_rejected();
+                return Ok(ApplyOutcome {
+                    staleness: tau,
+                    accepted: false,
+                    n_trees: self.forest.n_trees(),
+                });
+            }
+        }
+        self.staleness.record(tau);
+
+        // step 2: F^j = F^{j-1} + v * Tree
+        let v = self.cfg.step_length;
+        self.timer.time("server/update_f", || {
+            for r in 0..self.f.len() {
+                self.f[r] += v * tree.predict_binned(&self.binned, r);
+            }
+        });
+        if let Some(test) = &mut self.test {
+            for r in 0..test.f.len() {
+                test.f[r] += v * tree.predict_raw(&test.x, r);
+            }
+        }
+        self.forest.push(v, tree);
+
+        // steps 3–5: resample, produce L'^{j+1}_random, publish
+        let new_version = self.forest.n_trees() as u64;
+        self.produce_target(new_version)?;
+
+        if self.forest.n_trees() % self.cfg.eval_every == 0
+            || self.forest.n_trees() == self.cfg.n_trees
+        {
+            self.eval_point()?;
+        }
+        Ok(ApplyOutcome {
+            staleness: tau,
+            accepted: true,
+            n_trees: self.forest.n_trees(),
+        })
+    }
+
+    /// Sample Q and compute the stochastic target on the sub-dataset.
+    fn produce_target(&mut self, version: u64) -> Result<()> {
+        let pass = self
+            .timer
+            .time("server/sample", || self.sampler.draw(&mut self.rng));
+        let (f, y) = (&self.f, &self.train_y);
+        let gh = {
+            let engine = &mut self.engine;
+            let timer = &mut self.timer;
+            let t0 = std::time::Instant::now();
+            let gh = engine.grad_hess_loss(f, y, &pass.weights)?;
+            timer.record("server/produce_target", t0.elapsed());
+            gh
+        };
+        let hess = match self.cfg.grad_mode {
+            GradMode::Newton => gh.hess,
+            // gradient mode: weighted-LS fit => h_i := m'_i
+            GradMode::Gradient => pass.weights.clone(),
+        };
+        self.current = TargetSnapshot {
+            version,
+            grad: Arc::new(gh.grad),
+            hess: Arc::new(hess),
+            rows: Arc::new(pass.rows),
+        };
+        Ok(())
+    }
+
+    /// Record a loss-curve point (full-weight train loss + test metrics).
+    fn eval_point(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let (l, _e, w) = self
+            .engine
+            .eval_sums(&self.f, &self.train_y, &self.train_m)?;
+        let train_loss = if w > 0.0 { l / w } else { 0.0 };
+        let (test_loss, test_error) = if let Some(test) = &self.test {
+            let (tl, te, tw) = self.engine.eval_sums(&test.f, &test.y, &test.w)?;
+            if tw > 0.0 {
+                (tl / tw, te / tw)
+            } else {
+                (f64::NAN, f64::NAN)
+            }
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        self.timer.record("server/eval", t0.elapsed());
+        self.curve.push(CurvePoint {
+            n_trees: self.forest.n_trees(),
+            train_loss,
+            test_loss,
+            test_error,
+            wall_secs: self.clock.elapsed(),
+        });
+        Ok(())
+    }
+}
+
+/// Salt separating the server's sampling stream from worker streams that
+/// share the same user seed.
+const SERVER_SEED_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn mini_cfg(n_trees: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.n_trees = n_trees;
+        cfg.step_length = 0.3;
+        cfg.sampling_rate = 0.9;
+        cfg.workers = 1;
+        cfg.tree.max_leaves = 8;
+        cfg.tree.feature_rate = 1.0;
+        cfg.eval_every = 1;
+        cfg
+    }
+
+    fn core_on(ds: &Dataset, cfg: &TrainConfig) -> ServerCore {
+        let binned = Arc::new(BinnedDataset::from_dataset(ds, cfg.max_bins).unwrap());
+        ServerCore::new(cfg, ds, binned, None, GradientEngine::native()).unwrap()
+    }
+
+    #[test]
+    fn init_publishes_version_zero_with_sampled_target() {
+        let ds = synthetic::realsim_like(300, 1);
+        let cfg = mini_cfg(5);
+        let core = core_on(&ds, &cfg);
+        let s = core.snapshot();
+        assert_eq!(s.version, 0);
+        assert!(s.n_sampled() > 200); // rate 0.9
+        assert_eq!(s.grad.len(), 300);
+        assert_eq!(core.curve.points.len(), 1); // initial eval point
+    }
+
+    #[test]
+    fn apply_tree_advances_version_and_records_staleness() {
+        let ds = synthetic::realsim_like(200, 2);
+        let cfg = mini_cfg(5);
+        let mut core = core_on(&ds, &cfg);
+        let s = core.snapshot();
+        let mut rng = Rng::new(1);
+        let tree = crate::tree::build_tree(
+            &core.binned.clone(),
+            &s.rows,
+            &s.grad,
+            &s.hess,
+            &cfg.tree,
+            &mut rng,
+        );
+        let out = core.apply_tree(tree, s.version).unwrap();
+        assert!(out.accepted);
+        assert_eq!(out.staleness, 0);
+        assert_eq!(core.snapshot().version, 1);
+        assert_eq!(core.n_trees(), 1);
+    }
+
+    #[test]
+    fn bounded_staleness_rejects_old_pushes() {
+        let ds = synthetic::realsim_like(200, 3);
+        let mut cfg = mini_cfg(10);
+        cfg.max_staleness = Some(0);
+        let mut core = core_on(&ds, &cfg);
+        let s0 = core.snapshot();
+        let mut rng = Rng::new(2);
+        let t1 = crate::tree::build_tree(&core.binned.clone(), &s0.rows, &s0.grad, &s0.hess, &cfg.tree, &mut rng);
+        let t2 = t1.clone();
+        core.apply_tree(t1, 0).unwrap();
+        // second push still based on version 0: tau = 1 > max 0 => rejected
+        let out = core.apply_tree(t2, 0).unwrap();
+        assert!(!out.accepted);
+        assert_eq!(core.n_trees(), 1);
+        assert_eq!(core.staleness.rejected, 1);
+    }
+
+    #[test]
+    fn gradient_mode_uses_weights_as_hessian() {
+        let ds = synthetic::realsim_like(100, 4);
+        let mut cfg = mini_cfg(3);
+        cfg.grad_mode = GradMode::Gradient;
+        let core = core_on(&ds, &cfg);
+        let s = core.snapshot();
+        for &r in s.rows.iter().take(10) {
+            // hess equals the sampling weight (1/0.9 for selected unit rows)
+            assert!((s.hess[r as usize] - 1.0 / 0.9).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn training_loss_descends_serially() {
+        let ds = synthetic::realsim_like(400, 5);
+        let cfg = mini_cfg(15);
+        let mut core = core_on(&ds, &cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..15 {
+            let s = core.snapshot();
+            let tree = crate::tree::build_tree(&core.binned.clone(), &s.rows, &s.grad, &s.hess, &cfg.tree, &mut rng);
+            core.apply_tree(tree, s.version).unwrap();
+        }
+        let first = core.curve.points.first().unwrap().train_loss;
+        let last = core.curve.points.last().unwrap().train_loss;
+        assert!(
+            last < first - 0.05,
+            "loss did not descend: {first} -> {last}"
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! Worker side of the PS (Algorithm 3 "For Worker").
+//!
+//! Pull → build → push, forever, blind to other workers. The only
+//! synchronisation a worker ever touches is the O(1) snapshot pull and the
+//! non-blocking channel send — there is no barrier anywhere, which is the
+//! paper's entire point.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::data::BinnedDataset;
+use crate::tree::{build_tree, TreeParams};
+use crate::util::{Rng, Stopwatch};
+
+use super::messages::TreePush;
+use super::server::Board;
+
+/// Run one worker loop until the board signals shutdown or the push
+/// channel closes. Returns the number of trees pushed.
+pub fn run_worker(
+    worker_id: usize,
+    board: &Board,
+    binned: Arc<BinnedDataset>,
+    params: TreeParams,
+    tx: Sender<TreePush>,
+    seed: u64,
+) -> usize {
+    let mut rng = Rng::new(seed ^ (worker_id as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+    let mut pushed = 0usize;
+    while !board.is_shutdown() {
+        // 1. pull the current L'_random
+        let snapshot = board.pull();
+        if snapshot.grad.is_empty() {
+            // server not initialised yet; yield and retry
+            std::thread::yield_now();
+            continue;
+        }
+        // 2. build Tree_t on the sampled sub-dataset
+        let mut sw = Stopwatch::new();
+        let tree = build_tree(
+            &binned,
+            &snapshot.rows,
+            &snapshot.grad,
+            &snapshot.hess,
+            &params,
+            &mut rng,
+        );
+        let build_secs = sw.lap();
+        // 3. send Tree_t to server
+        let push = TreePush {
+            worker_id,
+            based_on: snapshot.version,
+            tree,
+            build_secs,
+        };
+        if tx.send(push).is_err() {
+            break; // server hung up
+        }
+        pushed += 1;
+    }
+    pushed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, Dataset};
+    use crate::loss::logistic;
+    use std::sync::mpsc;
+
+    fn board_with_target(ds: &Dataset, binned: &BinnedDataset) -> Board {
+        let board = Board::new();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        board.publish(crate::ps::TargetSnapshot {
+            version: 0,
+            grad: Arc::new(gh.grad),
+            hess: Arc::new(w),
+            rows: Arc::new((0..ds.n_rows() as u32).collect()),
+        });
+        let _ = binned;
+        board
+    }
+
+    #[test]
+    fn worker_pushes_until_shutdown() {
+        let ds = synthetic::realsim_like(150, 1);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let board = board_with_target(&ds, &binned);
+        let (tx, rx) = mpsc::channel();
+        let params = TreeParams {
+            max_leaves: 4,
+            ..Default::default()
+        };
+        std::thread::scope(|s| {
+            let board_ref = &board;
+            let b = binned.clone();
+            let h = s.spawn(move || run_worker(3, board_ref, b, params, tx, 7));
+            // collect a few pushes then stop
+            let mut got = Vec::new();
+            for _ in 0..3 {
+                got.push(rx.recv().unwrap());
+            }
+            board.request_shutdown();
+            // drain until the worker exits
+            while let Ok(p) = rx.recv() {
+                got.push(p);
+            }
+            let pushed = h.join().unwrap();
+            assert!(pushed >= 3);
+            assert_eq!(pushed, got.len());
+            for p in &got {
+                assert_eq!(p.worker_id, 3);
+                assert_eq!(p.based_on, 0);
+                assert!(p.tree.n_leaves() >= 1);
+                assert!(p.build_secs >= 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn worker_exits_when_channel_closes() {
+        let ds = synthetic::realsim_like(100, 2);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let board = board_with_target(&ds, &binned);
+        let (tx, rx) = mpsc::channel();
+        std::thread::scope(|s| {
+            let board_ref = &board;
+            let b = binned.clone();
+            let h = s.spawn(move || {
+                run_worker(0, board_ref, b, TreeParams { max_leaves: 2, ..Default::default() }, tx, 1)
+            });
+            let _first = rx.recv().unwrap();
+            drop(rx); // hang up
+            let pushed = h.join().unwrap();
+            assert!(pushed >= 1);
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted and how the
+//! runtime picks a batch-size bucket per request.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::io::Json;
+
+/// One emitted HLO artifact.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Model function name ("grad_hess", "eval").
+    pub name: String,
+    /// Padded vector length this module was lowered for.
+    pub n: usize,
+    /// File name relative to the artifact dir.
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<usize>,
+    pub block: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        if j.req_str("format")? != "hlo-text" {
+            bail!("unsupported artifact format {}", j.req_str("format")?);
+        }
+        let buckets: Vec<usize> = j
+            .req("buckets")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets must be an array"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+            .collect::<Result<_>>()?;
+        if buckets.is_empty() {
+            bail!("no buckets in manifest");
+        }
+        if !buckets.windows(2).all(|w| w[0] < w[1]) {
+            bail!("buckets must be strictly increasing");
+        }
+        let block = j.req_usize("block")?;
+        let mut entries = Vec::new();
+        for e in j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("entries must be an array"))?
+        {
+            entries.push(Entry {
+                name: e.req_str("name")?.to_string(),
+                n: e.req_usize("n")?,
+                file: e.req_str("file")?.to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            buckets,
+            block,
+            entries,
+        })
+    }
+
+    /// True if a manifest exists under `dir`.
+    pub fn exists(dir: &Path) -> bool {
+        dir.join("manifest.json").is_file()
+    }
+
+    /// Smallest bucket >= n, or the largest bucket if n exceeds all
+    /// (callers then chunk by that bucket).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    pub fn largest_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Path of the artifact for (name, bucket).
+    pub fn path_for(&self, name: &str, bucket: usize) -> Result<PathBuf> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.n == bucket)
+            .map(|e| self.dir.join(&e.file))
+            .ok_or_else(|| anyhow!("no artifact for {name}@{bucket} in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("asgbdt_manifest_{tag}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const GOOD: &str = r#"{"format":"hlo-text","version":1,"buckets":[1024,4096],"block":1024,
+        "entries":[{"name":"grad_hess","n":1024,"file":"grad_hess_1024.hlo.txt"},
+                   {"name":"grad_hess","n":4096,"file":"grad_hess_4096.hlo.txt"}]}"#;
+
+    #[test]
+    fn loads_and_selects_buckets() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.buckets, vec![1024, 4096]);
+        assert_eq!(m.bucket_for(1), 1024);
+        assert_eq!(m.bucket_for(1024), 1024);
+        assert_eq!(m.bucket_for(1025), 4096);
+        assert_eq!(m.bucket_for(100_000), 4096); // chunking case
+        assert!(m.path_for("grad_hess", 4096).unwrap().ends_with("grad_hess_4096.hlo.txt"));
+        assert!(m.path_for("eval", 1024).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let d = tmpdir("badfmt");
+        write_manifest(&d, r#"{"format":"protobuf","buckets":[1],"block":1,"entries":[]}"#);
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rejects_unsorted_buckets() {
+        let d = tmpdir("unsorted");
+        write_manifest(
+            &d,
+            r#"{"format":"hlo-text","buckets":[4096,1024],"block":1024,"entries":[]}"#,
+        );
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn exists_probe() {
+        let d = tmpdir("exists");
+        assert!(!Manifest::exists(&d.join("nope")));
+        write_manifest(&d, GOOD);
+        assert!(Manifest::exists(&d));
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

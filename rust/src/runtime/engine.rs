@@ -1,0 +1,241 @@
+//! The gradient engine: AOT (PJRT-executed HLO artifacts) with a pure-Rust
+//! fallback, behind one API.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::loss::logistic::{self, GradHess};
+
+use super::artifacts::Manifest;
+
+/// Which backend a [`GradientEngine`] is using.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// HLO artifacts executed via the PJRT CPU client (the paper stack).
+    Aot,
+    /// Pure-Rust fallback ([`crate::loss::logistic`]).
+    Native,
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Aot => write!(f, "aot-pjrt"),
+            EngineKind::Native => write!(f, "native-rust"),
+        }
+    }
+}
+
+/// Compiled-executable cache keyed by (model fn, bucket).
+struct AotState {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// Scratch padding buffers reused across calls (hot-path alloc control).
+    pad_f: Vec<f32>,
+    pad_y: Vec<f32>,
+    pad_w: Vec<f32>,
+}
+
+/// The produce-target engine. Not `Send` in Aot mode (PJRT handles);
+/// constructed on and owned by the thread that runs the server loop.
+pub struct GradientEngine {
+    aot: Option<AotState>,
+}
+
+impl GradientEngine {
+    /// AOT engine from an artifact directory (must contain manifest.json).
+    pub fn aot(artifact_dir: &Path) -> Result<GradientEngine> {
+        let manifest = Manifest::load(artifact_dir)
+            .with_context(|| format!("loading manifest from {}", artifact_dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(GradientEngine {
+            aot: Some(AotState {
+                client,
+                manifest,
+                exes: HashMap::new(),
+                pad_f: Vec::new(),
+                pad_y: Vec::new(),
+                pad_w: Vec::new(),
+            }),
+        })
+    }
+
+    /// Pure-Rust engine.
+    pub fn native() -> GradientEngine {
+        GradientEngine { aot: None }
+    }
+
+    /// AOT if artifacts exist under `dir`, else native. This is what the
+    /// trainers use: `make artifacts` upgrades the hot path, its absence
+    /// never breaks the build.
+    pub fn auto(dir: &Path) -> GradientEngine {
+        if Manifest::exists(dir) {
+            match GradientEngine::aot(dir) {
+                Ok(e) => return e,
+                Err(err) => {
+                    log::warn!("AOT engine unavailable ({err:#}); using native fallback");
+                }
+            }
+        }
+        GradientEngine::native()
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        if self.aot.is_some() {
+            EngineKind::Aot
+        } else {
+            EngineKind::Native
+        }
+    }
+
+    /// Produce-target pass (Algorithm 3 server step 4): g, h, Σloss, Σw.
+    pub fn grad_hess_loss(&mut self, f: &[f32], y: &[f32], w: &[f32]) -> Result<GradHess> {
+        assert_eq!(f.len(), y.len());
+        assert_eq!(f.len(), w.len());
+        match &mut self.aot {
+            None => Ok(logistic::grad_hess_loss(f, y, w)),
+            Some(state) => state.grad_hess_loss(f, y, w),
+        }
+    }
+
+    /// Evaluation pass: (Σloss, Σerr, Σw).
+    pub fn eval_sums(&mut self, f: &[f32], y: &[f32], w: &[f32]) -> Result<(f64, f64, f64)> {
+        assert_eq!(f.len(), y.len());
+        assert_eq!(f.len(), w.len());
+        match &mut self.aot {
+            None => Ok(logistic::eval_sums(f, y, w)),
+            Some(state) => state.eval_sums(f, y, w),
+        }
+    }
+}
+
+impl AotState {
+    /// Get-or-compile the executable for (name, bucket).
+    fn exe(&mut self, name: &str, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (name.to_string(), bucket);
+        if !self.exes.contains_key(&key) {
+            let path = self.manifest.path_for(name, bucket)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}@{bucket}"))?;
+            log::info!("compiled artifact {name}@{bucket}");
+            self.exes.insert(key.clone(), exe);
+        }
+        Ok(self.exes.get(&key).unwrap())
+    }
+
+    /// Pad (f, y, w) into the scratch buffers up to `padded` (w zeros).
+    fn pad_chunk(&mut self, f: &[f32], y: &[f32], w: &[f32], padded: usize) {
+        debug_assert!(f.len() <= padded);
+        self.pad_f.clear();
+        self.pad_f.extend_from_slice(f);
+        self.pad_f.resize(padded, 0.0);
+        self.pad_y.clear();
+        self.pad_y.extend_from_slice(y);
+        self.pad_y.resize(padded, 0.0);
+        self.pad_w.clear();
+        self.pad_w.extend_from_slice(w);
+        self.pad_w.resize(padded, 0.0); // w=0 padding rows are exact no-ops
+    }
+
+    fn grad_hess_loss(&mut self, f: &[f32], y: &[f32], w: &[f32]) -> Result<GradHess> {
+        let n = f.len();
+        let chunk = self.manifest.largest_bucket();
+        let mut grad = Vec::with_capacity(n);
+        let mut hess = Vec::with_capacity(n);
+        let mut loss_sum = 0.0f64;
+        let mut weight_sum = 0.0f64;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let len = end - start;
+            let bucket = self.manifest.bucket_for(len);
+            self.pad_chunk(&f[start..end], &y[start..end], &w[start..end], bucket);
+            let lit_f = xla::Literal::vec1(&self.pad_f);
+            let lit_y = xla::Literal::vec1(&self.pad_y);
+            let lit_w = xla::Literal::vec1(&self.pad_w);
+            let exe = self.exe("grad_hess", bucket)?;
+            let result = exe.execute::<xla::Literal>(&[lit_f, lit_y, lit_w])?[0][0]
+                .to_literal_sync()?;
+            let (g_lit, h_lit, l_lit, w_lit) = result.to_tuple4()?;
+            let g = g_lit.to_vec::<f32>()?;
+            let h = h_lit.to_vec::<f32>()?;
+            grad.extend_from_slice(&g[..len]);
+            hess.extend_from_slice(&h[..len]);
+            loss_sum += l_lit.get_first_element::<f32>()? as f64;
+            weight_sum += w_lit.get_first_element::<f32>()? as f64;
+            start = end;
+        }
+        Ok(GradHess {
+            grad,
+            hess,
+            loss_sum,
+            weight_sum,
+        })
+    }
+
+    fn eval_sums(&mut self, f: &[f32], y: &[f32], w: &[f32]) -> Result<(f64, f64, f64)> {
+        let n = f.len();
+        let chunk = self.manifest.largest_bucket();
+        let mut loss_sum = 0.0f64;
+        let mut err_sum = 0.0f64;
+        let mut weight_sum = 0.0f64;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let len = end - start;
+            let bucket = self.manifest.bucket_for(len);
+            self.pad_chunk(&f[start..end], &y[start..end], &w[start..end], bucket);
+            let lit_f = xla::Literal::vec1(&self.pad_f);
+            let lit_y = xla::Literal::vec1(&self.pad_y);
+            let lit_w = xla::Literal::vec1(&self.pad_w);
+            let exe = self.exe("eval", bucket)?;
+            let result = exe.execute::<xla::Literal>(&[lit_f, lit_y, lit_w])?[0][0]
+                .to_literal_sync()?;
+            let (l_lit, e_lit, w_lit) = result.to_tuple3()?;
+            loss_sum += l_lit.get_first_element::<f32>()? as f64;
+            err_sum += e_lit.get_first_element::<f32>()? as f64;
+            weight_sum += w_lit.get_first_element::<f32>()? as f64;
+            start = end;
+        }
+        Ok((loss_sum, err_sum, weight_sum))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_matches_logistic() {
+        let mut e = GradientEngine::native();
+        assert_eq!(e.kind(), EngineKind::Native);
+        let f = [0.5f32, -1.0, 2.0];
+        let y = [1.0f32, 0.0, 1.0];
+        let w = [1.0f32, 2.0, 0.5];
+        let gh = e.grad_hess_loss(&f, &y, &w).unwrap();
+        let direct = logistic::grad_hess_loss(&f, &y, &w);
+        assert_eq!(gh.grad, direct.grad);
+        assert_eq!(gh.hess, direct.hess);
+        assert!((gh.loss_sum - direct.loss_sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_native() {
+        let e = GradientEngine::auto(Path::new("/definitely/not/a/dir"));
+        assert_eq!(e.kind(), EngineKind::Native);
+    }
+
+    // AOT-path numerics are covered by rust/tests/test_runtime.rs, which
+    // requires `make artifacts` to have run (the Makefile `test` target
+    // guarantees that ordering).
+}

@@ -1,0 +1,23 @@
+//! The AOT runtime bridge: load the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and execute them on the PJRT CPU client from
+//! the server's produce-target hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), not
+//! serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! DESIGN.md and /opt/xla-example/README.md).
+//!
+//! `GradientEngine` is the public entry: `Aot` when artifacts are present,
+//! `Native` (pure-Rust, [`crate::loss::logistic`]) otherwise, so the whole
+//! test suite runs with or without `make artifacts`. The two paths are
+//! cross-checked to 1e-4 by `rust/tests/test_runtime.rs`.
+//!
+//! PJRT handles are not `Send`: one engine is owned by one thread (the PS
+//! server thread in the trainers), which is exactly the paper's topology —
+//! the server produces targets, workers only build trees.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::{EngineKind, GradientEngine};

@@ -1,0 +1,214 @@
+//! The sampler executed by the server on every tree push (Algorithm 3,
+//! server step 3).
+
+use crate::data::Dataset;
+use crate::util::Rng;
+
+/// One observed sampling pass.
+#[derive(Debug, Clone)]
+pub struct SamplePass {
+    /// Stochastic weights m'_i (0 where the sample was not selected).
+    pub weights: Vec<f32>,
+    /// Rows with m'_i > 0 (the sampled sub-dataset), ascending.
+    pub rows: Vec<u32>,
+}
+
+impl SamplePass {
+    /// Number of selected rows (support of Q′ restricted to rows).
+    pub fn n_selected(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Density of the observed Q′ vector over rows.
+    pub fn density(&self, n_rows: usize) -> f64 {
+        self.rows.len() as f64 / n_rows.max(1) as f64
+    }
+}
+
+/// Uniform-rate Bernoulli sampler (the paper sets all `R_ij` equal in its
+/// experiments; per-sample rates are supported via `rates`).
+#[derive(Debug, Clone)]
+pub struct BernoulliSampler {
+    /// Per-row selection probability R_i ∈ (0, 1].
+    rates: Vec<f64>,
+    /// Per-row multiplicities m_i (copies share the row's rate).
+    multiplicities: Vec<f32>,
+}
+
+impl BernoulliSampler {
+    /// Uniform rate across all rows of a dataset.
+    pub fn uniform(ds: &Dataset, rate: f64) -> Self {
+        assert!(
+            rate > 0.0 && rate <= 1.0,
+            "sampling rate must be in (0,1], got {rate}"
+        );
+        Self {
+            rates: vec![rate; ds.n_rows()],
+            multiplicities: ds.m.clone(),
+        }
+    }
+
+    /// Per-row rates.
+    pub fn with_rates(ds: &Dataset, rates: Vec<f64>) -> Self {
+        assert_eq!(rates.len(), ds.n_rows());
+        assert!(rates.iter().all(|&r| r > 0.0 && r <= 1.0));
+        Self {
+            rates,
+            multiplicities: ds.m.clone(),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// Draw one sampling pass: for each row i with multiplicity m_i, draw
+    /// Binomial(m_i, R_i) successes (each copy is an independent Q_ij) and
+    /// set m'_i = successes / R_i.
+    pub fn draw(&self, rng: &mut Rng) -> SamplePass {
+        let n = self.rates.len();
+        let mut weights = vec![0.0f32; n];
+        let mut rows = Vec::new();
+        for i in 0..n {
+            let r = self.rates[i];
+            let m = self.multiplicities[i];
+            let successes = draw_binomial(rng, m as u64, r);
+            if successes > 0 {
+                weights[i] = (successes as f64 / r) as f32;
+                rows.push(i as u32);
+            }
+        }
+        SamplePass { weights, rows }
+    }
+
+    /// Expected number of selected rows.
+    pub fn expected_selected(&self) -> f64 {
+        self.rates
+            .iter()
+            .zip(&self.multiplicities)
+            .map(|(&r, &m)| 1.0 - (1.0 - r).powf(m as f64))
+            .sum()
+    }
+}
+
+/// Binomial(n, p) sampler: exact Bernoulli loop for small n (the common
+/// case, m_i is almost always small), normal approximation for large n.
+fn draw_binomial(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    if n <= 64 {
+        let mut c = 0;
+        for _ in 0..n {
+            if rng.bernoulli(p) {
+                c += 1;
+            }
+        }
+        c
+    } else {
+        // normal approximation with continuity correction, clamped
+        let mean = n as f64 * p;
+        let sd = (n as f64 * p * (1.0 - p)).sqrt();
+        let x = (mean + sd * rng.normal() + 0.5).floor();
+        x.clamp(0.0, n as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn weights_are_unbiased() {
+        let ds = synthetic::realsim_like(500, 1);
+        let s = BernoulliSampler::uniform(&ds, 0.3);
+        let mut rng = Rng::new(2);
+        let passes = 400;
+        let mut mean = vec![0.0f64; ds.n_rows()];
+        for _ in 0..passes {
+            let p = s.draw(&mut rng);
+            for i in 0..ds.n_rows() {
+                mean[i] += p.weights[i] as f64;
+            }
+        }
+        let avg: f64 = mean.iter().map(|&x| x / passes as f64).sum::<f64>()
+            / ds.n_rows() as f64;
+        // E[m'_i] = m_i = 1
+        assert!((avg - 1.0).abs() < 0.05, "avg={avg}");
+    }
+
+    #[test]
+    fn selected_rows_match_weights() {
+        let ds = synthetic::realsim_like(300, 3);
+        let s = BernoulliSampler::uniform(&ds, 0.5);
+        let mut rng = Rng::new(4);
+        let p = s.draw(&mut rng);
+        for (i, &w) in p.weights.iter().enumerate() {
+            let in_rows = p.rows.binary_search(&(i as u32)).is_ok();
+            assert_eq!(w > 0.0, in_rows);
+        }
+        assert!(p.rows.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn rate_one_selects_everything_with_exact_weights() {
+        let ds = synthetic::realsim_like(100, 5);
+        let s = BernoulliSampler::uniform(&ds, 1.0);
+        let mut rng = Rng::new(6);
+        let p = s.draw(&mut rng);
+        assert_eq!(p.n_selected(), 100);
+        assert!(p.weights.iter().all(|&w| (w - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn small_rate_selects_few() {
+        let ds = synthetic::realsim_like(2000, 7);
+        let s = BernoulliSampler::uniform(&ds, 0.01);
+        let mut rng = Rng::new(8);
+        let p = s.draw(&mut rng);
+        assert!(p.n_selected() < 100, "selected={}", p.n_selected());
+        assert!((s.expected_selected() - 20.0).abs() < 1.0);
+        // selected weights are 1/rate
+        for &r in &p.rows {
+            assert!((p.weights[r as usize] - 100.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn multiplicities_scale_weights() {
+        // one row with multiplicity 50 at rate 0.5: m' ≈ 50 on average
+        let ds = synthetic::fig4_low_diversity(1).subset(&[0], "one");
+        let mut ds = ds;
+        ds.m = vec![50.0];
+        let s = BernoulliSampler::uniform(&ds, 0.5);
+        let mut rng = Rng::new(9);
+        let mean: f64 = (0..2000)
+            .map(|_| s.draw(&mut rng).weights[0] as f64)
+            .sum::<f64>()
+            / 2000.0;
+        assert!((mean - 50.0).abs() < 1.5, "mean={mean}");
+    }
+
+    #[test]
+    fn binomial_large_n_normal_path() {
+        let mut rng = Rng::new(10);
+        let n = 10_000u64;
+        let p = 0.3;
+        let mean: f64 = (0..200)
+            .map(|_| draw_binomial(&mut rng, n, p) as f64)
+            .sum::<f64>()
+            / 200.0;
+        assert!((mean - 3000.0).abs() < 30.0, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "sampling rate")]
+    fn zero_rate_panics() {
+        let ds = synthetic::realsim_like(10, 1);
+        BernoulliSampler::uniform(&ds, 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Bernoulli sampling — the mechanism that turns GBDT training into a
+//! stochastic optimization problem (paper §IV, Corollary 1).
+//!
+//! Each sample copy `(i, j)` carries a Bernoulli variable `Q_ij` with
+//! `P(Q_ij = 1) = R_ij`; a sampling pass produces the stochastic weights
+//!
+//! ```text
+//! m'_i = sum_{j=1..m_i} Q_ij / R_ij        (Eq. 10)
+//! ```
+//!
+//! which are unbiased for the multiplicities (`E m'_i = m_i`), so the
+//! stochastic target `L'_random = [m'_1 l'_1, ...]` is an unbiased SGD
+//! direction for the full loss. The observed support (`m'_i > 0`) is the
+//! paper's Q′ vector, whose sparsity drives the scalability analysis.
+
+pub mod bernoulli;
+
+pub use bernoulli::{BernoulliSampler, SamplePass};

@@ -1,0 +1,176 @@
+//! Cluster and workload parameterisation.
+
+use crate::util::Rng;
+
+/// Network model: fixed per-message latency + bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkSpec {
+    pub latency_s: f64,
+    pub bandwidth_bytes_per_s: f64,
+}
+
+impl NetworkSpec {
+    /// Gigabit TCP/IP over Intel I350 (the paper's interconnect):
+    /// ~80 µs round-trip software latency, ~117 MB/s effective.
+    pub fn gigabit_tcp() -> NetworkSpec {
+        NetworkSpec {
+            latency_s: 80e-6,
+            bandwidth_bytes_per_s: 117e6,
+        }
+    }
+
+    /// Transfer time of one message.
+    pub fn xfer(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / self.bandwidth_bytes_per_s
+    }
+}
+
+/// The simulated cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub n_workers: usize,
+    /// Coefficient of variation of per-task node speed (the paper: "it is
+    /// unlikely that all nodes in a system share the same computation
+    /// speed"). 0 = perfectly homogeneous.
+    pub speed_cv: f64,
+    pub net: NetworkSpec,
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    pub fn new(n_workers: usize) -> ClusterSpec {
+        ClusterSpec {
+            n_workers,
+            speed_cv: 0.15,
+            net: NetworkSpec::gigabit_tcp(),
+            seed: 42,
+        }
+    }
+
+    /// Multiplicative task-duration jitter with mean 1 and the configured
+    /// CV (gamma-distributed — heavy right tail, like real stragglers).
+    pub fn jitter(&self, rng: &mut Rng) -> f64 {
+        if self.speed_cv <= 0.0 {
+            return 1.0;
+        }
+        let k = 1.0 / (self.speed_cv * self.speed_cv);
+        rng.gamma(k) / k
+    }
+}
+
+/// Single-node phase times + message sizes: the calibration inputs every
+/// simulated system shares.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTimes {
+    /// One full tree build on one node (seconds).
+    pub build_secs: f64,
+    /// Produce-target (sample + gradient) on the server.
+    pub target_secs: f64,
+    /// Apply a tree to F on the server.
+    pub apply_secs: f64,
+    /// Serialized tree size (bytes) — worker→server push.
+    pub tree_bytes: f64,
+    /// Target snapshot size (bytes) — server→worker pull.
+    pub target_bytes: f64,
+    /// Per-feature histogram block size (bytes) — sync allgather payloads.
+    pub hist_bytes: f64,
+}
+
+impl PhaseTimes {
+    /// Defaults shaped like the paper's real-sim runs: tree build dominates
+    /// but not overwhelmingly (16–32 workers is the Eq. 13 ceiling — §VI.C
+    /// "16 to 32 worker is close to the max number of the worker").
+    pub fn realsim_like() -> PhaseTimes {
+        PhaseTimes {
+            build_secs: 0.60,
+            target_secs: 0.022,
+            apply_secs: 0.008,
+            tree_bytes: 16e3,
+            target_bytes: 600e3,
+            hist_bytes: 2.5e6,
+        }
+    }
+
+    /// E2006-like: much wider feature space — bigger histograms, longer
+    /// builds (400-leaf trees over ~4M features), heavier server apply;
+    /// async headroom is larger (paper: ~20x at 32 workers).
+    pub fn e2006_like() -> PhaseTimes {
+        PhaseTimes {
+            build_secs: 1.8,
+            target_secs: 0.050,
+            apply_secs: 0.030,
+            tree_bytes: 30e3,
+            target_bytes: 130e3,
+            hist_bytes: 12e6,
+        }
+    }
+
+    /// Calibrate from a real training report produced by this crate's
+    /// trainers on this machine (EXPERIMENTS.md records the values used).
+    pub fn calibrate(
+        build_secs: f64,
+        target_secs: f64,
+        apply_secs: f64,
+        n_rows: usize,
+        n_features: usize,
+        max_bins: usize,
+        max_leaves: usize,
+    ) -> PhaseTimes {
+        PhaseTimes {
+            build_secs: build_secs.max(1e-7),
+            target_secs: target_secs.max(1e-7),
+            apply_secs: apply_secs.max(1e-7),
+            // tree: ~20 bytes per node, 2*leaves-1 nodes
+            tree_bytes: (2 * max_leaves) as f64 * 20.0,
+            // snapshot: grad+hess f32 per sampled row (upper bound: all rows)
+            target_bytes: (n_rows * 8) as f64,
+            // one histogram: bins * features * (g,h,c) = 20 bytes
+            hist_bytes: (n_features * max_bins * 20) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xfer_includes_latency_and_bandwidth() {
+        let net = NetworkSpec::gigabit_tcp();
+        let t = net.xfer(117e6); // 1 second of payload
+        assert!((t - 1.0 - 80e-6).abs() < 1e-9);
+        assert!(net.xfer(0.0) > 0.0);
+    }
+
+    #[test]
+    fn jitter_mean_one_and_cv() {
+        let spec = ClusterSpec {
+            speed_cv: 0.3,
+            ..ClusterSpec::new(4)
+        };
+        let mut rng = Rng::new(1);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| spec.jitter(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        assert!((var.sqrt() - 0.3).abs() < 0.03, "cv={}", var.sqrt());
+    }
+
+    #[test]
+    fn zero_cv_is_deterministic() {
+        let spec = ClusterSpec {
+            speed_cv: 0.0,
+            ..ClusterSpec::new(4)
+        };
+        let mut rng = Rng::new(2);
+        assert_eq!(spec.jitter(&mut rng), 1.0);
+    }
+
+    #[test]
+    fn calibrate_floors_at_epsilon() {
+        let pt = PhaseTimes::calibrate(0.0, 0.0, 0.0, 100, 10, 16, 8);
+        assert!(pt.build_secs > 0.0);
+        assert!(pt.hist_bytes > 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Discrete-event cluster simulator — the substrate for the paper's
+//! efficiency experiment (Figure 10).
+//!
+//! The paper measured speedups on a 32-machine Era-supercomputer partition
+//! over gigabit TCP/IP. That testbed is a hardware gate for this
+//! reproduction, so we model it: per-task node-speed jitter (heterogeneous
+//! nodes — the paper's stated reason synchronous scaling dies), a
+//! latency/bandwidth network, and the three system architectures under
+//! comparison:
+//!
+//! * **asynch-SGBDT** — workers loop independently; the server applies
+//!   pushes FCFS. Throughput saturates at Eq. 13's bound
+//!   `#workers < T(build) / T(comm + target)`.
+//! * **LightGBM feature-parallel** — fork-join: per tree, every worker
+//!   scans its feature share, then a barrier + allgather of split
+//!   candidates; the barrier pays the straggler max.
+//! * **DimBoost** — PS-based fork-join: histogram allgather through a
+//!   central server whose cost grows linearly in worker count.
+//!
+//! Phase-time inputs are *calibrated from real single-node measurements*
+//! (`PhaseTimes::calibrate`) taken from this crate's own trainers, so the
+//! simulated shapes inherit the real compute/communication ratios.
+
+pub mod cluster;
+pub mod models;
+pub mod speedup;
+
+pub use cluster::{ClusterSpec, NetworkSpec, PhaseTimes};
+pub use models::{simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp, SimResult};
+pub use speedup::{eq13_upper_bound, speedup_sweep, SpeedupRow, SystemKind};

@@ -1,0 +1,257 @@
+//! The three simulated system architectures.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::Rng;
+
+use super::cluster::{ClusterSpec, PhaseTimes};
+
+/// Result of simulating one training run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    /// Wall-clock seconds until the target tree count was reached.
+    pub wall_secs: f64,
+    /// Trees accepted (== requested n_trees).
+    pub n_trees: usize,
+    /// Mean realised staleness (async only; 0 for sync systems).
+    pub mean_staleness: f64,
+    /// Fraction of wall time the server was busy (async) or the barrier
+    /// cost fraction (sync) — the headline bottleneck indicator.
+    pub bottleneck_frac: f64,
+}
+
+impl SimResult {
+    pub fn trees_per_sec(&self) -> f64 {
+        self.n_trees as f64 / self.wall_secs.max(1e-12)
+    }
+}
+
+/// Asynch-SGBDT on a parameter server, event-driven.
+///
+/// Workers cycle independently: pull target (net) → build (jittered) →
+/// push tree (net). The server is a FCFS queue applying pushes
+/// (`apply + target` per acceptance). No barrier anywhere.
+pub fn simulate_async_ps(
+    spec: &ClusterSpec,
+    times: &PhaseTimes,
+    n_trees: usize,
+) -> SimResult {
+    let mut rng = Rng::new(spec.seed);
+    let w = spec.n_workers.max(1);
+    let pull = spec.net.xfer(times.target_bytes);
+    let push = spec.net.xfer(times.tree_bytes);
+
+    // event heap: (ready_time, worker_id) for push arrivals at the server
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let to_key = |t: f64| (t * 1e9) as u64;
+    let from_key = |k: u64| k as f64 / 1e9;
+
+    // each worker starts with a pull + first build
+    for wid in 0..w {
+        let t = pull + times.build_secs * spec.jitter(&mut rng) + push;
+        heap.push(Reverse((to_key(t), wid)));
+    }
+
+    let mut server_free = 0.0f64;
+    let mut server_busy_total = 0.0f64;
+    let mut accepted = 0usize;
+    let mut last_done = 0.0f64;
+    // versions for staleness accounting: worker's tree was built against
+    // the version current when it started building.
+    let mut version_at_start = vec![0u64; w];
+    let mut version = 0u64;
+    let mut staleness_sum = 0.0f64;
+
+    while accepted < n_trees {
+        let Reverse((tk, wid)) = heap.pop().expect("heap never empties");
+        let arrive = from_key(tk);
+        let start = arrive.max(server_free);
+        let service = times.apply_secs + times.target_secs;
+        let done = start + service;
+        server_free = done;
+        server_busy_total += service;
+        accepted += 1;
+        staleness_sum += (version - version_at_start[wid]) as f64;
+        version += 1;
+        last_done = done;
+        if accepted >= n_trees {
+            break;
+        }
+        // the worker does not wait for the server: it pulls the then-
+        // current version right after pushing (approximated by the version
+        // just published for its own accepted tree).
+        version_at_start[wid] = version;
+        // next push: pull + build + push from `arrive`
+        let next = arrive + pull + times.build_secs * spec.jitter(&mut rng) + push;
+        heap.push(Reverse((to_key(next), wid)));
+    }
+
+    SimResult {
+        wall_secs: last_done,
+        n_trees,
+        mean_staleness: staleness_sum / n_trees.max(1) as f64,
+        bottleneck_frac: server_busy_total / last_done.max(1e-12),
+    }
+}
+
+/// LightGBM feature-parallel (fork-join): each tree costs
+/// `max_w(build/W · jitter_w) + allgather(split candidates) + target`.
+/// The barrier pays the straggler max; communication is a ring allgather
+/// of per-worker split candidates (small) plus a broadcast of the chosen
+/// split per level — modelled as `2(W-1)` latency-dominated messages per
+/// tree plus the feature-share histogram exchange.
+pub fn simulate_lightgbm_fp(
+    spec: &ClusterSpec,
+    times: &PhaseTimes,
+    n_trees: usize,
+) -> SimResult {
+    let mut rng = Rng::new(spec.seed ^ 0xf00d);
+    let w = spec.n_workers.max(1) as f64;
+    let mut wall = 0.0f64;
+    let mut barrier_cost = 0.0f64;
+    for _ in 0..n_trees {
+        // parallel scan of feature shares
+        let mut max_build = 0.0f64;
+        let mut sum_build = 0.0f64;
+        for _ in 0..spec.n_workers.max(1) {
+            let b = (times.build_secs / w) * spec.jitter(&mut rng);
+            max_build = max_build.max(b);
+            sum_build += b;
+        }
+        let mean_build = sum_build / w;
+        barrier_cost += max_build - mean_build;
+        // allgather split candidates: 2(W-1) messages of candidate blocks
+        let comm = 2.0 * (w - 1.0) * spec.net.xfer(times.hist_bytes / w.max(1.0));
+        wall += max_build + comm + times.target_secs;
+    }
+    SimResult {
+        wall_secs: wall,
+        n_trees,
+        mean_staleness: 0.0,
+        bottleneck_frac: barrier_cost / wall.max(1e-12),
+    }
+}
+
+/// DimBoost/TencentBoost: fork-join with the histogram allgather routed
+/// through the central parameter server ("parameter server's allgather is
+/// a centralization operation … the burden of the server is the key for
+/// scalability" — §VI.C). Server receives W histogram shares serially.
+pub fn simulate_dimboost(
+    spec: &ClusterSpec,
+    times: &PhaseTimes,
+    n_trees: usize,
+) -> SimResult {
+    let mut rng = Rng::new(spec.seed ^ 0xd1b0);
+    let w = spec.n_workers.max(1) as f64;
+    let mut wall = 0.0f64;
+    let mut server_cost = 0.0f64;
+    for _ in 0..n_trees {
+        let mut max_build = 0.0f64;
+        for _ in 0..spec.n_workers.max(1) {
+            let b = (times.build_secs / w) * spec.jitter(&mut rng);
+            max_build = max_build.max(b);
+        }
+        // central allgather: server ingests W histogram shares one by one,
+        // merges each on the server CPU (~2 GB/s effective merge
+        // bandwidth), then broadcasts the merged result. The serial merge
+        // is the centralisation burden §VI.C blames for DimBoost's
+        // scalability ceiling.
+        let merge = w * (times.hist_bytes / 2e9);
+        let ingest = w * spec.net.xfer(times.hist_bytes / w);
+        let bcast = spec.net.xfer(times.hist_bytes);
+        let comm = ingest + merge + bcast;
+        server_cost += comm;
+        wall += max_build + comm + times.target_secs;
+    }
+    SimResult {
+        wall_secs: wall,
+        n_trees,
+        mean_staleness: 0.0,
+        bottleneck_frac: server_cost / wall.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(w: usize) -> ClusterSpec {
+        ClusterSpec::new(w)
+    }
+
+    #[test]
+    fn async_single_worker_matches_closed_form() {
+        let mut s = spec(1);
+        s.speed_cv = 0.0;
+        let t = PhaseTimes::realsim_like();
+        let r = simulate_async_ps(&s, &t, 10);
+        // worker cycle: pull+build+push, server: apply+target; with one
+        // worker the pipeline overlaps build with nothing, so wall ≈
+        // 10 * cycle (server service overlaps the next build only after
+        // the first arrival). Sanity: within [10*build, 10*(cycle+service)]
+        let cycle = s.net.xfer(t.target_bytes) + t.build_secs + s.net.xfer(t.tree_bytes);
+        assert!(r.wall_secs >= 10.0 * t.build_secs);
+        assert!(r.wall_secs <= 10.0 * (cycle + t.apply_secs + t.target_secs) + 1.0);
+        assert_eq!(r.n_trees, 10);
+    }
+
+    #[test]
+    fn async_scales_until_server_saturates() {
+        let t = PhaseTimes::realsim_like();
+        let base = simulate_async_ps(&spec(1), &t, 200).trees_per_sec();
+        let w8 = simulate_async_ps(&spec(8), &t, 200).trees_per_sec();
+        let w32 = simulate_async_ps(&spec(32), &t, 200).trees_per_sec();
+        let w128 = simulate_async_ps(&spec(128), &t, 200).trees_per_sec();
+        assert!(w8 > 6.0 * base, "8-worker speedup too low: {}", w8 / base);
+        assert!(w32 > w8);
+        // server-side service time caps throughput (Eq. 13)
+        let cap = 1.0 / (t.apply_secs + t.target_secs);
+        assert!(w128 <= cap * 1.01);
+        // saturation: 128 workers barely beat 32
+        assert!(w128 / w32 < 2.0);
+    }
+
+    #[test]
+    fn sync_speedup_saturates_earlier_than_async() {
+        let t = PhaseTimes::realsim_like();
+        let n = 100;
+        let a1 = simulate_async_ps(&spec(1), &t, n).wall_secs;
+        let a32 = simulate_async_ps(&spec(32), &t, n).wall_secs;
+        let l1 = simulate_lightgbm_fp(&spec(1), &t, n).wall_secs;
+        let l32 = simulate_lightgbm_fp(&spec(32), &t, n).wall_secs;
+        let async_speedup = a1 / a32;
+        let sync_speedup = l1 / l32;
+        assert!(
+            async_speedup > 1.8 * sync_speedup,
+            "async {async_speedup:.1} vs sync {sync_speedup:.1}"
+        );
+    }
+
+    #[test]
+    fn dimboost_worse_than_lightgbm_at_scale() {
+        let t = PhaseTimes::realsim_like();
+        let n = 50;
+        let l = simulate_dimboost(&spec(1), &t, n).wall_secs
+            / simulate_dimboost(&spec(32), &t, n).wall_secs;
+        let g = simulate_lightgbm_fp(&spec(1), &t, n).wall_secs
+            / simulate_lightgbm_fp(&spec(32), &t, n).wall_secs;
+        assert!(l < g * 1.2, "dimboost speedup {l:.1} should not exceed lightgbm {g:.1} by much");
+    }
+
+    #[test]
+    fn async_staleness_grows_with_workers() {
+        let t = PhaseTimes::realsim_like();
+        let s1 = simulate_async_ps(&spec(2), &t, 100).mean_staleness;
+        let s32 = simulate_async_ps(&spec(32), &t, 100).mean_staleness;
+        assert!(s32 > s1);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let t = PhaseTimes::realsim_like();
+        let a = simulate_async_ps(&spec(8), &t, 50);
+        let b = simulate_async_ps(&spec(8), &t, 50);
+        assert_eq!(a.wall_secs, b.wall_secs);
+    }
+}

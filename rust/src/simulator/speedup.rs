@@ -1,0 +1,127 @@
+//! Speedup sweeps over worker counts (Figure 10) + the Eq. 13 bound.
+
+use super::cluster::{ClusterSpec, PhaseTimes};
+use super::models::{simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp};
+
+/// Which simulated system a row belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    AsynchSgbdt,
+    LightGbmFp,
+    DimBoost,
+}
+
+impl SystemKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SystemKind::AsynchSgbdt => "asynch-sgbdt",
+            SystemKind::LightGbmFp => "lightgbm-fp",
+            SystemKind::DimBoost => "dimboost",
+        }
+    }
+
+    pub fn all() -> [SystemKind; 3] {
+        [SystemKind::AsynchSgbdt, SystemKind::LightGbmFp, SystemKind::DimBoost]
+    }
+}
+
+/// One (system, workers) measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeedupRow {
+    pub system: SystemKind,
+    pub workers: usize,
+    pub wall_secs: f64,
+    /// wall(1 worker of the same system) / wall(this row).
+    pub speedup: f64,
+    pub mean_staleness: f64,
+    pub bottleneck_frac: f64,
+}
+
+/// Run all three systems over `worker_counts`, normalising each system by
+/// its own single-worker time (the paper's speedup definition — the code
+/// setting makes 1-worker asynch-SGBDT and LightGBM equal in real time).
+pub fn speedup_sweep(
+    times: &PhaseTimes,
+    worker_counts: &[usize],
+    n_trees: usize,
+    speed_cv: f64,
+    seed: u64,
+) -> Vec<SpeedupRow> {
+    let mut rows = Vec::new();
+    for system in SystemKind::all() {
+        let run = |w: usize| {
+            let mut spec = ClusterSpec::new(w);
+            spec.speed_cv = speed_cv;
+            spec.seed = seed ^ (w as u64) << 1;
+            match system {
+                SystemKind::AsynchSgbdt => simulate_async_ps(&spec, times, n_trees),
+                SystemKind::LightGbmFp => simulate_lightgbm_fp(&spec, times, n_trees),
+                SystemKind::DimBoost => simulate_dimboost(&spec, times, n_trees),
+            }
+        };
+        let base = run(1).wall_secs;
+        for &w in worker_counts {
+            let r = run(w);
+            rows.push(SpeedupRow {
+                system,
+                workers: w,
+                wall_secs: r.wall_secs,
+                speedup: base / r.wall_secs.max(1e-12),
+                mean_staleness: r.mean_staleness,
+                bottleneck_frac: r.bottleneck_frac,
+            });
+        }
+    }
+    rows
+}
+
+/// Eq. 13: `#workers < T(BuildTree) / T(Communicate + BuildTarget)` — the
+/// scalability ceiling of asynch-SGBDT given phase times.
+pub fn eq13_upper_bound(times: &PhaseTimes, spec: &ClusterSpec) -> f64 {
+    let comm = spec.net.xfer(times.target_bytes) + spec.net.xfer(times.tree_bytes);
+    times.build_secs / (comm + times.target_secs + times.apply_secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_systems_and_counts() {
+        let rows = speedup_sweep(&PhaseTimes::realsim_like(), &[1, 2, 4], 30, 0.15, 7);
+        assert_eq!(rows.len(), 9);
+        for r in &rows {
+            assert!(r.speedup > 0.0);
+            assert!(r.wall_secs > 0.0);
+        }
+        // speedup at 1 worker is 1 by construction
+        for r in rows.iter().filter(|r| r.workers == 1) {
+            assert!((r.speedup - 1.0).abs() < 1e-9, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn paper_shape_at_32_workers() {
+        // The paper: asynch-SGBDT 14–22x, LightGBM 5–7x, DimBoost 4–6x.
+        // The simulator must reproduce the ordering and rough magnitudes.
+        let rows = speedup_sweep(&PhaseTimes::realsim_like(), &[32], 200, 0.15, 11);
+        let get = |k: SystemKind| rows.iter().find(|r| r.system == k).unwrap().speedup;
+        let a = get(SystemKind::AsynchSgbdt);
+        let l = get(SystemKind::LightGbmFp);
+        let d = get(SystemKind::DimBoost);
+        assert!(a > 10.0 && a < 32.0, "async speedup {a:.1}");
+        assert!(l > 3.0 && l < 12.0, "lightgbm speedup {l:.1}");
+        assert!(d > 1.0 && d < 10.0, "dimboost speedup {d:.1}");
+        assert!(a > l && l >= d * 0.8, "ordering broken: {a:.1} {l:.1} {d:.1}");
+    }
+
+    #[test]
+    fn eq13_bound_is_finite_and_positive() {
+        let spec = ClusterSpec::new(32);
+        let b = eq13_upper_bound(&PhaseTimes::realsim_like(), &spec);
+        assert!(b > 1.0 && b < 1000.0, "bound={b}");
+        // e2006 has longer builds => higher ceiling
+        let b2 = eq13_upper_bound(&PhaseTimes::e2006_like(), &spec);
+        assert!(b2 > b);
+    }
+}

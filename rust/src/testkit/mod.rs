@@ -1,0 +1,170 @@
+//! Mini property-based testing harness.
+//!
+//! proptest is not in the offline vendor set (DESIGN.md §7), so this is a
+//! small substitute: seeded generators with a *size ramp* (early cases are
+//! small, so the first failure tends to be near-minimal — a poor man's
+//! shrinking) and a failure report that pins the exact case seed for
+//! deterministic reproduction.
+
+use crate::util::Rng;
+
+/// Generation context handed to properties: seeded RNG + current size.
+pub struct Gen {
+    pub rng: Rng,
+    /// Grows 1 → 100 across the case ramp.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi], span scaled down for small sizes.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = (hi - lo).min(self.size.max(1) * (hi - lo) / 100 + 1);
+        lo + self.rng.below((span + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    /// Vector of f32 drawn from N(0, scale), length n.
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() as f32 * scale).collect()
+    }
+
+    /// Vector of {0,1} labels.
+    pub fn labels(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| if self.rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Non-negative weights with occasional zeros (padding-like).
+    pub fn weights(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if self.rng.bernoulli(0.15) {
+                    0.0
+                } else {
+                    self.rng.exponential() as f32
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, panics with the
+/// case index and seed so [`check_one`] can replay it exactly.
+pub fn check<P>(name: &str, cases: usize, seed: u64, mut prop: P)
+where
+    P: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let size = 1 + case * 100 / cases.max(1);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: check_one(\"{name}\", {case_seed}, {size}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case printed by [`check`].
+pub fn check_one<P>(name: &str, case_seed: u64, size: usize, mut prop: P)
+where
+    P: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen {
+        rng: Rng::new(case_seed),
+        size,
+    };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed on replay: {msg}");
+    }
+}
+
+/// Approximate equality helper for property bodies (relative tolerance).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+/// Assertion macro for property bodies: early-returns an Err with context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially_true_property() {
+        check("true", 50, 1, |g| {
+            let n = g.usize_in(0, 100);
+            if n <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_panics_with_replay_info() {
+        check("fails", 20, 2, |g| {
+            let n = g.usize_in(0, 10);
+            Err(format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut sizes = Vec::new();
+        check("ramp", 10, 3, |g| {
+            sizes.push(g.size);
+            Ok(())
+        });
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+    }
+
+    #[test]
+    fn close_tolerates_relative_error() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1e6, 1e6 + 1.0, 1e-5).is_ok());
+        assert!(close(1.0, 2.0, 1e-6).is_err());
+    }
+
+    #[test]
+    fn generators_produce_expected_shapes() {
+        let mut g = Gen {
+            rng: Rng::new(4),
+            size: 100,
+        };
+        let v = g.vec_normal(10, 2.0);
+        assert_eq!(v.len(), 10);
+        let y = g.labels(100);
+        assert!(y.iter().all(|&l| l == 0.0 || l == 1.0));
+        let w = g.weights(100);
+        assert!(w.iter().all(|&x| x >= 0.0));
+        assert!(w.iter().any(|&x| x == 0.0)); // padding-like zeros occur
+    }
+}

@@ -1,0 +1,398 @@
+//! Leaf-wise (best-first) tree growth with histogram subtraction — the
+//! LightGBM-style learner the paper reuses as its "building the tree"
+//! sub-step (all trainers — async, sync, serial — share this code, which
+//! mirrors the paper's setup where asynch-SGBDT and the LightGBM baseline
+//! share the treelearner).
+
+use crate::data::BinnedDataset;
+use crate::util::Rng;
+
+use super::histogram::{Histogram, HistogramPool};
+use super::split::{best_split, leaf_value, SplitConstraints, SplitInfo};
+use super::tree::{Node, Tree};
+
+/// Tree-growth hyperparameters (paper defaults: 100–400 leaves, 80%
+/// feature sampling).
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_leaves: usize,
+    /// 0 = unlimited.
+    pub max_depth: usize,
+    pub min_leaf_count: u64,
+    pub min_leaf_hess: f64,
+    pub lambda: f64,
+    pub min_gain: f64,
+    /// Fraction of features considered per tree (paper: 0.8).
+    pub feature_rate: f64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self {
+            max_leaves: 100,
+            max_depth: 0,
+            min_leaf_count: 1,
+            min_leaf_hess: 1e-6,
+            lambda: 1.0,
+            min_gain: 1e-12,
+            feature_rate: 0.8,
+        }
+    }
+}
+
+impl TreeParams {
+    fn constraints(&self) -> SplitConstraints {
+        SplitConstraints {
+            lambda: self.lambda,
+            min_leaf_count: self.min_leaf_count,
+            min_leaf_hess: self.min_leaf_hess,
+            min_gain: self.min_gain,
+        }
+    }
+}
+
+/// A growable leaf during construction.
+struct LeafState {
+    /// Range into the shared row-index arena.
+    begin: usize,
+    end: usize,
+    hist: Histogram,
+    best: Option<SplitInfo>,
+    depth: usize,
+    /// Index of this leaf's placeholder node in the output tree.
+    node_idx: usize,
+}
+
+/// Build one regression tree fitting the targets (`grad`, `hess` indexed by
+/// global row id) over the sampled `rows`.
+///
+/// Returns a constant-zero tree when `rows` is empty (the degenerate
+/// sampling pass the paper's extreme-small-rate experiment can produce).
+pub fn build_tree(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    params: &TreeParams,
+    rng: &mut Rng,
+) -> Tree {
+    grow_tree(binned, rows, grad, hess, params, rng, &mut |hist, rows| {
+        hist.build(binned, rows, grad, hess)
+    })
+}
+
+/// Tree growth with a pluggable histogram constructor — the hook through
+/// which the fork-join baseline injects sharded parallel histogram
+/// building (see [`super::parallel`]).
+pub(crate) fn grow_tree(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    params: &TreeParams,
+    rng: &mut Rng,
+    hist_build: &mut dyn FnMut(&mut Histogram, &[u32]),
+) -> Tree {
+    let _ = (grad, hess); // flowed through `hist_build`
+    if rows.is_empty() {
+        return Tree::constant(0.0);
+    }
+    let cons = params.constraints();
+
+    // feature subset for this tree (paper: random 80%), as a mask so the
+    // split search can intersect it with the leaf's touched features
+    let n_feat = binned.n_features;
+    let k = ((n_feat as f64) * params.feature_rate).ceil().max(1.0) as usize;
+    let mut feature_mask = vec![false; n_feat];
+    if k >= n_feat {
+        feature_mask.fill(true);
+    } else {
+        for i in rng.sample_indices(n_feat, k) {
+            feature_mask[i] = true;
+        }
+    }
+
+    let mut pool = HistogramPool::new(binned.total_bins());
+    // shared arena of row ids, partitioned per leaf
+    let mut arena: Vec<u32> = rows.to_vec();
+    let arena_len = arena.len();
+
+    let mut tree_nodes: Vec<Node> = Vec::new();
+    let mut leaves: Vec<LeafState> = Vec::new();
+
+    // root
+    let mut root_hist = pool.take();
+    hist_build(&mut root_hist, &arena);
+    let root_best = best_split(&root_hist, binned, &feature_mask, &cons);
+    tree_nodes.push(Node::Leaf {
+        value: leaf_value(&root_hist.totals, cons.lambda),
+    });
+    leaves.push(LeafState {
+        begin: 0,
+        end: arena_len,
+        hist: root_hist,
+        best: root_best,
+        depth: 1,
+        node_idx: 0,
+    });
+
+    let mut n_leaves = 1usize;
+    while n_leaves < params.max_leaves {
+        // pick the splittable leaf with the highest gain
+        let Some(li) = leaves
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.best.is_some())
+            .max_by(|a, b| {
+                let ga = a.1.best.unwrap().gain;
+                let gb = b.1.best.unwrap().gain;
+                ga.partial_cmp(&gb).unwrap()
+            })
+            .map(|(i, _)| i)
+        else {
+            break; // nothing splittable
+        };
+        let leaf = leaves.swap_remove(li);
+        let split = leaf.best.unwrap();
+
+        // partition the leaf's arena segment: bin <= split.bin goes left
+        let seg = &mut arena[leaf.begin..leaf.end];
+        let mid = partition_rows(seg, binned, split.feature, split.bin);
+        let (lb, le) = (leaf.begin, leaf.begin + mid);
+        let (rb, re) = (leaf.begin + mid, leaf.end);
+        debug_assert_eq!((le - lb) as u64, split.left.count, "partition/left mismatch");
+        debug_assert_eq!((re - rb) as u64, split.right.count, "partition/right mismatch");
+
+        // histogram for the smaller child by building, larger by subtraction
+        let left_smaller = (le - lb) <= (re - rb);
+        let (sb, se, bb, be) = if left_smaller {
+            (lb, le, rb, re)
+        } else {
+            (rb, re, lb, le)
+        };
+        let mut small_hist = pool.take();
+        hist_build(&mut small_hist, &arena[sb..se]);
+        let mut big_hist = pool.take();
+        big_hist.subtract_from(&leaf.hist, &small_hist);
+        pool.give(leaf.hist);
+        let (left_hist, right_hist) = if left_smaller {
+            (small_hist, big_hist)
+        } else {
+            (big_hist, small_hist)
+        };
+        debug_assert!((be - bb) > 0);
+
+        // emit children; parent placeholder becomes a split node
+        let left_idx = tree_nodes.len();
+        tree_nodes.push(Node::Leaf {
+            value: leaf_value(&split.left, cons.lambda),
+        });
+        let right_idx = tree_nodes.len();
+        tree_nodes.push(Node::Leaf {
+            value: leaf_value(&split.right, cons.lambda),
+        });
+        tree_nodes[leaf.node_idx] = Node::Split {
+            feature: split.feature,
+            bin: split.bin,
+            threshold: split.threshold,
+            left: left_idx as u32,
+            right: right_idx as u32,
+        };
+
+        let child_depth = leaf.depth + 1;
+        let depth_ok = params.max_depth == 0 || child_depth < params.max_depth + 1;
+        for (begin, end, hist, node_idx) in [
+            (lb, le, left_hist, left_idx),
+            (rb, re, right_hist, right_idx),
+        ] {
+            let can_split = depth_ok && (end - begin) >= 2;
+            let best = if can_split {
+                best_split(&hist, binned, &feature_mask, &cons)
+            } else {
+                None
+            };
+            leaves.push(LeafState {
+                begin,
+                end,
+                hist,
+                best,
+                depth: child_depth,
+                node_idx,
+            });
+        }
+        n_leaves += 1;
+    }
+
+    let tree = Tree { nodes: tree_nodes };
+    debug_assert!(tree.validate().is_ok());
+    tree
+}
+
+/// Stable in-place partition of row ids by the split predicate; returns the
+/// number of rows going left.
+fn partition_rows(seg: &mut [u32], binned: &BinnedDataset, feature: u32, bin: u8) -> usize {
+    // in-place two-pointer partition (order within sides irrelevant for
+    // histogram building)
+    let mut i = 0usize;
+    let mut j = seg.len();
+    while i < j {
+        if binned.bin_of(seg[i] as usize, feature) <= bin {
+            i += 1;
+        } else {
+            j -= 1;
+            seg.swap(i, j);
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CsrMatrix, Dataset};
+    use crate::loss::logistic;
+
+    /// Four clusters over two features, labels `y = a AND NOT b` — needs a
+    /// depth-2 tree but is greedily splittable (unlike exact XOR, whose
+    /// root gain is identically zero).
+    fn xor_data(n: usize) -> (Dataset, BinnedDataset) {
+        let mut rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let a = (i / 2) % 2;
+            let b = i % 2;
+            rows.push(vec![(0u32, a as f32 * 2.0 + 1.0), (1u32, b as f32 * 2.0 + 1.0)]);
+            y.push(if a == 1 && b == 0 { 1.0 } else { 0.0 });
+        }
+        let x = CsrMatrix::from_rows(2, &rows).unwrap();
+        let ds = Dataset::new("xor", x, y);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        (ds, b)
+    }
+
+    fn grad_for(ds: &Dataset, f: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(f, &ds.y, &w);
+        (gh.grad, gh.hess)
+    }
+
+    #[test]
+    fn learns_xor_with_four_leaves() {
+        let (ds, b) = xor_data(200);
+        let f0 = vec![0.0f32; ds.n_rows()];
+        let (g, h) = grad_for(&ds, &f0);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams {
+            max_leaves: 4,
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let t = build_tree(&b, &rows, &g, &h, &params, &mut rng);
+        t.validate().unwrap();
+        assert!(t.n_leaves() >= 3 && t.n_leaves() <= 4, "leaves={}", t.n_leaves());
+        // every row must move towards its label
+        for r in 0..ds.n_rows() {
+            let p = t.predict_binned(&b, r);
+            if ds.y[r] > 0.5 {
+                assert!(p > 0.0, "row {r} pred {p}");
+            } else {
+                assert!(p < 0.0, "row {r} pred {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_max_leaves() {
+        let (ds, b) = xor_data(300);
+        let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        for max_leaves in [1usize, 2, 3] {
+            let params = TreeParams {
+                max_leaves,
+                feature_rate: 1.0,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(2);
+            let t = build_tree(&b, &rows, &g, &h, &params, &mut rng);
+            assert!(t.n_leaves() <= max_leaves.max(1));
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (ds, b) = xor_data(300);
+        let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams {
+            max_leaves: 64,
+            max_depth: 2,
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let t = build_tree(&b, &rows, &g, &h, &params, &mut rng);
+        assert!(t.depth() <= 3); // depth counts nodes on path; 2 splits max
+    }
+
+    #[test]
+    fn empty_rows_give_constant_tree() {
+        let (_, b) = xor_data(10);
+        let mut rng = Rng::new(4);
+        let t = build_tree(&b, &[], &[], &[], &TreeParams::default(), &mut rng);
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.predict_raw(&CsrMatrix::from_dense(1, 2, &[0.0, 0.0]).unwrap(), 0), 0.0);
+    }
+
+    #[test]
+    fn subset_rows_build_on_subset_only() {
+        let (ds, b) = xor_data(100);
+        let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);
+        // only cluster (0,0) and (1,1): tree trained on those rows
+        let rows: Vec<u32> = (0..100u32).filter(|&r| {
+            let a = (r / 2) % 2;
+            let bb = r % 2;
+            a == bb
+        }).collect();
+        let params = TreeParams { max_leaves: 4, feature_rate: 1.0, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let t = build_tree(&b, &rows, &g, &h, &params, &mut rng);
+        // rows in the subset must be pushed in the right direction
+        for &r in &rows {
+            let p = t.predict_binned(&b, r as usize);
+            if ds.y[r as usize] > 0.5 {
+                assert!(p > 0.0);
+            } else {
+                assert!(p < 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, b) = xor_data(128);
+        let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams { max_leaves: 8, feature_rate: 0.5, ..Default::default() };
+        let t1 = build_tree(&b, &rows, &g, &h, &params, &mut Rng::new(7));
+        let t2 = build_tree(&b, &rows, &g, &h, &params, &mut Rng::new(7));
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn weighted_rows_shift_leaf_values() {
+        // two rows, same features: leaf value is the weighted Newton step
+        let x = CsrMatrix::from_dense(2, 1, &[1.0, 1.0]).unwrap();
+        let ds = Dataset::new("w", x, vec![1.0, 0.0]);
+        let b = BinnedDataset::from_dataset(&ds, 4).unwrap();
+        let g = vec![-2.0f32, 1.0];
+        let h = vec![1.0f32, 1.0];
+        let params = TreeParams { max_leaves: 4, feature_rate: 1.0, lambda: 0.0, ..Default::default() };
+        let mut rng = Rng::new(8);
+        let t = build_tree(&b, &[0, 1], &g, &h, &params, &mut rng);
+        // unsplittable (identical feature) -> single leaf = -(sum g)/(sum h)
+        assert_eq!(t.n_leaves(), 1);
+        let v = t.predict_binned(&b, 0);
+        assert!((v - 0.5).abs() < 1e-6, "v={v}");
+    }
+}

@@ -1,0 +1,25 @@
+//! The "building the tree" sub-step substrate: a LightGBM-style
+//! leaf-wise histogram regression-tree learner.
+//!
+//! Trees fit the stochastic target `L'_random` (Eq. 10): the tree's
+//! prediction for row i approximates `-g_i / w_i` (the negative gradient),
+//! with leaf values given by the Newton step `-ΣG / (ΣH + λ)`. In the
+//! paper's "gradient step" mode the caller passes `h_i = w_i`, which turns
+//! the same formula into the weighted least-squares mean — both modes share
+//! one code path (see DESIGN.md §8).
+//!
+//! Sparse-aware: histograms accumulate only the nonzero (feature, bin)
+//! pairs of each row; each feature's implicit-zero bin is reconstructed by
+//! subtraction from the leaf totals, making histogram building O(nnz).
+
+pub mod builder;
+pub mod histogram;
+pub mod parallel;
+pub mod split;
+pub mod tree;
+
+pub use builder::{build_tree, TreeParams};
+pub use parallel::build_tree_forkjoin;
+pub use histogram::Histogram;
+pub use split::SplitInfo;
+pub use tree::{Node, Tree};

@@ -1,0 +1,313 @@
+//! The decision-tree model object produced by the builder and shipped
+//! worker → server as the PS "delta" message.
+
+use anyhow::{bail, Result};
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::BinnedDataset;
+use crate::io::Json;
+
+/// A tree node. Splits send `value <= threshold` (raw feature space) left.
+/// Implicit zeros of sparse rows evaluate as `0.0 <= threshold`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    Split {
+        feature: u32,
+        /// Bin-space split (valid against the training BinnedDataset).
+        bin: u8,
+        /// Raw-space threshold (valid for any raw feature vector).
+        threshold: f32,
+        left: u32,
+        right: u32,
+    },
+    Leaf {
+        value: f32,
+    },
+}
+
+/// A regression tree. Node 0 is the root.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// A single-leaf (constant) tree.
+    pub fn constant(value: f32) -> Tree {
+        Tree {
+            nodes: vec![Node::Leaf { value }],
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+
+    /// Maximum root-to-leaf depth.
+    pub fn depth(&self) -> usize {
+        fn go(t: &Tree, i: u32) -> usize {
+            match &t.nodes[i as usize] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + go(t, *left).max(go(t, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(self, 0)
+        }
+    }
+
+    /// Predict from a binned training row (bin-space traversal — exact
+    /// match with how the tree was grown).
+    #[inline]
+    pub fn predict_binned(&self, binned: &BinnedDataset, row: usize) -> f32 {
+        let mut i = 0u32;
+        loop {
+            match &self.nodes[i as usize] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    bin,
+                    left,
+                    right,
+                    ..
+                } => {
+                    let b = binned.bin_of(row, *feature);
+                    i = if b <= *bin { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Predict from a raw sparse row (threshold-space traversal — used for
+    /// held-out data binned with no mapper).
+    pub fn predict_raw(&self, x: &CsrMatrix, row: usize) -> f32 {
+        let mut i = 0u32;
+        loop {
+            match &self.nodes[i as usize] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                    ..
+                } => {
+                    let v = x.get(row, *feature);
+                    i = if v <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Scale all leaf values (used in ensemble post-processing tests).
+    pub fn scale(&mut self, k: f32) {
+        for n in &mut self.nodes {
+            if let Node::Leaf { value } = n {
+                *value *= k;
+            }
+        }
+    }
+
+    /// Largest absolute leaf value.
+    pub fn max_abs_leaf(&self) -> f32 {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Leaf { value } => Some(value.abs()),
+                _ => None,
+            })
+            .fold(0.0, f32::max)
+    }
+
+    /// Structural validation: every child index in range, exactly one root,
+    /// no cycles (checked by reachability), every non-leaf has two children.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            bail!("empty tree");
+        }
+        let n = self.nodes.len();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0u32];
+        let mut visited = 0usize;
+        while let Some(i) = stack.pop() {
+            let idx = i as usize;
+            if idx >= n {
+                bail!("child index {idx} out of range {n}");
+            }
+            if seen[idx] {
+                bail!("node {idx} reachable twice (cycle or DAG)");
+            }
+            seen[idx] = true;
+            visited += 1;
+            if let Node::Split { left, right, .. } = &self.nodes[idx] {
+                stack.push(*left);
+                stack.push(*right);
+            }
+        }
+        if visited != n {
+            bail!("{} unreachable nodes", n - visited);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------ serialization
+
+    /// JSON representation (model persistence / wire debugging).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| match n {
+                    Node::Leaf { value } => {
+                        Json::obj(vec![("leaf", Json::Num(*value as f64))])
+                    }
+                    Node::Split {
+                        feature,
+                        bin,
+                        threshold,
+                        left,
+                        right,
+                    } => Json::obj(vec![
+                        ("feature", Json::Num(*feature as f64)),
+                        ("bin", Json::Num(*bin as f64)),
+                        ("threshold", Json::Num(*threshold as f64)),
+                        ("left", Json::Num(*left as f64)),
+                        ("right", Json::Num(*right as f64)),
+                    ]),
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Tree> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("tree json must be array"))?;
+        let mut nodes = Vec::with_capacity(arr.len());
+        for item in arr {
+            if let Some(v) = item.get("leaf") {
+                nodes.push(Node::Leaf {
+                    value: v.as_f64().unwrap_or(0.0) as f32,
+                });
+            } else {
+                nodes.push(Node::Split {
+                    feature: item.req_usize("feature")? as u32,
+                    bin: item.req_usize("bin")? as u8,
+                    threshold: item.req_f64("threshold")? as f32,
+                    left: item.req_usize("left")? as u32,
+                    right: item.req_usize("right")? as u32,
+                });
+            }
+        }
+        let t = Tree { nodes };
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn stump() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Split {
+                    feature: 0,
+                    bin: 1,
+                    threshold: 2.0,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn constant_tree() {
+        let t = Tree::constant(0.5);
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.depth(), 1);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn raw_prediction_thresholds() {
+        let t = stump();
+        let x = CsrMatrix::from_dense(3, 1, &[1.0, 3.0, 0.0]).unwrap();
+        assert_eq!(t.predict_raw(&x, 0), -1.0); // 1.0 <= 2.0
+        assert_eq!(t.predict_raw(&x, 1), 1.0); // 3.0 > 2.0
+        assert_eq!(t.predict_raw(&x, 2), -1.0); // implicit zero <= 2.0
+    }
+
+    #[test]
+    fn binned_prediction_consistent_with_raw() {
+        let x = CsrMatrix::from_dense(4, 1, &[1.0, 3.0, 0.0, 5.0]).unwrap();
+        let ds = Dataset::new("t", x.clone(), vec![0.0; 4]);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        // build a stump in bin space aligned with raw threshold
+        let bin = b.mappers[0].bin_of(2.0);
+        let t = Tree {
+            nodes: vec![
+                Node::Split {
+                    feature: 0,
+                    bin,
+                    threshold: b.mappers[0].upper_of(bin),
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        };
+        for r in 0..4 {
+            assert_eq!(t.predict_binned(&b, r), t.predict_raw(&x, r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_children() {
+        let t = Tree {
+            nodes: vec![Node::Split {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                left: 5,
+                right: 6,
+            }],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unreachable() {
+        let mut t = stump();
+        t.nodes.push(Node::Leaf { value: 9.0 }); // orphan
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn scale_and_max_abs() {
+        let mut t = stump();
+        t.scale(0.5);
+        assert_eq!(t.max_abs_leaf(), 0.5);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = stump();
+        let j = t.to_json();
+        let back = Tree::from_json(&j).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG, timing, streaming stats.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Stopwatch;

@@ -1,0 +1,164 @@
+//! Wall-clock timing helpers used by trainers, benches and the profiler.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch accumulating named phase durations.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        d
+    }
+}
+
+/// Accumulates time spent per named phase — the lightweight profiler used
+/// by trainers to report where worker/server time goes (the measurements
+/// that calibrate the cluster simulator and feed Eq. 13).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation of `phase` taking `d`.
+    pub fn record(&mut self, phase: &str, d: Duration) {
+        if let Some(e) = self.phases.iter_mut().find(|e| e.0 == phase) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.phases.push((phase.to_string(), d, 1));
+        }
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed());
+        out
+    }
+
+    /// Total seconds in a phase (0 if never recorded).
+    pub fn total(&self, phase: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|e| e.0 == phase)
+            .map(|e| e.1.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Mean seconds per observation of a phase.
+    pub fn mean(&self, phase: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|e| e.0 == phase)
+            .map(|e| e.1.as_secs_f64() / e.2.max(1) as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Number of observations of a phase.
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.iter().find(|e| e.0 == phase).map(|e| e.2).unwrap_or(0)
+    }
+
+    /// Merge another timer's accumulations into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (name, d, c) in &other.phases {
+            if let Some(e) = self.phases.iter_mut().find(|e| &e.0 == name) {
+                e.1 += *d;
+                e.2 += *c;
+            } else {
+                self.phases.push((name.clone(), *d, *c));
+            }
+        }
+    }
+
+    /// `(phase, total_secs, count)` rows, insertion-ordered.
+    pub fn rows(&self) -> Vec<(String, f64, u64)> {
+        self.phases
+            .iter()
+            .map(|(n, d, c)| (n.clone(), d.as_secs_f64(), *c))
+            .collect()
+    }
+
+    /// Human-readable one-line-per-phase report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, d, c) in &self.phases {
+            let secs = d.as_secs_f64();
+            s.push_str(&format!(
+                "{name:<24} total {secs:>9.4}s  n={c:<8} mean {:>9.6}s\n",
+                secs / (*c).max(1) as f64
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(sw.elapsed() >= a + b - 1e-9);
+    }
+
+    #[test]
+    fn phase_timer_accumulates_and_merges() {
+        let mut t = PhaseTimer::new();
+        t.record("x", Duration::from_millis(10));
+        t.record("x", Duration::from_millis(20));
+        t.record("y", Duration::from_millis(5));
+        assert_eq!(t.count("x"), 2);
+        assert!((t.total("x") - 0.030).abs() < 1e-9);
+        assert!((t.mean("x") - 0.015).abs() < 1e-9);
+
+        let mut u = PhaseTimer::new();
+        u.record("x", Duration::from_millis(30));
+        u.merge(&t);
+        assert_eq!(u.count("x"), 3);
+        assert!((u.total("x") - 0.060).abs() < 1e-9);
+        assert_eq!(u.count("y"), 1);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(t.count("work"), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Cross-module data-path integration: svmlight → Dataset → binning →
+//! diversity stats, plus generator realism checks.
+
+use asgbdt::data::stats::{diversity_report, SpeciesTable};
+use asgbdt::data::{synthetic, BinnedDataset, CsrMatrix, Dataset};
+use asgbdt::io::svmlight;
+use asgbdt::util::Rng;
+
+#[test]
+fn svmlight_roundtrip_preserves_binning() {
+    let ds = synthetic::realsim_like(300, 5);
+    let path = std::env::temp_dir().join("asgbdt_it_data.svm");
+    svmlight::write_file(&ds, &path).unwrap();
+    let back = svmlight::read_file(&path).unwrap();
+    assert_eq!(back.n_rows(), ds.n_rows());
+    assert_eq!(back.y, ds.y);
+    // binning the round-tripped data gives identical bins: the formats
+    // must not lose precision that changes quantiles
+    let b1 = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let b2 = BinnedDataset::from_dataset(&back, 32).unwrap();
+    assert_eq!(b1.bins, b2.bins);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn binned_dataset_agrees_with_raw_lookup() {
+    let ds = synthetic::realsim_like(200, 6);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    // for every nonzero, bin_of(row, feat) equals the mapper's bin of the
+    // raw value; for absent features it equals the zero bin
+    for r in 0..ds.n_rows() {
+        for (c, v) in ds.x.row(r) {
+            assert_eq!(b.bin_of(r, c), b.mappers[c as usize].bin_of(v));
+        }
+    }
+    let zero_feat = (0..ds.n_features() as u32)
+        .find(|&c| ds.x.get(0, c) == 0.0)
+        .unwrap();
+    assert_eq!(b.bin_of(0, zero_feat), b.mappers[zero_feat as usize].zero_bin);
+}
+
+#[test]
+fn species_table_consistent_with_dataset_species() {
+    for ds in [synthetic::higgs_like(1000, 7), synthetic::realsim_like(500, 7)] {
+        let t = SpeciesTable::build(&ds);
+        assert_eq!(t.n_species(), ds.n_species());
+        assert_eq!(t.row_species.len(), ds.n_rows());
+        assert!((t.total() - ds.total_weight()).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn diversity_monotone_in_rate() {
+    let ds = synthetic::realsim_like(800, 8);
+    let mut last_delta = -1.0;
+    let mut last_rho = -1.0;
+    for rate in [0.001, 0.01, 0.1, 0.5, 0.9] {
+        let rep = diversity_report(&ds, rate);
+        assert!(rep.delta >= last_delta);
+        assert!(rep.rho >= last_rho - 1e-12);
+        last_delta = rep.delta;
+        last_rho = rep.rho;
+    }
+}
+
+#[test]
+fn split_is_disjoint_and_complete() {
+    let ds = synthetic::higgs_like(500, 9);
+    let mut rng = Rng::new(9);
+    let (tr, te) = ds.split(0.3, &mut rng);
+    assert_eq!(tr.n_rows() + te.n_rows(), 500);
+    // weights preserved
+    assert!((tr.total_weight() + te.total_weight() - ds.total_weight()).abs() < 1e-6);
+}
+
+#[test]
+fn generators_cover_paper_regimes() {
+    // dimensionality ordering: higgs << realsim
+    let h = synthetic::higgs_like(400, 10);
+    let r = synthetic::realsim_like(400, 10);
+    assert!(h.n_features() < r.n_features());
+    // diversity ordering at small rate
+    let dh = diversity_report(&h, 0.01);
+    let dr = diversity_report(&r, 0.01);
+    assert!(dh.delta > dr.delta, "higgs {0} <= realsim {1}", dh.delta, dr.delta);
+}
+
+#[test]
+fn csr_select_and_fingerprints_compose() {
+    let ds = synthetic::realsim_like(100, 11);
+    let rows: Vec<usize> = (0..50).collect();
+    let sub = ds.subset(&rows, "sub");
+    for (i, &r) in rows.iter().enumerate() {
+        assert_eq!(sub.x.row_fingerprint(i), ds.x.row_fingerprint(r));
+    }
+}
+
+#[test]
+fn dense_matrix_from_svmlight_text() {
+    let text = "1 1:1.5 2:2.5\n0 1:0.5 2:3.5\n";
+    let ds = svmlight::parse(text, "dense").unwrap();
+    let m: &CsrMatrix = &ds.x;
+    assert_eq!(m.n_cols(), 2);
+    assert!((m.density() - 1.0).abs() < 1e-12);
+    let _d: &Dataset = &ds;
+}

@@ -1,0 +1,64 @@
+//! Experiment-driver integration: dispatch, output files, and the cheap
+//! drivers end-to-end. (The heavier per-figure smoke runs live as unit
+//! tests inside each driver module; this file covers the shared surface.)
+
+use asgbdt::experiments::{self, Scale};
+
+#[test]
+fn dispatch_rejects_unknown_ids() {
+    let out = std::env::temp_dir().join("asgbdt_it_exp");
+    assert!(experiments::run("fig99", Scale::Smoke, &out).is_err());
+    assert!(experiments::run("", Scale::Smoke, &out).is_err());
+}
+
+#[test]
+fn all_ids_dispatchable() {
+    // every advertised id must be routed (checked by name only — the
+    // heavy bodies are exercised in their module tests)
+    for id in experiments::all_ids() {
+        assert!(
+            ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablation"]
+                .contains(id)
+        );
+    }
+    assert_eq!(experiments::all_ids().len(), 8);
+}
+
+#[test]
+fn fig4_writes_expected_csv_columns() {
+    let out = std::env::temp_dir().join("asgbdt_it_exp_fig4");
+    experiments::run("fig4", Scale::Smoke, &out).unwrap();
+    let body = std::fs::read_to_string(out.join("fig4_diversity.csv")).unwrap();
+    let header = body.lines().next().unwrap();
+    assert_eq!(
+        header,
+        "dataset,rate,omega,delta,rho,qprime_density_analytic,qprime_density_empirical"
+    );
+    // 2 datasets x 4 smoke rates = 8 data rows
+    assert_eq!(body.lines().count(), 9);
+    // analytic and empirical densities agree loosely on every row
+    for line in body.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let analytic: f64 = cols[5].parse().unwrap();
+        let empirical: f64 = cols[6].parse().unwrap();
+        assert!(
+            (analytic - empirical).abs() < 0.05,
+            "analytic {analytic} vs empirical {empirical}"
+        );
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn fig10_summary_has_paper_shape() {
+    let out = std::env::temp_dir().join("asgbdt_it_exp_fig10");
+    let j = experiments::run("fig10", Scale::Smoke, &out).unwrap();
+    let realsim = j.get("realsim").expect("realsim workload");
+    let a = realsim.req_f64("asynch_speedup_32").unwrap();
+    let l = realsim.req_f64("lightgbm_speedup_32").unwrap();
+    let d = realsim.req_f64("dimboost_speedup_32").unwrap();
+    assert!(a > l, "async {a:.1} must beat lightgbm {l:.1}");
+    assert!(a > d, "async {a:.1} must beat dimboost {d:.1}");
+    assert!(realsim.req_f64("eq13_upper_bound").unwrap() > 1.0);
+    std::fs::remove_dir_all(&out).ok();
+}

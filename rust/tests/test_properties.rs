@@ -1,0 +1,291 @@
+//! Property-based tests (via the crate's `testkit`; proptest is offline-
+//! unavailable) over the coordinator's core invariants: sampling
+//! unbiasedness, histogram algebra, tree structure, loss math, routing
+//! and serialization.
+
+use asgbdt::data::{synthetic, BinnedDataset, CsrMatrix, Dataset};
+use asgbdt::forest::Forest;
+use asgbdt::io::Json;
+use asgbdt::loss::logistic;
+use asgbdt::prop_assert;
+use asgbdt::sampling::BernoulliSampler;
+use asgbdt::testkit::{check, close, Gen};
+use asgbdt::tree::histogram::Histogram;
+use asgbdt::tree::{build_tree, TreeParams};
+use asgbdt::util::Rng;
+
+fn random_dataset(g: &mut Gen) -> Dataset {
+    let n = 20 + g.usize_in(0, 300);
+    let d = 2 + g.usize_in(0, 40);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            let mut cols: Vec<u32> = (0..d as u32)
+                .filter(|_| g.rng.bernoulli(0.3))
+                .collect();
+            cols.dedup();
+            cols.iter()
+                .map(|&c| (c, (g.rng.normal() as f32 * 2.0)))
+                .filter(|&(_, v)| v != 0.0)
+                .collect()
+        })
+        .collect();
+    let x = CsrMatrix::from_rows(d, &rows).unwrap();
+    let y = g.labels(n);
+    Dataset::new("prop", x, y)
+}
+
+#[test]
+fn prop_sampling_weights_unbiased_and_supported() {
+    check("sampling_unbiased", 20, 101, |g| {
+        let ds = random_dataset(g);
+        let rate = g.f64_in(0.05, 1.0);
+        let sampler = BernoulliSampler::uniform(&ds, rate);
+        let mut rng = g.rng.fork(1);
+        let draws = 300;
+        let mut sums = vec![0.0f64; ds.n_rows()];
+        for _ in 0..draws {
+            let p = sampler.draw(&mut rng);
+            // support/weight consistency every draw
+            for (i, &w) in p.weights.iter().enumerate() {
+                let in_rows = p.rows.binary_search(&(i as u32)).is_ok();
+                prop_assert!((w > 0.0) == in_rows, "support mismatch at {i}");
+            }
+            for i in 0..ds.n_rows() {
+                sums[i] += p.weights[i] as f64;
+            }
+        }
+        // E[m'] = m = 1, checked on the average across rows
+        let mean: f64 =
+            sums.iter().map(|s| s / draws as f64).sum::<f64>() / ds.n_rows() as f64;
+        close(mean, 1.0, 0.15).map_err(|e| format!("unbiasedness: {e}"))
+    });
+}
+
+#[test]
+fn prop_histogram_totals_equal_sum_of_rows() {
+    check("hist_totals", 25, 102, |g| {
+        let ds = random_dataset(g);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let grad = g.vec_normal(ds.n_rows(), 2.0);
+        let hess = g.weights(ds.n_rows());
+        let k = g.usize_in(1, ds.n_rows());
+        let rows: Vec<u32> = g
+            .rng
+            .sample_indices(ds.n_rows(), k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        let mut h = Histogram::zeros(b.total_bins());
+        h.build(&b, &rows, &grad, &hess);
+        let gsum: f64 = rows.iter().map(|&r| grad[r as usize] as f64).sum();
+        prop_assert!(h.totals.count == rows.len() as u64, "count mismatch");
+        close(h.totals.grad, gsum, 1e-6).map_err(|e| format!("grad sum: {e}"))?;
+        // per-feature: explicit + zero stats == totals
+        for f in 0..b.n_features {
+            let ex = h.feature_explicit_stats(&b, f);
+            let z = h.feature_zero_stats(&b, f);
+            prop_assert!(
+                ex.count + z.count == h.totals.count,
+                "feature {f} partition broken"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_subtraction_associates() {
+    check("hist_subtract", 20, 103, |g| {
+        let ds = random_dataset(g);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let grad = g.vec_normal(ds.n_rows(), 1.0);
+        let hess = g.weights(ds.n_rows());
+        let all: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let cut = 1 + g.usize_in(0, ds.n_rows() - 1);
+        let (left, right) = all.split_at(cut);
+        let mut hp = Histogram::zeros(b.total_bins());
+        hp.build(&b, &all, &grad, &hess);
+        let mut hl = Histogram::zeros(b.total_bins());
+        hl.build(&b, left, &grad, &hess);
+        let mut hr_direct = Histogram::zeros(b.total_bins());
+        hr_direct.build(&b, right, &grad, &hess);
+        let mut hr_sub = Histogram::zeros(b.total_bins());
+        hr_sub.subtract_from(&hp, &hl);
+        for i in 0..b.total_bins() {
+            close(hr_sub.grad[i], hr_direct.grad[i], 1e-6)
+                .map_err(|e| format!("slot {i}: {e}"))?;
+            prop_assert!(hr_sub.count[i] == hr_direct.count[i], "count slot {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trees_are_valid_and_bounded() {
+    check("tree_structure", 20, 104, |g| {
+        let ds = random_dataset(g);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let f0 = vec![0.0f32; ds.n_rows()];
+        let w: Vec<f32> = (0..ds.n_rows()).map(|_| 1.0).collect();
+        let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+        let max_leaves = 1 + g.usize_in(1, 32);
+        let params = TreeParams {
+            max_leaves,
+            feature_rate: g.f64_in(0.2, 1.0),
+            ..Default::default()
+        };
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut g.rng.fork(2));
+        tree.validate().map_err(|e| e.to_string())?;
+        prop_assert!(tree.n_leaves() <= max_leaves.max(1), "leaf cap broken");
+        // leaf values bounded by max |g|/lambda-ish: |v| <= max|g| * n
+        let max_g = gh.grad.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        prop_assert!(
+            tree.max_abs_leaf() <= max_g * ds.n_rows() as f32 + 1.0,
+            "insane leaf value"
+        );
+        // binned and raw prediction agree on training rows
+        for r in 0..ds.n_rows() {
+            let pb = tree.predict_binned(&b, r);
+            let pr = tree.predict_raw(&ds.x, r);
+            prop_assert!(pb == pr, "row {r}: binned {pb} != raw {pr}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grad_is_zero_exactly_at_optimum() {
+    check("grad_zero_at_opt", 30, 105, |g| {
+        // for y in {0,1} and p = sigmoid(2F): grad = 0 iff p == y, which
+        // cannot happen at finite F — but grad must always point towards
+        // the label: sign(g) == sign(p - y)
+        let n = 16 * (1 + g.usize_in(0, 16));
+        let f = g.vec_normal(n, 5.0);
+        let y = g.labels(n);
+        let w: Vec<f32> = (0..n).map(|_| 1.0).collect();
+        let gh = logistic::grad_hess_loss(&f, &y, &w);
+        for i in 0..n {
+            let p = logistic::prob(f[i]);
+            prop_assert!(
+                (gh.grad[i] >= 0.0) == (p >= y[i]),
+                "sign mismatch at {i}: g={} p={} y={}",
+                gh.grad[i],
+                p,
+                y[i]
+            );
+            prop_assert!(gh.hess[i] >= 0.0, "negative hessian at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forest_prediction_is_additive() {
+    check("forest_additive", 15, 106, |g| {
+        let ds = random_dataset(g);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let f0 = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams {
+            max_leaves: 8,
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        let mut forest = Forest::new(g.f64_in(-1.0, 1.0) as f32);
+        let mut rng = g.rng.fork(3);
+        let v = g.f64_in(0.01, 0.5) as f32;
+        for _ in 0..3 {
+            forest.push(v, build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng));
+        }
+        for r in 0..ds.n_rows().min(20) {
+            let direct = forest.predict_raw(&ds.x, r);
+            let manual: f32 = forest.base_score
+                + forest
+                    .trees
+                    .iter()
+                    .map(|(vv, t)| vv * t.predict_raw(&ds.x, r))
+                    .sum::<f32>();
+            close(direct as f64, manual as f64, 1e-5)
+                .map_err(|e| format!("row {r}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_arbitrary_forests() {
+    check("forest_json", 15, 107, |g| {
+        let ds = random_dataset(g);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let f0 = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams {
+            max_leaves: 1 + g.usize_in(1, 16),
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        let mut forest = Forest::new(0.5);
+        forest.push(
+            0.1,
+            build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut g.rng.fork(4)),
+        );
+        let text = forest.to_json().to_string();
+        let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+        let back = Forest::from_json(&parsed).map_err(|e| e.to_string())?;
+        for r in 0..ds.n_rows().min(10) {
+            prop_assert!(
+                forest.predict_raw(&ds.x, r) == back.predict_raw(&ds.x, r),
+                "prediction changed after roundtrip"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binning_preserves_order() {
+    check("binning_order", 25, 108, |g| {
+        let n = 5 + g.usize_in(0, 200);
+        let vals: Vec<f32> = (0..n).map(|_| g.rng.normal() as f32 * 10.0).collect();
+        let mapper =
+            asgbdt::data::binning::BinMapper::from_values(vals.clone(), 4 + g.usize_in(0, 60));
+        let mut rng = Rng::new(g.rng.next_u64());
+        for _ in 0..50 {
+            let a = vals[rng.below(n as u64) as usize];
+            let c = vals[rng.below(n as u64) as usize];
+            if a <= c {
+                prop_assert!(
+                    mapper.bin_of(a) <= mapper.bin_of(c),
+                    "order broken: {a} -> {}, {c} -> {}",
+                    mapper.bin_of(a),
+                    mapper.bin_of(c)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_split_preserves_rows() {
+    check("split_preserves", 20, 109, |g| {
+        let ds = random_dataset(g);
+        let frac = g.f64_in(0.05, 0.9);
+        let mut rng = g.rng.fork(5);
+        let (tr, te) = ds.split(frac, &mut rng);
+        prop_assert!(
+            tr.n_rows() + te.n_rows() == ds.n_rows(),
+            "row count changed"
+        );
+        prop_assert!(
+            tr.n_features() == ds.n_features() && te.n_features() == ds.n_features(),
+            "feature count changed"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,187 @@
+//! Parameter-server invariants under real concurrency: version
+//! monotonicity, exact tree accounting, clean shutdown, rejection
+//! bookkeeping, and failure injection (dead workers).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use asgbdt::config::TrainConfig;
+use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::ps::{run_worker, Board, ServerCore, TargetSnapshot};
+use asgbdt::runtime::GradientEngine;
+use asgbdt::tree::TreeParams;
+
+fn mini_cfg(workers: usize, n_trees: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = workers;
+    cfg.n_trees = n_trees;
+    cfg.step_length = 0.2;
+    cfg.sampling_rate = 0.9;
+    cfg.tree.max_leaves = 8;
+    cfg.max_bins = 16;
+    cfg.eval_every = n_trees;
+    cfg
+}
+
+#[test]
+fn board_versions_are_monotone_under_concurrent_pulls() {
+    let board = Arc::new(Board::new());
+    let max_seen = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        // pullers assert monotone observation
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let b = board.clone();
+            let seen = max_seen.clone();
+            handles.push(s.spawn(move || {
+                let mut last = 0u64;
+                while !b.is_shutdown() {
+                    let snap = b.pull();
+                    assert!(snap.version >= last, "version went backwards");
+                    last = snap.version;
+                    seen.fetch_max(last, Ordering::Relaxed);
+                }
+            }));
+        }
+        for v in 1..=500u64 {
+            board.publish(TargetSnapshot {
+                version: v,
+                grad: Arc::new(vec![0.0; 8]),
+                hess: Arc::new(vec![0.0; 8]),
+                rows: Arc::new(vec![0]),
+            });
+        }
+        board.request_shutdown();
+    });
+    assert!(max_seen.load(Ordering::Relaxed) <= 500);
+}
+
+#[test]
+fn server_accepts_exactly_n_trees_with_racing_workers() {
+    let ds = synthetic::realsim_like(250, 1);
+    let cfg = mini_cfg(6, 25);
+    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let mut core =
+        ServerCore::new(&cfg, &ds, binned.clone(), None, GradientEngine::native()).unwrap();
+    let board = Board::new();
+    board.publish(core.snapshot());
+    let (tx, rx) = mpsc::channel();
+
+    std::thread::scope(|s| {
+        for wid in 0..cfg.workers {
+            let tx = tx.clone();
+            let b = binned.clone();
+            let board_ref = &board;
+            let params = TreeParams { max_leaves: 4, ..Default::default() };
+            s.spawn(move || run_worker(wid, board_ref, b, params, tx, 99));
+        }
+        drop(tx);
+        while core.n_trees() < cfg.n_trees {
+            let push = rx.recv().unwrap();
+            let out = core.apply_tree(push.tree, push.based_on).unwrap();
+            if out.accepted {
+                board.publish(core.snapshot());
+            }
+        }
+        board.request_shutdown();
+        while rx.try_recv().is_ok() {}
+    });
+
+    assert_eq!(core.n_trees(), 25);
+    assert_eq!(core.forest.n_trees(), 25);
+    // staleness recorded for every accepted push
+    assert_eq!(core.staleness.samples.len(), 25);
+}
+
+#[test]
+fn dead_worker_does_not_wedge_training() {
+    // failure injection: one worker dies immediately (drops its sender);
+    // the remaining workers must still complete the run.
+    let ds = synthetic::realsim_like(200, 2);
+    let cfg = mini_cfg(3, 12);
+    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let mut core =
+        ServerCore::new(&cfg, &ds, binned.clone(), None, GradientEngine::native()).unwrap();
+    let board = Board::new();
+    board.publish(core.snapshot());
+    let (tx, rx) = mpsc::channel();
+
+    std::thread::scope(|s| {
+        // the dead worker: never sends anything
+        drop(tx.clone());
+        // two live workers
+        for wid in 0..2 {
+            let tx = tx.clone();
+            let b = binned.clone();
+            let board_ref = &board;
+            let params = TreeParams { max_leaves: 4, ..Default::default() };
+            s.spawn(move || run_worker(wid, board_ref, b, params, tx, 5));
+        }
+        drop(tx);
+        while core.n_trees() < cfg.n_trees {
+            let push = rx.recv().expect("live workers keep pushing");
+            if core.apply_tree(push.tree, push.based_on).unwrap().accepted {
+                board.publish(core.snapshot());
+            }
+        }
+        board.request_shutdown();
+        while rx.try_recv().is_ok() {}
+    });
+    assert_eq!(core.n_trees(), 12);
+}
+
+#[test]
+fn staleness_bound_filters_but_run_completes() {
+    let ds = synthetic::realsim_like(200, 3);
+    let mut cfg = mini_cfg(4, 15);
+    cfg.max_staleness = Some(1);
+    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let mut core =
+        ServerCore::new(&cfg, &ds, binned.clone(), None, GradientEngine::native()).unwrap();
+    let board = Board::new();
+    board.publish(core.snapshot());
+    let (tx, rx) = mpsc::channel();
+
+    std::thread::scope(|s| {
+        for wid in 0..cfg.workers {
+            let tx = tx.clone();
+            let b = binned.clone();
+            let board_ref = &board;
+            let params = TreeParams { max_leaves: 4, ..Default::default() };
+            s.spawn(move || run_worker(wid, board_ref, b, params, tx, 17));
+        }
+        drop(tx);
+        while core.n_trees() < cfg.n_trees {
+            let push = rx.recv().unwrap();
+            if core.apply_tree(push.tree, push.based_on).unwrap().accepted {
+                board.publish(core.snapshot());
+            }
+        }
+        board.request_shutdown();
+        while rx.try_recv().is_ok() {}
+    });
+    assert_eq!(core.n_trees(), 15);
+    assert!(core.staleness.max() <= 1, "bound violated: {}", core.staleness.max());
+}
+
+#[test]
+fn snapshot_rows_match_weight_support() {
+    let ds = synthetic::realsim_like(300, 4);
+    let cfg = mini_cfg(1, 3);
+    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let core =
+        ServerCore::new(&cfg, &ds, binned, None, GradientEngine::native()).unwrap();
+    let snap = core.snapshot();
+    // every sampled row has a nonzero hessian (gradient-mode weight) and
+    // every unsampled row is exactly zero in both targets
+    for r in 0..ds.n_rows() {
+        let sampled = snap.rows.binary_search(&(r as u32)).is_ok();
+        if sampled {
+            assert!(snap.hess[r] > 0.0);
+        } else {
+            assert_eq!(snap.grad[r], 0.0);
+            assert_eq!(snap.hess[r], 0.0);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! AOT runtime parity: the PJRT-executed HLO artifacts (JAX/Pallas compile
+//! path) must match the pure-Rust oracle bit-for-bit within f32 tolerance.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees the
+//! ordering); every test degrades to an explicit skip message when the
+//! artifacts are absent so `cargo test` alone still passes.
+
+use std::path::Path;
+
+use asgbdt::loss::logistic;
+use asgbdt::runtime::{EngineKind, GradientEngine, Manifest};
+use asgbdt::util::Rng;
+
+const DIR: &str = "artifacts";
+
+fn aot() -> Option<GradientEngine> {
+    if !Manifest::exists(Path::new(DIR)) {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return None;
+    }
+    let e = GradientEngine::aot(Path::new(DIR)).expect("aot engine");
+    assert_eq!(e.kind(), EngineKind::Aot);
+    Some(e)
+}
+
+fn inputs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let f: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect();
+    let w: Vec<f32> = (0..n)
+        .map(|_| if rng.bernoulli(0.2) { 0.0 } else { rng.exponential() as f32 })
+        .collect();
+    (f, y, w)
+}
+
+#[test]
+fn aot_grad_hess_matches_native_exact_bucket() {
+    let Some(mut e) = aot() else { return };
+    let (f, y, w) = inputs(4096, 1);
+    let a = e.grad_hess_loss(&f, &y, &w).unwrap();
+    let n = logistic::grad_hess_loss(&f, &y, &w);
+    for i in 0..f.len() {
+        assert!((a.grad[i] - n.grad[i]).abs() < 1e-4, "grad[{i}]");
+        assert!((a.hess[i] - n.hess[i]).abs() < 1e-4, "hess[{i}]");
+    }
+    assert!((a.loss_sum - n.loss_sum).abs() / n.loss_sum.max(1.0) < 1e-4);
+    assert!((a.weight_sum - n.weight_sum).abs() / n.weight_sum.max(1.0) < 1e-5);
+}
+
+#[test]
+fn aot_handles_padding_buckets() {
+    let Some(mut e) = aot() else { return };
+    // 5000 is not a bucket: the engine pads to 16384
+    let (f, y, w) = inputs(5_000, 2);
+    let a = e.grad_hess_loss(&f, &y, &w).unwrap();
+    let n = logistic::grad_hess_loss(&f, &y, &w);
+    assert_eq!(a.grad.len(), 5_000);
+    for i in 0..5_000 {
+        assert!((a.grad[i] - n.grad[i]).abs() < 1e-4);
+    }
+    assert!((a.loss_sum - n.loss_sum).abs() / n.loss_sum.max(1.0) < 1e-4);
+}
+
+#[test]
+fn aot_chunking_beyond_largest_bucket() {
+    // a manifest that only declares the 4096 bucket forces the chunked
+    // path on a 10_000-row request.
+    if !Manifest::exists(Path::new(DIR)) {
+        eprintln!("SKIP: no artifacts/");
+        return;
+    }
+    let tmp = std::env::temp_dir().join("asgbdt_chunk_manifest");
+    std::fs::create_dir_all(&tmp).unwrap();
+    for name in ["grad_hess", "eval"] {
+        std::fs::copy(
+            Path::new(DIR).join(format!("{name}_4096.hlo.txt")),
+            tmp.join(format!("{name}_4096.hlo.txt")),
+        )
+        .unwrap();
+    }
+    std::fs::write(
+        tmp.join("manifest.json"),
+        r#"{"format":"hlo-text","version":1,"buckets":[4096],"block":1024,
+            "entries":[{"name":"grad_hess","n":4096,"file":"grad_hess_4096.hlo.txt"},
+                       {"name":"eval","n":4096,"file":"eval_4096.hlo.txt"}]}"#,
+    )
+    .unwrap();
+    let mut e = GradientEngine::aot(&tmp).unwrap();
+    let (f, y, w) = inputs(10_000, 3);
+    let a = e.grad_hess_loss(&f, &y, &w).unwrap();
+    let n = logistic::grad_hess_loss(&f, &y, &w);
+    assert_eq!(a.grad.len(), 10_000);
+    for i in (0..10_000).step_by(977) {
+        assert!((a.grad[i] - n.grad[i]).abs() < 1e-4, "grad[{i}]");
+    }
+    assert!((a.loss_sum - n.loss_sum).abs() / n.loss_sum.max(1.0) < 1e-4);
+    let (al, ae, aw) = e.eval_sums(&f, &y, &w).unwrap();
+    let (nl, ne, nw) = logistic::eval_sums(&f, &y, &w);
+    assert!((al - nl).abs() / nl.max(1.0) < 1e-4);
+    assert!((ae - ne).abs() < 1.0); // error counts are integers in spirit
+    assert!((aw - nw).abs() / nw.max(1.0) < 1e-5);
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn aot_eval_matches_native() {
+    let Some(mut e) = aot() else { return };
+    let (f, y, w) = inputs(4096, 4);
+    let (al, ae, aw) = e.eval_sums(&f, &y, &w).unwrap();
+    let (nl, ne, nw) = logistic::eval_sums(&f, &y, &w);
+    assert!((al - nl).abs() / nl.max(1.0) < 1e-4, "{al} vs {nl}");
+    assert!((ae - ne).abs() / ne.max(1.0) < 1e-4, "{ae} vs {ne}");
+    assert!((aw - nw).abs() / nw.max(1.0) < 1e-5);
+}
+
+#[test]
+fn aot_extreme_values_finite() {
+    let Some(mut e) = aot() else { return };
+    let n = 4096;
+    let f: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 80.0 } else { -80.0 }).collect();
+    let y: Vec<f32> = (0..n).map(|i| ((i / 2) % 2) as f32).collect();
+    let w = vec![1.0f32; n];
+    let a = e.grad_hess_loss(&f, &y, &w).unwrap();
+    assert!(a.grad.iter().all(|g| g.is_finite()));
+    assert!(a.hess.iter().all(|h| h.is_finite()));
+    assert!(a.loss_sum.is_finite());
+}
+
+#[test]
+fn aot_reused_engine_is_consistent_across_calls() {
+    let Some(mut e) = aot() else { return };
+    let (f, y, w) = inputs(4096, 5);
+    let a = e.grad_hess_loss(&f, &y, &w).unwrap();
+    let b = e.grad_hess_loss(&f, &y, &w).unwrap();
+    assert_eq!(a.grad, b.grad);
+    assert_eq!(a.loss_sum, b.loss_sum);
+}
+
+#[test]
+fn full_training_run_with_aot_engine() {
+    // the integration that matters: the async trainer on the AOT path
+    if !Manifest::exists(Path::new(DIR)) {
+        eprintln!("SKIP: no artifacts/");
+        return;
+    }
+    use asgbdt::config::TrainConfig;
+    use asgbdt::coordinator::train_async;
+    use asgbdt::data::synthetic;
+    let ds = synthetic::realsim_like(500, 6);
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 2;
+    cfg.n_trees = 12;
+    cfg.step_length = 0.2;
+    cfg.tree.max_leaves = 8;
+    cfg.max_bins = 16;
+    cfg.eval_every = 4;
+    cfg.artifact_dir = DIR.into();
+    let rep = train_async(&cfg, &ds, None).unwrap();
+    assert_eq!(rep.engine, EngineKind::Aot, "AOT engine must be active");
+    let first = rep.curve.points.first().unwrap().train_loss;
+    let last = rep.curve.points.last().unwrap().train_loss;
+    assert!(last < first, "AOT training did not descend");
+}

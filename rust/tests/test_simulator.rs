@@ -1,0 +1,111 @@
+//! Simulator integration: the Figure 10 shapes the paper reports must
+//! hold across seeds and workloads, not just at one lucky draw.
+
+use asgbdt::simulator::{
+    eq13_upper_bound, simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp,
+    speedup_sweep, ClusterSpec, PhaseTimes, SystemKind,
+};
+
+fn spec(w: usize, seed: u64) -> ClusterSpec {
+    let mut s = ClusterSpec::new(w);
+    s.seed = seed;
+    s
+}
+
+#[test]
+fn paper_headline_realsim_across_seeds() {
+    // paper: asynch 14–22x, LightGBM 5–7x, DimBoost 4–6x at 32 workers
+    let t = PhaseTimes::realsim_like();
+    for seed in [1u64, 7, 42] {
+        let rows = speedup_sweep(&t, &[32], 300, 0.15, seed);
+        let get = |k: SystemKind| rows.iter().find(|r| r.system == k).unwrap().speedup;
+        let a = get(SystemKind::AsynchSgbdt);
+        let l = get(SystemKind::LightGbmFp);
+        let d = get(SystemKind::DimBoost);
+        assert!((12.0..=26.0).contains(&a), "seed {seed}: async {a:.1}");
+        assert!((4.0..=9.0).contains(&l), "seed {seed}: lightgbm {l:.1}");
+        assert!((3.0..=8.0).contains(&d), "seed {seed}: dimboost {d:.1}");
+        assert!(a > l && l > d, "seed {seed}: ordering {a:.1} {l:.1} {d:.1}");
+    }
+}
+
+#[test]
+fn paper_headline_e2006() {
+    // paper: asynch-SGBDT ~20x on E2006 at 32 workers
+    let t = PhaseTimes::e2006_like();
+    let rows = speedup_sweep(&t, &[32], 300, 0.15, 5);
+    let a = rows
+        .iter()
+        .find(|r| r.system == SystemKind::AsynchSgbdt)
+        .unwrap()
+        .speedup;
+    assert!((15.0..=30.0).contains(&a), "e2006 async {a:.1}");
+}
+
+#[test]
+fn speedup_monotone_in_workers_for_async() {
+    let t = PhaseTimes::realsim_like();
+    let rows = speedup_sweep(&t, &[1, 2, 4, 8, 16, 32], 200, 0.15, 9);
+    let mut last = 0.0;
+    for r in rows.iter().filter(|r| r.system == SystemKind::AsynchSgbdt) {
+        assert!(r.speedup >= last * 0.98, "async speedup dipped at {}", r.workers);
+        last = r.speedup;
+    }
+}
+
+#[test]
+fn the_gap_widens_with_scale() {
+    // "Especially with the increase of the number of machines or workers,
+    // the gap is expanded" (§VI.C)
+    let t = PhaseTimes::realsim_like();
+    let gap_at = |w: usize| {
+        let a = simulate_async_ps(&spec(1, 3), &t, 150).wall_secs
+            / simulate_async_ps(&spec(w, 3), &t, 150).wall_secs;
+        let l = simulate_lightgbm_fp(&spec(1, 3), &t, 150).wall_secs
+            / simulate_lightgbm_fp(&spec(w, 3), &t, 150).wall_secs;
+        a - l
+    };
+    assert!(gap_at(32) > gap_at(8), "gap should widen with workers");
+}
+
+#[test]
+fn heterogeneity_hurts_sync_more_than_async() {
+    let t = PhaseTimes::realsim_like();
+    let homo = ClusterSpec { speed_cv: 0.0, ..spec(16, 4) };
+    let hetero = ClusterSpec { speed_cv: 0.4, ..spec(16, 4) };
+    let async_ratio = simulate_async_ps(&hetero, &t, 150).wall_secs
+        / simulate_async_ps(&homo, &t, 150).wall_secs;
+    let sync_ratio = simulate_lightgbm_fp(&hetero, &t, 150).wall_secs
+        / simulate_lightgbm_fp(&homo, &t, 150).wall_secs;
+    assert!(
+        sync_ratio > async_ratio,
+        "stragglers must hurt the barrier more: sync x{sync_ratio:.2} vs async x{async_ratio:.2}"
+    );
+}
+
+#[test]
+fn eq13_bound_predicts_async_saturation() {
+    let t = PhaseTimes::realsim_like();
+    let bound = eq13_upper_bound(&t, &ClusterSpec::new(32));
+    // throughput at 4x the bound is within 25% of throughput at the bound:
+    // beyond #workers = bound, adding workers buys almost nothing
+    let at = |w: usize| simulate_async_ps(&spec(w, 6), &t, 300).trees_per_sec();
+    let w_bound = (bound.ceil() as usize).max(1);
+    let tp_bound = at(w_bound);
+    let tp_4x = at(4 * w_bound);
+    assert!(
+        tp_4x < tp_bound * 1.25,
+        "Eq.13: tp at bound {tp_bound:.1} vs 4x {tp_4x:.1} (bound {bound:.0})"
+    );
+}
+
+#[test]
+fn dimboost_bottleneck_is_the_server() {
+    let t = PhaseTimes::realsim_like();
+    let r = simulate_dimboost(&spec(32, 8), &t, 100);
+    assert!(
+        r.bottleneck_frac > 0.5,
+        "central allgather must dominate at 32 workers: {}",
+        r.bottleneck_frac
+    );
+}

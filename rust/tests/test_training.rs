@@ -1,0 +1,127 @@
+//! End-to-end trainer integration: all three modes, convergence quality,
+//! determinism, and the paper's validity-experiment contrasts in miniature.
+
+use asgbdt::config::{GradMode, TrainConfig, TrainMode};
+use asgbdt::coordinator::{train, train_async, train_serial, train_sync};
+use asgbdt::data::synthetic;
+use asgbdt::util::Rng;
+
+fn cfg(mode: TrainMode, workers: usize, n_trees: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.mode = mode;
+    c.workers = workers;
+    c.n_trees = n_trees;
+    c.step_length = 0.2;
+    c.sampling_rate = 0.8;
+    c.tree.max_leaves = 16;
+    c.max_bins = 32;
+    c.eval_every = 8;
+    c
+}
+
+#[test]
+fn all_three_modes_descend_on_realsim() {
+    let ds = synthetic::realsim_like(600, 1);
+    let mut rng = Rng::new(1);
+    let (tr, te) = ds.split(0.2, &mut rng);
+    for mode in [TrainMode::Serial, TrainMode::Sync, TrainMode::Async] {
+        let rep = train(&cfg(mode, 4, 32), &tr, Some(&te)).unwrap();
+        let first = rep.curve.points.first().unwrap().train_loss;
+        let last = rep.curve.points.last().unwrap().train_loss;
+        assert!(
+            last < first - 0.03,
+            "{:?} did not descend: {first} -> {last}",
+            mode
+        );
+        assert_eq!(rep.trees_accepted, 32);
+        assert!(rep.curve.points.last().unwrap().test_loss.is_finite());
+    }
+}
+
+#[test]
+fn async_with_few_workers_tracks_serial_on_high_diversity_data() {
+    // the paper's core validity claim, miniaturised: on a high-diversity
+    // dataset, async convergence per tree ~ serial convergence per tree.
+    let ds = synthetic::realsim_like(800, 2);
+    let serial = train_serial(&cfg(TrainMode::Serial, 1, 40), &ds, None).unwrap();
+    let async4 = train_async(&cfg(TrainMode::Async, 4, 40), &ds, None).unwrap();
+    let ls = serial.curve.final_train_loss().unwrap();
+    let la = async4.curve.final_train_loss().unwrap();
+    assert!(
+        (la - ls).abs() < 0.08,
+        "async diverged from serial: {la} vs {ls}"
+    );
+}
+
+#[test]
+fn newton_mode_converges_faster_per_tree_than_gradient_mode() {
+    let ds = synthetic::realsim_like(600, 3);
+    let mut base = cfg(TrainMode::Serial, 1, 25);
+    base.grad_mode = GradMode::Gradient;
+    let grad = train_serial(&base, &ds, None).unwrap();
+    base.grad_mode = GradMode::Newton;
+    let newton = train_serial(&base, &ds, None).unwrap();
+    // Newton leaf values use true curvature: at least as good per tree
+    let lg = grad.curve.final_train_loss().unwrap();
+    let ln = newton.curve.final_train_loss().unwrap();
+    assert!(ln <= lg + 0.02, "newton {ln} much worse than gradient {lg}");
+}
+
+#[test]
+fn sync_and_serial_produce_identical_forests() {
+    let ds = synthetic::realsim_like(400, 4);
+    let a = train_serial(&cfg(TrainMode::Serial, 1, 10), &ds, None).unwrap();
+    let b = train_sync(&cfg(TrainMode::Sync, 4, 10), &ds, None).unwrap();
+    assert_eq!(a.forest.n_trees(), b.forest.n_trees());
+    for r in 0..50 {
+        assert!(
+            (a.forest.predict_raw(&ds.x, r) - b.forest.predict_raw(&ds.x, r)).abs() < 1e-4,
+            "row {r}"
+        );
+    }
+}
+
+#[test]
+fn tiny_sampling_rate_still_trains() {
+    // paper Figure 9's extreme: ~2% of rows per pass
+    let ds = synthetic::realsim_like(1_000, 5);
+    let mut c = cfg(TrainMode::Async, 2, 30);
+    c.sampling_rate = 0.02;
+    let rep = train_async(&c, &ds, None).unwrap();
+    assert_eq!(rep.trees_accepted, 30);
+    let last = rep.curve.final_train_loss().unwrap();
+    assert!(last.is_finite() && last > 0.0);
+}
+
+#[test]
+fn model_predicts_on_unseen_data_better_than_chance() {
+    let ds = synthetic::realsim_like(1_200, 6);
+    let mut rng = Rng::new(6);
+    let (tr, te) = ds.split(0.25, &mut rng);
+    let rep = train_async(&cfg(TrainMode::Async, 4, 60), &tr, Some(&te)).unwrap();
+    let final_err = rep.curve.points.last().unwrap().test_error;
+    assert!(
+        final_err < 0.45,
+        "test error {final_err} not better than chance"
+    );
+}
+
+#[test]
+fn reports_carry_phase_timings() {
+    let ds = synthetic::realsim_like(300, 7);
+    let rep = train_serial(&cfg(TrainMode::Serial, 1, 8), &ds, None).unwrap();
+    assert!(rep.timer.count("server/produce_target") >= 8);
+    assert!(rep.timer.count("server/update_f") == 8);
+    assert!(rep.timer.count("server/sample") >= 8);
+    assert!(rep.build_times.n == 8);
+}
+
+#[test]
+fn to_json_summary_is_complete() {
+    let ds = synthetic::realsim_like(200, 8);
+    let rep = train_serial(&cfg(TrainMode::Serial, 1, 5), &ds, None).unwrap();
+    let j = rep.to_json();
+    assert_eq!(j.req_usize("trees_accepted").unwrap(), 5);
+    assert!(j.req_f64("final_train_loss").unwrap().is_finite());
+    assert_eq!(j.req_str("mode").unwrap(), "serial");
+}

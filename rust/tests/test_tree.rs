@@ -1,0 +1,111 @@
+//! Tree-learner integration: learning power, consistency between binned
+//! and raw prediction, boosting end-to-end with the forest.
+
+use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::forest::Forest;
+use asgbdt::loss::{logistic, metrics};
+use asgbdt::tree::{build_tree, TreeParams};
+use asgbdt::util::Rng;
+
+#[test]
+fn single_tree_reduces_training_loss() {
+    let ds = synthetic::realsim_like(1_000, 1);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let base = Forest::base_from_positive_rate(ds.positive_rate());
+    let f0 = vec![base; ds.n_rows()];
+    let w = ds.m.clone();
+    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let params = TreeParams { max_leaves: 32, feature_rate: 1.0, ..Default::default() };
+    let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(2));
+    // full Newton step for the fitted tree
+    let f1: Vec<f32> = (0..ds.n_rows())
+        .map(|r| f0[r] + tree.predict_binned(&b, r))
+        .collect();
+    let l0 = metrics::logloss(&f0, &ds.y, &w);
+    let l1 = metrics::logloss(&f1, &ds.y, &w);
+    assert!(l1 < l0, "tree step must reduce loss: {l0} -> {l1}");
+}
+
+#[test]
+fn binned_and_raw_prediction_agree_on_training_data() {
+    let ds = synthetic::realsim_like(500, 3);
+    let b = BinnedDataset::from_dataset(&ds, 64).unwrap();
+    let f0 = vec![0.0f32; ds.n_rows()];
+    let w = vec![1.0f32; ds.n_rows()];
+    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let params = TreeParams { max_leaves: 64, feature_rate: 1.0, ..Default::default() };
+    let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(4));
+    for r in 0..ds.n_rows() {
+        let pb = tree.predict_binned(&b, r);
+        let pr = tree.predict_raw(&ds.x, r);
+        assert_eq!(pb, pr, "row {r}: binned {pb} vs raw {pr}");
+    }
+}
+
+#[test]
+fn boosting_loop_overfits_small_data() {
+    // 10 boosting steps with big leaves should drive training error to ~0
+    let ds = synthetic::realsim_like(300, 5);
+    let b = BinnedDataset::from_dataset(&ds, 64).unwrap();
+    let mut forest = Forest::new(Forest::base_from_positive_rate(ds.positive_rate()));
+    let w = ds.m.clone();
+    let mut f = vec![forest.base_score; ds.n_rows()];
+    let params = TreeParams { max_leaves: 128, feature_rate: 1.0, lambda: 0.1, ..Default::default() };
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let mut rng = Rng::new(6);
+    for _ in 0..10 {
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng);
+        for r in 0..ds.n_rows() {
+            f[r] += 0.5 * tree.predict_binned(&b, r);
+        }
+        forest.push(0.5, tree);
+    }
+    let err = metrics::error_rate(&f, &ds.y, &w);
+    assert!(err < 0.05, "training error {err} after 10 overfit steps");
+    // forest predictions must agree with the accumulated margins
+    let fp = forest.predict_all_binned(&b);
+    for r in 0..ds.n_rows() {
+        assert!((fp[r] - f[r]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn feature_sampling_restricts_split_features() {
+    let ds = synthetic::realsim_like(400, 7);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let f0 = vec![0.0f32; ds.n_rows()];
+    let w = vec![1.0f32; ds.n_rows()];
+    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    // rate 0.05: only ~5% of features available; tree still builds
+    let params = TreeParams { max_leaves: 8, feature_rate: 0.05, ..Default::default() };
+    let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(8));
+    tree.validate().unwrap();
+    assert!(tree.n_leaves() >= 1);
+}
+
+#[test]
+fn forest_serialization_roundtrip_with_real_trees() {
+    let ds = synthetic::realsim_like(200, 9);
+    let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+    let f0 = vec![0.0f32; ds.n_rows()];
+    let w = vec![1.0f32; ds.n_rows()];
+    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let params = TreeParams { max_leaves: 16, feature_rate: 0.8, ..Default::default() };
+    let mut forest = Forest::new(0.1);
+    let mut rng = Rng::new(10);
+    for _ in 0..3 {
+        forest.push(0.01, build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng));
+    }
+    let path = std::env::temp_dir().join("asgbdt_it_forest.json");
+    forest.save(&path).unwrap();
+    let loaded = Forest::load(&path).unwrap();
+    for r in 0..ds.n_rows() {
+        assert_eq!(forest.predict_raw(&ds.x, r), loaded.predict_raw(&ds.x, r));
+    }
+    std::fs::remove_file(&path).ok();
+}
