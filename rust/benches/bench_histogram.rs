@@ -1,8 +1,14 @@
 //! Histogram building — the worker-side hot loop (>90% of tree build).
+//!
+//! The `children/*` groups measure the sibling-subtraction lever directly:
+//! producing both child histograms of a split by rebuilding each from its
+//! rows vs building only the smaller child and deriving the larger as
+//! `parent − small`. The 1/8 : 7/8 partition mirrors the unbalanced
+//! splits deep leaf-wise growth produces, where subtraction wins most.
 use asgbdt::bench_harness::Runner;
 use asgbdt::data::{synthetic, BinnedDataset};
 use asgbdt::loss::logistic;
-use asgbdt::tree::histogram::Histogram;
+use asgbdt::tree::histogram::{Histogram, HistogramPool};
 
 fn main() {
     let mut r = Runner::new("histogram");
@@ -31,6 +37,24 @@ fn main() {
         r.bench(&format!("subtract/{name}"), || {
             child.subtract_from(&parent, &sib)
         });
+
+        // child-pair production, whole-node rebuild vs sibling subtraction,
+        // on the unbalanced partition of deep leaf-wise splits
+        let small: Vec<u32> = rows.iter().copied().step_by(8).collect();
+        let big: Vec<u32> = rows.iter().copied().filter(|r| r % 8 != 0).collect();
+        let mut pool = HistogramPool::new(b.total_bins());
+        let mut ch_a = pool.take();
+        let mut ch_b = pool.take();
+        r.bench(&format!("children/{name}/rebuild_both"), || {
+            ch_a.build(&b, &small, &gh.grad, &gh.hess);
+            ch_b.build(&b, &big, &gh.grad, &gh.hess);
+        });
+        r.bench(&format!("children/{name}/subtract"), || {
+            ch_a.build(&b, &small, &gh.grad, &gh.hess);
+            ch_b.subtract_from(&parent, &ch_a);
+        });
+        pool.give(ch_a);
+        pool.give(ch_b);
     }
     r.write_csv().unwrap();
 }

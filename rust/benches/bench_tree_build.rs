@@ -1,8 +1,15 @@
-//! Full tree builds: serial vs fork-join, by leaves and dataset shape.
+//! Full tree builds: histogram strategy (sibling subtraction vs
+//! whole-node rebuild), serial vs fork-join vs the feature-parallel
+//! engine, by leaves and thread count. The deeper-tree configs (more
+//! leaves) are where subtraction pulls furthest ahead: every extra level
+//! splits smaller, more unbalanced leaves.
 use asgbdt::bench_harness::Runner;
 use asgbdt::data::{synthetic, BinnedDataset};
 use asgbdt::loss::logistic;
-use asgbdt::tree::{build_tree, build_tree_forkjoin, TreeParams};
+use asgbdt::tree::{
+    build_tree_feature_parallel, build_tree_forkjoin, build_tree_pooled, HistogramPool,
+    HistogramStrategy, TreeParams,
+};
 use asgbdt::util::Rng;
 
 fn main() {
@@ -13,18 +20,43 @@ fn main() {
     let w = vec![1.0f32; ds.n_rows()];
     let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
     let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+
+    // strategy ablation: same trees, different histogram cost; the gap
+    // must widen with tree depth (acceptance gate for the subtraction PR)
     for leaves in [16usize, 64, 256] {
-        let params = TreeParams { max_leaves: leaves, feature_rate: 0.8, ..Default::default() };
-        let mut rng = Rng::new(5);
-        r.bench(&format!("serial/leaves_{leaves}"), || {
-            build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng)
-        });
+        for strat in [HistogramStrategy::Subtract, HistogramStrategy::Rebuild] {
+            let params = TreeParams {
+                max_leaves: leaves,
+                feature_rate: 0.8,
+                strategy: strat,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(5);
+            let mut pool = HistogramPool::new(b.total_bins());
+            r.bench(&format!("strategy/{}/leaves_{leaves}", strat.as_str()), || {
+                build_tree_pooled(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, &mut pool)
+            });
+        }
     }
-    let params = TreeParams { max_leaves: 64, feature_rate: 0.8, ..Default::default() };
+
+    let params = TreeParams {
+        max_leaves: 64,
+        feature_rate: 0.8,
+        ..Default::default()
+    };
     for threads in [2usize, 4, 8] {
         let mut rng = Rng::new(5);
         r.bench(&format!("forkjoin/threads_{threads}"), || {
             build_tree_forkjoin(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, threads)
+        });
+    }
+    for threads in [2usize, 4, 8] {
+        let mut rng = Rng::new(5);
+        let mut pool = HistogramPool::new(b.total_bins());
+        r.bench(&format!("feature_parallel/threads_{threads}"), || {
+            build_tree_feature_parallel(
+                &b, &rows, &gh.grad, &gh.hess, &params, &mut rng, threads, &mut pool,
+            )
         });
     }
     r.write_csv().unwrap();

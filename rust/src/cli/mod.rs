@@ -6,6 +6,22 @@
 
 use anyhow::{bail, Result};
 
+/// Subcommand index. `asgbdt help` renders from this list; keep it in
+/// step with the dispatch match in `main.rs` and the README's CLI table
+/// when adding a subcommand.
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("train", "train a model (mode=async|sync|serial) on a data spec"),
+    ("predict", "score a saved model on a data spec"),
+    (
+        "experiment",
+        "reproduce a paper figure (fig4..fig10, ablation, all)",
+    ),
+    ("simulate", "discrete-event cluster speedup sweep (Fig. 10)"),
+    ("datagen", "write a synthetic dataset as an svmlight file"),
+    ("inspect-artifacts", "list the AOT gradient HLO artifacts"),
+    ("help", "print usage"),
+];
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {

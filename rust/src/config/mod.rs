@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::io::Json;
-use crate::tree::TreeParams;
+use crate::tree::{HistogramStrategy, TreeParams};
 
 /// Which trainer drives the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -167,6 +167,9 @@ impl TrainConfig {
             "min_leaf_count" => self.tree.min_leaf_count = value.parse()?,
             "lambda" => self.tree.lambda = value.parse()?,
             "feature_rate" => self.tree.feature_rate = value.parse()?,
+            "histogram" | "histogram_strategy" => {
+                self.tree.strategy = HistogramStrategy::parse(value)?
+            }
             "eval_every" => self.eval_every = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "artifact_dir" => self.artifact_dir = PathBuf::from(value),
@@ -195,6 +198,7 @@ impl TrainConfig {
             ("min_leaf_count", Json::Num(self.tree.min_leaf_count as f64)),
             ("lambda", Json::Num(self.tree.lambda)),
             ("feature_rate", Json::Num(self.tree.feature_rate)),
+            ("histogram", Json::Str(self.tree.strategy.as_str().into())),
             ("eval_every", Json::Num(self.eval_every as f64)),
             ("seed", Json::Num(self.seed as f64)),
             (
@@ -249,12 +253,15 @@ mod tests {
         c.set("sampling_rate", "0.000005").unwrap();
         c.set("max_leaves", "400").unwrap();
         c.set("max_staleness", "16").unwrap();
+        c.set("histogram", "rebuild").unwrap();
         assert_eq!(c.workers, 32);
         assert_eq!(c.mode, TrainMode::Serial);
         assert_eq!(c.max_staleness, Some(16));
         assert_eq!(c.tree.max_leaves, 400);
+        assert_eq!(c.tree.strategy, HistogramStrategy::Rebuild);
         c.set("max_staleness", "none").unwrap();
         assert_eq!(c.max_staleness, None);
+        assert!(c.set("histogram", "bogus").is_err());
     }
 
     #[test]
@@ -286,11 +293,13 @@ mod tests {
         let mut c = TrainConfig::default();
         c.set("workers", "8").unwrap();
         c.set("grad_mode", "newton").unwrap();
+        c.set("histogram", "rebuild").unwrap();
         let j = c.to_json();
         let back = TrainConfig::from_json(&j).unwrap();
         assert_eq!(back.workers, 8);
         assert_eq!(back.grad_mode, GradMode::Newton);
         assert_eq!(back.mode, TrainMode::Async);
         assert_eq!(back.max_staleness, None);
+        assert_eq!(back.tree.strategy, HistogramStrategy::Rebuild);
     }
 }

@@ -11,6 +11,11 @@
 //! Staleness τ is *measured*, not configured: with more workers, more
 //! pushes race a given target version and τ grows — the knob the paper's
 //! Proposition 1 ties to the required step length.
+//!
+//! Each spawned worker owns a `HistogramPool` for its whole lifetime (see
+//! `ps::worker`), so the per-worker build loop allocates histogram
+//! buffers only on its first tree; `cfg.tree.strategy` selects sibling
+//! subtraction (default) or whole-node rebuild for every worker.
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -10,7 +10,7 @@ use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
-use crate::tree::build_tree;
+use crate::tree::{build_tree_pooled, HistogramPool};
 use crate::util::stats::Summary;
 use crate::util::{Rng, Stopwatch};
 
@@ -29,17 +29,20 @@ pub fn train_serial(
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
     let mut rng = Rng::new(cfg.seed ^ 0x0ddb_a11);
     let mut build_times = Vec::with_capacity(cfg.n_trees);
+    // histogram buffers recycled across all n_trees builds
+    let mut pool = HistogramPool::new(binned.total_bins());
 
     while core.n_trees() < cfg.n_trees {
         let snapshot = core.snapshot();
         let mut sw = Stopwatch::new();
-        let tree = build_tree(
+        let tree = build_tree_pooled(
             &binned,
             &snapshot.rows,
             &snapshot.grad,
             &snapshot.hess,
             &cfg.tree,
             &mut rng,
+            &mut pool,
         );
         build_times.push(sw.lap());
         core.apply_tree(tree, snapshot.version)?;

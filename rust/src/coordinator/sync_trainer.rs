@@ -15,7 +15,7 @@ use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
-use crate::tree::build_tree_forkjoin;
+use crate::tree::{build_tree_forkjoin_pooled, HistogramPool};
 use crate::util::stats::Summary;
 use crate::util::{Rng, Stopwatch};
 
@@ -34,11 +34,13 @@ pub fn train_sync(
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
     let mut rng = Rng::new(cfg.seed ^ 0x0ddb_a11);
     let mut build_times = Vec::with_capacity(cfg.n_trees);
+    // merged per-leaf histograms recycled across all n_trees builds
+    let mut pool = HistogramPool::new(binned.total_bins());
 
     while core.n_trees() < cfg.n_trees {
         let snapshot = core.snapshot();
         let mut sw = Stopwatch::new();
-        let tree = build_tree_forkjoin(
+        let tree = build_tree_forkjoin_pooled(
             &binned,
             &snapshot.rows,
             &snapshot.grad,
@@ -46,6 +48,7 @@ pub fn train_sync(
             &cfg.tree,
             &mut rng,
             cfg.workers,
+            &mut pool,
         );
         build_times.push(sw.lap());
         core.apply_tree(tree, snapshot.version)?;

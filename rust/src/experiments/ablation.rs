@@ -8,14 +8,20 @@
 //!   effective sample diversity → lower sensitivity to worker count.
 //! * **bounded staleness** (extension beyond the paper): rejecting stale
 //!   pushes trades throughput for per-tree quality.
+//! * **histogram strategy** (system ablation): sibling subtraction vs
+//!   whole-node rebuild in the tree hot path — identical forests by
+//!   construction, different build cost (the `bench_tree_build` /
+//!   `bench_histogram` targets measure the same axis in isolation).
 
 use std::path::Path;
 
 use anyhow::Result;
 
+use crate::config::TrainMode;
 use crate::data::synthetic;
 use crate::io::csv::CsvWriter;
 use crate::io::Json;
+use crate::tree::HistogramStrategy;
 
 use super::common::{base_cfg, convergence_sweep, split, Scale, Variant};
 
@@ -97,10 +103,47 @@ pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     }
     csv.write(&out_dir.join("ablation_staleness_throughput.csv"))?;
 
+    // ---- (d) histogram strategy (sibling subtraction vs whole-node rebuild)
+    let strategies = [HistogramStrategy::Subtract, HistogramStrategy::Rebuild];
+    let mut variants = Vec::new();
+    for strat in strategies {
+        let mut cfg = base_cfg(scale, 43_000);
+        cfg.mode = TrainMode::Serial; // serial: wall-time delta is pure build cost
+        cfg.n_trees = n_trees;
+        cfg.step_length = scale.pick(0.1, 0.02);
+        cfg.sampling_rate = 0.8;
+        cfg.tree.max_leaves = scale.pick(16, 64);
+        cfg.tree.strategy = strat;
+        variants.push(Variant {
+            tag: format!("hist={}", strat.as_str()),
+            cfg,
+        });
+    }
+    let (hist_reports, hist_summary) = convergence_sweep(
+        "ablation_histogram_strategy",
+        &train_ds,
+        Some(&test_ds),
+        variants,
+        out_dir,
+    )?;
+
+    // same forests, different build cost: record the per-tree build times
+    let mut csv = CsvWriter::new(&["strategy", "mean_build_s", "p99_build_s", "trees_per_sec"]);
+    for (strat, rep) in strategies.iter().zip(&hist_reports) {
+        csv.row(&[
+            strat.as_str().to_string(),
+            format!("{:.6}", rep.build_times.mean),
+            format!("{:.6}", rep.build_times.p99),
+            format!("{:.3}", rep.trees_per_sec()),
+        ]);
+    }
+    csv.write(&out_dir.join("ablation_histogram_build_times.csv"))?;
+
     Ok(Json::obj(vec![
         ("step_length", step_summary),
         ("leaves", leaves_summary),
         ("bounded_staleness", staleness_summary),
+        ("histogram_strategy", hist_summary),
     ]))
 }
 
@@ -109,14 +152,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn ablation_produces_all_three_studies() {
+    fn ablation_produces_all_four_studies() {
         let dir = std::env::temp_dir().join("asgbdt_ablation_test");
         let j = run(Scale::Smoke, &dir).unwrap();
         assert!(j.get("step_length").is_some());
         assert!(j.get("leaves").is_some());
         assert!(j.get("bounded_staleness").is_some());
+        assert!(j.get("histogram_strategy").is_some());
         assert!(dir.join("ablation_step_length.csv").exists());
         assert!(dir.join("ablation_leaves.csv").exists());
+        assert!(dir.join("ablation_histogram_strategy.csv").exists());
+        assert!(dir.join("ablation_histogram_build_times.csv").exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -95,12 +95,7 @@ pub fn convergence_sweep(
     let path = out_dir.join(format!("{name}.csv"));
     csv.write(&path)?;
     log::info!("[{name}] wrote {}", path.display());
-    let summary = Json::Obj(
-        summary_items
-            .into_iter()
-            .map(|(k, v)| (k, v))
-            .collect(),
-    );
+    let summary = Json::Obj(summary_items.into_iter().collect());
     Ok((reports, summary))
 }
 

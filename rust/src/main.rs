@@ -45,6 +45,10 @@ fn run(raw: &[String]) -> Result<()> {
         "inspect-artifacts" => cmd_inspect(&args),
         "help" | "" => {
             print!("{}", HELP);
+            println!("SUBCOMMANDS:");
+            for (name, desc) in asgbdt::cli::SUBCOMMANDS {
+                println!("  {name:<18} {desc}");
+            }
             Ok(())
         }
         other => bail!("unknown command '{other}' (see `asgbdt help`)"),
@@ -70,6 +74,8 @@ CONFIG OVERRIDES (key=value):
   mode=async|sync|serial   workers=N        n_trees=N      step_length=V
   sampling_rate=R          max_leaves=N     feature_rate=R max_bins=N
   grad_mode=gradient|newton max_staleness=N|none  seed=N   eval_every=N
+  histogram=subtract|rebuild   (sibling-subtraction child histograms vs
+                                whole-node rebuild; subtract is default)
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {

@@ -10,7 +10,9 @@
 //! * [`worker`] — the worker loop: pull latest target, build a tree on the
 //!   sampled sub-dataset, push. Workers are mutually blind; only the
 //!   pull/build/push order *within* one worker is serialised, exactly the
-//!   paper's asynchrony model.
+//!   paper's asynchrony model. Each worker owns a
+//!   [`crate::tree::HistogramPool`] for its lifetime, so tree builds stop
+//!   allocating histogram buffers after the first tree.
 //!
 //! Transport is in-process (threads as workers, as in the paper's validity
 //! experiments): an unbounded mpsc channel for pushes and an RwLock'd

@@ -4,12 +4,18 @@
 //! synchronisation a worker ever touches is the O(1) snapshot pull and the
 //! non-blocking channel send — there is no barrier anywhere, which is the
 //! paper's entire point.
+//!
+//! Each worker owns one [`crate::tree::HistogramPool`] for its whole
+//! lifetime: the flat histogram buffers are allocated on the first tree
+//! and recycled across every node of every subsequent tree (see the pool's
+//! ownership contract), so the steady-state build loop is allocation-free
+//! on its hot path.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::data::BinnedDataset;
-use crate::tree::{build_tree, TreeParams};
+use crate::tree::{build_tree_pooled, HistogramPool, TreeParams};
 use crate::util::{Rng, Stopwatch};
 
 use super::messages::TreePush;
@@ -27,6 +33,8 @@ pub fn run_worker(
 ) -> usize {
     let mut rng = Rng::new(seed ^ (worker_id as u64).wrapping_mul(0xA24B_AED4_963E_E407));
     let mut pushed = 0usize;
+    // one pool per worker, held across trees: allocate once, recycle forever
+    let mut pool = HistogramPool::new(binned.total_bins());
     while !board.is_shutdown() {
         // 1. pull the current L'_random
         let snapshot = board.pull();
@@ -35,15 +43,16 @@ pub fn run_worker(
             std::thread::yield_now();
             continue;
         }
-        // 2. build Tree_t on the sampled sub-dataset
+        // 2. build Tree_t on the sampled sub-dataset (pooled buffers)
         let mut sw = Stopwatch::new();
-        let tree = build_tree(
+        let tree = build_tree_pooled(
             &binned,
             &snapshot.rows,
             &snapshot.grad,
             &snapshot.hess,
             &params,
             &mut rng,
+            &mut pool,
         );
         let build_secs = sw.lap();
         // 3. send Tree_t to server

@@ -1,10 +1,13 @@
 //! The gradient engine: AOT (PJRT-executed HLO artifacts) with a pure-Rust
 //! fallback, behind one API.
 
+#[cfg(feature = "aot")]
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "aot")]
+use anyhow::Context;
+use anyhow::Result;
 
 use crate::loss::logistic::{self, GradHess};
 
@@ -29,6 +32,7 @@ impl std::fmt::Display for EngineKind {
 }
 
 /// Compiled-executable cache keyed by (model fn, bucket).
+#[cfg(feature = "aot")]
 struct AotState {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -39,14 +43,24 @@ struct AotState {
     pad_w: Vec<f32>,
 }
 
+/// Uninhabited stand-in for [`GradientEngine`]'s AOT state when the crate
+/// is built without the `aot` feature: the `Some` arm of every dispatch is
+/// statically unreachable and the native path is the only one.
+#[cfg(not(feature = "aot"))]
+enum NoAot {}
+
 /// The produce-target engine. Not `Send` in Aot mode (PJRT handles);
 /// constructed on and owned by the thread that runs the server loop.
 pub struct GradientEngine {
+    #[cfg(feature = "aot")]
     aot: Option<AotState>,
+    #[cfg(not(feature = "aot"))]
+    aot: Option<NoAot>,
 }
 
 impl GradientEngine {
     /// AOT engine from an artifact directory (must contain manifest.json).
+    #[cfg(feature = "aot")]
     pub fn aot(artifact_dir: &Path) -> Result<GradientEngine> {
         let manifest = Manifest::load(artifact_dir)
             .with_context(|| format!("loading manifest from {}", artifact_dir.display()))?;
@@ -61,6 +75,13 @@ impl GradientEngine {
                 pad_w: Vec::new(),
             }),
         })
+    }
+
+    /// AOT engine stub for builds without the `aot` feature: always an
+    /// error, so [`GradientEngine::auto`] degrades to the native path.
+    #[cfg(not(feature = "aot"))]
+    pub fn aot(_artifact_dir: &Path) -> Result<GradientEngine> {
+        anyhow::bail!("this binary was built without the `aot` feature (PJRT/XLA bindings)")
     }
 
     /// Pure-Rust engine.
@@ -97,7 +118,10 @@ impl GradientEngine {
         assert_eq!(f.len(), w.len());
         match &mut self.aot {
             None => Ok(logistic::grad_hess_loss(f, y, w)),
+            #[cfg(feature = "aot")]
             Some(state) => state.grad_hess_loss(f, y, w),
+            #[cfg(not(feature = "aot"))]
+            Some(impossible) => match *impossible {},
         }
     }
 
@@ -107,11 +131,15 @@ impl GradientEngine {
         assert_eq!(f.len(), w.len());
         match &mut self.aot {
             None => Ok(logistic::eval_sums(f, y, w)),
+            #[cfg(feature = "aot")]
             Some(state) => state.eval_sums(f, y, w),
+            #[cfg(not(feature = "aot"))]
+            Some(impossible) => match *impossible {},
         }
     }
 }
 
+#[cfg(feature = "aot")]
 impl AotState {
     /// Get-or-compile the executable for (name, bucket).
     fn exe(&mut self, name: &str, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {

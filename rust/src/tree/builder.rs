@@ -1,13 +1,22 @@
-//! Leaf-wise (best-first) tree growth with histogram subtraction — the
-//! LightGBM-style learner the paper reuses as its "building the tree"
-//! sub-step (all trainers — async, sync, serial — share this code, which
-//! mirrors the paper's setup where asynch-SGBDT and the LightGBM baseline
-//! share the treelearner).
+//! Leaf-wise (best-first) tree growth — the LightGBM-style learner the
+//! paper reuses as its "building the tree" sub-step (all trainers —
+//! async, sync, serial — share this code, which mirrors the paper's setup
+//! where asynch-SGBDT and the LightGBM baseline share the treelearner).
+//!
+//! Hot-path structure: after each split, child histograms are produced
+//! per [`HistogramStrategy`] — by default only the **smaller** child is
+//! built from its rows and the larger is derived by sibling subtraction
+//! (`large = parent − small`), the single biggest histogram-cost lever in
+//! GBDT engines. All buffers come from a caller-owned [`HistogramPool`]
+//! ([`build_tree_pooled`]) so steady-state training allocates nothing per
+//! node; both histogram building and split search are pluggable, which is
+//! how [`super::parallel`] injects row-sharded building and per-feature
+//! work-stealing split search.
 
 use crate::data::BinnedDataset;
 use crate::util::Rng;
 
-use super::histogram::{Histogram, HistogramPool};
+use super::histogram::{Histogram, HistogramPool, HistogramStrategy};
 use super::split::{best_split, leaf_value, SplitConstraints, SplitInfo};
 use super::tree::{Node, Tree};
 
@@ -24,6 +33,9 @@ pub struct TreeParams {
     pub min_gain: f64,
     /// Fraction of features considered per tree (paper: 0.8).
     pub feature_rate: f64,
+    /// How child histograms are produced after a split (default:
+    /// sibling subtraction; `Rebuild` is the ablation baseline).
+    pub strategy: HistogramStrategy,
 }
 
 impl Default for TreeParams {
@@ -36,6 +48,7 @@ impl Default for TreeParams {
             lambda: 1.0,
             min_gain: 1e-12,
             feature_rate: 0.8,
+            strategy: HistogramStrategy::Subtract,
         }
     }
 }
@@ -68,6 +81,10 @@ struct LeafState {
 ///
 /// Returns a constant-zero tree when `rows` is empty (the degenerate
 /// sampling pass the paper's extreme-small-rate experiment can produce).
+///
+/// Allocates a transient [`HistogramPool`] per call; long-running callers
+/// (worker loops, trainers) should hold a pool across trees and use
+/// [`build_tree_pooled`] instead.
 pub fn build_tree(
     binned: &BinnedDataset,
     rows: &[u32],
@@ -76,14 +93,43 @@ pub fn build_tree(
     params: &TreeParams,
     rng: &mut Rng,
 ) -> Tree {
-    grow_tree(binned, rows, grad, hess, params, rng, &mut |hist, rows| {
-        hist.build(binned, rows, grad, hess)
-    })
+    let mut pool = HistogramPool::new(binned.total_bins());
+    build_tree_pooled(binned, rows, grad, hess, params, rng, &mut pool)
 }
 
-/// Tree growth with a pluggable histogram constructor — the hook through
-/// which the fork-join baseline injects sharded parallel histogram
-/// building (see [`super::parallel`]).
+/// Like [`build_tree`], but recycling histogram buffers through a
+/// caller-owned pool. The pool must have been created with this dataset's
+/// `total_bins()`; every buffer taken during the build is returned before
+/// this function does, so the same pool can serve every tree a worker
+/// ever builds (see the [`HistogramPool`] contract).
+pub fn build_tree_pooled(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    params: &TreeParams,
+    rng: &mut Rng,
+    pool: &mut HistogramPool,
+) -> Tree {
+    grow_tree(
+        binned,
+        rows,
+        grad,
+        hess,
+        params,
+        rng,
+        pool,
+        &mut |hist, leaf_rows| hist.build(binned, leaf_rows, grad, hess),
+        &|hist, mask, cons| best_split(hist, binned, mask, cons),
+    )
+}
+
+/// Tree growth with pluggable histogram construction and split search —
+/// the hooks through which [`super::parallel`] injects row-sharded
+/// parallel histogram building and per-feature work-stealing split
+/// search. `hist_build` fills a (dirty) histogram from a row set;
+/// `split_search` scans a histogram for the best admissible split.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn grow_tree(
     binned: &BinnedDataset,
     rows: &[u32],
@@ -91,7 +137,9 @@ pub(crate) fn grow_tree(
     hess: &[f32],
     params: &TreeParams,
     rng: &mut Rng,
+    pool: &mut HistogramPool,
     hist_build: &mut dyn FnMut(&mut Histogram, &[u32]),
+    split_search: &dyn Fn(&Histogram, &[bool], &SplitConstraints) -> Option<SplitInfo>,
 ) -> Tree {
     let _ = (grad, hess); // flowed through `hist_build`
     if rows.is_empty() {
@@ -112,7 +160,6 @@ pub(crate) fn grow_tree(
         }
     }
 
-    let mut pool = HistogramPool::new(binned.total_bins());
     // shared arena of row ids, partitioned per leaf
     let mut arena: Vec<u32> = rows.to_vec();
     let arena_len = arena.len();
@@ -123,7 +170,7 @@ pub(crate) fn grow_tree(
     // root
     let mut root_hist = pool.take();
     hist_build(&mut root_hist, &arena);
-    let root_best = best_split(&root_hist, binned, &feature_mask, &cons);
+    let root_best = split_search(&root_hist, &feature_mask, &cons);
     tree_nodes.push(Node::Leaf {
         value: leaf_value(&root_hist.totals, cons.lambda),
     });
@@ -163,24 +210,33 @@ pub(crate) fn grow_tree(
         debug_assert_eq!((le - lb) as u64, split.left.count, "partition/left mismatch");
         debug_assert_eq!((re - rb) as u64, split.right.count, "partition/right mismatch");
 
-        // histogram for the smaller child by building, larger by subtraction
-        let left_smaller = (le - lb) <= (re - rb);
-        let (sb, se, bb, be) = if left_smaller {
-            (lb, le, rb, re)
-        } else {
-            (rb, re, lb, le)
+        // child histograms per strategy: subtraction builds only the
+        // smaller child and derives the larger as parent − small; rebuild
+        // (the ablation baseline) builds both from their rows
+        let (left_hist, right_hist) = match params.strategy {
+            HistogramStrategy::Subtract => {
+                let left_smaller = (le - lb) <= (re - rb);
+                let (sb, se) = if left_smaller { (lb, le) } else { (rb, re) };
+                let mut small_hist = pool.take();
+                hist_build(&mut small_hist, &arena[sb..se]);
+                let mut big_hist = pool.take();
+                big_hist.subtract_from(&leaf.hist, &small_hist);
+                pool.give(leaf.hist);
+                if left_smaller {
+                    (small_hist, big_hist)
+                } else {
+                    (big_hist, small_hist)
+                }
+            }
+            HistogramStrategy::Rebuild => {
+                let mut left_hist = pool.take();
+                hist_build(&mut left_hist, &arena[lb..le]);
+                let mut right_hist = pool.take();
+                hist_build(&mut right_hist, &arena[rb..re]);
+                pool.give(leaf.hist);
+                (left_hist, right_hist)
+            }
         };
-        let mut small_hist = pool.take();
-        hist_build(&mut small_hist, &arena[sb..se]);
-        let mut big_hist = pool.take();
-        big_hist.subtract_from(&leaf.hist, &small_hist);
-        pool.give(leaf.hist);
-        let (left_hist, right_hist) = if left_smaller {
-            (small_hist, big_hist)
-        } else {
-            (big_hist, small_hist)
-        };
-        debug_assert!((be - bb) > 0);
 
         // emit children; parent placeholder becomes a split node
         let left_idx = tree_nodes.len();
@@ -207,7 +263,7 @@ pub(crate) fn grow_tree(
         ] {
             let can_split = depth_ok && (end - begin) >= 2;
             let best = if can_split {
-                best_split(&hist, binned, &feature_mask, &cons)
+                split_search(&hist, &feature_mask, &cons)
             } else {
                 None
             };
@@ -221,6 +277,13 @@ pub(crate) fn grow_tree(
             });
         }
         n_leaves += 1;
+    }
+
+    // recycle every remaining leaf buffer: the pool's steady state across
+    // trees is bounded by max_leaves + 2, so cross-tree callers never
+    // allocate again after the first tree
+    for leaf in leaves {
+        pool.give(leaf.hist);
     }
 
     let tree = Tree { nodes: tree_nodes };
@@ -377,6 +440,40 @@ mod tests {
         let t1 = build_tree(&b, &rows, &g, &h, &params, &mut Rng::new(7));
         let t2 = build_tree(&b, &rows, &g, &h, &params, &mut Rng::new(7));
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn rebuild_strategy_matches_subtract_strategy() {
+        // logistic grads at f=0 are dyadic rationals (±0.5, hess 0.25), so
+        // both strategies' f64 sums are exact and the trees are identical
+        let (ds, b) = xor_data(240);
+        let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let sub = TreeParams { max_leaves: 8, feature_rate: 1.0, ..Default::default() };
+        let reb = TreeParams { strategy: HistogramStrategy::Rebuild, ..sub };
+        let t_sub = build_tree(&b, &rows, &g, &h, &sub, &mut Rng::new(11));
+        let t_reb = build_tree(&b, &rows, &g, &h, &reb, &mut Rng::new(11));
+        assert_eq!(t_sub, t_reb);
+    }
+
+    #[test]
+    fn pooled_build_recycles_buffers_across_trees() {
+        let (ds, b) = xor_data(160);
+        let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams { max_leaves: 4, feature_rate: 1.0, ..Default::default() };
+        let mut pool = HistogramPool::new(b.total_bins());
+        let mut rng = Rng::new(12);
+        for _ in 0..4 {
+            build_tree_pooled(&b, &rows, &g, &h, &params, &mut rng, &mut pool);
+        }
+        // peak concurrent buffers: live leaves + parent + in-flight child
+        assert!(
+            pool.allocated() <= params.max_leaves + 2,
+            "pool allocated {} buffers for 4 trees of {} leaves",
+            pool.allocated(),
+            params.max_leaves
+        );
     }
 
     #[test]

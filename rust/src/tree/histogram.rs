@@ -12,6 +12,46 @@
 
 use crate::data::BinnedDataset;
 
+/// How child histograms are produced after a node split.
+///
+/// The strategy is a [`super::TreeParams`] knob threaded from the config
+/// (`histogram=rebuild|subtract`) so the ablation experiment and the
+/// `bench_tree_build` / `bench_histogram` targets can measure the win;
+/// both strategies produce identical trees up to f64 rounding in the gain
+/// computation (enforced by the equivalence property test in
+/// `tests/test_tree.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HistogramStrategy {
+    /// Build both children's histograms from their rows — the whole-node
+    /// rebuild baseline, kept for ablations. Cost per split:
+    /// O(nnz(left) + nnz(right)) = O(nnz(parent)).
+    Rebuild,
+    /// Build only the smaller child and derive the larger one as
+    /// `parent − small` in O(|parent.touched|) — the classic
+    /// sibling-subtraction trick. Cost per split:
+    /// O(nnz(smaller child)) + O(|parent.touched|), at worst half of
+    /// `Rebuild` and far less on unbalanced (deep leaf-wise) splits.
+    #[default]
+    Subtract,
+}
+
+impl HistogramStrategy {
+    pub fn parse(s: &str) -> anyhow::Result<HistogramStrategy> {
+        match s {
+            "rebuild" => Ok(HistogramStrategy::Rebuild),
+            "subtract" => Ok(HistogramStrategy::Subtract),
+            other => anyhow::bail!("unknown histogram strategy '{other}' (rebuild|subtract)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HistogramStrategy::Rebuild => "rebuild",
+            HistogramStrategy::Subtract => "subtract",
+        }
+    }
+}
+
 /// Aggregate statistics of a set of rows.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct LeafStats {
@@ -197,12 +237,27 @@ impl Histogram {
     }
 }
 
-/// A reusable pool of histograms sized for one tree build: avoids
-/// reallocating the (possibly large) flat arrays per leaf.
+/// A reusable pool of flat `[n_features × n_bins]` histogram buffers.
+///
+/// Ownership / recycling contract:
+///
+/// * [`HistogramPool::take`] hands out an **arbitrarily dirty** buffer —
+///   `build` and `subtract_from` clear on entry (O(|touched|)), so the
+///   consumer never sees stale state and `give` never pays a clear.
+/// * Every buffer a tree build takes is given back before the build
+///   returns (the builder returns all leaf histograms at the end), so a
+///   pool held across trees reaches a steady state of at most
+///   `max_leaves + 2` buffers: the live leaves plus the parent and the
+///   in-flight child during one split.
+/// * Hold **one pool per worker thread** for the whole training run
+///   (see `ps::worker`): allocation then happens once per worker instead
+///   of once per node per tree. Pools are plain `&mut` state — never
+///   shared across threads.
 #[derive(Debug)]
 pub struct HistogramPool {
     free: Vec<Histogram>,
     total_bins: usize,
+    allocated: usize,
 }
 
 impl HistogramPool {
@@ -210,18 +265,40 @@ impl HistogramPool {
         HistogramPool {
             free: Vec::new(),
             total_bins,
+            allocated: 0,
         }
     }
 
+    /// Pop a recycled buffer, or allocate a fresh one if the pool is dry.
+    /// The buffer may carry stale contents; `build`/`subtract_from` clear.
     pub fn take(&mut self) -> Histogram {
-        self.free
-            .pop()
-            .unwrap_or_else(|| Histogram::zeros(self.total_bins))
+        self.free.pop().unwrap_or_else(|| {
+            self.allocated += 1;
+            Histogram::zeros(self.total_bins)
+        })
     }
 
+    /// Return a buffer for reuse. Not cleared here — clearing is deferred
+    /// to the next `build`/`subtract_from`, which must do it anyway.
     pub fn give(&mut self, h: Histogram) {
         debug_assert_eq!(h.grad.len(), self.total_bins);
         self.free.push(h);
+    }
+
+    /// Total fresh allocations ever made (recycling metric: steady-state
+    /// training keeps this bounded by `max_leaves + 2` per worker).
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Slot count every pooled buffer is sized for.
+    pub fn total_bins(&self) -> usize {
+        self.total_bins
     }
 }
 
@@ -392,5 +469,41 @@ mod tests {
         let h2 = pool.take();
         // pool does not clear on give; build()/subtract_from() clear.
         assert_eq!(h2.grad.len(), 8);
+        // the second take came from the free list, not a fresh allocation
+        assert_eq!(pool.allocated(), 1);
+        assert_eq!(pool.idle(), 0);
+        pool.give(h2);
+        assert_eq!(pool.idle(), 1);
+        assert_eq!(pool.total_bins(), 8);
+    }
+
+    #[test]
+    fn pool_counts_fresh_allocations() {
+        let mut pool = HistogramPool::new(4);
+        let a = pool.take();
+        let b = pool.take();
+        assert_eq!(pool.allocated(), 2);
+        pool.give(a);
+        pool.give(b);
+        let _c = pool.take();
+        let _d = pool.take();
+        assert_eq!(pool.allocated(), 2, "recycled takes must not allocate");
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        assert_eq!(
+            HistogramStrategy::parse("rebuild").unwrap(),
+            HistogramStrategy::Rebuild
+        );
+        assert_eq!(
+            HistogramStrategy::parse("subtract").unwrap(),
+            HistogramStrategy::Subtract
+        );
+        assert!(HistogramStrategy::parse("magic").is_err());
+        for s in [HistogramStrategy::Rebuild, HistogramStrategy::Subtract] {
+            assert_eq!(HistogramStrategy::parse(s.as_str()).unwrap(), s);
+        }
+        assert_eq!(HistogramStrategy::default(), HistogramStrategy::Subtract);
     }
 }

@@ -11,6 +11,18 @@
 //! Sparse-aware: histograms accumulate only the nonzero (feature, bin)
 //! pairs of each row; each feature's implicit-zero bin is reconstructed by
 //! subtraction from the leaf totals, making histogram building O(nnz).
+//!
+//! Hot-path engineering (the >90%-of-worker-time path):
+//!
+//! * **Sibling subtraction** ([`histogram::HistogramStrategy`], default
+//!   `Subtract`): after a split only the smaller child's histogram is
+//!   built from rows; the larger is `parent − small`. `Rebuild` keeps the
+//!   whole-node baseline for ablations.
+//! * **Pooled buffers** ([`histogram::HistogramPool`]): flat
+//!   `[n_features × n_bins]` arrays recycled across nodes *and* trees;
+//!   workers hold one pool each and stop allocating after the first tree.
+//! * **Parallel engines** ([`parallel`]): row-sharded fork-join histogram
+//!   building and per-feature work-stealing split search.
 
 pub mod builder;
 pub mod histogram;
@@ -18,8 +30,11 @@ pub mod parallel;
 pub mod split;
 pub mod tree;
 
-pub use builder::{build_tree, TreeParams};
-pub use parallel::build_tree_forkjoin;
-pub use histogram::Histogram;
+pub use builder::{build_tree, build_tree_pooled, TreeParams};
+pub use histogram::{Histogram, HistogramPool, HistogramStrategy};
+pub use parallel::{
+    best_split_parallel, build_tree_feature_parallel, build_tree_forkjoin,
+    build_tree_forkjoin_pooled,
+};
 pub use split::SplitInfo;
 pub use tree::{Node, Tree};

@@ -1,21 +1,164 @@
-//! Fork-join parallel tree building — the synchronous-baseline substrate.
+//! Parallel tree-building engines.
 //!
-//! This is the "parallel part only exists in the sub-step of building the
-//! tree" pattern the paper attributes to LightGBM/TencentBoost (§II): the
-//! rows of each leaf are sharded across `n_threads`, each shard builds a
-//! partial histogram in parallel, and a barrier (thread join) merges them
-//! before split finding — one synchronisation *per histogram*, many per
-//! tree, which is precisely the cost structure asynch-SGBDT removes.
+//! Two axes of intra-tree parallelism, composable with the sibling
+//! subtraction + pooled buffers of [`super::builder`]:
+//!
+//! * **Row-sharded histogram building** ([`build_tree_forkjoin`]) — the
+//!   "parallel part only exists in the sub-step of building the tree"
+//!   pattern the paper attributes to LightGBM/TencentBoost (§II): the
+//!   rows of each leaf are sharded across `n_threads`, each shard builds
+//!   a partial histogram in parallel, and a barrier (thread join) merges
+//!   them before split finding — one synchronisation *per histogram*,
+//!   many per tree, which is precisely the cost structure asynch-SGBDT
+//!   removes at the boosting level.
+//! * **Per-feature work-stealing split search**
+//!   ([`best_split_parallel`]) — the candidate features of a leaf are
+//!   claimed in chunks off a shared atomic cursor by `n_threads` scanners,
+//!   so wide/sparse datasets (real-sim: tens of thousands of features,
+//!   skewed per-feature bin occupancy) load-balance instead of sharding
+//!   statically. The merged result is identical to the serial scan:
+//!   per-feature scans are the same code, and ties on gain break towards
+//!   the lower feature id exactly like the serial ascending iteration.
+//!
+//! [`build_tree_feature_parallel`] combines both with a caller-owned
+//! [`HistogramPool`] — the full feature-parallel engine used by the
+//! benches.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::data::BinnedDataset;
 use crate::util::Rng;
 
 use super::builder::{grow_tree, TreeParams};
-use super::histogram::Histogram;
+use super::histogram::{Histogram, HistogramPool};
+use super::split::{best_split, best_split_for_feature, SplitConstraints, SplitInfo};
 use super::tree::Tree;
 
+/// Features claimed per steal: large enough to amortise the atomic, small
+/// enough to load-balance skewed per-feature scan costs.
+const STEAL_CHUNK: usize = 8;
+
+/// Row-sharded histogram build with a merge barrier (the fork-join
+/// "allreduce"). Falls back to a serial build for leaves too small to
+/// amortise thread spawn.
+fn build_sharded(
+    hist: &mut Histogram,
+    binned: &BinnedDataset,
+    leaf_rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    n_threads: usize,
+) {
+    if n_threads <= 1 || leaf_rows.len() < 2 * n_threads {
+        hist.build(binned, leaf_rows, grad, hess);
+        return;
+    }
+    // fork: one partial histogram per row shard
+    let shard = leaf_rows.len().div_ceil(n_threads);
+    let partials: Vec<Histogram> = std::thread::scope(|s| {
+        let handles: Vec<_> = leaf_rows
+            .chunks(shard)
+            .map(|chunk| {
+                s.spawn(move || {
+                    let mut h = Histogram::zeros(binned.total_bins());
+                    h.build(binned, chunk, grad, hess);
+                    h
+                })
+            })
+            .collect();
+        // join: the synchronisation barrier
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // allreduce-equivalent merge
+    hist.clear();
+    for p in &partials {
+        hist.merge(p);
+    }
+}
+
+/// `cand` replaces `best` on strictly higher gain, or on equal gain at a
+/// lower feature id — the same winner the serial ascending-feature scan
+/// keeps, so parallel and serial search are result-identical.
+fn take_better(best: &mut Option<SplitInfo>, cand: Option<SplitInfo>) {
+    let Some(c) = cand else { return };
+    let replace = match best {
+        None => true,
+        Some(b) => c.gain > b.gain || (c.gain == b.gain && c.feature < b.feature),
+    };
+    if replace {
+        *best = Some(c);
+    }
+}
+
+/// Best split across the enabled features, scanned by `n_threads` workers
+/// pulling feature chunks off a shared work-stealing cursor.
+///
+/// Candidate pruning matches [`best_split`]: for sparse leaves only the
+/// touched features are enumerated (a feature with no touched slot has
+/// every leaf row in its zero bin and cannot split). Returns exactly what
+/// the serial scan would.
+pub fn best_split_parallel(
+    hist: &Histogram,
+    binned: &BinnedDataset,
+    feature_mask: &[bool],
+    cons: &SplitConstraints,
+    n_threads: usize,
+) -> Option<SplitInfo> {
+    // same touched-density switch as the serial path, so the candidate
+    // set (and therefore the result) is identical
+    let candidates: Vec<u32> = if hist.touched.len() * 8 < binned.total_bins() {
+        hist.touched_features(binned)
+            .into_iter()
+            .filter(|&f| feature_mask[f as usize])
+            .collect()
+    } else {
+        (0..binned.n_features as u32)
+            .filter(|&f| feature_mask[f as usize])
+            .collect()
+    };
+    if n_threads <= 1 || candidates.len() < 2 * STEAL_CHUNK {
+        let mut best: Option<SplitInfo> = None;
+        for &f in &candidates {
+            take_better(&mut best, best_split_for_feature(hist, binned, f as usize, cons));
+        }
+        return best;
+    }
+    let cursor = AtomicUsize::new(0);
+    let locals: Vec<Option<SplitInfo>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Option<SplitInfo> = None;
+                    loop {
+                        // steal the next chunk of features
+                        let start = cursor.fetch_add(STEAL_CHUNK, Ordering::Relaxed);
+                        if start >= candidates.len() {
+                            break;
+                        }
+                        let end = (start + STEAL_CHUNK).min(candidates.len());
+                        for &f in &candidates[start..end] {
+                            take_better(
+                                &mut local,
+                                best_split_for_feature(hist, binned, f as usize, cons),
+                            );
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut best: Option<SplitInfo> = None;
+    for local in locals {
+        take_better(&mut best, local);
+    }
+    best
+}
+
 /// Like [`super::build_tree`], but histogram construction is sharded
-/// across `n_threads` with a merge barrier (fork-join).
+/// across `n_threads` with a merge barrier (fork-join). Split search stays
+/// serial — this is the synchronous-baseline cost model.
 pub fn build_tree_forkjoin(
     binned: &BinnedDataset,
     rows: &[u32],
@@ -25,34 +168,65 @@ pub fn build_tree_forkjoin(
     rng: &mut Rng,
     n_threads: usize,
 ) -> Tree {
+    let mut pool = HistogramPool::new(binned.total_bins());
+    build_tree_forkjoin_pooled(binned, rows, grad, hess, params, rng, n_threads, &mut pool)
+}
+
+/// [`build_tree_forkjoin`] with a caller-owned histogram pool (see the
+/// [`HistogramPool`] recycling contract). Only the merged per-leaf
+/// histograms are pooled; shard partials are thread-local.
+#[allow(clippy::too_many_arguments)]
+pub fn build_tree_forkjoin_pooled(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    params: &TreeParams,
+    rng: &mut Rng,
+    n_threads: usize,
+    pool: &mut HistogramPool,
+) -> Tree {
     let n_threads = n_threads.max(1);
-    grow_tree(binned, rows, grad, hess, params, rng, &mut |hist, leaf_rows| {
-        if n_threads == 1 || leaf_rows.len() < 2 * n_threads {
-            hist.build(binned, leaf_rows, grad, hess);
-            return;
-        }
-        // fork: one partial histogram per row shard
-        let shard = leaf_rows.len().div_ceil(n_threads);
-        let partials: Vec<Histogram> = std::thread::scope(|s| {
-            let handles: Vec<_> = leaf_rows
-                .chunks(shard)
-                .map(|chunk| {
-                    s.spawn(move || {
-                        let mut h = Histogram::zeros(binned.total_bins());
-                        h.build(binned, chunk, grad, hess);
-                        h
-                    })
-                })
-                .collect();
-            // join: the synchronisation barrier
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        // allreduce-equivalent merge
-        hist.clear();
-        for p in &partials {
-            hist.merge(p);
-        }
-    })
+    grow_tree(
+        binned,
+        rows,
+        grad,
+        hess,
+        params,
+        rng,
+        pool,
+        &mut |hist, leaf_rows| build_sharded(hist, binned, leaf_rows, grad, hess, n_threads),
+        &|hist, mask, cons| best_split(hist, binned, mask, cons),
+    )
+}
+
+/// The full feature-parallel engine: row-sharded histogram building *and*
+/// per-feature work-stealing split search, over a caller-owned pool.
+/// Produces the same tree as [`super::build_tree`] given the same RNG
+/// (modulo f64 merge-order rounding in the sharded histogram sums).
+#[allow(clippy::too_many_arguments)]
+pub fn build_tree_feature_parallel(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    params: &TreeParams,
+    rng: &mut Rng,
+    n_threads: usize,
+    pool: &mut HistogramPool,
+) -> Tree {
+    let n_threads = n_threads.max(1);
+    grow_tree(
+        binned,
+        rows,
+        grad,
+        hess,
+        params,
+        rng,
+        pool,
+        &mut |hist, leaf_rows| build_sharded(hist, binned, leaf_rows, grad, hess, n_threads),
+        &|hist, mask, cons| best_split_parallel(hist, binned, mask, cons, n_threads),
+    )
 }
 
 #[cfg(test)]
@@ -121,5 +295,74 @@ mod tests {
             &mut Rng::new(4), 8,
         );
         t.validate().unwrap();
+    }
+
+    #[test]
+    fn parallel_split_search_matches_serial_exactly() {
+        let ds = synthetic::realsim_like(800, 11);
+        let binned = BinnedDataset::from_dataset(&ds, 32).unwrap();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let mut hist = Histogram::zeros(binned.total_bins());
+        hist.build(&binned, &rows, &gh.grad, &gh.hess);
+        let mask = vec![true; binned.n_features];
+        let cons = SplitConstraints::default();
+        let serial = best_split(&hist, &binned, &mask, &cons);
+        for threads in [1usize, 2, 4, 8] {
+            let par = best_split_parallel(&hist, &binned, &mask, &cons, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // and on a sparse subset (touched-features pruning path)
+        let few: Vec<u32> = rows.iter().copied().take(20).collect();
+        hist.build(&binned, &few, &gh.grad, &gh.hess);
+        let serial = best_split(&hist, &binned, &mask, &cons);
+        for threads in [2usize, 4] {
+            assert_eq!(best_split_parallel(&hist, &binned, &mask, &cons, threads), serial);
+        }
+    }
+
+    #[test]
+    fn feature_parallel_tree_matches_serial_structure() {
+        let ds = synthetic::realsim_like(600, 12);
+        let binned = BinnedDataset::from_dataset(&ds, 32).unwrap();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams { max_leaves: 16, feature_rate: 1.0, ..Default::default() };
+        let serial = super::super::build_tree(
+            &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(9),
+        );
+        for threads in [2usize, 4] {
+            let mut pool = HistogramPool::new(binned.total_bins());
+            let par = build_tree_feature_parallel(
+                &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(9), threads, &mut pool,
+            );
+            assert_eq!(par.n_leaves(), serial.n_leaves(), "threads={threads}");
+            for r in 0..ds.n_rows() {
+                let a = serial.predict_binned(&binned, r);
+                let b = par.predict_binned(&binned, r);
+                assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn feature_parallel_single_thread_is_exactly_serial() {
+        let ds = synthetic::realsim_like(300, 13);
+        let binned = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams { max_leaves: 8, feature_rate: 1.0, ..Default::default() };
+        let a = super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6));
+        let mut pool = HistogramPool::new(binned.total_bins());
+        let b = build_tree_feature_parallel(
+            &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6), 1, &mut pool,
+        );
+        assert_eq!(a, b);
     }
 }

@@ -121,7 +121,8 @@ pub fn best_split_for_feature(
 }
 
 /// Best split across the features enabled in `feature_mask` (the tree's
-/// sampled subset).
+/// sampled subset). The multi-threaded equivalent with identical results
+/// is [`super::parallel::best_split_parallel`].
 ///
 /// Perf: only features with touched slots can split (a feature absent
 /// from the leaf's nonzeros has every row in its zero bin). For small

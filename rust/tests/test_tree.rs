@@ -1,10 +1,13 @@
 //! Tree-learner integration: learning power, consistency between binned
-//! and raw prediction, boosting end-to-end with the forest.
+//! and raw prediction, boosting end-to-end with the forest, and the
+//! Subtract/Rebuild histogram-strategy equivalence property.
 
-use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::data::{synthetic, BinnedDataset, Dataset};
 use asgbdt::forest::Forest;
 use asgbdt::loss::{logistic, metrics};
-use asgbdt::tree::{build_tree, TreeParams};
+use asgbdt::tree::{
+    build_tree, build_tree_pooled, HistogramPool, HistogramStrategy, Node, Tree, TreeParams,
+};
 use asgbdt::util::Rng;
 
 #[test]
@@ -85,6 +88,97 @@ fn feature_sampling_restricts_split_features() {
     let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(8));
     tree.validate().unwrap();
     assert!(tree.n_leaves() >= 1);
+}
+
+/// Boost `n_trees` trees with the given histogram strategy, sharing one
+/// pool across trees (the worker-loop shape), and return them.
+fn boost_forest(
+    strategy: HistogramStrategy,
+    ds: &Dataset,
+    b: &BinnedDataset,
+    n_trees: usize,
+) -> (Vec<Tree>, HistogramPool) {
+    let w = vec![1.0f32; ds.n_rows()];
+    let mut f = vec![0.0f32; ds.n_rows()];
+    let params = TreeParams {
+        max_leaves: 24,
+        feature_rate: 0.8,
+        strategy,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(77);
+    let mut pool = HistogramPool::new(b.total_bins());
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let mut trees = Vec::new();
+    for _ in 0..n_trees {
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let t = build_tree_pooled(b, &rows, &gh.grad, &gh.hess, &params, &mut rng, &mut pool);
+        for r in 0..ds.n_rows() {
+            f[r] += 0.3 * t.predict_binned(b, r);
+        }
+        trees.push(t);
+    }
+    (trees, pool)
+}
+
+/// The equivalence property of the sibling-subtraction engine: `Subtract`
+/// and `Rebuild` must grow identical forests — same split features, bins
+/// and thresholds, leaf values within 1e-5 (the only difference between
+/// the strategies is f64 rounding inside the gain computation).
+#[test]
+fn subtract_and_rebuild_strategies_grow_identical_forests() {
+    for seed in [1u64, 9, 23, 41] {
+        let ds = synthetic::realsim_like(700, seed);
+        let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+        let (sub, _) = boost_forest(HistogramStrategy::Subtract, &ds, &b, 5);
+        let (reb, _) = boost_forest(HistogramStrategy::Rebuild, &ds, &b, 5);
+        assert_eq!(sub.len(), reb.len());
+        for (ti, (ts, tr)) in sub.iter().zip(&reb).enumerate() {
+            assert_eq!(
+                ts.nodes.len(),
+                tr.nodes.len(),
+                "seed {seed} tree {ti}: node count"
+            );
+            for (ni, (ns, nr)) in ts.nodes.iter().zip(&tr.nodes).enumerate() {
+                match (ns, nr) {
+                    (
+                        Node::Split { feature: fs, bin: bs, threshold: hs, left: ls, right: rs },
+                        Node::Split { feature: fr, bin: br, threshold: hr, left: lr, right: rr },
+                    ) => {
+                        assert_eq!(fs, fr, "seed {seed} tree {ti} node {ni}: split feature");
+                        assert_eq!(bs, br, "seed {seed} tree {ti} node {ni}: split bin");
+                        assert_eq!(hs, hr, "seed {seed} tree {ti} node {ni}: threshold");
+                        assert_eq!((ls, rs), (lr, rr), "seed {seed} tree {ti} node {ni}: children");
+                    }
+                    (Node::Leaf { value: vs }, Node::Leaf { value: vr }) => {
+                        assert!(
+                            (vs - vr).abs() < 1e-5,
+                            "seed {seed} tree {ti} node {ni}: leaf {vs} vs {vr}"
+                        );
+                    }
+                    _ => panic!("seed {seed} tree {ti} node {ni}: structure mismatch"),
+                }
+            }
+        }
+    }
+}
+
+/// The pool contract across trees: after the first tree, steady-state
+/// boosting takes every buffer from the free list — total allocations
+/// stay bounded by the peak working set (live leaves + parent + child),
+/// never growing with the number of trees.
+#[test]
+fn histogram_pool_allocations_bounded_across_trees() {
+    let ds = synthetic::realsim_like(500, 13);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let (_, pool) = boost_forest(HistogramStrategy::Subtract, &ds, &b, 6);
+    assert!(
+        pool.allocated() <= 24 + 2,
+        "6 pooled tree builds allocated {} buffers (expected <= max_leaves + 2)",
+        pool.allocated()
+    );
+    // every buffer taken during the builds was returned to the pool
+    assert_eq!(pool.idle(), pool.allocated(), "pool leaked buffers");
 }
 
 #[test]
