@@ -1,0 +1,84 @@
+//! Scoring-engine bench: blocked SoA frontier scoring vs the per-row
+//! enum walk on the same forest — the two halves of the PR 2 ablation,
+//! isolated from training. Also measures the server's single-tree apply
+//! primitive (Algorithm 3 step 2), which is what bounds accepted
+//! trees/sec once workers outpace the server.
+use asgbdt::bench_harness::Runner;
+use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::experiments::Scale;
+use asgbdt::forest::score::{self, FlatForest, ScratchPool};
+use asgbdt::forest::Forest;
+use asgbdt::loss::logistic;
+use asgbdt::tree::{build_tree_pooled, FlatTree, HistogramPool, TreeParams};
+use asgbdt::util::Rng;
+
+fn main() {
+    let scale = Scale::from_env();
+    let n_rows = scale.pick(10_000, 100_000);
+    let n_trees = scale.pick(30, 100);
+    let mut r = Runner::new("predict");
+
+    let ds = synthetic::realsim_like(n_rows, 7);
+    let b = BinnedDataset::from_dataset(&ds, 64).unwrap();
+    let w = vec![1.0f32; ds.n_rows()];
+    let mut f = vec![0.0f32; ds.n_rows()];
+    let mut forest = Forest::new(0.0);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let params = TreeParams {
+        max_leaves: 64,
+        feature_rate: 0.8,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(3);
+    let mut hpool = HistogramPool::new(b.total_bins());
+    for _ in 0..n_trees {
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let t = build_tree_pooled(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, &mut hpool);
+        for (fr, row) in f.iter_mut().zip(0..ds.n_rows()) {
+            *fr += 0.1 * t.predict_binned(&b, row);
+        }
+        forest.push(0.1, t);
+    }
+    println!(
+        "forest: {} trees on {} rows x {} features ({} nnz)",
+        forest.n_trees(),
+        ds.n_rows(),
+        ds.n_features(),
+        ds.x.nnz()
+    );
+
+    // whole-forest batch scoring, both engines
+    let flat = FlatForest::from_forest(&forest);
+    let mut pool = ScratchPool::new();
+    r.bench("forest/per_row_enum/binned", || {
+        forest.predict_all_binned_per_row(&b)
+    });
+    r.bench("forest/per_row_enum/raw", || forest.predict_all_per_row(&ds.x));
+    for threads in [1usize, 2, 4] {
+        r.bench(&format!("forest/flat_blocked/binned_t{threads}"), || {
+            flat.predict_all_binned(&b, threads, &mut pool)
+        });
+        r.bench(&format!("forest/flat_blocked/raw_t{threads}"), || {
+            flat.predict_all_raw(&ds.x, threads, &mut pool)
+        });
+    }
+    // compile cost, for context: flattening is O(nodes), paid once/tree
+    r.bench("flatten/forest", || FlatForest::from_forest(&forest));
+
+    // the server's step 2: apply one tree to F (train-side, bin space)
+    let (v, tree) = forest.trees.last().unwrap().clone();
+    let ft = FlatTree::from_tree(&tree);
+    let mut fv = vec![0.0f32; ds.n_rows()];
+    r.bench("apply/per_row_enum", || {
+        for (fr, row) in fv.iter_mut().zip(0..ds.n_rows()) {
+            *fr += v * tree.predict_binned(&b, row);
+        }
+    });
+    let mut fv = vec![0.0f32; ds.n_rows()];
+    for threads in [1usize, 2, 4] {
+        r.bench(&format!("apply/flat_blocked_t{threads}"), || {
+            score::add_tree_binned(&ft, &b, v, &mut fv, threads, &mut pool)
+        });
+    }
+    r.write_csv().unwrap();
+}

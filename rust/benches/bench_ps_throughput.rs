@@ -1,10 +1,13 @@
 //! Parameter-server throughput: accepted trees/sec end-to-end by worker
 //! count — the real-thread half of the Figure 10 story, plus board
-//! pull/publish micro-latencies.
+//! pull/publish micro-latencies and the apply-path (Algorithm 3 step 2)
+//! time the server spends updating F per accepted tree, reported
+//! separately for the blocked-SoA and per-row-enum scoring engines.
 use asgbdt::bench_harness::Runner;
 use asgbdt::config::TrainConfig;
 use asgbdt::coordinator::train_async;
 use asgbdt::data::synthetic;
+use asgbdt::forest::ScoreMode;
 use asgbdt::ps::{Board, TargetSnapshot};
 use std::sync::Arc;
 
@@ -28,7 +31,8 @@ fn main() {
             rows: Arc::new(Vec::new()),
         })
     });
-    // end-to-end trees/sec by worker count
+    // end-to-end trees/sec by worker count, with the apply path (step 2:
+    // update F) broken out — the server-side cost the blocked scorer cuts
     let ds = synthetic::realsim_like(3_000, 9);
     for workers in [1usize, 2, 4, 8] {
         let mut cfg = TrainConfig::default();
@@ -43,10 +47,40 @@ fn main() {
             &format!("train_async/trees_per_sec_w{workers} (1/x)"),
             1.0 / rep.trees_per_sec(),
         );
+        r.record(
+            &format!("apply/update_f_per_tree_w{workers}"),
+            rep.timer.mean("server/update_f"),
+        );
         println!(
-            "  workers {workers}: {:.2} trees/s, staleness mean {:.2}",
+            "  workers {workers}: {:.2} trees/s, staleness mean {:.2}, apply {:.1}µs/tree",
             rep.trees_per_sec(),
-            rep.staleness.mean()
+            rep.staleness.mean(),
+            rep.timer.mean("server/update_f") * 1e6,
+        );
+    }
+    // scoring-engine contrast on the same workload (4 workers)
+    for scoring in [ScoreMode::Flat, ScoreMode::PerRow] {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = 4;
+        cfg.n_trees = 40;
+        cfg.step_length = 0.1;
+        cfg.tree.max_leaves = 32;
+        cfg.max_bins = 32;
+        cfg.eval_every = 40;
+        cfg.scoring = scoring;
+        let rep = train_async(&cfg, &ds, None).unwrap();
+        // step-2 time per tree including the flatten only the flat
+        // engine pays (zero for perrow), so the comparison is end to end
+        let apply = rep.timer.mean("server/update_f") + rep.timer.mean("server/flatten_tree");
+        r.record(
+            &format!("apply/step2_per_tree_{}", scoring.as_str()),
+            apply,
+        );
+        println!(
+            "  scoring {}: apply {:.1}µs/tree (incl. flatten), {:.2} trees/s",
+            scoring.as_str(),
+            apply * 1e6,
+            rep.trees_per_sec(),
         );
     }
     r.write_csv().unwrap();

@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
+use crate::forest::ScoreMode;
 use crate::io::Json;
 use crate::tree::{HistogramStrategy, TreeParams};
 
@@ -92,6 +93,13 @@ pub struct TrainConfig {
     pub tree: TreeParams,
     /// Evaluate train/test loss every k accepted trees.
     pub eval_every: usize,
+    /// Scoring engine for the server's F-update (Algorithm 3 step 2):
+    /// blocked SoA (default) or the per-row enum reference path.
+    pub scoring: ScoreMode,
+    /// Threads sharding row blocks in the F-update. 1 (default) keeps
+    /// scoring on the server thread; raise it when the server, not the
+    /// workers, is the bottleneck.
+    pub score_threads: usize,
     pub seed: u64,
     /// Where `make artifacts` put the HLO modules.
     pub artifact_dir: PathBuf,
@@ -110,6 +118,8 @@ impl Default for TrainConfig {
             max_bins: 64,
             tree: TreeParams::default(),
             eval_every: 10,
+            scoring: ScoreMode::Flat,
+            score_threads: 1,
             seed: 42,
             artifact_dir: PathBuf::from("artifacts"),
         }
@@ -142,6 +152,9 @@ impl TrainConfig {
         if self.eval_every == 0 {
             bail!("eval_every must be >= 1");
         }
+        if self.score_threads == 0 {
+            bail!("score_threads must be >= 1");
+        }
         Ok(())
     }
 
@@ -171,6 +184,8 @@ impl TrainConfig {
                 self.tree.strategy = HistogramStrategy::parse(value)?
             }
             "eval_every" => self.eval_every = value.parse()?,
+            "scoring" | "score_mode" => self.scoring = ScoreMode::parse(value)?,
+            "score_threads" => self.score_threads = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "artifact_dir" => self.artifact_dir = PathBuf::from(value),
             other => bail!("unknown config key '{other}'"),
@@ -200,6 +215,8 @@ impl TrainConfig {
             ("feature_rate", Json::Num(self.tree.feature_rate)),
             ("histogram", Json::Str(self.tree.strategy.as_str().into())),
             ("eval_every", Json::Num(self.eval_every as f64)),
+            ("scoring", Json::Str(self.scoring.as_str().into())),
+            ("score_threads", Json::Num(self.score_threads as f64)),
             ("seed", Json::Num(self.seed as f64)),
             (
                 "artifact_dir",
@@ -254,6 +271,10 @@ mod tests {
         c.set("max_leaves", "400").unwrap();
         c.set("max_staleness", "16").unwrap();
         c.set("histogram", "rebuild").unwrap();
+        c.set("scoring", "perrow").unwrap();
+        c.set("score_threads", "4").unwrap();
+        assert_eq!(c.scoring, ScoreMode::PerRow);
+        assert_eq!(c.score_threads, 4);
         assert_eq!(c.workers, 32);
         assert_eq!(c.mode, TrainMode::Serial);
         assert_eq!(c.max_staleness, Some(16));
@@ -286,6 +307,9 @@ mod tests {
         let mut c = TrainConfig::default();
         c.workers = 0;
         assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.score_threads = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -294,6 +318,8 @@ mod tests {
         c.set("workers", "8").unwrap();
         c.set("grad_mode", "newton").unwrap();
         c.set("histogram", "rebuild").unwrap();
+        c.set("scoring", "perrow").unwrap();
+        c.set("score_threads", "2").unwrap();
         let j = c.to_json();
         let back = TrainConfig::from_json(&j).unwrap();
         assert_eq!(back.workers, 8);
@@ -301,5 +327,7 @@ mod tests {
         assert_eq!(back.mode, TrainMode::Async);
         assert_eq!(back.max_staleness, None);
         assert_eq!(back.tree.strategy, HistogramStrategy::Rebuild);
+        assert_eq!(back.scoring, ScoreMode::PerRow);
+        assert_eq!(back.score_threads, 2);
     }
 }

@@ -16,6 +16,13 @@
 //! `ps::worker`), so the per-worker build loop allocates histogram
 //! buffers only on its first tree; `cfg.tree.strategy` selects sibling
 //! subtraction (default) or whole-node rebuild for every worker.
+//!
+//! On the server side, every accepted tree's F-update (step 2) runs the
+//! blocked SoA scoring engine (`forest/score.rs`): the tree is flattened
+//! once and applied in row blocks, optionally sharded across
+//! `cfg.score_threads` — scoring is on the accept loop's critical path,
+//! so its cost directly bounds accepted trees/sec at high worker counts
+//! (measured separately by `bench_ps_throughput`).
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -1,6 +1,12 @@
 //! Serial reference trainer — Friedman's loop, strictly ordered: sample →
 //! produce target → build tree → apply. The convergence baseline every
 //! figure compares against (τ ≡ 0).
+//!
+//! The apply half of the loop (the F-update inside
+//! [`ServerCore::apply_tree`]) runs on the blocked SoA scoring engine
+//! (`forest/score.rs`) per `cfg.scoring` / `cfg.score_threads`, just like
+//! the sync and async trainers — the serial mode is where the scoring
+//! ablation isolates pure apply cost.
 
 use std::sync::Arc;
 

@@ -6,6 +6,10 @@
 //! only exists in the sub-step of building the tree" pattern of §II; its
 //! scaling saturates with worker count while convergence per tree matches
 //! serial exactly, which is what Figures 5–10 contrast against.
+//!
+//! Each accepted tree's F-update goes through the blocked SoA scoring
+//! engine (`forest/score.rs`, `cfg.scoring` / `cfg.score_threads`) inside
+//! [`ServerCore::apply_tree`].
 
 use std::sync::Arc;
 

@@ -12,6 +12,10 @@
 //!   whole-node rebuild in the tree hot path — identical forests by
 //!   construction, different build cost (the `bench_tree_build` /
 //!   `bench_histogram` targets measure the same axis in isolation).
+//! * **scoring engine** (system ablation): blocked SoA frontier scoring
+//!   vs the per-row enum walk in the server's F-update — bit-identical F
+//!   vectors by construction, different apply cost (`bench_predict`
+//!   measures the same axis in isolation).
 
 use std::path::Path;
 
@@ -19,6 +23,7 @@ use anyhow::Result;
 
 use crate::config::TrainMode;
 use crate::data::synthetic;
+use crate::forest::ScoreMode;
 use crate::io::csv::CsvWriter;
 use crate::io::Json;
 use crate::tree::HistogramStrategy;
@@ -139,11 +144,55 @@ pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     }
     csv.write(&out_dir.join("ablation_histogram_build_times.csv"))?;
 
+    // ---- (e) scoring engine (blocked SoA vs per-row enum F-update)
+    let scorings = [ScoreMode::Flat, ScoreMode::PerRow];
+    let mut variants = Vec::new();
+    for scoring in scorings {
+        let mut cfg = base_cfg(scale, 44_000);
+        cfg.mode = TrainMode::Serial; // serial: apply-time delta is pure scoring cost
+        cfg.n_trees = n_trees;
+        cfg.step_length = scale.pick(0.1, 0.02);
+        cfg.sampling_rate = 0.8;
+        cfg.tree.max_leaves = scale.pick(16, 64);
+        cfg.scoring = scoring;
+        variants.push(Variant {
+            tag: format!("scoring={}", scoring.as_str()),
+            cfg,
+        });
+    }
+    let (score_reports, score_summary) = convergence_sweep(
+        "ablation_scoring_engine",
+        &train_ds,
+        Some(&test_ds),
+        variants,
+        out_dir,
+    )?;
+
+    // identical F vectors, different apply cost: record step-2 time —
+    // `apply_total_s` includes the per-tree flatten that only the flat
+    // engine pays (zero for perrow), so the engines compare end to end
+    let mut csv = CsvWriter::new(&[
+        "scoring", "update_f_total_s", "flatten_total_s", "apply_total_s", "trees_per_sec",
+    ]);
+    for (scoring, rep) in scorings.iter().zip(&score_reports) {
+        let update_f = rep.timer.total("server/update_f");
+        let flatten = rep.timer.total("server/flatten_tree");
+        csv.row(&[
+            scoring.as_str().to_string(),
+            format!("{update_f:.6}"),
+            format!("{flatten:.6}"),
+            format!("{:.6}", update_f + flatten),
+            format!("{:.3}", rep.trees_per_sec()),
+        ]);
+    }
+    csv.write(&out_dir.join("ablation_scoring_apply_times.csv"))?;
+
     Ok(Json::obj(vec![
         ("step_length", step_summary),
         ("leaves", leaves_summary),
         ("bounded_staleness", staleness_summary),
         ("histogram_strategy", hist_summary),
+        ("scoring_engine", score_summary),
     ]))
 }
 
@@ -152,17 +201,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn ablation_produces_all_four_studies() {
+    fn ablation_produces_all_five_studies() {
         let dir = std::env::temp_dir().join("asgbdt_ablation_test");
         let j = run(Scale::Smoke, &dir).unwrap();
         assert!(j.get("step_length").is_some());
         assert!(j.get("leaves").is_some());
         assert!(j.get("bounded_staleness").is_some());
         assert!(j.get("histogram_strategy").is_some());
+        assert!(j.get("scoring_engine").is_some());
         assert!(dir.join("ablation_step_length.csv").exists());
         assert!(dir.join("ablation_leaves.csv").exists());
         assert!(dir.join("ablation_histogram_strategy.csv").exists());
         assert!(dir.join("ablation_histogram_build_times.csv").exists());
+        assert!(dir.join("ablation_scoring_engine.csv").exists());
+        assert!(dir.join("ablation_scoring_apply_times.csv").exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,8 +7,10 @@ use anyhow::Result;
 use crate::config::{TrainConfig, TrainMode};
 use crate::coordinator::{train, TrainReport};
 use crate::data::Dataset;
+use crate::forest::{FlatForest, ScratchPool};
 use crate::io::csv::CsvWriter;
 use crate::io::Json;
+use crate::loss::metrics;
 use crate::util::Rng;
 
 /// Experiment size: Smoke for CI/tests, Paper for figure regeneration.
@@ -77,6 +79,17 @@ pub fn convergence_sweep(
                 format!("{:.4}", p.wall_secs),
             ]);
         }
+        // final test error re-scored from scratch through the blocked
+        // batch engine — also cross-checks the server's incremental
+        // held-out margins against a full forest evaluation
+        let final_test_error = test_ds
+            .map(|t| {
+                let mut pool = ScratchPool::new();
+                let margins =
+                    FlatForest::from_forest(&rep.forest).predict_all_raw(&t.x, 1, &mut pool);
+                metrics::error_rate(&margins, &t.y, &t.m)
+            })
+            .unwrap_or(f64::NAN);
         summary_items.push((
             v.tag.clone(),
             Json::obj(vec![
@@ -84,9 +97,14 @@ pub fn convergence_sweep(
                     "final_train_loss",
                     Json::Num(rep.curve.final_train_loss().unwrap_or(f64::NAN)),
                 ),
+                ("final_test_error", Json::Num(final_test_error)),
                 ("loss_auc", Json::Num(rep.curve.train_loss_auc())),
                 ("staleness_mean", Json::Num(rep.staleness.mean())),
                 ("trees_per_sec", Json::Num(rep.trees_per_sec())),
+                (
+                    "apply_f_secs",
+                    Json::Num(rep.timer.total("server/update_f")),
+                ),
                 ("wall_secs", Json::Num(rep.wall_secs)),
             ]),
         ));

@@ -42,6 +42,11 @@ impl Forest {
     }
 
     /// Margin prediction for one raw sparse row.
+    ///
+    /// Reference implementation: re-walks every tree's `Vec<Node>` enum
+    /// per call. Batch callers go through [`super::score::FlatForest`]
+    /// (which [`Forest::predict_all`] does internally); this stays for
+    /// single-row use and as the equivalence baseline.
     pub fn predict_raw(&self, x: &CsrMatrix, row: usize) -> f32 {
         let mut f = self.base_score;
         for (v, t) in &self.trees {
@@ -50,13 +55,34 @@ impl Forest {
         f
     }
 
-    /// Margin predictions for all rows of a raw matrix.
+    /// Margin predictions for all rows of a raw matrix, via the blocked
+    /// SoA scorer (bit-identical to calling [`Forest::predict_raw`] per
+    /// row). Callers that score repeatedly or want threads should compile
+    /// a [`super::score::FlatForest`] once instead.
     pub fn predict_all(&self, x: &CsrMatrix) -> Vec<f32> {
+        let mut pool = super::score::ScratchPool::new();
+        super::score::FlatForest::from_forest(self).predict_all_raw(x, 1, &mut pool)
+    }
+
+    /// Margin predictions on the training (binned) representation, via
+    /// the blocked SoA scorer (see [`Forest::predict_all`]).
+    pub fn predict_all_binned(&self, b: &BinnedDataset) -> Vec<f32> {
+        let mut pool = super::score::ScratchPool::new();
+        super::score::FlatForest::from_forest(self).predict_all_binned(b, 1, &mut pool)
+    }
+
+    /// Reference batch prediction: the per-row enum walk, one
+    /// [`Forest::predict_raw`] per row. Kept (hidden) for equivalence
+    /// tests and the scoring ablation/benches — not a hot path.
+    #[doc(hidden)]
+    pub fn predict_all_per_row(&self, x: &CsrMatrix) -> Vec<f32> {
         (0..x.n_rows()).map(|r| self.predict_raw(x, r)).collect()
     }
 
-    /// Margin predictions on the training (binned) representation.
-    pub fn predict_all_binned(&self, b: &BinnedDataset) -> Vec<f32> {
+    /// Reference batch prediction on the binned representation (per-row
+    /// enum walk). See `Forest::predict_all_per_row`.
+    #[doc(hidden)]
+    pub fn predict_all_binned_per_row(&self, b: &BinnedDataset) -> Vec<f32> {
         let mut f = vec![self.base_score; b.n_rows];
         for (v, t) in &self.trees {
             for (r, fr) in f.iter_mut().enumerate() {
@@ -159,6 +185,15 @@ mod tests {
         assert!((f.predict_raw(&x, 0) + 1.4).abs() < 1e-6);
         // row 1: 0.1 + 0.5*(1) + 0.5*(2) = 1.6
         assert!((f.predict_raw(&x, 1) - 1.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predict_all_routes_through_blocked_scorer_bit_identically() {
+        let mut f = Forest::new(0.1);
+        f.push(0.5, stump(1.0));
+        f.push(0.25, stump(2.0));
+        let x = CsrMatrix::from_dense(5, 1, &[1.0, 2.0, 0.0, 1.5, 3.0]).unwrap();
+        assert_eq!(f.predict_all(&x), f.predict_all_per_row(&x));
     }
 
     #[test]

@@ -1,5 +1,9 @@
-//! The additive model F(x) — the GBDT forest.
+//! The additive model F(x) — the GBDT forest ([`gbdt`]) and the blocked
+//! batch scoring engine ([`score`]) that serves the server's F-update and
+//! all `predict_all*` hot paths.
 
 pub mod gbdt;
+pub mod score;
 
 pub use gbdt::Forest;
+pub use score::{FlatForest, ScoreMode, ScratchPool};

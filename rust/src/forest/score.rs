@@ -1,0 +1,455 @@
+//! The blocked scoring engine — the server side of Algorithm 3, step 2.
+//!
+//! Every accepted tree forces the server to update the prediction vector
+//! **F** over all training rows (and the held-out margins when a test set
+//! is attached), so scoring sits on the accept loop's critical path and
+//! bounds async throughput just as much as histogram building bounds the
+//! workers. This module turns that update into a blocked, row-sharded
+//! partition pass:
+//!
+//! * each shipped tree is compiled once into a [`FlatTree`]
+//!   (`tree/flat.rs`) — SoA arrays instead of the pointer-chasing
+//!   `Vec<Node>` enum;
+//! * rows are walked in cache-sized blocks of [`ROW_BLOCK`]; within a
+//!   block the tree routes all rows to their leaves in one
+//!   frontier/partition sweep, and the server's step 2 collapses to
+//!   `F[r] += v * leaf_value[leaf_of[r]]` per leaf segment;
+//! * blocks are claimed dynamically by `score_threads` scoped threads —
+//!   the same claim-a-chunk load-balancing as the split search's
+//!   work-stealing cursor in `tree/parallel.rs`, with a mutexed block
+//!   iterator instead of an atomic because each claim hands out a
+//!   disjoint `&mut` slice of F;
+//! * the per-block scratch (row-id buffer + partition stack) is pooled
+//!   ([`ScratchPool`]) under the same take/give contract as
+//!   [`crate::tree::HistogramPool`], so a long-lived server allocates
+//!   scoring buffers only on its first tree.
+//!
+//! The per-row enum walk ([`crate::tree::Tree::predict_binned`] /
+//! [`super::Forest::predict_raw`]) stays as the reference implementation;
+//! [`ScoreMode`] selects between the two engines (config key
+//! `scoring=flat|perrow`) for the equivalence tests and the ablation.
+//! Both engines produce **bit-identical** F vectors: the blocked pass
+//! performs exactly the same f32 operations in the same per-row order,
+//! only grouped by leaf instead of by row.
+
+use std::sync::Mutex;
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::BinnedDataset;
+use crate::tree::FlatTree;
+
+use super::Forest;
+
+/// Rows per scoring block. 512 row ids plus their CSR nonzeros stay
+/// L2-resident across all `depth` partition passes of a block, which is
+/// the locality the per-row walk gives up.
+pub const ROW_BLOCK: usize = 512;
+
+/// Which engine performs the server's F-update (step 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScoreMode {
+    /// Per-row enum traversal — the reference implementation, kept for
+    /// equivalence tests and the scoring ablation.
+    PerRow,
+    /// Blocked SoA frontier scoring (this module).
+    #[default]
+    Flat,
+}
+
+impl ScoreMode {
+    pub fn parse(s: &str) -> anyhow::Result<ScoreMode> {
+        match s {
+            "perrow" | "per_row" => Ok(ScoreMode::PerRow),
+            "flat" => Ok(ScoreMode::Flat),
+            other => anyhow::bail!("unknown scoring mode '{other}' (flat|perrow)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScoreMode::PerRow => "perrow",
+            ScoreMode::Flat => "flat",
+        }
+    }
+}
+
+/// Reusable per-block scoring scratch: the row-id buffer the partition
+/// pass permutes (the `leaf_of` working set) and the explicit segment
+/// stack. Arbitrarily dirty between uses — every pass refills both.
+#[derive(Debug, Default)]
+pub struct ScoreScratch {
+    rows: Vec<u32>,
+    stack: Vec<(u32, usize, usize)>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> ScoreScratch {
+        ScoreScratch::default()
+    }
+
+    /// Load the block's row ids `[start, start + len)`.
+    #[inline]
+    fn fill(&mut self, start: usize, len: usize) {
+        self.rows.clear();
+        self.rows.extend(start as u32..(start + len) as u32);
+    }
+}
+
+/// Pool of scoring scratch buffers, mirroring the [`crate::tree::HistogramPool`]
+/// contract: `take` hands out a possibly-dirty buffer, every taker gives
+/// it back, and a long-lived owner (the server, a trainer) reaches a
+/// steady state of `score_threads` buffers after the first tree.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: Vec<ScoreScratch>,
+    allocated: usize,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    pub fn take(&mut self) -> ScoreScratch {
+        self.free.pop().unwrap_or_else(|| {
+            self.allocated += 1;
+            ScoreScratch::new()
+        })
+    }
+
+    pub fn give(&mut self, s: ScoreScratch) {
+        self.free.push(s);
+    }
+
+    /// Total fresh allocations ever made (steady state: one per scoring
+    /// thread).
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Run `block_fn(start_row, f_block, scratch)` over every [`ROW_BLOCK`]
+/// chunk of `f`. With `n_threads > 1` the chunks are claimed dynamically
+/// off a shared iterator by scoped threads (each chunk is a disjoint
+/// `&mut` slice of F, so claims are mutually exclusive by construction);
+/// otherwise they run on the calling thread. Scratches come from — and
+/// return to — `pool` either way.
+fn drive_blocks(
+    f: &mut [f32],
+    n_threads: usize,
+    pool: &mut ScratchPool,
+    block_fn: impl Fn(usize, &mut [f32], &mut ScoreScratch) + Sync,
+) {
+    let n_blocks = f.len().div_ceil(ROW_BLOCK).max(1);
+    let n_threads = n_threads.clamp(1, n_blocks);
+    if n_threads == 1 || f.len() <= 2 * ROW_BLOCK {
+        let mut scratch = pool.take();
+        for (bi, chunk) in f.chunks_mut(ROW_BLOCK).enumerate() {
+            block_fn(bi * ROW_BLOCK, chunk, &mut scratch);
+        }
+        pool.give(scratch);
+        return;
+    }
+    let scratches: Vec<ScoreScratch> = (0..n_threads).map(|_| pool.take()).collect();
+    let work = Mutex::new(f.chunks_mut(ROW_BLOCK).enumerate());
+    let work = &work;
+    let block_fn = &block_fn;
+    let returned: Vec<ScoreScratch> = std::thread::scope(|s| {
+        let handles: Vec<_> = scratches
+            .into_iter()
+            .map(|mut scratch| {
+                s.spawn(move || {
+                    loop {
+                        // claim the next block (lock held for next() only)
+                        let item = work.lock().unwrap().next();
+                        let Some((bi, chunk)) = item else { break };
+                        block_fn(bi * ROW_BLOCK, chunk, &mut scratch);
+                    }
+                    scratch
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for s in returned {
+        pool.give(s);
+    }
+}
+
+/// Score one block of one tree, bin-space: partition the block's rows to
+/// their leaves and add `v * leaf_value` per segment. The per-row result
+/// is bit-identical to `f[r] += v * tree.predict_binned(..)` — same f32
+/// multiply, same single add per row.
+#[inline]
+fn add_block_binned(
+    flat: &FlatTree,
+    binned: &BinnedDataset,
+    v: f32,
+    start: usize,
+    f_block: &mut [f32],
+    scratch: &mut ScoreScratch,
+) {
+    scratch.fill(start, f_block.len());
+    let ScoreScratch { rows, stack } = scratch;
+    flat.partition_binned(binned, rows, stack, |leaf, seg| {
+        let add = v * flat.leaf_value[leaf as usize];
+        for &r in seg {
+            f_block[r as usize - start] += add;
+        }
+    });
+}
+
+/// [`add_block_binned`], raw-space (threshold traversal of a CSR matrix).
+#[inline]
+fn add_block_raw(
+    flat: &FlatTree,
+    x: &CsrMatrix,
+    v: f32,
+    start: usize,
+    f_block: &mut [f32],
+    scratch: &mut ScoreScratch,
+) {
+    scratch.fill(start, f_block.len());
+    let ScoreScratch { rows, stack } = scratch;
+    flat.partition_raw(x, rows, stack, |leaf, seg| {
+        let add = v * flat.leaf_value[leaf as usize];
+        for &r in seg {
+            f_block[r as usize - start] += add;
+        }
+    });
+}
+
+/// The server's step 2 over the training rows:
+/// `F[r] += v * tree(r)` for every row, bin-space, blocked.
+pub fn add_tree_binned(
+    flat: &FlatTree,
+    binned: &BinnedDataset,
+    v: f32,
+    f: &mut [f32],
+    n_threads: usize,
+    pool: &mut ScratchPool,
+) {
+    drive_blocks(f, n_threads, pool, |start, chunk, scratch| {
+        add_block_binned(flat, binned, v, start, chunk, scratch);
+    });
+}
+
+/// The server's step 2 over held-out rows: raw-space (threshold)
+/// traversal of a CSR matrix, blocked.
+pub fn add_tree_raw(
+    flat: &FlatTree,
+    x: &CsrMatrix,
+    v: f32,
+    f: &mut [f32],
+    n_threads: usize,
+    pool: &mut ScratchPool,
+) {
+    drive_blocks(f, n_threads, pool, |start, chunk, scratch| {
+        add_block_raw(flat, x, v, start, chunk, scratch);
+    });
+}
+
+/// A forest compiled for batch scoring: base score plus `(v, FlatTree)`
+/// pairs. Compile once (O(total nodes)), score many — each row block is
+/// initialised to the base score and then receives every tree in push
+/// order while its data is cache-resident, so the per-row f32 operation
+/// sequence matches [`Forest::predict_raw`] exactly (bit-identical
+/// margins).
+#[derive(Debug, Clone, Default)]
+pub struct FlatForest {
+    pub base_score: f32,
+    pub trees: Vec<(f32, FlatTree)>,
+}
+
+impl FlatForest {
+    pub fn from_forest(forest: &Forest) -> FlatForest {
+        FlatForest {
+            base_score: forest.base_score,
+            trees: forest
+                .trees
+                .iter()
+                .map(|(v, t)| (*v, FlatTree::from_tree(t)))
+                .collect(),
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Blocked margins for all rows of a raw matrix.
+    pub fn predict_all_raw(
+        &self,
+        x: &CsrMatrix,
+        n_threads: usize,
+        pool: &mut ScratchPool,
+    ) -> Vec<f32> {
+        let mut f = vec![0.0f32; x.n_rows()];
+        drive_blocks(&mut f, n_threads, pool, |start, chunk, scratch| {
+            chunk.fill(self.base_score);
+            for (v, t) in &self.trees {
+                add_block_raw(t, x, *v, start, chunk, scratch);
+            }
+        });
+        f
+    }
+
+    /// Blocked margins on the training (binned) representation.
+    pub fn predict_all_binned(
+        &self,
+        b: &BinnedDataset,
+        n_threads: usize,
+        pool: &mut ScratchPool,
+    ) -> Vec<f32> {
+        let mut f = vec![0.0f32; b.n_rows];
+        drive_blocks(&mut f, n_threads, pool, |start, chunk, scratch| {
+            chunk.fill(self.base_score);
+            for (v, t) in &self.trees {
+                add_block_binned(t, b, *v, start, chunk, scratch);
+            }
+        });
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, Dataset};
+    use crate::loss::logistic;
+    use crate::tree::{build_tree, Tree, TreeParams};
+    use crate::util::Rng;
+
+    fn boosted(ds: &Dataset, b: &BinnedDataset, n_trees: usize, seed: u64) -> Forest {
+        let w = vec![1.0f32; ds.n_rows()];
+        let mut f = vec![0.0f32; ds.n_rows()];
+        let mut forest = Forest::new(0.3);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams {
+            max_leaves: 12,
+            feature_rate: 0.9,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(seed);
+        for _ in 0..n_trees {
+            let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+            let t = build_tree(b, &rows, &gh.grad, &gh.hess, &params, &mut rng);
+            for r in 0..ds.n_rows() {
+                f[r] += 0.2 * t.predict_binned(b, r);
+            }
+            forest.push(0.2, t);
+        }
+        forest
+    }
+
+    #[test]
+    fn add_tree_binned_matches_per_row_bitwise() {
+        let ds = synthetic::realsim_like(1_500, 51);
+        let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+        let forest = boosted(&ds, &b, 3, 5);
+        for threads in [1usize, 2, 4] {
+            let mut pool = ScratchPool::new();
+            let mut f_flat = vec![0.1f32; ds.n_rows()];
+            let mut f_ref = vec![0.1f32; ds.n_rows()];
+            for (v, t) in &forest.trees {
+                let flat = FlatTree::from_tree(t);
+                add_tree_binned(&flat, &b, *v, &mut f_flat, threads, &mut pool);
+                for r in 0..ds.n_rows() {
+                    f_ref[r] += v * t.predict_binned(&b, r);
+                }
+            }
+            assert_eq!(f_flat, f_ref, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn add_tree_raw_matches_per_row_bitwise() {
+        let ds = synthetic::realsim_like(1_100, 52);
+        let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+        let forest = boosted(&ds, &b, 2, 6);
+        let mut pool = ScratchPool::new();
+        let mut f_flat = vec![0.0f32; ds.n_rows()];
+        let mut f_ref = vec![0.0f32; ds.n_rows()];
+        for (v, t) in &forest.trees {
+            let flat = FlatTree::from_tree(t);
+            add_tree_raw(&flat, &ds.x, *v, &mut f_flat, 3, &mut pool);
+            for r in 0..ds.n_rows() {
+                f_ref[r] += v * t.predict_raw(&ds.x, r);
+            }
+        }
+        assert_eq!(f_flat, f_ref);
+    }
+
+    #[test]
+    fn flat_forest_matches_reference_predictions_bitwise() {
+        let ds = synthetic::realsim_like(1_300, 53);
+        let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+        let forest = boosted(&ds, &b, 4, 7);
+        let flat = FlatForest::from_forest(&forest);
+        assert_eq!(flat.n_trees(), 4);
+        let mut pool = ScratchPool::new();
+        for threads in [1usize, 2, 4] {
+            let raw = flat.predict_all_raw(&ds.x, threads, &mut pool);
+            let binned = flat.predict_all_binned(&b, threads, &mut pool);
+            for r in 0..ds.n_rows() {
+                assert_eq!(raw[r], forest.predict_raw(&ds.x, r), "raw row {r}");
+                let mut want = forest.base_score;
+                for (v, t) in &forest.trees {
+                    want += v * t.predict_binned(&b, r);
+                }
+                assert_eq!(binned[r], want, "binned row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_pool_reaches_steady_state() {
+        let ds = synthetic::realsim_like(2_100, 54);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let forest = boosted(&ds, &b, 2, 8);
+        let flat = FlatForest::from_forest(&forest);
+        let mut pool = ScratchPool::new();
+        for _ in 0..5 {
+            flat.predict_all_binned(&b, 3, &mut pool);
+        }
+        assert!(
+            pool.allocated() <= 3,
+            "pooled scoring allocated {} scratches for 3 threads",
+            pool.allocated()
+        );
+        assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
+    }
+
+    #[test]
+    fn empty_forest_and_tiny_inputs() {
+        let flat = FlatForest::from_forest(&Forest::new(0.25));
+        let x = CsrMatrix::from_dense(3, 1, &[1.0, 0.0, 2.0]).unwrap();
+        let mut pool = ScratchPool::new();
+        assert_eq!(flat.predict_all_raw(&x, 4, &mut pool), vec![0.25; 3]);
+        // zero-row input
+        let empty = CsrMatrix::from_dense(0, 1, &[]).unwrap();
+        assert_eq!(flat.predict_all_raw(&empty, 2, &mut pool), Vec::<f32>::new());
+        // constant tree adds its value everywhere
+        let mut f = vec![1.0f32; 3];
+        let ft = FlatTree::from_tree(&Tree::constant(2.0));
+        add_tree_raw(&ft, &x, 0.5, &mut f, 1, &mut pool);
+        assert_eq!(f, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn score_mode_parse_roundtrip() {
+        assert_eq!(ScoreMode::parse("flat").unwrap(), ScoreMode::Flat);
+        assert_eq!(ScoreMode::parse("perrow").unwrap(), ScoreMode::PerRow);
+        assert_eq!(ScoreMode::parse("per_row").unwrap(), ScoreMode::PerRow);
+        assert!(ScoreMode::parse("soa").is_err());
+        for m in [ScoreMode::Flat, ScoreMode::PerRow] {
+            assert_eq!(ScoreMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert_eq!(ScoreMode::default(), ScoreMode::Flat);
+    }
+}

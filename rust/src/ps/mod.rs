@@ -5,8 +5,11 @@
 //!   flowing workers → server.
 //! * [`server`] — `ServerCore`, the server state machine: owns the forest
 //!   `F(x)`, the prediction vector **F**, the gradient engine (AOT/PJRT),
-//!   and the sampler; every accepted tree triggers resample → produce
-//!   target → publish. `Board` is the shared pull/push surface.
+//!   and the sampler; every accepted tree triggers update F → resample →
+//!   produce target → publish. The F-update runs the blocked SoA scoring
+//!   engine (`forest/score.rs`): each accepted tree is flattened once and
+//!   applied block-wise, with pooled scratch recycled across trees.
+//!   `Board` is the shared pull/push surface.
 //! * [`worker`] — the worker loop: pull latest target, build a tree on the
 //!   sampled sub-dataset, push. Workers are mutually blind; only the
 //!   pull/build/push order *within* one worker is serialised, exactly the

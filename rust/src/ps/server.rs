@@ -8,11 +8,12 @@ use anyhow::Result;
 use crate::config::{GradMode, TrainConfig};
 use crate::data::sparse::CsrMatrix;
 use crate::data::{BinnedDataset, Dataset};
+use crate::forest::score::{self, ScoreMode, ScratchPool};
 use crate::forest::Forest;
 use crate::metrics::{CurvePoint, LossCurve, StalenessStats};
 use crate::runtime::GradientEngine;
 use crate::sampling::BernoulliSampler;
-use crate::tree::Tree;
+use crate::tree::{FlatTree, Tree};
 use crate::util::timer::PhaseTimer;
 use crate::util::{Rng, Stopwatch};
 
@@ -103,6 +104,9 @@ pub struct ServerCore {
     rng: Rng,
     /// Current prediction vector **F** over training rows.
     f: Vec<f32>,
+    /// Pooled scoring scratch for the blocked F-update (step 2) — row-id
+    /// blocks + partition stacks recycled across every accepted tree.
+    score_pool: ScratchPool,
     pub forest: Forest,
     test: Option<TestSet>,
     pub curve: LossCurve,
@@ -143,6 +147,7 @@ impl ServerCore {
             sampler,
             rng,
             f,
+            score_pool: ScratchPool::new(),
             forest,
             test,
             curve: LossCurve::default(),
@@ -188,16 +193,52 @@ impl ServerCore {
         }
         self.staleness.record(tau);
 
-        // step 2: F^j = F^{j-1} + v * Tree
+        // step 2: F^j = F^{j-1} + v * Tree. The blocked SoA engine and the
+        // per-row enum reference produce bit-identical F vectors (same f32
+        // ops in the same per-row order); `scoring=perrow` keeps the
+        // reference selectable for equivalence tests and ablation.
         let v = self.cfg.step_length;
-        self.timer.time("server/update_f", || {
-            for r in 0..self.f.len() {
-                self.f[r] += v * tree.predict_binned(&self.binned, r);
+        match self.cfg.scoring {
+            ScoreMode::Flat => {
+                let flat = self
+                    .timer
+                    .time("server/flatten_tree", || FlatTree::from_tree(&tree));
+                let t0 = std::time::Instant::now();
+                score::add_tree_binned(
+                    &flat,
+                    &self.binned,
+                    v,
+                    &mut self.f,
+                    self.cfg.score_threads,
+                    &mut self.score_pool,
+                );
+                self.timer.record("server/update_f", t0.elapsed());
+                if let Some(test) = &mut self.test {
+                    let t0 = std::time::Instant::now();
+                    score::add_tree_raw(
+                        &flat,
+                        &test.x,
+                        v,
+                        &mut test.f,
+                        self.cfg.score_threads,
+                        &mut self.score_pool,
+                    );
+                    self.timer.record("server/update_f_test", t0.elapsed());
+                }
             }
-        });
-        if let Some(test) = &mut self.test {
-            for r in 0..test.f.len() {
-                test.f[r] += v * tree.predict_raw(&test.x, r);
+            ScoreMode::PerRow => {
+                let t0 = std::time::Instant::now();
+                for r in 0..self.f.len() {
+                    self.f[r] += v * tree.predict_binned(&self.binned, r);
+                }
+                self.timer.record("server/update_f", t0.elapsed());
+                if let Some(test) = &mut self.test {
+                    let t0 = std::time::Instant::now();
+                    for r in 0..test.f.len() {
+                        test.f[r] += v * tree.predict_raw(&test.x, r);
+                    }
+                    self.timer.record("server/update_f_test", t0.elapsed());
+                }
             }
         }
         self.forest.push(v, tree);
@@ -364,6 +405,48 @@ mod tests {
             // hess equals the sampling weight (1/0.9 for selected unit rows)
             assert!((s.hess[r as usize] - 1.0 / 0.9).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn flat_and_per_row_scoring_produce_identical_state() {
+        // the acceptance bar for the blocked engine: both scorers yield
+        // the same F vector, hence bit-identical targets and loss curves
+        // 2600 rows: the train split exceeds 2 * ROW_BLOCK, so the flat
+        // core takes the threaded (block-claiming) path
+        let ds = synthetic::realsim_like(2_600, 6);
+        let mut rng0 = Rng::new(7);
+        let (tr, te) = ds.split(0.25, &mut rng0);
+        let binned = Arc::new(BinnedDataset::from_dataset(&tr, 16).unwrap());
+        let mut cfg_flat = mini_cfg(8);
+        cfg_flat.scoring = crate::forest::ScoreMode::Flat;
+        cfg_flat.score_threads = 3;
+        let mut cfg_ref = cfg_flat.clone();
+        cfg_ref.scoring = crate::forest::ScoreMode::PerRow;
+        cfg_ref.score_threads = 1;
+        let mut core_a =
+            ServerCore::new(&cfg_flat, &tr, binned.clone(), Some(&te), GradientEngine::native())
+                .unwrap();
+        let mut core_b =
+            ServerCore::new(&cfg_ref, &tr, binned.clone(), Some(&te), GradientEngine::native())
+                .unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..8 {
+            let s = core_a.snapshot();
+            let tree = crate::tree::build_tree(
+                &binned, &s.rows, &s.grad, &s.hess, &cfg_flat.tree, &mut rng,
+            );
+            core_a.apply_tree(tree.clone(), s.version).unwrap();
+            core_b.apply_tree(tree, core_b.snapshot().version).unwrap();
+        }
+        assert_eq!(core_a.f, core_b.f, "train F vectors diverged");
+        let la: Vec<f64> = core_a.curve.points.iter().map(|p| p.train_loss).collect();
+        let lb: Vec<f64> = core_b.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_eq!(la, lb, "loss curves diverged");
+        let ta: Vec<f64> = core_a.curve.points.iter().map(|p| p.test_loss).collect();
+        let tb: Vec<f64> = core_b.curve.points.iter().map(|p| p.test_loss).collect();
+        assert_eq!(ta, tb, "test curves diverged");
+        // pooled scratch reached steady state: at most score_threads buffers
+        assert!(core_a.score_pool.allocated() <= 3);
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! `FlatTree` — the scoring-side SoA twin of [`super::tree::Tree`].
+//!
+//! The builder's `Vec<Node>` enum is the right shape for *growing* a tree
+//! but a poor one for *scoring* it: every per-row root-to-leaf walk
+//! pointer-chases enum variants laid out in construction order, and the
+//! server's F-update (Algorithm 3, step 2) pays that cost for every row
+//! of every accepted tree. `FlatTree` compiles a shipped tree once into
+//! parallel arrays (`feature[]`, `bin[]`, `threshold[]`, `left[]`,
+//! `leaf_value[]`) in breadth-first order — siblings are adjacent, so the
+//! right child is always `left + 1` and a node's whole decision fits in
+//! three tiny array reads.
+//!
+//! Scoring then runs as a **frontier/partition pass** over a block of row
+//! ids ([`FlatTree::partition_binned`] / [`FlatTree::partition_raw`]) —
+//! the same in-place two-pointer row partitioning the builder uses to
+//! split leaves ([`super::builder`]), just replayed at inference time:
+//! all rows of a block enter at the root, each visited node partitions
+//! its segment once, and every row ends in exactly one leaf segment.
+//! Per node the split feature, bin and threshold stay in registers while
+//! a contiguous run of rows is tested, and the block's CSR data stays
+//! cache-resident across all `depth` passes — the blocked access pattern
+//! that per-row traversal destroys. The block drivers live in
+//! [`crate::forest::score`].
+//!
+//! Everything here is iterative (explicit queues/stacks, no recursion),
+//! so adversarially deep trees — e.g. loaded through `io/json.rs` —
+//! cannot overflow the call stack.
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::BinnedDataset;
+
+use super::tree::{Node, Tree};
+
+/// A decision tree flattened to structure-of-arrays form, breadth-first:
+/// node 0 is the root, a split's children are adjacent (`right == left +
+/// 1`), and `left[i] == 0` marks a leaf (the root is never a child, so 0
+/// is free as a sentinel). All five arrays have one slot per node; the
+/// slots a node kind does not use (`leaf_value` of a split, the split
+/// fields of a leaf) are zeroed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatTree {
+    pub feature: Vec<u32>,
+    /// Bin-space split (valid against the training `BinnedDataset`).
+    pub bin: Vec<u8>,
+    /// Raw-space threshold (valid for any raw feature vector).
+    pub threshold: Vec<f32>,
+    /// Left-child index; `0` marks a leaf. Right child is `left + 1`.
+    pub left: Vec<u32>,
+    pub leaf_value: Vec<f32>,
+}
+
+impl FlatTree {
+    /// Compile a (validated) tree into breadth-first SoA form. O(nodes),
+    /// iterative. Panics on a malformed tree whose reachable set exceeds
+    /// its node count (cycle/DAG) — `Tree::validate` rejects those first
+    /// on every untrusted path.
+    pub fn from_tree(t: &Tree) -> FlatTree {
+        assert!(!t.nodes.is_empty(), "cannot flatten an empty tree");
+        let n = t.nodes.len();
+        // old node indices in BFS order; position in `order` = new index
+        let mut order: Vec<u32> = Vec::with_capacity(n);
+        order.push(0);
+        let mut flat = FlatTree {
+            feature: Vec::with_capacity(n),
+            bin: Vec::with_capacity(n),
+            threshold: Vec::with_capacity(n),
+            left: Vec::with_capacity(n),
+            leaf_value: Vec::with_capacity(n),
+        };
+        let mut head = 0usize;
+        while head < order.len() {
+            match &t.nodes[order[head] as usize] {
+                Node::Leaf { value } => {
+                    flat.feature.push(0);
+                    flat.bin.push(0);
+                    flat.threshold.push(0.0);
+                    flat.left.push(0);
+                    flat.leaf_value.push(*value);
+                }
+                Node::Split {
+                    feature,
+                    bin,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    assert!(
+                        order.len() + 2 <= n,
+                        "malformed tree: more reachable nodes than slots"
+                    );
+                    let new_left = order.len() as u32;
+                    order.push(*left);
+                    order.push(*right);
+                    flat.feature.push(*feature);
+                    flat.bin.push(*bin);
+                    flat.threshold.push(*threshold);
+                    flat.left.push(new_left);
+                    flat.leaf_value.push(0.0);
+                }
+            }
+            head += 1;
+        }
+        flat
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.left.len()
+    }
+
+    #[inline]
+    pub fn is_leaf(&self, node: usize) -> bool {
+        self.left[node] == 0
+    }
+
+    /// Per-row bin-space walk over the SoA arrays (same answer as
+    /// [`Tree::predict_binned`]; the block path is [`Self::partition_binned`]).
+    #[inline]
+    pub fn predict_binned(&self, binned: &BinnedDataset, row: usize) -> f32 {
+        let mut i = 0usize;
+        while self.left[i] != 0 {
+            let l = self.left[i] as usize;
+            let b = binned.bin_of(row, self.feature[i]);
+            i = if b <= self.bin[i] { l } else { l + 1 };
+        }
+        self.leaf_value[i]
+    }
+
+    /// Per-row raw-space walk (same answer as [`Tree::predict_raw`]).
+    #[inline]
+    pub fn predict_raw(&self, x: &CsrMatrix, row: usize) -> f32 {
+        let mut i = 0usize;
+        while self.left[i] != 0 {
+            let l = self.left[i] as usize;
+            let v = x.get(row, self.feature[i]);
+            i = if v <= self.threshold[i] { l } else { l + 1 };
+        }
+        self.leaf_value[i]
+    }
+
+    /// The frontier/partition pass, bin-space: route every row id in
+    /// `rows` to its leaf in one blocked sweep, calling
+    /// `emit(leaf_node, rows_at_leaf)` once per non-empty leaf segment.
+    /// `rows` is permuted in place (row order within a segment is
+    /// irrelevant to scoring, exactly as in the builder's partition).
+    /// `stack` is caller-owned scratch, cleared on entry, so pooled
+    /// callers allocate nothing in steady state.
+    #[inline]
+    pub fn partition_binned(
+        &self,
+        binned: &BinnedDataset,
+        rows: &mut [u32],
+        stack: &mut Vec<(u32, usize, usize)>,
+        emit: impl FnMut(u32, &[u32]),
+    ) {
+        self.partition_by(
+            rows,
+            stack,
+            |node, row| binned.bin_of(row as usize, self.feature[node]) <= self.bin[node],
+            emit,
+        );
+    }
+
+    /// The frontier/partition pass, raw-space (threshold traversal over a
+    /// CSR matrix — held-out data never binned with the training mapper).
+    #[inline]
+    pub fn partition_raw(
+        &self,
+        x: &CsrMatrix,
+        rows: &mut [u32],
+        stack: &mut Vec<(u32, usize, usize)>,
+        emit: impl FnMut(u32, &[u32]),
+    ) {
+        self.partition_by(
+            rows,
+            stack,
+            |node, row| x.get(row as usize, self.feature[node]) <= self.threshold[node],
+            emit,
+        );
+    }
+
+    /// Shared partition engine: an explicit work stack of
+    /// `(node, begin, end)` segments (no recursion — deep trees cannot
+    /// overflow), each split node two-pointer-partitioning its segment
+    /// the way [`super::builder`] partitions leaf rows.
+    fn partition_by(
+        &self,
+        rows: &mut [u32],
+        stack: &mut Vec<(u32, usize, usize)>,
+        goes_left: impl Fn(usize, u32) -> bool,
+        mut emit: impl FnMut(u32, &[u32]),
+    ) {
+        if rows.is_empty() {
+            return;
+        }
+        stack.clear();
+        stack.push((0, 0, rows.len()));
+        while let Some((node, begin, end)) = stack.pop() {
+            let l = self.left[node as usize];
+            if l == 0 {
+                emit(node, &rows[begin..end]);
+                continue;
+            }
+            let seg = &mut rows[begin..end];
+            let mut i = 0usize;
+            let mut j = seg.len();
+            while i < j {
+                if goes_left(node as usize, seg[i]) {
+                    i += 1;
+                } else {
+                    j -= 1;
+                    seg.swap(i, j);
+                }
+            }
+            let mid = begin + i;
+            // empty sides are skipped entirely — a block never visits
+            // subtrees none of its rows reach
+            if mid < end {
+                stack.push((l + 1, mid, end));
+            }
+            if begin < mid {
+                stack.push((l, begin, mid));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn stump() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Split {
+                    feature: 0,
+                    bin: 1,
+                    threshold: 2.0,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        }
+    }
+
+    /// A tree whose enum layout is deliberately NOT breadth-first, to
+    /// exercise the relayout: root at 0, but children stored far apart.
+    fn scrambled() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Split { feature: 0, bin: 2, threshold: 3.0, left: 3, right: 1 },
+                Node::Split { feature: 1, bin: 1, threshold: 1.5, left: 4, right: 2 },
+                Node::Leaf { value: 3.0 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn flatten_stump_layout() {
+        let f = FlatTree::from_tree(&stump());
+        assert_eq!(f.n_nodes(), 3);
+        assert_eq!(f.left, vec![1, 0, 0]);
+        assert!(!f.is_leaf(0) && f.is_leaf(1) && f.is_leaf(2));
+        assert_eq!(f.leaf_value[1], -1.0);
+        assert_eq!(f.leaf_value[2], 1.0);
+    }
+
+    #[test]
+    fn flatten_relays_scrambled_trees_breadth_first() {
+        let t = scrambled();
+        t.validate().unwrap();
+        let f = FlatTree::from_tree(&t);
+        assert_eq!(f.n_nodes(), 5);
+        // BFS: root, then (leaf 1.0, split), then the split's children
+        assert_eq!(f.left[0], 1);
+        assert!(f.is_leaf(1));
+        assert_eq!(f.leaf_value[1], 1.0);
+        assert_eq!(f.left[2], 3);
+        assert_eq!(f.leaf_value[3], 2.0);
+        assert_eq!(f.leaf_value[4], 3.0);
+    }
+
+    #[test]
+    fn per_row_walks_match_enum_tree() {
+        let t = scrambled();
+        let f = FlatTree::from_tree(&t);
+        let x = CsrMatrix::from_dense(
+            4,
+            2,
+            &[1.0, 1.0, 1.0, 2.0, 4.0, 0.0, 0.0, 0.0],
+        )
+        .unwrap();
+        let ds = Dataset::new("t", x.clone(), vec![0.0; 4]);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        for r in 0..4 {
+            assert_eq!(f.predict_raw(&x, r), t.predict_raw(&x, r), "raw row {r}");
+            assert_eq!(
+                f.predict_binned(&b, r),
+                t.predict_binned(&b, r),
+                "binned row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_routes_every_row_to_its_leaf() {
+        let t = scrambled();
+        let f = FlatTree::from_tree(&t);
+        let x = CsrMatrix::from_dense(
+            6,
+            2,
+            &[1.0, 1.0, 1.0, 2.0, 4.0, 0.0, 0.0, 0.0, 5.0, 9.0, 2.0, 2.0],
+        )
+        .unwrap();
+        let mut rows: Vec<u32> = (0..6).collect();
+        let mut stack = Vec::new();
+        let mut got = vec![f32::NAN; 6];
+        f.partition_raw(&x, &mut rows, &mut stack, |leaf, seg| {
+            for &r in seg {
+                got[r as usize] = f.leaf_value[leaf as usize];
+            }
+        });
+        for r in 0..6 {
+            assert_eq!(got[r], t.predict_raw(&x, r), "row {r}");
+        }
+        // the pass is a permutation: every row id appears exactly once
+        let mut sorted = rows.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn partition_handles_single_leaf_and_empty_blocks() {
+        let f = FlatTree::from_tree(&Tree::constant(0.7));
+        let x = CsrMatrix::from_dense(2, 1, &[1.0, 0.0]).unwrap();
+        let mut stack = Vec::new();
+        let mut rows: Vec<u32> = vec![0, 1];
+        let mut hits = 0;
+        f.partition_raw(&x, &mut rows, &mut stack, |leaf, seg| {
+            assert_eq!(leaf, 0);
+            hits += seg.len();
+        });
+        assert_eq!(hits, 2);
+        let mut none: Vec<u32> = Vec::new();
+        f.partition_raw(&x, &mut none, &mut stack, |_, _| panic!("no rows"));
+    }
+
+    #[test]
+    fn flatten_deep_chain_is_stack_safe() {
+        // 50k-deep left-spine chain: iterative compile + iterative
+        // partition must both survive where recursion would overflow
+        let depth = 50_000usize;
+        let mut nodes = Vec::with_capacity(2 * depth + 1);
+        for i in 0..depth {
+            nodes.push(Node::Split {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                left: (2 * i + 1) as u32,
+                right: (2 * i + 2) as u32,
+            });
+            nodes.push(Node::Leaf { value: i as f32 });
+        }
+        nodes.push(Node::Leaf { value: -1.0 });
+        let t = Tree { nodes };
+        t.validate().unwrap();
+        assert_eq!(t.depth(), depth + 1);
+        let f = FlatTree::from_tree(&t);
+        assert_eq!(f.n_nodes(), 2 * depth + 1);
+        // a row with x0 > 0 goes right at every split: reaches the final leaf
+        let x = CsrMatrix::from_dense(1, 1, &[1.0]).unwrap();
+        assert_eq!(f.predict_raw(&x, 0), -1.0);
+        let mut rows = vec![0u32];
+        let mut stack = Vec::new();
+        let mut seen = f32::NAN;
+        f.partition_raw(&x, &mut rows, &mut stack, |leaf, _| {
+            seen = f.leaf_value[leaf as usize];
+        });
+        assert_eq!(seen, -1.0);
+    }
+}

@@ -23,14 +23,20 @@
 //!   workers hold one pool each and stop allocating after the first tree.
 //! * **Parallel engines** ([`parallel`]): row-sharded fork-join histogram
 //!   building and per-feature work-stealing split search.
+//! * **Flat scoring form** ([`flat`]): shipped trees compile once into a
+//!   breadth-first SoA [`FlatTree`] whose frontier/partition pass powers
+//!   the server's blocked F-update (see `forest/score.rs`); the per-row
+//!   enum walk on [`Tree`] stays as the reference implementation.
 
 pub mod builder;
+pub mod flat;
 pub mod histogram;
 pub mod parallel;
 pub mod split;
 pub mod tree;
 
 pub use builder::{build_tree, build_tree_pooled, TreeParams};
+pub use flat::FlatTree;
 pub use histogram::{Histogram, HistogramPool, HistogramStrategy};
 pub use parallel::{
     best_split_parallel, build_tree_feature_parallel, build_tree_forkjoin,

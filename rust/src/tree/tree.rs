@@ -50,23 +50,36 @@ impl Tree {
             .count()
     }
 
-    /// Maximum root-to-leaf depth.
+    /// Maximum root-to-leaf depth. Iterative (explicit stack), like
+    /// [`Tree::validate`], so arbitrarily deep trees — including
+    /// adversarial ones loaded through `io/json.rs` — cannot overflow
+    /// the call stack.
     pub fn depth(&self) -> usize {
-        fn go(t: &Tree, i: u32) -> usize {
-            match &t.nodes[i as usize] {
-                Node::Leaf { .. } => 1,
-                Node::Split { left, right, .. } => 1 + go(t, *left).max(go(t, *right)),
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut max = 0usize;
+        let mut stack = vec![(0u32, 1usize)];
+        while let Some((i, d)) = stack.pop() {
+            match &self.nodes[i as usize] {
+                Node::Leaf { .. } => max = max.max(d),
+                Node::Split { left, right, .. } => {
+                    stack.push((*left, d + 1));
+                    stack.push((*right, d + 1));
+                }
             }
         }
-        if self.nodes.is_empty() {
-            0
-        } else {
-            go(self, 0)
-        }
+        max
     }
 
     /// Predict from a binned training row (bin-space traversal — exact
     /// match with how the tree was grown).
+    ///
+    /// Reference implementation: one root-to-leaf enum walk per row. Hot
+    /// batch paths (the server's F-update, `Forest::predict_all*`) go
+    /// through the blocked [`super::FlatTree`] scorer instead; this walk
+    /// is kept for single-row use, equivalence tests and the
+    /// `scoring=perrow` ablation.
     #[inline]
     pub fn predict_binned(&self, binned: &BinnedDataset, row: usize) -> f32 {
         let mut i = 0u32;
@@ -88,7 +101,8 @@ impl Tree {
     }
 
     /// Predict from a raw sparse row (threshold-space traversal — used for
-    /// held-out data binned with no mapper).
+    /// held-out data binned with no mapper). Reference implementation;
+    /// see [`Tree::predict_binned`] on where the batch paths live.
     pub fn predict_raw(&self, x: &CsrMatrix, row: usize) -> f32 {
         let mut i = 0u32;
         loop {
@@ -273,6 +287,29 @@ mod tests {
         for r in 0..4 {
             assert_eq!(t.predict_binned(&b, r), t.predict_raw(&x, r), "row {r}");
         }
+    }
+
+    #[test]
+    fn depth_is_stack_safe_on_adversarially_deep_trees() {
+        // a 200k-deep chain (the kind io/json.rs could hand us): depth()
+        // and validate() must both run iteratively, not recurse
+        let depth = 200_000usize;
+        let mut nodes = Vec::with_capacity(2 * depth + 1);
+        for i in 0..depth {
+            nodes.push(Node::Split {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                left: (2 * i + 1) as u32,
+                right: (2 * i + 2) as u32,
+            });
+            nodes.push(Node::Leaf { value: 0.0 });
+        }
+        nodes.push(Node::Leaf { value: 1.0 });
+        let t = Tree { nodes };
+        t.validate().unwrap();
+        assert_eq!(t.depth(), depth + 1);
+        assert_eq!(t.n_leaves(), depth + 1);
     }
 
     #[test]

@@ -4,14 +4,14 @@
 //! and serialization.
 
 use asgbdt::data::{synthetic, BinnedDataset, CsrMatrix, Dataset};
-use asgbdt::forest::Forest;
+use asgbdt::forest::{FlatForest, Forest, ScratchPool};
 use asgbdt::io::Json;
 use asgbdt::loss::logistic;
 use asgbdt::prop_assert;
 use asgbdt::sampling::BernoulliSampler;
 use asgbdt::testkit::{check, close, Gen};
 use asgbdt::tree::histogram::Histogram;
-use asgbdt::tree::{build_tree, TreeParams};
+use asgbdt::tree::{build_tree, FlatTree, TreeParams};
 use asgbdt::util::Rng;
 
 fn random_dataset(g: &mut Gen) -> Dataset {
@@ -243,6 +243,108 @@ fn prop_json_roundtrips_arbitrary_forests() {
                 "prediction changed after roundtrip"
             );
         }
+        Ok(())
+    });
+}
+
+/// A fully dense dataset (every cell nonzero) — the partition pass's
+/// worst case for CSR lookups, and the layout where blocked scoring and
+/// per-row scoring disagree first if anything is off.
+fn random_dense_dataset(g: &mut Gen) -> Dataset {
+    let n = 10 + g.usize_in(0, 200);
+    let d = 2 + g.usize_in(0, 12);
+    let data: Vec<f32> = (0..n * d)
+        .map(|_| {
+            let v = g.rng.normal() as f32 * 3.0;
+            if v == 0.0 {
+                1.0
+            } else {
+                v
+            }
+        })
+        .collect();
+    let x = CsrMatrix::from_dense(n, d, &data).unwrap();
+    let y = g.labels(n);
+    Dataset::new("dense", x, y)
+}
+
+/// Boost a few trees so the forest has real structure (varied depths,
+/// sparse and dense splits, per-tree feature subsets).
+fn random_forest(g: &mut Gen, ds: &Dataset, b: &BinnedDataset) -> Forest {
+    let w = vec![1.0f32; ds.n_rows()];
+    let mut f = vec![0.0f32; ds.n_rows()];
+    let mut forest = Forest::new(g.f64_in(-0.5, 0.5) as f32);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let n_trees = 1 + g.usize_in(0, 4);
+    let v = g.f64_in(0.05, 0.5) as f32;
+    for k in 0..n_trees {
+        let params = TreeParams {
+            max_leaves: 2 + g.usize_in(0, 24),
+            feature_rate: g.f64_in(0.3, 1.0),
+            ..Default::default()
+        };
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let t = build_tree(b, &rows, &gh.grad, &gh.hess, &params, &mut g.rng.fork(40 + k as u64));
+        for r in 0..ds.n_rows() {
+            f[r] += v * t.predict_binned(b, r);
+        }
+        forest.push(v, t);
+    }
+    forest
+}
+
+/// The scoring-engine equivalence property (PR 2 acceptance bar): the
+/// blocked SoA frontier pass is **bit-identical** to the per-row enum
+/// walk — for every tree, every forest, raw and binned, at every thread
+/// count, on sparse and dense data.
+#[test]
+fn prop_flat_blocked_scoring_bit_identical_to_per_row() {
+    check("flat_scoring", 12, 110, |g| {
+        let dense = g.rng.bernoulli(0.5);
+        let ds = if dense {
+            random_dense_dataset(g)
+        } else {
+            random_dataset(g)
+        };
+        let b = BinnedDataset::from_dataset(&ds, 4 + g.usize_in(0, 28)).unwrap();
+        let forest = random_forest(g, &ds, &b);
+        let flat = FlatForest::from_forest(&forest);
+        let mut pool = ScratchPool::new();
+        // single-tree walks: flat SoA vs enum, per row
+        for (_, t) in &forest.trees {
+            let ft = FlatTree::from_tree(t);
+            for r in 0..ds.n_rows() {
+                prop_assert!(
+                    ft.predict_binned(&b, r) == t.predict_binned(&b, r),
+                    "tree walk (binned) differs at row {r}"
+                );
+                prop_assert!(
+                    ft.predict_raw(&ds.x, r) == t.predict_raw(&ds.x, r),
+                    "tree walk (raw) differs at row {r}"
+                );
+            }
+        }
+        // whole-forest blocked scoring vs the per-row reference, both
+        // traversal spaces, across thread counts
+        let ref_raw = forest.predict_all_per_row(&ds.x);
+        let ref_binned = forest.predict_all_binned_per_row(&b);
+        for threads in [1usize, 2, 4] {
+            let raw = flat.predict_all_raw(&ds.x, threads, &mut pool);
+            let binned = flat.predict_all_binned(&b, threads, &mut pool);
+            prop_assert!(
+                raw == ref_raw,
+                "raw margins differ (dense={dense}, threads={threads})"
+            );
+            prop_assert!(
+                binned == ref_binned,
+                "binned margins differ (dense={dense}, threads={threads})"
+            );
+        }
+        // routed entry points stay on the same bits
+        prop_assert!(
+            forest.predict_all(&ds.x) == ref_raw,
+            "predict_all diverged from reference"
+        );
         Ok(())
     });
 }

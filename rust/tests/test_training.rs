@@ -82,6 +82,38 @@ fn sync_and_serial_produce_identical_forests() {
 }
 
 #[test]
+fn scoring_engines_train_bit_identically() {
+    // flat blocked scoring vs the per-row enum reference: same F vector
+    // after every accepted tree, therefore the same sampled targets, the
+    // same trees, and the same loss curve — exactly, not approximately.
+    let ds = synthetic::realsim_like(1_400, 9);
+    let mut rng = Rng::new(9);
+    let (tr, te) = ds.split(0.25, &mut rng);
+    let mut flat_cfg = cfg(TrainMode::Serial, 1, 14);
+    flat_cfg.scoring = asgbdt::forest::ScoreMode::Flat;
+    flat_cfg.score_threads = 4;
+    let mut ref_cfg = flat_cfg.clone();
+    ref_cfg.scoring = asgbdt::forest::ScoreMode::PerRow;
+    ref_cfg.score_threads = 1;
+    let a = train_serial(&flat_cfg, &tr, Some(&te)).unwrap();
+    let b = train_serial(&ref_cfg, &tr, Some(&te)).unwrap();
+    let la: Vec<f64> = a.curve.points.iter().map(|p| p.train_loss).collect();
+    let lb: Vec<f64> = b.curve.points.iter().map(|p| p.train_loss).collect();
+    assert_eq!(la, lb, "train curves diverged between scoring engines");
+    let ta: Vec<f64> = a.curve.points.iter().map(|p| p.test_loss).collect();
+    let tb: Vec<f64> = b.curve.points.iter().map(|p| p.test_loss).collect();
+    assert_eq!(ta, tb, "test curves diverged between scoring engines");
+    assert_eq!(a.forest.n_trees(), b.forest.n_trees());
+    for r in 0..tr.n_rows() {
+        assert_eq!(
+            a.forest.predict_raw(&tr.x, r),
+            b.forest.predict_raw(&tr.x, r),
+            "forests diverged at row {r}"
+        );
+    }
+}
+
+#[test]
 fn tiny_sampling_rate_still_trains() {
     // paper Figure 9's extreme: ~2% of rows per pass
     let ds = synthetic::realsim_like(1_000, 5);
