@@ -1,14 +1,15 @@
 //! Parameter-server throughput: accepted trees/sec end-to-end by worker
 //! count — the real-thread half of the Figure 10 story, plus board
-//! pull/publish micro-latencies and the apply-path (Algorithm 3 step 2)
-//! time the server spends updating F per accepted tree, reported
-//! separately for the blocked-SoA and per-row-enum scoring engines.
+//! pull/publish micro-latencies, the apply-path (Algorithm 3 step 2)
+//! time reported separately for the blocked-SoA and per-row-enum scoring
+//! engines, and the accept-path breakdown: fused one-pass pipeline vs
+//! the serial reference at 1/2/4/8 score threads.
 use asgbdt::bench_harness::Runner;
 use asgbdt::config::TrainConfig;
 use asgbdt::coordinator::train_async;
 use asgbdt::data::synthetic;
 use asgbdt::forest::ScoreMode;
-use asgbdt::ps::{Board, TargetSnapshot};
+use asgbdt::ps::{Board, TargetMode, TargetSnapshot};
 use std::sync::Arc;
 
 fn main() {
@@ -58,7 +59,8 @@ fn main() {
             rep.timer.mean("server/update_f") * 1e6,
         );
     }
-    // scoring-engine contrast on the same workload (4 workers)
+    // scoring-engine contrast on the same workload (4 workers); both on
+    // the serial accept path, where the per-row reference engine lives
     for scoring in [ScoreMode::Flat, ScoreMode::PerRow] {
         let mut cfg = TrainConfig::default();
         cfg.workers = 4;
@@ -67,6 +69,7 @@ fn main() {
         cfg.tree.max_leaves = 32;
         cfg.max_bins = 32;
         cfg.eval_every = 40;
+        cfg.target = TargetMode::Serial;
         cfg.scoring = scoring;
         let rep = train_async(&cfg, &ds, None).unwrap();
         // step-2 time per tree including the flatten only the flat
@@ -82,6 +85,57 @@ fn main() {
             apply * 1e6,
             rep.trees_per_sec(),
         );
+    }
+    // accept-path breakdown: fused one-pass pipeline vs the serial
+    // reference, sharded across 1/2/4/8 score threads (4 workers racing)
+    for target in [TargetMode::Fused, TargetMode::Serial] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut cfg = TrainConfig::default();
+            cfg.workers = 4;
+            cfg.n_trees = 40;
+            cfg.step_length = 0.1;
+            cfg.tree.max_leaves = 32;
+            cfg.max_bins = 32;
+            cfg.eval_every = 40;
+            cfg.target = target;
+            cfg.score_threads = threads;
+            let rep = train_async(&cfg, &ds, None).unwrap();
+            // per-tree accept cost: everything the server does between
+            // receiving a push and publishing the next target. Both sums
+            // cover the same work — the fused pass folds sampling/target/
+            // eval in, so the serial side must count its separate sweeps
+            // (sample, produce_target, eval) and the fused side its AOT
+            // produce_target fallback (zero natively) for symmetry.
+            let accept = match target {
+                TargetMode::Fused => {
+                    rep.timer.mean("server/flatten_tree")
+                        + rep.timer.mean("server/fused_pass")
+                        + rep.timer.mean("server/produce_target")
+                        + rep.timer.mean("server/eval")
+                }
+                TargetMode::Serial => {
+                    rep.timer.mean("server/flatten_tree")
+                        + rep.timer.mean("server/update_f")
+                        + rep.timer.mean("server/sample")
+                        + rep.timer.mean("server/produce_target")
+                        + rep.timer.mean("server/eval")
+                }
+            };
+            r.record(
+                &format!("accept/{}_t{threads}_per_tree", target.as_str()),
+                accept,
+            );
+            r.record(
+                &format!("accept/{}_t{threads}_trees_per_sec (1/x)", target.as_str()),
+                1.0 / rep.trees_per_sec(),
+            );
+            println!(
+                "  target {} threads {threads}: accept {:.1}µs/tree, {:.2} trees/s",
+                target.as_str(),
+                accept * 1e6,
+                rep.trees_per_sec(),
+            );
+        }
     }
     r.write_csv().unwrap();
 }

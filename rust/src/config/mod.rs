@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 
 use crate::forest::ScoreMode;
 use crate::io::Json;
+use crate::ps::TargetMode;
 use crate::tree::{HistogramStrategy, TreeParams};
 
 /// Which trainer drives the run.
@@ -93,12 +94,19 @@ pub struct TrainConfig {
     pub tree: TreeParams,
     /// Evaluate train/test loss every k accepted trees.
     pub eval_every: usize,
-    /// Scoring engine for the server's F-update (Algorithm 3 step 2):
-    /// blocked SoA (default) or the per-row enum reference path.
+    /// The server's accept pipeline per accepted tree: one fused
+    /// row-sharded pass (default) or the serial reference path with
+    /// separate sweeps for scoring/sampling/target/eval. Bit-identical
+    /// outputs either way (`ps/shard.rs`).
+    pub target: TargetMode,
+    /// Scoring engine for the serial path's F-update (Algorithm 3 step
+    /// 2): blocked SoA (default) or the per-row enum reference path.
+    /// The fused pipeline always scores through the blocked engine, so
+    /// `scoring=perrow` requires `target=serial`.
     pub scoring: ScoreMode,
-    /// Threads sharding row blocks in the F-update. 1 (default) keeps
-    /// scoring on the server thread; raise it when the server, not the
-    /// workers, is the bottleneck.
+    /// Threads sharding the accept pass (fused) / the blocked F-update
+    /// (serial). 1 (default) keeps the accept path on the server thread;
+    /// raise it when the server, not the workers, is the bottleneck.
     pub score_threads: usize,
     pub seed: u64,
     /// Where `make artifacts` put the HLO modules.
@@ -118,6 +126,7 @@ impl Default for TrainConfig {
             max_bins: 64,
             tree: TreeParams::default(),
             eval_every: 10,
+            target: TargetMode::Fused,
             scoring: ScoreMode::Flat,
             score_threads: 1,
             seed: 42,
@@ -155,6 +164,9 @@ impl TrainConfig {
         if self.score_threads == 0 {
             bail!("score_threads must be >= 1");
         }
+        if self.target == TargetMode::Fused && self.scoring == ScoreMode::PerRow {
+            bail!("scoring=perrow is the serial reference engine; use target=serial with it");
+        }
         Ok(())
     }
 
@@ -184,6 +196,7 @@ impl TrainConfig {
                 self.tree.strategy = HistogramStrategy::parse(value)?
             }
             "eval_every" => self.eval_every = value.parse()?,
+            "target" | "target_mode" => self.target = TargetMode::parse(value)?,
             "scoring" | "score_mode" => self.scoring = ScoreMode::parse(value)?,
             "score_threads" => self.score_threads = value.parse()?,
             "seed" => self.seed = value.parse()?,
@@ -215,6 +228,7 @@ impl TrainConfig {
             ("feature_rate", Json::Num(self.tree.feature_rate)),
             ("histogram", Json::Str(self.tree.strategy.as_str().into())),
             ("eval_every", Json::Num(self.eval_every as f64)),
+            ("target", Json::Str(self.target.as_str().into())),
             ("scoring", Json::Str(self.scoring.as_str().into())),
             ("score_threads", Json::Num(self.score_threads as f64)),
             ("seed", Json::Num(self.seed as f64)),
@@ -271,8 +285,10 @@ mod tests {
         c.set("max_leaves", "400").unwrap();
         c.set("max_staleness", "16").unwrap();
         c.set("histogram", "rebuild").unwrap();
+        c.set("target", "serial").unwrap();
         c.set("scoring", "perrow").unwrap();
         c.set("score_threads", "4").unwrap();
+        assert_eq!(c.target, TargetMode::Serial);
         assert_eq!(c.scoring, ScoreMode::PerRow);
         assert_eq!(c.score_threads, 4);
         assert_eq!(c.workers, 32);
@@ -310,6 +326,13 @@ mod tests {
         let mut c = TrainConfig::default();
         c.score_threads = 0;
         assert!(c.validate().is_err());
+        // the per-row reference engine only exists on the serial path
+        let mut c = TrainConfig::default();
+        c.scoring = ScoreMode::PerRow;
+        assert_eq!(c.target, TargetMode::Fused);
+        assert!(c.validate().is_err());
+        c.target = TargetMode::Serial;
+        c.validate().unwrap();
     }
 
     #[test]
@@ -318,6 +341,7 @@ mod tests {
         c.set("workers", "8").unwrap();
         c.set("grad_mode", "newton").unwrap();
         c.set("histogram", "rebuild").unwrap();
+        c.set("target", "serial").unwrap();
         c.set("scoring", "perrow").unwrap();
         c.set("score_threads", "2").unwrap();
         let j = c.to_json();
@@ -327,6 +351,7 @@ mod tests {
         assert_eq!(back.mode, TrainMode::Async);
         assert_eq!(back.max_staleness, None);
         assert_eq!(back.tree.strategy, HistogramStrategy::Rebuild);
+        assert_eq!(back.target, TargetMode::Serial);
         assert_eq!(back.scoring, ScoreMode::PerRow);
         assert_eq!(back.score_threads, 2);
     }

@@ -17,12 +17,14 @@
 //! buffers only on its first tree; `cfg.tree.strategy` selects sibling
 //! subtraction (default) or whole-node rebuild for every worker.
 //!
-//! On the server side, every accepted tree's F-update (step 2) runs the
-//! blocked SoA scoring engine (`forest/score.rs`): the tree is flattened
-//! once and applied in row blocks, optionally sharded across
-//! `cfg.score_threads` — scoring is on the accept loop's critical path,
-//! so its cost directly bounds accepted trees/sec at high worker counts
-//! (measured separately by `bench_ps_throughput`).
+//! On the server side, every accepted tree runs the accept pipeline
+//! selected by `cfg.target`: the fused row-sharded pass (default,
+//! `ps/shard.rs`) folds the F-update, the counter-keyed Bernoulli
+//! sample, the new target's grad/hess and the eval partials into one
+//! sweep across `cfg.score_threads` shards; `target=serial` keeps the
+//! reference sweeps (blocked SoA scoring per `cfg.scoring`). The accept
+//! path bounds accepted trees/sec at high worker counts — measured by
+//! `bench_ps_throughput`'s fused-vs-serial breakdown.
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -2,11 +2,12 @@
 //! produce target → build tree → apply. The convergence baseline every
 //! figure compares against (τ ≡ 0).
 //!
-//! The apply half of the loop (the F-update inside
-//! [`ServerCore::apply_tree`]) runs on the blocked SoA scoring engine
-//! (`forest/score.rs`) per `cfg.scoring` / `cfg.score_threads`, just like
-//! the sync and async trainers — the serial mode is where the scoring
-//! ablation isolates pure apply cost.
+//! The apply half of the loop (inside [`ServerCore::apply_tree`]) runs
+//! the accept pipeline selected by `cfg.target` — the fused row-sharded
+//! pass (default) or the serial reference sweeps per `cfg.scoring` /
+//! `cfg.score_threads` — just like the sync and async trainers; the
+//! serial mode is where the scoring and accept-path ablations isolate
+//! pure apply cost.
 
 use std::sync::Arc;
 

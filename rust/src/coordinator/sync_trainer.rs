@@ -7,9 +7,10 @@
 //! scaling saturates with worker count while convergence per tree matches
 //! serial exactly, which is what Figures 5–10 contrast against.
 //!
-//! Each accepted tree's F-update goes through the blocked SoA scoring
-//! engine (`forest/score.rs`, `cfg.scoring` / `cfg.score_threads`) inside
-//! [`ServerCore::apply_tree`].
+//! Each accepted tree goes through the accept pipeline selected by
+//! `cfg.target` inside [`ServerCore::apply_tree`] — the fused
+//! row-sharded pass by default, or the serial reference sweeps
+//! (`cfg.scoring` / `cfg.score_threads`).
 
 use std::sync::Arc;
 

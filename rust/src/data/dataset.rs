@@ -137,7 +137,9 @@ mod tests {
     #[test]
     fn multiplicity_weights_positive_rate() {
         let d = tiny();
-        let d2 = Dataset::with_multiplicity("t", d.x.clone(), d.y.clone(), vec![3.0, 1.0, 1.0, 1.0]).unwrap();
+        let d2 =
+            Dataset::with_multiplicity("t", d.x.clone(), d.y.clone(), vec![3.0, 1.0, 1.0, 1.0])
+                .unwrap();
         // positives: rows 0 (m=3) and 2 (m=1) => 4/6
         assert!((d2.positive_rate() - 4.0 / 6.0).abs() < 1e-12);
     }

@@ -26,6 +26,7 @@ use crate::data::synthetic;
 use crate::forest::ScoreMode;
 use crate::io::csv::CsvWriter;
 use crate::io::Json;
+use crate::ps::TargetMode;
 use crate::tree::HistogramStrategy;
 
 use super::common::{base_cfg, convergence_sweep, split, Scale, Variant};
@@ -93,8 +94,13 @@ pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
             cfg,
         });
     }
-    let (reports, staleness_summary) =
-        convergence_sweep("ablation_bounded_staleness", &train_ds, Some(&test_ds), variants, out_dir)?;
+    let (reports, staleness_summary) = convergence_sweep(
+        "ablation_bounded_staleness",
+        &train_ds,
+        Some(&test_ds),
+        variants,
+        out_dir,
+    )?;
 
     // rejected-push accounting for the bounded-staleness table
     let mut csv = CsvWriter::new(&["max_tau", "accepted", "rejected", "trees_per_sec"]);
@@ -150,6 +156,9 @@ pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     for scoring in scorings {
         let mut cfg = base_cfg(scale, 44_000);
         cfg.mode = TrainMode::Serial; // serial: apply-time delta is pure scoring cost
+        // the per-row engine only exists on the serial accept path; both
+        // variants use it so the delta isolates the scoring engine alone
+        cfg.target = TargetMode::Serial;
         cfg.n_trees = n_trees;
         cfg.step_length = scale.pick(0.1, 0.02);
         cfg.sampling_rate = 0.8;

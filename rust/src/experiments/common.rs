@@ -90,6 +90,21 @@ pub fn convergence_sweep(
                 metrics::error_rate(&margins, &t.y, &t.m)
             })
             .unwrap_or(f64::NAN);
+        // the accept loop's own cost, per phase, as fractions of the run's
+        // wall clock — how much of the server's time scoring/sampling/
+        // target production (or the fused pass that folds them) consumed
+        let accept_fractions: Vec<(String, Json)> = rep
+            .timer
+            .rows()
+            .iter()
+            .filter(|(name, _, _)| name.starts_with("server/"))
+            .map(|(name, secs, _)| {
+                (
+                    name["server/".len()..].to_string(),
+                    Json::Num(secs / rep.wall_secs.max(1e-12)),
+                )
+            })
+            .collect();
         summary_items.push((
             v.tag.clone(),
             Json::obj(vec![
@@ -102,8 +117,19 @@ pub fn convergence_sweep(
                 ("staleness_mean", Json::Num(rep.staleness.mean())),
                 ("trees_per_sec", Json::Num(rep.trees_per_sec())),
                 (
+                    // the serial path's pure step-2 sweep (0 under fused)
                     "apply_f_secs",
                     Json::Num(rep.timer.total("server/update_f")),
+                ),
+                (
+                    // the fused pipeline's whole accept pass: F-update +
+                    // sampling + target + eval partials (0 under serial)
+                    "fused_pass_secs",
+                    Json::Num(rep.timer.total("server/fused_pass")),
+                ),
+                (
+                    "accept_phase_fractions",
+                    Json::Obj(accept_fractions.into_iter().collect()),
                 ),
                 ("wall_secs", Json::Num(rep.wall_secs)),
             ]),

@@ -61,9 +61,12 @@ pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
         } else {
             synthetic::e2006_like(n_rows, 1010)
         };
-        // calibration run (short)
+        // calibration run (short); the serial accept path keeps the
+        // per-phase split (sample/produce_target/update_f) the simulator
+        // is calibrated from — the fused pipeline folds them into one
         let mut cal_cfg = base_cfg(scale, 1010);
         cal_cfg.mode = crate::config::TrainMode::Serial;
+        cal_cfg.target = crate::ps::TargetMode::Serial;
         cal_cfg.n_trees = scale.pick(8, 30);
         cal_cfg.sampling_rate = 0.8;
         cal_cfg.tree.max_leaves = leaves;

@@ -14,8 +14,7 @@ use crate::data::stats::{diversity_report, SpeciesTable};
 use crate::data::synthetic;
 use crate::io::csv::CsvWriter;
 use crate::io::Json;
-use crate::sampling::BernoulliSampler;
-use crate::util::Rng;
+use crate::sampling::{BernoulliSampler, SampleKey};
 
 use super::common::Scale;
 
@@ -42,10 +41,9 @@ pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
             let rep = diversity_report(ds, rate);
             // empirical check: average observed row-support density over draws
             let sampler = BernoulliSampler::uniform(ds, rate);
-            let mut rng = Rng::new(7);
             let mut dens = 0.0;
-            for _ in 0..empirical_draws {
-                let pass = sampler.draw(&mut rng);
+            for v in 0..empirical_draws {
+                let pass = sampler.draw(SampleKey { seed: 7, version: v as u64 });
                 // species-level density: fraction of species with >=1 row on
                 let mut on = vec![false; table.n_species()];
                 for &r in pass.rows.iter() {

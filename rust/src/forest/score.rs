@@ -184,9 +184,11 @@ fn drive_blocks(
 /// Score one block of one tree, bin-space: partition the block's rows to
 /// their leaves and add `v * leaf_value` per segment. The per-row result
 /// is bit-identical to `f[r] += v * tree.predict_binned(..)` — same f32
-/// multiply, same single add per row.
+/// multiply, same single add per row. Public because the fused accept
+/// pipeline (`ps/shard.rs`) drives its own per-shard block loop instead
+/// of [`drive_blocks`]'s dynamic claiming.
 #[inline]
-fn add_block_binned(
+pub fn add_block_binned(
     flat: &FlatTree,
     binned: &BinnedDataset,
     v: f32,

@@ -42,6 +42,17 @@ pub fn loss_elem(f: f32, y: f32) -> f32 {
     y * softplus(-two_f) + (1.0 - y) * softplus(two_f)
 }
 
+/// Per-row target: `(w·l', w·l'')` at margin `f`. The one shared
+/// expression every produce-target path compiles — the whole-vector
+/// pass ([`grad_hess_loss`]) and the fused sharded accept pass
+/// (`ps/shard.rs`) both call this, so their per-row f32 results are
+/// bit-identical by construction.
+#[inline]
+pub fn grad_hess_at(f: f32, y: f32, w: f32) -> (f32, f32) {
+    let p = prob(f);
+    (w * 2.0 * (p - y), w * 4.0 * p * (1.0 - p))
+}
+
 /// Pure-Rust produce-target pass over padded-free vectors; mirrors the
 /// L2 model function `grad_hess_loss` in `python/compile/model.py`.
 pub fn grad_hess_loss(f: &[f32], y: &[f32], w: &[f32]) -> GradHess {
@@ -57,9 +68,9 @@ pub fn grad_hess_loss(f: &[f32], y: &[f32], w: &[f32]) -> GradHess {
         if wi == 0.0 {
             continue; // padding / unsampled rows are exact no-ops
         }
-        let p = prob(f[i]);
-        grad[i] = wi * 2.0 * (p - y[i]);
-        hess[i] = wi * 4.0 * p * (1.0 - p);
+        let (g, h) = grad_hess_at(f[i], y[i], wi);
+        grad[i] = g;
+        hess[i] = h;
         loss_sum += (wi * loss_elem(f[i], y[i])) as f64;
         weight_sum += wi as f64;
     }
@@ -90,6 +101,41 @@ pub fn eval_sums(f: &[f32], y: &[f32], w: &[f32]) -> (f64, f64, f64) {
         weight_sum += wi;
     }
     (loss_sum, err_sum, weight_sum)
+}
+
+/// [`eval_sums`] with a deterministic blocked reduction: per-`block`
+/// partial sums (each starting from 0.0) folded left-to-right in block
+/// order. The total is therefore independent of *who* computed each
+/// block — a sequential sweep and any contiguous sharding of whole
+/// blocks across threads produce bit-identical f64 sums, which is what
+/// makes the fused accept path's eval match the serial path exactly.
+pub fn eval_sums_blocked(f: &[f32], y: &[f32], w: &[f32], block: usize) -> (f64, f64, f64) {
+    assert!(block > 0, "block size must be positive");
+    let n = f.len();
+    let (mut loss, mut err, mut weight) = (0.0f64, 0.0f64, 0.0f64);
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + block).min(n);
+        let (l, e, wsum) = eval_sums(&f[start..end], &y[start..end], &w[start..end]);
+        loss += l;
+        err += e;
+        weight += wsum;
+        start = end;
+    }
+    (loss, err, weight)
+}
+
+/// Fold per-block `(loss, err, weight)` partials in block order — the
+/// other half of [`eval_sums_blocked`], used when the blocks were filled
+/// by sharded threads.
+pub fn fold_eval_blocks(blocks: &[(f64, f64, f64)]) -> (f64, f64, f64) {
+    let (mut loss, mut err, mut weight) = (0.0f64, 0.0f64, 0.0f64);
+    for &(l, e, w) in blocks {
+        loss += l;
+        err += e;
+        weight += w;
+    }
+    (loss, err, weight)
 }
 
 #[cfg(test)]
@@ -170,6 +216,57 @@ mod tests {
             assert!((2.0 * a.hess[i] - b.hess[i]).abs() < 1e-6);
         }
         assert!((2.0 * a.loss_sum - b.loss_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_hess_at_matches_whole_vector_pass_bitwise() {
+        // the shared per-row expression the fused shard kernel compiles
+        // must reproduce grad_hess_loss exactly, weight for weight
+        let f = [0.3f32, -0.8, 1.2, 0.0, 4.0];
+        let y = [1.0f32, 0.0, 1.0, 0.0, 1.0];
+        let w = [1.0f32, 0.0, 2.5, 0.7, 1.0];
+        let gh = grad_hess_loss(&f, &y, &w);
+        for i in 0..f.len() {
+            if w[i] == 0.0 {
+                continue;
+            }
+            let (g, h) = grad_hess_at(f[i], y[i], w[i]);
+            assert_eq!(g, gh.grad[i]);
+            assert_eq!(h, gh.hess[i]);
+        }
+    }
+
+    #[test]
+    fn blocked_eval_is_block_count_invariant() {
+        // per-block partials folded in order: identical totals whether the
+        // sweep is one block, many blocks, or per-block partials folded
+        // from a table — the fused accept path's shard invariance
+        let n = 1037;
+        let f: Vec<f32> = (0..n).map(|i| ((i * 37 % 100) as f32 - 50.0) / 13.0).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let w: Vec<f32> = (0..n).map(|i| if i % 7 == 0 { 0.0 } else { 1.5 }).collect();
+        let whole = eval_sums_blocked(&f, &y, &w, n);
+        for block in [1usize, 64, 512, 513] {
+            let b = eval_sums_blocked(&f, &y, &w, block);
+            // block partials are each exact; only the fold order could
+            // differ, and it is fixed — so totals for the same block size
+            // are reproducible, and across block sizes they agree tightly
+            let again = eval_sums_blocked(&f, &y, &w, block);
+            assert_eq!(b, again, "block={block} not deterministic");
+            assert!((b.0 - whole.0).abs() < 1e-9 * (1.0 + whole.0.abs()));
+            assert_eq!(b.1, whole.1);
+            assert_eq!(b.2, whole.2);
+        }
+        // folding a precomputed partial table reproduces the sweep bitwise
+        let block = 512;
+        let mut parts = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + block).min(n);
+            parts.push(eval_sums(&f[start..end], &y[start..end], &w[start..end]));
+            start = end;
+        }
+        assert_eq!(fold_eval_blocks(&parts), eval_sums_blocked(&f, &y, &w, block));
     }
 
     #[test]

@@ -76,6 +76,11 @@ CONFIG OVERRIDES (key=value):
   grad_mode=gradient|newton max_staleness=N|none  seed=N   eval_every=N
   histogram=subtract|rebuild   (sibling-subtraction child histograms vs
                                 whole-node rebuild; subtract is default)
+  target=fused|serial          (server accept pipeline: one fused row-sharded
+                                pass vs separate sweeps; fused is default,
+                                bit-identical outputs)
+  scoring=flat|perrow          (serial-path F-update engine; perrow requires
+                                target=serial)   score_threads=N
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {

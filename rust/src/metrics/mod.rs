@@ -73,7 +73,14 @@ impl LossCurve {
 
     /// Write as CSV (columns match the paper figures' axes).
     pub fn write_csv(&self, path: &Path, tag: &str) -> Result<()> {
-        let mut w = CsvWriter::new(&["tag", "n_trees", "train_loss", "test_loss", "test_error", "wall_secs"]);
+        let mut w = CsvWriter::new(&[
+            "tag",
+            "n_trees",
+            "train_loss",
+            "test_loss",
+            "test_error",
+            "wall_secs",
+        ]);
         for p in &self.points {
             w.row(&[
                 tag.to_string(),

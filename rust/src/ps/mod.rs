@@ -6,16 +6,21 @@
 //! * [`server`] — `ServerCore`, the server state machine: owns the forest
 //!   `F(x)`, the prediction vector **F**, the gradient engine (AOT/PJRT),
 //!   and the sampler; every accepted tree triggers update F → resample →
-//!   produce target → publish. The F-update runs the blocked SoA scoring
-//!   engine (`forest/score.rs`): each accepted tree is flattened once and
-//!   applied block-wise, with pooled scratch recycled across trees.
-//!   `Board` is the shared pull/push surface.
+//!   produce target → publish. `Board` is the shared pull/push surface.
+//! * [`shard`] — the fused row-sharded accept pipeline (`target=fused`,
+//!   default): F-update, Bernoulli sampling (counter-based, keyed on
+//!   `(seed, version, row)`), grad/hess and eval partials run as **one
+//!   pass per row shard** across `score_threads` threads, bit-identical
+//!   to the serial reference path for every shard count. The serial path
+//!   (`target=serial`) keeps the separate sweeps, routed through the
+//!   blocked SoA scoring engine (`forest/score.rs`).
 //! * [`worker`] — the worker loop: pull latest target, build a tree on the
 //!   sampled sub-dataset, push. Workers are mutually blind; only the
 //!   pull/build/push order *within* one worker is serialised, exactly the
 //!   paper's asynchrony model. Each worker owns a
 //!   [`crate::tree::HistogramPool`] for its lifetime, so tree builds stop
-//!   allocating histogram buffers after the first tree.
+//!   allocating histogram buffers after the first tree; idle polls back
+//!   off exponentially ([`crate::util::Backoff`]) instead of spinning.
 //!
 //! Transport is in-process (threads as workers, as in the paper's validity
 //! experiments): an unbounded mpsc channel for pushes and an RwLock'd
@@ -24,8 +29,10 @@
 
 pub mod messages;
 pub mod server;
+pub mod shard;
 pub mod worker;
 
 pub use messages::{TargetSnapshot, TreePush};
 pub use server::{Board, ServerCore};
+pub use shard::{fused_accept_pass, AcceptInputs, FusedResult, TargetMode};
 pub use worker::run_worker;

@@ -1,6 +1,6 @@
 //! Server side of the PS: state machine + shared board.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
@@ -8,16 +8,17 @@ use anyhow::Result;
 use crate::config::{GradMode, TrainConfig};
 use crate::data::sparse::CsrMatrix;
 use crate::data::{BinnedDataset, Dataset};
-use crate::forest::score::{self, ScoreMode, ScratchPool};
+use crate::forest::score::{self, ScoreMode, ScratchPool, ROW_BLOCK};
 use crate::forest::Forest;
 use crate::metrics::{CurvePoint, LossCurve, StalenessStats};
 use crate::runtime::GradientEngine;
-use crate::sampling::BernoulliSampler;
+use crate::sampling::{BernoulliSampler, SampleKey};
 use crate::tree::{FlatTree, Tree};
 use crate::util::timer::PhaseTimer;
-use crate::util::{Rng, Stopwatch};
+use crate::util::Stopwatch;
 
 use super::messages::TargetSnapshot;
+use super::shard::{fused_accept_pass, AcceptInputs, TargetMode};
 
 /// The shared pull/push surface between server and workers.
 ///
@@ -26,7 +27,6 @@ use super::messages::TargetSnapshot;
 #[derive(Debug)]
 pub struct Board {
     snapshot: RwLock<Arc<TargetSnapshot>>,
-    version: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -34,26 +34,28 @@ impl Board {
     pub fn new() -> Board {
         Board {
             snapshot: RwLock::new(Arc::new(TargetSnapshot::empty())),
-            version: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         }
     }
 
     /// Publish a new target version (server only).
     pub fn publish(&self, s: TargetSnapshot) {
-        let v = s.version;
         *self.snapshot.write().unwrap() = Arc::new(s);
-        self.version.store(v, Ordering::Release);
+    }
+
+    /// Latest published version. Derived from the snapshot itself (one
+    /// read lock) rather than a side-channel atomic: an earlier version
+    /// stored the counter *after* the snapshot swap, so `version()`
+    /// could lag a snapshot a concurrent `pull()` had already returned.
+    /// Reading the snapshot's own version makes the two views
+    /// impossible to tear apart.
+    pub fn version(&self) -> u64 {
+        self.snapshot.read().unwrap().version
     }
 
     /// Pull the current target (workers). O(1).
     pub fn pull(&self) -> Arc<TargetSnapshot> {
         self.snapshot.read().unwrap().clone()
-    }
-
-    /// Latest published version without taking the lock.
-    pub fn version(&self) -> u64 {
-        self.version.load(Ordering::Acquire)
     }
 
     pub fn request_shutdown(&self) {
@@ -94,6 +96,14 @@ pub struct ApplyOutcome {
 /// produce-target path; drives the gradient engine (AOT/PJRT when
 /// artifacts are present). Not `Send` (PJRT handles) — lives on the
 /// thread that runs the accept loop.
+///
+/// Per accepted tree the server runs one of two accept pipelines
+/// (`cfg.target`): the **fused** row-sharded pass (`ps/shard.rs`,
+/// default) collapsing F-update + sampling + target + eval into one
+/// sweep, or the **serial** reference path with separate sweeps. Both
+/// draw sampling passes from the same counter-based keys and reduce
+/// eval sums through the same blocked fold, so they produce
+/// bit-identical F vectors, targets and loss curves.
 pub struct ServerCore {
     cfg: TrainConfig,
     binned: Arc<BinnedDataset>,
@@ -101,7 +111,9 @@ pub struct ServerCore {
     train_m: Vec<f32>,
     engine: GradientEngine,
     sampler: BernoulliSampler,
-    rng: Rng,
+    /// Seed of the server's sampling pass keys: pass j is the pure
+    /// function of `(sample_seed, j, row)` — no sequential RNG state.
+    sample_seed: u64,
     /// Current prediction vector **F** over training rows.
     f: Vec<f32>,
     /// Pooled scoring scratch for the blocked F-update (step 2) — row-id
@@ -131,7 +143,6 @@ impl ServerCore {
         let forest = Forest::new(base);
         let f = vec![base; train.n_rows()];
         let sampler = BernoulliSampler::uniform(train, cfg.sampling_rate);
-        let rng = Rng::new(cfg.seed ^ SERVER_SEED_SALT);
         let test = test.map(|t| TestSet {
             f: vec![base; t.n_rows()],
             y: t.y.clone(),
@@ -145,7 +156,7 @@ impl ServerCore {
             train_m: train.m.clone(),
             engine,
             sampler,
-            rng,
+            sample_seed: cfg.seed ^ SERVER_SEED_SALT,
             f,
             score_pool: ScratchPool::new(),
             forest,
@@ -193,6 +204,127 @@ impl ServerCore {
         }
         self.staleness.record(tau);
 
+        match self.cfg.target {
+            TargetMode::Fused => self.apply_tree_fused(tree)?,
+            TargetMode::Serial => self.apply_tree_serial(tree)?,
+        }
+        Ok(ApplyOutcome {
+            staleness: tau,
+            accepted: true,
+            n_trees: self.forest.n_trees(),
+        })
+    }
+
+    /// Whether the tree that takes the accept counter to `n_after`
+    /// records a loss-curve point.
+    fn eval_due(&self, n_after: usize) -> bool {
+        n_after % self.cfg.eval_every == 0 || n_after == self.cfg.n_trees
+    }
+
+    /// The fused accept pipeline: steps 2–4 (and the eval sums, when
+    /// due) in **one sharded pass** over the training rows
+    /// (`ps/shard.rs`), instead of the serial path's 3–4 separate
+    /// sweeps. Held-out margins keep their own incremental blocked
+    /// update — the fused pass covers the training side.
+    fn apply_tree_fused(&mut self, tree: Tree) -> Result<()> {
+        let v = self.cfg.step_length;
+        let flat = self
+            .timer
+            .time("server/flatten_tree", || FlatTree::from_tree(&tree));
+        let new_version = self.forest.n_trees() as u64 + 1;
+        let eval_due = self.eval_due(self.forest.n_trees() + 1);
+        // AOT engines are not shard-wise: keep scoring + sampling fused,
+        // fall back to whole-vector engine calls for target and eval
+        let native = self.engine.supports_ranges();
+        let t0 = std::time::Instant::now();
+        let fused = fused_accept_pass(
+            &AcceptInputs {
+                flat: Some(&flat),
+                binned: &self.binned,
+                v,
+                y: &self.train_y,
+                m: &self.train_m,
+                sampler: &self.sampler,
+                key: SampleKey {
+                    seed: self.sample_seed,
+                    version: new_version,
+                },
+                compute_target: native,
+                want_eval: eval_due && native,
+            },
+            &mut self.f,
+            self.cfg.score_threads,
+            &mut self.score_pool,
+        );
+        self.timer.record("server/fused_pass", t0.elapsed());
+        if let Some(test) = &mut self.test {
+            let t0 = std::time::Instant::now();
+            score::add_tree_raw(
+                &flat,
+                &test.x,
+                v,
+                &mut test.f,
+                self.cfg.score_threads,
+                &mut self.score_pool,
+            );
+            self.timer.record("server/update_f_test", t0.elapsed());
+        }
+        self.forest.push(v, tree);
+
+        let (grad, hess) = if native {
+            let hess = match self.cfg.grad_mode {
+                GradMode::Newton => fused.hess,
+                // gradient mode: weighted-LS fit => h_i := m'_i (moved,
+                // not cloned — the pass result is consumed right here)
+                GradMode::Gradient => fused.weights,
+            };
+            (fused.grad, hess)
+        } else {
+            let t0 = std::time::Instant::now();
+            let gh = self
+                .engine
+                .grad_hess_loss(&self.f, &self.train_y, &fused.weights)?;
+            self.timer.record("server/produce_target", t0.elapsed());
+            let hess = match self.cfg.grad_mode {
+                GradMode::Newton => gh.hess,
+                GradMode::Gradient => fused.weights,
+            };
+            (gh.grad, hess)
+        };
+        self.current = TargetSnapshot {
+            version: new_version,
+            grad: Arc::new(grad),
+            hess: Arc::new(hess),
+            rows: Arc::new(fused.rows),
+        };
+
+        if eval_due {
+            let t0 = std::time::Instant::now();
+            let (l, _e, w) = match fused.eval {
+                Some(sums) => sums,
+                None => self
+                    .engine
+                    .eval_sums_blocked(&self.f, &self.train_y, &self.train_m, ROW_BLOCK)?,
+            };
+            let train_loss = if w > 0.0 { l / w } else { 0.0 };
+            let (test_loss, test_error) = self.test_eval()?;
+            self.timer.record("server/eval", t0.elapsed());
+            self.curve.push(CurvePoint {
+                n_trees: self.forest.n_trees(),
+                train_loss,
+                test_loss,
+                test_error,
+                wall_secs: self.clock.elapsed(),
+            });
+        }
+        Ok(())
+    }
+
+    /// The serial reference pipeline: separate sweeps for scoring,
+    /// sampling, target production and eval. Same counter-based sample
+    /// keys and same blocked eval reduction as the fused path, so the
+    /// two stay bit-identical (the shard-invariance tests' anchor).
+    fn apply_tree_serial(&mut self, tree: Tree) -> Result<()> {
         // step 2: F^j = F^{j-1} + v * Tree. The blocked SoA engine and the
         // per-row enum reference produce bit-identical F vectors (same f32
         // ops in the same per-row order); `scoring=perrow` keeps the
@@ -247,23 +379,21 @@ impl ServerCore {
         let new_version = self.forest.n_trees() as u64;
         self.produce_target(new_version)?;
 
-        if self.forest.n_trees() % self.cfg.eval_every == 0
-            || self.forest.n_trees() == self.cfg.n_trees
-        {
+        if self.eval_due(self.forest.n_trees()) {
             self.eval_point()?;
         }
-        Ok(ApplyOutcome {
-            staleness: tau,
-            accepted: true,
-            n_trees: self.forest.n_trees(),
-        })
+        Ok(())
     }
 
-    /// Sample Q and compute the stochastic target on the sub-dataset.
+    /// Sample Q (pass keyed on `version`) and compute the stochastic
+    /// target on the sub-dataset. Used by the serial path and by both
+    /// pipelines' shared init (version 0 has no tree to fuse with).
     fn produce_target(&mut self, version: u64) -> Result<()> {
-        let pass = self
-            .timer
-            .time("server/sample", || self.sampler.draw(&mut self.rng));
+        let key = SampleKey {
+            seed: self.sample_seed,
+            version,
+        };
+        let pass = self.timer.time("server/sample", || self.sampler.draw(key));
         let (f, y) = (&self.f, &self.train_y);
         let gh = {
             let engine = &mut self.engine;
@@ -287,23 +417,31 @@ impl ServerCore {
         Ok(())
     }
 
-    /// Record a loss-curve point (full-weight train loss + test metrics).
-    fn eval_point(&mut self) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let (l, _e, w) = self
-            .engine
-            .eval_sums(&self.f, &self.train_y, &self.train_m)?;
-        let train_loss = if w > 0.0 { l / w } else { 0.0 };
-        let (test_loss, test_error) = if let Some(test) = &self.test {
-            let (tl, te, tw) = self.engine.eval_sums(&test.f, &test.y, &test.w)?;
+    /// Held-out metrics on the incrementally-maintained test margins.
+    fn test_eval(&mut self) -> Result<(f64, f64)> {
+        if let Some(test) = &self.test {
+            let (tl, te, tw) = self
+                .engine
+                .eval_sums_blocked(&test.f, &test.y, &test.w, ROW_BLOCK)?;
             if tw > 0.0 {
-                (tl / tw, te / tw)
+                Ok((tl / tw, te / tw))
             } else {
-                (f64::NAN, f64::NAN)
+                Ok((f64::NAN, f64::NAN))
             }
         } else {
-            (f64::NAN, f64::NAN)
-        };
+            Ok((f64::NAN, f64::NAN))
+        }
+    }
+
+    /// Record a loss-curve point (full-weight train loss + test metrics)
+    /// with the blocked eval reduction both accept pipelines share.
+    fn eval_point(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let (l, _e, w) =
+            self.engine
+                .eval_sums_blocked(&self.f, &self.train_y, &self.train_m, ROW_BLOCK)?;
+        let train_loss = if w > 0.0 { l / w } else { 0.0 };
+        let (test_loss, test_error) = self.test_eval()?;
         self.timer.record("server/eval", t0.elapsed());
         self.curve.push(CurvePoint {
             n_trees: self.forest.n_trees(),
@@ -324,6 +462,7 @@ const SERVER_SEED_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::util::Rng;
 
     fn mini_cfg(n_trees: usize) -> TrainConfig {
         let mut cfg = TrainConfig::default();
@@ -340,6 +479,47 @@ mod tests {
     fn core_on(ds: &Dataset, cfg: &TrainConfig) -> ServerCore {
         let binned = Arc::new(BinnedDataset::from_dataset(ds, cfg.max_bins).unwrap());
         ServerCore::new(cfg, ds, binned, None, GradientEngine::native()).unwrap()
+    }
+
+    #[test]
+    fn board_version_never_lags_a_pulled_snapshot() {
+        // regression: version was stored *after* the snapshot swap, so a
+        // concurrent reader could pull snapshot v+1 while version() still
+        // said v. Deriving version from the snapshot closes the window:
+        // for any interleaving, a pull followed by version() must see
+        // version() >= pulled.version.
+        let board = Arc::new(Board::new());
+        std::thread::scope(|s| {
+            let readers: Vec<_> = (0..3)
+                .map(|_| {
+                    let b = board.clone();
+                    s.spawn(move || {
+                        while !b.is_shutdown() {
+                            let snap = b.pull();
+                            let v = b.version();
+                            assert!(
+                                v >= snap.version,
+                                "version() {v} lagged pulled snapshot {}",
+                                snap.version
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for v in 1..=2_000u64 {
+                board.publish(TargetSnapshot {
+                    version: v,
+                    grad: Arc::new(vec![0.0; 4]),
+                    hess: Arc::new(vec![0.0; 4]),
+                    rows: Arc::new(vec![0]),
+                });
+            }
+            board.request_shutdown();
+            for r in readers {
+                r.join().unwrap();
+            }
+        });
+        assert_eq!(board.version(), 2_000);
     }
 
     #[test]
@@ -384,7 +564,14 @@ mod tests {
         let mut core = core_on(&ds, &cfg);
         let s0 = core.snapshot();
         let mut rng = Rng::new(2);
-        let t1 = crate::tree::build_tree(&core.binned.clone(), &s0.rows, &s0.grad, &s0.hess, &cfg.tree, &mut rng);
+        let t1 = crate::tree::build_tree(
+            &core.binned.clone(),
+            &s0.rows,
+            &s0.grad,
+            &s0.hess,
+            &cfg.tree,
+            &mut rng,
+        );
         let t2 = t1.clone();
         core.apply_tree(t1, 0).unwrap();
         // second push still based on version 0: tau = 1 > max 0 => rejected
@@ -412,7 +599,9 @@ mod tests {
         // the acceptance bar for the blocked engine: both scorers yield
         // the same F vector, hence bit-identical targets and loss curves
         // 2600 rows: the train split exceeds 2 * ROW_BLOCK, so the flat
-        // core takes the threaded (block-claiming) path
+        // core takes the threaded (block-claiming) path. The flat core
+        // runs the default fused accept pipeline, the per-row reference
+        // requires target=serial — so this also pins fused ≡ serial.
         let ds = synthetic::realsim_like(2_600, 6);
         let mut rng0 = Rng::new(7);
         let (tr, te) = ds.split(0.25, &mut rng0);
@@ -421,6 +610,7 @@ mod tests {
         cfg_flat.scoring = crate::forest::ScoreMode::Flat;
         cfg_flat.score_threads = 3;
         let mut cfg_ref = cfg_flat.clone();
+        cfg_ref.target = TargetMode::Serial;
         cfg_ref.scoring = crate::forest::ScoreMode::PerRow;
         cfg_ref.score_threads = 1;
         let mut core_a =
@@ -450,6 +640,107 @@ mod tests {
     }
 
     #[test]
+    fn fused_and_serial_accept_paths_are_bit_identical() {
+        // the tentpole acceptance bar: one fused sharded pass per tree
+        // (multi-thread) vs the serial reference's separate sweeps —
+        // same F, same sampled rows/targets, same loss curves, same
+        // staleness stats, at every tested thread count.
+        let ds = synthetic::realsim_like(2_800, 61);
+        let mut rng0 = Rng::new(3);
+        let (tr, te) = ds.split(0.2, &mut rng0);
+        let binned = Arc::new(BinnedDataset::from_dataset(&tr, 16).unwrap());
+        let mut cfg_serial = mini_cfg(10);
+        cfg_serial.target = TargetMode::Serial;
+        cfg_serial.score_threads = 1;
+        cfg_serial.eval_every = 2;
+        let mut serial = ServerCore::new(
+            &cfg_serial,
+            &tr,
+            binned.clone(),
+            Some(&te),
+            GradientEngine::native(),
+        )
+        .unwrap();
+        // drive the serial core; replay the same trees into fused cores
+        let mut rng = Rng::new(13);
+        let mut trees = Vec::new();
+        for _ in 0..10 {
+            let s = serial.snapshot();
+            let tree = crate::tree::build_tree(
+                &binned, &s.rows, &s.grad, &s.hess, &cfg_serial.tree, &mut rng,
+            );
+            trees.push(tree.clone());
+            serial.apply_tree(tree, s.version).unwrap();
+        }
+        for threads in [1usize, 2, 4] {
+            let mut cfg_fused = cfg_serial.clone();
+            cfg_fused.target = TargetMode::Fused;
+            cfg_fused.score_threads = threads;
+            let mut fused = ServerCore::new(
+                &cfg_fused,
+                &tr,
+                binned.clone(),
+                Some(&te),
+                GradientEngine::native(),
+            )
+            .unwrap();
+            for tree in &trees {
+                let s = fused.snapshot();
+                // identical state ⇒ identical published targets ⇒ the
+                // serial core's trees are exactly what workers would build
+                let out = fused.apply_tree(tree.clone(), s.version).unwrap();
+                assert!(out.accepted);
+            }
+            assert_eq!(fused.f, serial.f, "train F diverged (threads={threads})");
+            let sf = fused.snapshot();
+            let ss = serial.snapshot();
+            assert_eq!(sf.version, ss.version);
+            assert_eq!(*sf.rows, *ss.rows, "sampled rows diverged");
+            assert_eq!(*sf.grad, *ss.grad, "targets diverged");
+            assert_eq!(*sf.hess, *ss.hess, "hessians diverged");
+            let curves = |c: &crate::metrics::LossCurve| {
+                c.points
+                    .iter()
+                    .map(|p| (p.n_trees, p.train_loss, p.test_loss, p.test_error))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(
+                curves(&fused.curve),
+                curves(&serial.curve),
+                "loss curves diverged (threads={threads})"
+            );
+            assert_eq!(fused.staleness.samples, serial.staleness.samples);
+            assert_eq!(fused.staleness.rejected, serial.staleness.rejected);
+        }
+    }
+
+    #[test]
+    fn fused_newton_mode_uses_curvature_hessian() {
+        let ds = synthetic::realsim_like(400, 62);
+        let mut cfg = mini_cfg(4);
+        cfg.grad_mode = GradMode::Newton;
+        cfg.score_threads = 2;
+        let mut core = core_on(&ds, &cfg);
+        let s0 = core.snapshot();
+        let mut rng = Rng::new(8);
+        let tree = crate::tree::build_tree(
+            &core.binned.clone(),
+            &s0.rows,
+            &s0.grad,
+            &s0.hess,
+            &cfg.tree,
+            &mut rng,
+        );
+        core.apply_tree(tree, s0.version).unwrap();
+        let s = core.snapshot();
+        // Newton hess is w·4p(1-p) < w for all finite margins
+        for &r in s.rows.iter().take(20) {
+            let h = s.hess[r as usize];
+            assert!(h > 0.0 && h < 1.2 / 0.9, "h={h}");
+        }
+    }
+
+    #[test]
     fn training_loss_descends_serially() {
         let ds = synthetic::realsim_like(400, 5);
         let cfg = mini_cfg(15);
@@ -457,7 +748,14 @@ mod tests {
         let mut rng = Rng::new(3);
         for _ in 0..15 {
             let s = core.snapshot();
-            let tree = crate::tree::build_tree(&core.binned.clone(), &s.rows, &s.grad, &s.hess, &cfg.tree, &mut rng);
+            let tree = crate::tree::build_tree(
+                &core.binned.clone(),
+                &s.rows,
+                &s.grad,
+                &s.hess,
+                &cfg.tree,
+                &mut rng,
+            );
             core.apply_tree(tree, s.version).unwrap();
         }
         let first = core.curve.points.first().unwrap().train_loss;

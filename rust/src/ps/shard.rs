@@ -1,0 +1,450 @@
+//! The fused row-sharded accept pipeline — Algorithm 3's server steps
+//! 2–4 collapsed into **one pass over the training rows** per accepted
+//! tree.
+//!
+//! The serial accept path sweeps all n rows four times per tree: score
+//! the tree into **F** (step 2), draw the next Bernoulli sample (step
+//! 3), compute grad/hess for the new target (step 4), and — on eval
+//! trees — accumulate loss/error sums. Each sweep re-streams the same
+//! vectors through the cache, and all four sit on the accept loop's
+//! critical path, bounding accepted trees/sec at high worker counts.
+//!
+//! [`fused_accept_pass`] partitions the rows into contiguous
+//! whole-block shards (multiples of [`ROW_BLOCK`]) and runs all four
+//! stages block by block inside each shard: a block's margins are
+//! updated by the flattened tree, and while they are still
+//! cache-resident the block is sampled, its target rows get grad/hess
+//! on the fresh margins, and its eval partial is taken. Shards execute
+//! in parallel on `score_threads` scoped threads, each owning disjoint
+//! `&mut` slices of F/weights/grad/hess, so no synchronisation exists
+//! inside the pass.
+//!
+//! **Why fused ≡ serial, bit for bit, at every shard count:**
+//!
+//! * *F-update* — the per-shard block loop applies
+//!   [`score::add_block_binned`], the exact kernel `target=serial`'s
+//!   blocked scorer applies to the same blocks; per-row f32 ops are
+//!   identical regardless of which thread touches a block.
+//! * *Sampling* — every row's draw is a [`crate::util::CounterRng`] keyed on
+//!   `(seed, version, row)` (see `sampling/bernoulli.rs`), a pure
+//!   function of the key: any contiguous sharding reproduces the
+//!   sequential row set exactly.
+//! * *Targets* — grad/hess per row are `logistic::grad_hess_at` on the
+//!   updated margin, the same expression the whole-vector engine
+//!   compiles; rows are independent, so sharding cannot reorder
+//!   anything.
+//! * *Eval* — f64 loss/error partials are taken per global
+//!   [`ROW_BLOCK`] (each partial starts from 0.0) and folded in block
+//!   order after the join ([`logistic::fold_eval_blocks`]); the serial
+//!   path reduces through `logistic::eval_sums_blocked` with the same
+//!   block size, so the two f64 addition sequences are identical.
+//!
+//! The AOT gradient engine is neither `Send` nor shard-wise
+//! (`GradientEngine::supports_ranges`), so under AOT the server runs
+//! this pass with `compute_target`/`want_eval` off — scoring and
+//! sampling stay fused and sharded — and falls back to whole-vector
+//! engine calls for the target and eval, the same calls the serial
+//! path makes.
+
+use crate::data::BinnedDataset;
+use crate::forest::score::{self, ScoreScratch, ScratchPool, ROW_BLOCK};
+use crate::loss::logistic;
+use crate::sampling::{BernoulliSampler, SampleKey};
+use crate::tree::FlatTree;
+
+/// Which accept pipeline the server runs per accepted tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TargetMode {
+    /// One fused sharded pass: F-update + sample + grad/hess + eval
+    /// partials per row block (this module).
+    #[default]
+    Fused,
+    /// The reference path: separate full-row sweeps for scoring,
+    /// sampling, target production and eval — kept selectable for the
+    /// equivalence tests and the accept-path ablation.
+    Serial,
+}
+
+impl TargetMode {
+    pub fn parse(s: &str) -> anyhow::Result<TargetMode> {
+        match s {
+            "fused" => Ok(TargetMode::Fused),
+            "serial" => Ok(TargetMode::Serial),
+            other => anyhow::bail!("unknown target mode '{other}' (fused|serial)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TargetMode::Fused => "fused",
+            TargetMode::Serial => "serial",
+        }
+    }
+}
+
+/// Read-only inputs of one fused accept pass (bundled so the per-shard
+/// worker borrows one `Sync` view instead of nine arguments).
+pub struct AcceptInputs<'a> {
+    /// The accepted tree, flattened; `None` skips the F-update (the
+    /// server's init pass, where only sampling/target/eval run).
+    pub flat: Option<&'a FlatTree>,
+    pub binned: &'a BinnedDataset,
+    /// Step length v scaling the tree into F.
+    pub v: f32,
+    /// Training labels, full length.
+    pub y: &'a [f32],
+    /// Full multiplicities m_i (eval weights).
+    pub m: &'a [f32],
+    pub sampler: &'a BernoulliSampler,
+    /// Key of the sampling pass being produced (version = j + 1).
+    pub key: SampleKey,
+    /// Compute grad/hess in-shard (native engine); off under AOT, where
+    /// the server falls back to a whole-vector engine call.
+    pub compute_target: bool,
+    /// Accumulate per-block eval partials (only on eval trees, native).
+    pub want_eval: bool,
+}
+
+/// Output of one fused accept pass. `weights` is full-length, zero
+/// outside the sampled support; `rows` is the support, ascending;
+/// `grad`/`hess` are full-length when `compute_target` was set and
+/// empty otherwise (the AOT fallback produces them on the engine).
+pub struct FusedResult {
+    pub weights: Vec<f32>,
+    pub grad: Vec<f32>,
+    pub hess: Vec<f32>,
+    pub rows: Vec<u32>,
+    /// (Σloss, Σerr, Σw) over full multiplicities on the updated
+    /// margins; `Some` iff `want_eval` was set.
+    pub eval: Option<(f64, f64, f64)>,
+}
+
+/// One shard's disjoint mutable views (rows `[start_row, start_row +
+/// f.len())`, whole [`ROW_BLOCK`]s except possibly the global tail).
+struct ShardTask<'a> {
+    start_row: usize,
+    f: &'a mut [f32],
+    weights: &'a mut [f32],
+    grad: &'a mut [f32],
+    hess: &'a mut [f32],
+    /// Per-block eval partials, one slot per block of this shard (empty
+    /// when eval is off).
+    eval: &'a mut [(f64, f64, f64)],
+}
+
+/// The per-shard kernel: block loop running score → sample → target →
+/// eval on each [`ROW_BLOCK`]. Returns the shard's sampled rows
+/// (ascending global ids).
+fn run_shard(inp: &AcceptInputs<'_>, task: ShardTask<'_>, scratch: &mut ScoreScratch) -> Vec<u32> {
+    let ShardTask {
+        start_row,
+        f,
+        weights,
+        grad,
+        hess,
+        eval,
+    } = task;
+    let n = f.len();
+    let mut rows = Vec::new();
+    let mut bi = 0usize;
+    let mut local = 0usize;
+    while local < n {
+        let end = (local + ROW_BLOCK).min(n);
+        let gstart = start_row + local;
+        // step 2: F_block += v * tree(rows) — the blocked scorer's kernel
+        if let Some(flat) = inp.flat {
+            score::add_block_binned(flat, inp.binned, inp.v, gstart, &mut f[local..end], scratch);
+        }
+        // steps 3–4 on the fresh margins, row by row while cache-resident
+        for i in local..end {
+            let r = start_row + i;
+            let w = inp.sampler.draw_row(inp.key, r);
+            if w > 0.0 {
+                weights[i] = w;
+                rows.push(r as u32);
+                if inp.compute_target {
+                    let (g, h) = logistic::grad_hess_at(f[i], inp.y[r], w);
+                    grad[i] = g;
+                    hess[i] = h;
+                }
+            }
+        }
+        // eval partial for this global block (full multiplicities)
+        if inp.want_eval {
+            let gend = start_row + end;
+            eval[bi] =
+                logistic::eval_sums(&f[local..end], &inp.y[gstart..gend], &inp.m[gstart..gend]);
+        }
+        bi += 1;
+        local = end;
+    }
+    rows
+}
+
+/// Run one fused accept pass over `f`, sharded across `n_threads`.
+/// Scratch buffers come from — and return to — `pool` (the same
+/// [`ScratchPool`] contract as the blocked scorer). The result is
+/// bit-identical for every `n_threads` (see the module docs).
+pub fn fused_accept_pass(
+    inp: &AcceptInputs<'_>,
+    f: &mut [f32],
+    n_threads: usize,
+    pool: &mut ScratchPool,
+) -> FusedResult {
+    let n = f.len();
+    assert_eq!(inp.y.len(), n);
+    assert_eq!(inp.m.len(), n);
+    assert_eq!(inp.sampler.n_rows(), n);
+    let n_blocks = n.div_ceil(ROW_BLOCK).max(1);
+    let n_shards = n_threads.clamp(1, n_blocks);
+    let mut weights = vec![0.0f32; n];
+    // target vectors only materialise when computed in-shard (native);
+    // the AOT fallback produces them whole-vector on the engine instead
+    let target_len = if inp.compute_target { n } else { 0 };
+    let mut grad = vec![0.0f32; target_len];
+    let mut hess = vec![0.0f32; target_len];
+    let mut eval_blocks =
+        vec![(0.0f64, 0.0f64, 0.0f64); if inp.want_eval { n_blocks } else { 0 }];
+
+    let rows = if n_shards == 1 {
+        let mut scratch = pool.take();
+        let rows = run_shard(
+            inp,
+            ShardTask {
+                start_row: 0,
+                f,
+                weights: &mut weights,
+                grad: &mut grad,
+                hess: &mut hess,
+                eval: &mut eval_blocks,
+            },
+            &mut scratch,
+        );
+        pool.give(scratch);
+        rows
+    } else {
+        // carve contiguous whole-block shards (only the global tail block
+        // may be short), splitting every vector into disjoint &mut views
+        let per = n_blocks / n_shards;
+        let rem = n_blocks % n_shards;
+        let mut tasks = Vec::with_capacity(n_shards);
+        let mut f_rest = f;
+        let mut w_rest = weights.as_mut_slice();
+        let mut g_rest = grad.as_mut_slice();
+        let mut h_rest = hess.as_mut_slice();
+        let mut e_rest = eval_blocks.as_mut_slice();
+        let mut row0 = 0usize;
+        for s in 0..n_shards {
+            let blocks = per + usize::from(s < rem);
+            let len = (blocks * ROW_BLOCK).min(n - row0);
+            let (f_s, fr) = f_rest.split_at_mut(len);
+            f_rest = fr;
+            let (w_s, wr) = w_rest.split_at_mut(len);
+            w_rest = wr;
+            let target_len = if inp.compute_target { len } else { 0 };
+            let (g_s, gr) = g_rest.split_at_mut(target_len);
+            g_rest = gr;
+            let (h_s, hr) = h_rest.split_at_mut(target_len);
+            h_rest = hr;
+            let (e_s, er) = e_rest.split_at_mut(if inp.want_eval { blocks } else { 0 });
+            e_rest = er;
+            tasks.push(ShardTask {
+                start_row: row0,
+                f: f_s,
+                weights: w_s,
+                grad: g_s,
+                hess: h_s,
+                eval: e_s,
+            });
+            row0 += len;
+        }
+        let mut scratches: Vec<_> = (0..n_shards).map(|_| pool.take()).collect();
+        let shard_rows: Vec<Vec<u32>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = tasks
+                .into_iter()
+                .zip(scratches.iter_mut())
+                .map(|(task, scratch)| sc.spawn(move || run_shard(inp, task, scratch)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for s in scratches {
+            pool.give(s);
+        }
+        // shards are contiguous ascending, so concatenation is ascending
+        let mut rows = Vec::with_capacity(shard_rows.iter().map(Vec::len).sum());
+        for r in &shard_rows {
+            rows.extend_from_slice(r);
+        }
+        rows
+    };
+
+    let eval = inp
+        .want_eval
+        .then(|| logistic::fold_eval_blocks(&eval_blocks));
+    FusedResult {
+        weights,
+        grad,
+        hess,
+        rows,
+        eval,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, Dataset};
+    use crate::tree::{build_tree, TreeParams};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn setup(n: usize, seed: u64) -> (Dataset, Arc<BinnedDataset>, FlatTree) {
+        let ds = synthetic::realsim_like(n, seed);
+        let b = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let w = vec![1.0f32; n];
+        let f0 = vec![0.0f32; n];
+        let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let params = TreeParams {
+            max_leaves: 12,
+            feature_rate: 0.9,
+            ..Default::default()
+        };
+        let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(seed));
+        (ds, b, FlatTree::from_tree(&tree))
+    }
+
+    fn inputs<'a>(
+        ds: &'a Dataset,
+        b: &'a BinnedDataset,
+        flat: Option<&'a FlatTree>,
+        sampler: &'a BernoulliSampler,
+        key: SampleKey,
+        want_eval: bool,
+    ) -> AcceptInputs<'a> {
+        AcceptInputs {
+            flat,
+            binned: b,
+            v: 0.2,
+            y: &ds.y,
+            m: &ds.m,
+            sampler,
+            key,
+            compute_target: true,
+            want_eval,
+        }
+    }
+
+    #[test]
+    fn fused_pass_matches_the_serial_recipe_bitwise() {
+        // reference: the four separate sweeps the serial path performs
+        let (ds, b, flat) = setup(1_900, 21);
+        let n = ds.n_rows();
+        let sampler = BernoulliSampler::uniform(&ds, 0.7);
+        let key = SampleKey { seed: 5, version: 3 };
+
+        let mut f_ref = vec![0.05f32; n];
+        score::add_tree_binned(&flat, &b, 0.2, &mut f_ref, 1, &mut ScratchPool::new());
+        let pass = sampler.draw(key);
+        let gh = logistic::grad_hess_loss(&f_ref, &ds.y, &pass.weights);
+        let ev_ref = logistic::eval_sums_blocked(&f_ref, &ds.y, &ds.m, ROW_BLOCK);
+
+        let mut f = vec![0.05f32; n];
+        let mut pool = ScratchPool::new();
+        let inp = inputs(&ds, &b, Some(&flat), &sampler, key, true);
+        let out = fused_accept_pass(&inp, &mut f, 3, &mut pool);
+
+        assert_eq!(f, f_ref, "fused F diverged from blocked scorer");
+        assert_eq!(out.weights, pass.weights);
+        assert_eq!(out.rows, pass.rows);
+        assert_eq!(out.grad, gh.grad);
+        assert_eq!(out.hess, gh.hess);
+        assert_eq!(out.eval.unwrap(), ev_ref);
+    }
+
+    #[test]
+    fn fused_pass_is_shard_count_invariant() {
+        let (ds, b, flat) = setup(2_300, 22);
+        let n = ds.n_rows();
+        let sampler = BernoulliSampler::uniform(&ds, 0.5);
+        let key = SampleKey { seed: 9, version: 7 };
+        let base = vec![0.1f32; n];
+        let mut pool = ScratchPool::new();
+        let inp = inputs(&ds, &b, Some(&flat), &sampler, key, true);
+        let mut f1 = base.clone();
+        let one = fused_accept_pass(&inp, &mut f1, 1, &mut pool);
+        for threads in [2usize, 3, 8] {
+            let mut ft = base.clone();
+            let many = fused_accept_pass(&inp, &mut ft, threads, &mut pool);
+            assert_eq!(ft, f1, "F differs at {threads} shards");
+            assert_eq!(many.weights, one.weights, "weights differ at {threads}");
+            assert_eq!(many.rows, one.rows, "rows differ at {threads}");
+            assert_eq!(many.grad, one.grad, "grad differs at {threads}");
+            assert_eq!(many.hess, one.hess, "hess differs at {threads}");
+            assert_eq!(many.eval, one.eval, "eval sums differ at {threads}");
+        }
+    }
+
+    #[test]
+    fn init_pass_without_tree_only_samples_and_produces_target() {
+        let (ds, b, _flat) = setup(600, 23);
+        let sampler = BernoulliSampler::uniform(&ds, 0.8);
+        let key = SampleKey { seed: 1, version: 0 };
+        let base = vec![0.3f32; ds.n_rows()];
+        let mut f = base.clone();
+        let mut pool = ScratchPool::new();
+        let inp = inputs(&ds, &b, None, &sampler, key, false);
+        let out = fused_accept_pass(&inp, &mut f, 4, &mut pool);
+        assert_eq!(f, base, "init pass must not touch F");
+        assert!(out.eval.is_none());
+        let pass = sampler.draw(key);
+        assert_eq!(out.rows, pass.rows);
+        let gh = logistic::grad_hess_loss(&base, &ds.y, &pass.weights);
+        assert_eq!(out.grad, gh.grad);
+    }
+
+    #[test]
+    fn aot_fallback_shape_skips_target_vectors_but_keeps_sampling_fused() {
+        // compute_target off (AOT engines): scoring + sampling still run
+        // fused and sharded; grad/hess are not materialised at all
+        let (ds, b, flat) = setup(1_100, 25);
+        let sampler = BernoulliSampler::uniform(&ds, 0.5);
+        let key = SampleKey { seed: 3, version: 2 };
+        let mut inp = inputs(&ds, &b, Some(&flat), &sampler, key, false);
+        inp.compute_target = false;
+        let mut f = vec![0.0f32; ds.n_rows()];
+        let mut pool = ScratchPool::new();
+        let out = fused_accept_pass(&inp, &mut f, 2, &mut pool);
+        assert!(out.grad.is_empty() && out.hess.is_empty());
+        let pass = sampler.draw(key);
+        assert_eq!(out.weights, pass.weights);
+        assert_eq!(out.rows, pass.rows);
+        assert!(f.iter().any(|&x| x != 0.0), "F-update must still run");
+    }
+
+    #[test]
+    fn scratch_pool_reaches_steady_state_across_passes() {
+        let (ds, b, flat) = setup(2_100, 24);
+        let sampler = BernoulliSampler::uniform(&ds, 0.6);
+        let mut f = vec![0.0f32; ds.n_rows()];
+        let mut pool = ScratchPool::new();
+        for v in 0..5 {
+            let key = SampleKey { seed: 2, version: v };
+            let inp = inputs(&ds, &b, Some(&flat), &sampler, key, v % 2 == 0);
+            fused_accept_pass(&inp, &mut f, 3, &mut pool);
+        }
+        assert!(pool.allocated() <= 3, "allocated {}", pool.allocated());
+        assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
+    }
+
+    #[test]
+    fn target_mode_parse_roundtrip() {
+        assert_eq!(TargetMode::parse("fused").unwrap(), TargetMode::Fused);
+        assert_eq!(TargetMode::parse("serial").unwrap(), TargetMode::Serial);
+        assert!(TargetMode::parse("split").is_err());
+        for m in [TargetMode::Fused, TargetMode::Serial] {
+            assert_eq!(TargetMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert_eq!(TargetMode::default(), TargetMode::Fused);
+    }
+}

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use crate::data::BinnedDataset;
 use crate::tree::{build_tree_pooled, HistogramPool, TreeParams};
-use crate::util::{Rng, Stopwatch};
+use crate::util::{Backoff, Rng, Stopwatch};
 
 use super::messages::TreePush;
 use super::server::Board;
@@ -35,14 +35,19 @@ pub fn run_worker(
     let mut pushed = 0usize;
     // one pool per worker, held across trees: allocate once, recycle forever
     let mut pool = HistogramPool::new(binned.total_bins());
+    // bounded exponential backoff while the server has nothing published:
+    // a raw yield-spin burns a core (and steals cycles from the server
+    // producing version 0); parked sleeps cap the cost, reset on success
+    let mut backoff = Backoff::new();
     while !board.is_shutdown() {
         // 1. pull the current L'_random
         let snapshot = board.pull();
         if snapshot.grad.is_empty() {
-            // server not initialised yet; yield and retry
-            std::thread::yield_now();
+            // server not initialised yet; back off and retry
+            backoff.idle();
             continue;
         }
+        backoff.reset();
         // 2. build Tree_t on the sampled sub-dataset (pooled buffers)
         let mut sw = Stopwatch::new();
         let tree = build_tree_pooled(
@@ -129,6 +134,36 @@ mod tests {
     }
 
     #[test]
+    fn worker_backs_off_on_empty_board_then_picks_up_first_target() {
+        // the board starts unpublished: the worker must park (not wedge)
+        // and still catch version 0 promptly once it appears
+        let ds = synthetic::realsim_like(120, 3);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let board = Board::new();
+        let (tx, rx) = mpsc::channel();
+        std::thread::scope(|s| {
+            let board_ref = &board;
+            let b = binned.clone();
+            let h = s.spawn(move || {
+                let params = TreeParams {
+                    max_leaves: 4,
+                    ..Default::default()
+                };
+                run_worker(1, board_ref, b, params, tx, 11)
+            });
+            // let the worker reach the deep end of its backoff schedule
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let late = board_with_target(&ds, &binned);
+            board.publish(late.pull().as_ref().clone());
+            let first = rx.recv().unwrap();
+            assert_eq!(first.based_on, 0);
+            board.request_shutdown();
+            while rx.try_recv().is_ok() {}
+            assert!(h.join().unwrap() >= 1);
+        });
+    }
+
+    #[test]
     fn worker_exits_when_channel_closes() {
         let ds = synthetic::realsim_like(100, 2);
         let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
@@ -138,7 +173,11 @@ mod tests {
             let board_ref = &board;
             let b = binned.clone();
             let h = s.spawn(move || {
-                run_worker(0, board_ref, b, TreeParams { max_leaves: 2, ..Default::default() }, tx, 1)
+                let params = TreeParams {
+                    max_leaves: 2,
+                    ..Default::default()
+                };
+                run_worker(0, board_ref, b, params, tx, 1)
             });
             let _first = rx.recv().unwrap();
             drop(rx); // hang up

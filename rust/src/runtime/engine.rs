@@ -137,6 +137,73 @@ impl GradientEngine {
             Some(impossible) => match *impossible {},
         }
     }
+
+    /// True when the engine's per-row math is plain thread-safe Rust, so
+    /// the fused accept pipeline can run grad/hess/eval *inside* its
+    /// row shards (`ps/shard.rs`). False for AOT: PJRT handles are
+    /// neither `Send` nor shard-wise, so the fused path falls back to
+    /// whole-vector engine calls for the target and eval (sampling and
+    /// the F-update stay fused and sharded either way).
+    pub fn supports_ranges(&self) -> bool {
+        self.aot.is_none()
+    }
+
+    /// Range (shard-wise) produce-target: grad/hess/Σ over rows
+    /// `[lo, hi)` only, returned in local indexing. Public API for
+    /// shard-wise engine consumers; the fused accept pipeline itself
+    /// inlines the native per-row kernel (`logistic::grad_hess_at`)
+    /// instead of going through the engine, because the AOT variant of
+    /// this call executes its bucketed whole-vector artifact on the
+    /// padded sub-slice — correct, but paying artifact padding per
+    /// call.
+    pub fn grad_hess_loss_range(
+        &mut self,
+        f: &[f32],
+        y: &[f32],
+        w: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> Result<GradHess> {
+        assert!(lo <= hi && hi <= f.len(), "range [{lo}, {hi}) out of bounds");
+        self.grad_hess_loss(&f[lo..hi], &y[lo..hi], &w[lo..hi])
+    }
+
+    /// Range (shard-wise) evaluation: (Σloss, Σerr, Σw) over `[lo, hi)`.
+    pub fn eval_sums_range(
+        &mut self,
+        f: &[f32],
+        y: &[f32],
+        w: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> Result<(f64, f64, f64)> {
+        assert!(lo <= hi && hi <= f.len(), "range [{lo}, {hi}) out of bounds");
+        self.eval_sums(&f[lo..hi], &y[lo..hi], &w[lo..hi])
+    }
+
+    /// Evaluation with the accept pipeline's deterministic blocked
+    /// reduction: native engines fold per-`block` partial sums in block
+    /// order — the exact reduction the fused sharded pass performs, so
+    /// `target=fused` and `target=serial` report bit-identical loss
+    /// curves. The AOT engine keeps its whole-vector (bucketed) artifact
+    /// execution: its reduction lives inside the compiled module, and
+    /// fused mode falls back to this same call, so the two modes still
+    /// agree under AOT.
+    pub fn eval_sums_blocked(
+        &mut self,
+        f: &[f32],
+        y: &[f32],
+        w: &[f32],
+        block: usize,
+    ) -> Result<(f64, f64, f64)> {
+        if self.supports_ranges() {
+            assert_eq!(f.len(), y.len());
+            assert_eq!(f.len(), w.len());
+            Ok(logistic::eval_sums_blocked(f, y, w, block))
+        } else {
+            self.eval_sums(f, y, w)
+        }
+    }
 }
 
 #[cfg(feature = "aot")]
@@ -261,6 +328,36 @@ mod tests {
     fn auto_without_artifacts_is_native() {
         let e = GradientEngine::auto(Path::new("/definitely/not/a/dir"));
         assert_eq!(e.kind(), EngineKind::Native);
+        assert!(e.supports_ranges());
+    }
+
+    #[test]
+    fn range_kernels_match_whole_vector_slices() {
+        let mut e = GradientEngine::native();
+        let n = 100;
+        let f: Vec<f32> = (0..n).map(|i| (i as f32 - 50.0) / 17.0).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let w: Vec<f32> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+        let (lo, hi) = (13, 77);
+        let gh = e.grad_hess_loss_range(&f, &y, &w, lo, hi).unwrap();
+        let direct = logistic::grad_hess_loss(&f[lo..hi], &y[lo..hi], &w[lo..hi]);
+        assert_eq!(gh.grad, direct.grad);
+        assert_eq!(gh.hess, direct.hess);
+        let ev = e.eval_sums_range(&f, &y, &w, lo, hi).unwrap();
+        assert_eq!(ev, logistic::eval_sums(&f[lo..hi], &y[lo..hi], &w[lo..hi]));
+    }
+
+    #[test]
+    fn blocked_eval_native_matches_logistic_blocked() {
+        let mut e = GradientEngine::native();
+        let n = 700;
+        let f: Vec<f32> = (0..n).map(|i| ((i * 31 % 97) as f32 - 48.0) / 11.0).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let w = vec![1.0f32; n];
+        assert_eq!(
+            e.eval_sums_blocked(&f, &y, &w, 512).unwrap(),
+            logistic::eval_sums_blocked(&f, &y, &w, 512)
+        );
     }
 
     // AOT-path numerics are covered by rust/tests/test_runtime.rs, which

@@ -1,8 +1,29 @@
 //! The sampler executed by the server on every tree push (Algorithm 3,
 //! server step 3).
+//!
+//! Draws are **counter-based**: every row's randomness comes from a
+//! [`CounterRng`] keyed on `(key.seed, key.version, row)`, never from a
+//! shared sequential stream. A pass is therefore a pure function of its
+//! [`SampleKey`] — any contiguous sharding of rows across threads
+//! ([`BernoulliSampler::draw_range`]) reproduces exactly the rows and
+//! weights of a sequential sweep, which is what lets the server's fused
+//! accept pipeline (`ps/shard.rs`) sample inside its row shards while
+//! staying bit-identical to the serial reference path for every shard
+//! count.
 
 use crate::data::Dataset;
-use crate::util::Rng;
+use crate::util::rng::{CounterRng, RandStream};
+
+/// Identity of one sampling pass: all randomness below is a pure
+/// function of `(seed, version, row)`. The server keys `version` to the
+/// target version being produced, so a pass can be replayed — or
+/// sharded — without coordinating any RNG state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SampleKey {
+    pub seed: u64,
+    /// Target version this pass produces (the server's accept counter).
+    pub version: u64,
+}
 
 /// One observed sampling pass.
 #[derive(Debug, Clone)]
@@ -62,22 +83,53 @@ impl BernoulliSampler {
         self.rates.len()
     }
 
-    /// Draw one sampling pass: for each row i with multiplicity m_i, draw
-    /// Binomial(m_i, R_i) successes (each copy is an independent Q_ij) and
-    /// set m'_i = successes / R_i.
-    pub fn draw(&self, rng: &mut Rng) -> SamplePass {
+    /// One row of one pass: for row i with multiplicity m_i, draw
+    /// Binomial(m_i, R_i) successes (each copy is an independent Q_ij)
+    /// and return m'_i = successes / R_i (0.0 when unselected). Pure in
+    /// `(key, row)` — this is the kernel every entry point below and the
+    /// fused accept pass share.
+    #[inline]
+    pub fn draw_row(&self, key: SampleKey, row: usize) -> f32 {
+        let r = self.rates[row];
+        let m = self.multiplicities[row];
+        let mut rng = CounterRng::keyed(key.seed, key.version, row as u64);
+        let successes = draw_binomial(&mut rng, m as u64, r);
+        if successes > 0 {
+            (successes as f64 / r) as f32
+        } else {
+            0.0
+        }
+    }
+
+    /// Draw rows `[lo, hi)` of a pass: weights written into the
+    /// `hi - lo` local-indexed slice, selected global row ids appended
+    /// to `rows` (ascending). Shards of one pass concatenate to exactly
+    /// [`BernoulliSampler::draw`]'s output.
+    pub fn draw_range(
+        &self,
+        key: SampleKey,
+        lo: usize,
+        hi: usize,
+        weights: &mut [f32],
+        rows: &mut Vec<u32>,
+    ) {
+        assert!(lo <= hi && hi <= self.rates.len());
+        assert_eq!(weights.len(), hi - lo);
+        for row in lo..hi {
+            let w = self.draw_row(key, row);
+            weights[row - lo] = w;
+            if w > 0.0 {
+                rows.push(row as u32);
+            }
+        }
+    }
+
+    /// Draw one full sampling pass for `key`.
+    pub fn draw(&self, key: SampleKey) -> SamplePass {
         let n = self.rates.len();
         let mut weights = vec![0.0f32; n];
         let mut rows = Vec::new();
-        for i in 0..n {
-            let r = self.rates[i];
-            let m = self.multiplicities[i];
-            let successes = draw_binomial(rng, m as u64, r);
-            if successes > 0 {
-                weights[i] = (successes as f64 / r) as f32;
-                rows.push(i as u32);
-            }
-        }
+        self.draw_range(key, 0, n, &mut weights, &mut rows);
         SamplePass { weights, rows }
     }
 
@@ -93,7 +145,9 @@ impl BernoulliSampler {
 
 /// Binomial(n, p) sampler: exact Bernoulli loop for small n (the common
 /// case, m_i is almost always small), normal approximation for large n.
-fn draw_binomial(rng: &mut Rng, n: u64, p: f64) -> u64 {
+/// Generic over the bit source so the keyed per-row stream and the
+/// sequential [`crate::util::Rng`] (simulators, tests) share one kernel.
+fn draw_binomial<R: RandStream>(rng: &mut R, n: u64, p: f64) -> u64 {
     if n == 0 || p <= 0.0 {
         return 0;
     }
@@ -121,16 +175,20 @@ fn draw_binomial(rng: &mut Rng, n: u64, p: f64) -> u64 {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::util::Rng;
+
+    fn key(seed: u64, version: u64) -> SampleKey {
+        SampleKey { seed, version }
+    }
 
     #[test]
     fn weights_are_unbiased() {
         let ds = synthetic::realsim_like(500, 1);
         let s = BernoulliSampler::uniform(&ds, 0.3);
-        let mut rng = Rng::new(2);
         let passes = 400;
         let mut mean = vec![0.0f64; ds.n_rows()];
-        for _ in 0..passes {
-            let p = s.draw(&mut rng);
+        for v in 0..passes {
+            let p = s.draw(key(2, v));
             for i in 0..ds.n_rows() {
                 mean[i] += p.weights[i] as f64;
             }
@@ -145,8 +203,7 @@ mod tests {
     fn selected_rows_match_weights() {
         let ds = synthetic::realsim_like(300, 3);
         let s = BernoulliSampler::uniform(&ds, 0.5);
-        let mut rng = Rng::new(4);
-        let p = s.draw(&mut rng);
+        let p = s.draw(key(4, 0));
         for (i, &w) in p.weights.iter().enumerate() {
             let in_rows = p.rows.binary_search(&(i as u32)).is_ok();
             assert_eq!(w > 0.0, in_rows);
@@ -155,11 +212,44 @@ mod tests {
     }
 
     #[test]
+    fn passes_are_pure_functions_of_their_key() {
+        let ds = synthetic::realsim_like(200, 5);
+        let s = BernoulliSampler::uniform(&ds, 0.4);
+        let a = s.draw(key(9, 3));
+        let b = s.draw(key(9, 3));
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.weights, b.weights);
+        // different versions under the same seed are distinct passes
+        let c = s.draw(key(9, 4));
+        assert_ne!(a.rows, c.rows);
+    }
+
+    #[test]
+    fn sharded_draws_concatenate_to_the_full_pass() {
+        let ds = synthetic::realsim_like(517, 6);
+        let s = BernoulliSampler::uniform(&ds, 0.35);
+        let k = key(11, 7);
+        let full = s.draw(k);
+        for n_shards in [2usize, 3, 8] {
+            let mut weights = vec![0.0f32; ds.n_rows()];
+            let mut rows = Vec::new();
+            let per = ds.n_rows().div_ceil(n_shards);
+            let mut lo = 0;
+            while lo < ds.n_rows() {
+                let hi = (lo + per).min(ds.n_rows());
+                s.draw_range(k, lo, hi, &mut weights[lo..hi], &mut rows);
+                lo = hi;
+            }
+            assert_eq!(weights, full.weights, "shards={n_shards}");
+            assert_eq!(rows, full.rows, "shards={n_shards}");
+        }
+    }
+
+    #[test]
     fn rate_one_selects_everything_with_exact_weights() {
         let ds = synthetic::realsim_like(100, 5);
         let s = BernoulliSampler::uniform(&ds, 1.0);
-        let mut rng = Rng::new(6);
-        let p = s.draw(&mut rng);
+        let p = s.draw(key(6, 0));
         assert_eq!(p.n_selected(), 100);
         assert!(p.weights.iter().all(|&w| (w - 1.0).abs() < 1e-6));
     }
@@ -168,8 +258,7 @@ mod tests {
     fn small_rate_selects_few() {
         let ds = synthetic::realsim_like(2000, 7);
         let s = BernoulliSampler::uniform(&ds, 0.01);
-        let mut rng = Rng::new(8);
-        let p = s.draw(&mut rng);
+        let p = s.draw(key(8, 0));
         assert!(p.n_selected() < 100, "selected={}", p.n_selected());
         assert!((s.expected_selected() - 20.0).abs() < 1.0);
         // selected weights are 1/rate
@@ -185,9 +274,8 @@ mod tests {
         let mut ds = ds;
         ds.m = vec![50.0];
         let s = BernoulliSampler::uniform(&ds, 0.5);
-        let mut rng = Rng::new(9);
         let mean: f64 = (0..2000)
-            .map(|_| s.draw(&mut rng).weights[0] as f64)
+            .map(|v| s.draw(key(9, v)).weights[0] as f64)
             .sum::<f64>()
             / 2000.0;
         assert!((mean - 50.0).abs() < 1.5, "mean={mean}");

@@ -12,7 +12,12 @@
 //! stochastic target `L'_random = [m'_1 l'_1, ...]` is an unbiased SGD
 //! direction for the full loss. The observed support (`m'_i > 0`) is the
 //! paper's Q′ vector, whose sparsity drives the scalability analysis.
+//!
+//! Passes are keyed, not streamed: a [`bernoulli::SampleKey`] fully
+//! determines every row's draw (counter-based RNG), so one pass can be
+//! computed whole, replayed, or sharded across threads with identical
+//! results — the invariance the fused accept pipeline builds on.
 
 pub mod bernoulli;
 
-pub use bernoulli::{BernoulliSampler, SamplePass};
+pub use bernoulli::{BernoulliSampler, SampleKey, SamplePass};

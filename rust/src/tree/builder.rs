@@ -484,7 +484,12 @@ mod tests {
         let b = BinnedDataset::from_dataset(&ds, 4).unwrap();
         let g = vec![-2.0f32, 1.0];
         let h = vec![1.0f32, 1.0];
-        let params = TreeParams { max_leaves: 4, feature_rate: 1.0, lambda: 0.0, ..Default::default() };
+        let params = TreeParams {
+            max_leaves: 4,
+            feature_rate: 1.0,
+            lambda: 0.0,
+            ..Default::default()
+        };
         let mut rng = Rng::new(8);
         let t = build_tree(&b, &[0, 1], &g, &h, &params, &mut rng);
         // unsplittable (identical feature) -> single leaf = -(sum g)/(sum h)

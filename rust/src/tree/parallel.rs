@@ -274,9 +274,15 @@ mod tests {
         let w = vec![1.0f32; ds.n_rows()];
         let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let params = TreeParams { max_leaves: 8, feature_rate: 1.0, ..Default::default() };
-        let a = super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3));
-        let b = build_tree_forkjoin(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3), 1);
+        let params = TreeParams {
+            max_leaves: 8,
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        let a =
+            super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3));
+        let b =
+            build_tree_forkjoin(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3), 1);
         assert_eq!(a, b);
     }
 
@@ -357,8 +363,13 @@ mod tests {
         let w = vec![1.0f32; ds.n_rows()];
         let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let params = TreeParams { max_leaves: 8, feature_rate: 1.0, ..Default::default() };
-        let a = super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6));
+        let params = TreeParams {
+            max_leaves: 8,
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        let a =
+            super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6));
         let mut pool = HistogramPool::new(binned.total_bins());
         let b = build_tree_feature_parallel(
             &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6), 1, &mut pool,

@@ -261,8 +261,16 @@ mod tests {
         let rows: Vec<u32> = (0..40).collect();
         let mut hist = Histogram::zeros(b.total_bins());
         hist.build(&b, &rows, &g, &h);
-        let s_small = best_split(&hist, &b, &[true], &SplitConstraints { lambda: 0.01, ..Default::default() }).unwrap();
-        let s_large = best_split(&hist, &b, &[true], &SplitConstraints { lambda: 100.0, ..Default::default() }).unwrap();
+        let small = SplitConstraints {
+            lambda: 0.01,
+            ..Default::default()
+        };
+        let large = SplitConstraints {
+            lambda: 100.0,
+            ..Default::default()
+        };
+        let s_small = best_split(&hist, &b, &[true], &small).unwrap();
+        let s_large = best_split(&hist, &b, &[true], &large).unwrap();
         assert!(s_small.gain > s_large.gain);
     }
 }

@@ -1,0 +1,106 @@
+//! Bounded exponential backoff for idle polling loops.
+//!
+//! A worker that polls a not-yet-published board with bare
+//! `yield_now()` burns a full core doing nothing (and steals cycles
+//! from the server thread it is waiting on). [`Backoff`] escalates:
+//! a few yield rounds first (so a result that is microseconds away is
+//! picked up immediately), then sleeps that double per round up to a
+//! hard cap — idle cost drops to near zero while the worst-case extra
+//! latency stays bounded by the cap.
+
+use std::thread;
+use std::time::Duration;
+
+/// Yield rounds before the first sleep.
+const SPIN_ROUNDS: u32 = 4;
+/// First sleep duration, doubled each subsequent round.
+const BASE_PAUSE_US: u64 = 50;
+/// Ceiling on a single pause — also the worst-case extra latency a
+/// parked worker pays once the awaited state appears.
+const MAX_PAUSE_US: u64 = 2_000;
+
+/// Escalating yield → sleep pauser. `idle()` once per empty poll,
+/// `reset()` on every successful poll.
+#[derive(Debug, Default, Clone)]
+pub struct Backoff {
+    round: u32,
+}
+
+impl Backoff {
+    pub fn new() -> Backoff {
+        Backoff::default()
+    }
+
+    /// Pause for the current round (yield while spinning, sleep after),
+    /// then advance the round.
+    pub fn idle(&mut self) {
+        match Self::pause_after(self.round) {
+            None => thread::yield_now(),
+            Some(d) => thread::sleep(d),
+        }
+        self.round = self.round.saturating_add(1);
+    }
+
+    /// Back to the spin phase (call when a poll succeeds).
+    pub fn reset(&mut self) {
+        self.round = 0;
+    }
+
+    /// The pause schedule as a pure function of the round: `None` means
+    /// yield, `Some(d)` means sleep for `d`. Split out so the schedule
+    /// (growth + cap) is unit-testable without sleeping.
+    pub fn pause_after(round: u32) -> Option<Duration> {
+        if round < SPIN_ROUNDS {
+            return None;
+        }
+        // clamp the exponent before shifting so the round counter can
+        // grow unbounded without overflowing the shift
+        let exp = (round - SPIN_ROUNDS).min(62) as u64;
+        let us = BASE_PAUSE_US
+            .saturating_mul(1u64.checked_shl(exp as u32).unwrap_or(u64::MAX))
+            .min(MAX_PAUSE_US);
+        Some(Duration::from_micros(us))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_spins_then_grows_then_caps() {
+        for r in 0..SPIN_ROUNDS {
+            assert_eq!(Backoff::pause_after(r), None, "round {r} should yield");
+        }
+        let first = Backoff::pause_after(SPIN_ROUNDS).unwrap();
+        assert_eq!(first, Duration::from_micros(BASE_PAUSE_US));
+        let second = Backoff::pause_after(SPIN_ROUNDS + 1).unwrap();
+        assert_eq!(second, first * 2);
+        // monotone non-decreasing and capped, even far past the cap point
+        let mut prev = Duration::ZERO;
+        for r in SPIN_ROUNDS..SPIN_ROUNDS + 80 {
+            let d = Backoff::pause_after(r).unwrap();
+            assert!(d >= prev);
+            assert!(d <= Duration::from_micros(MAX_PAUSE_US));
+            prev = d;
+        }
+        assert_eq!(prev, Duration::from_micros(MAX_PAUSE_US));
+        // no overflow at absurd rounds
+        assert_eq!(
+            Backoff::pause_after(u32::MAX).unwrap(),
+            Duration::from_micros(MAX_PAUSE_US)
+        );
+    }
+
+    #[test]
+    fn reset_returns_to_spin_phase() {
+        let mut b = Backoff::new();
+        for _ in 0..SPIN_ROUNDS + 3 {
+            b.idle();
+        }
+        assert!(Backoff::pause_after(b.round).is_some());
+        b.reset();
+        assert_eq!(b.round, 0);
+        assert!(Backoff::pause_after(b.round).is_none());
+    }
+}

@@ -1,9 +1,12 @@
-//! Small shared utilities: deterministic RNG, timing, streaming stats.
+//! Small shared utilities: deterministic RNGs (sequential + counter-based),
+//! idle backoff, timing, streaming stats.
 
+pub mod backoff;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
-pub use rng::Rng;
+pub use backoff::Backoff;
+pub use rng::{CounterRng, RandStream, Rng};
 pub use stats::Summary;
 pub use timer::Stopwatch;

@@ -8,7 +8,7 @@ use asgbdt::forest::{FlatForest, Forest, ScratchPool};
 use asgbdt::io::Json;
 use asgbdt::loss::logistic;
 use asgbdt::prop_assert;
-use asgbdt::sampling::BernoulliSampler;
+use asgbdt::sampling::{BernoulliSampler, SampleKey};
 use asgbdt::testkit::{check, close, Gen};
 use asgbdt::tree::histogram::Histogram;
 use asgbdt::tree::{build_tree, FlatTree, TreeParams};
@@ -40,11 +40,11 @@ fn prop_sampling_weights_unbiased_and_supported() {
         let ds = random_dataset(g);
         let rate = g.f64_in(0.05, 1.0);
         let sampler = BernoulliSampler::uniform(&ds, rate);
-        let mut rng = g.rng.fork(1);
+        let seed = g.rng.next_u64();
         let draws = 300;
         let mut sums = vec![0.0f64; ds.n_rows()];
-        for _ in 0..draws {
-            let p = sampler.draw(&mut rng);
+        for v in 0..draws {
+            let p = sampler.draw(SampleKey { seed, version: v as u64 });
             // support/weight consistency every draw
             for (i, &w) in p.weights.iter().enumerate() {
                 let in_rows = p.rows.binary_search(&(i as u32)).is_ok();
@@ -58,6 +58,47 @@ fn prop_sampling_weights_unbiased_and_supported() {
         let mean: f64 =
             sums.iter().map(|s| s / draws as f64).sum::<f64>() / ds.n_rows() as f64;
         close(mean, 1.0, 0.15).map_err(|e| format!("unbiasedness: {e}"))
+    });
+}
+
+/// Satellite of the fused accept pipeline: the counter-based sampler
+/// must draw the **identical** row set and weights no matter how its
+/// rows are sharded — 1, 2 and 8 contiguous shards, across random
+/// seeds, versions, rates and dataset sizes.
+#[test]
+fn prop_keyed_sampling_is_shard_invariant() {
+    check("sampling_shard_invariant", 25, 111, |g| {
+        let ds = random_dataset(g);
+        let n = ds.n_rows();
+        let rate = g.f64_in(0.01, 1.0);
+        let sampler = BernoulliSampler::uniform(&ds, rate);
+        let key = SampleKey {
+            seed: g.rng.next_u64(),
+            version: g.rng.below(1000),
+        };
+        let full = sampler.draw(key);
+        prop_assert!(
+            full.rows.windows(2).all(|w| w[0] < w[1]),
+            "rows not ascending"
+        );
+        for n_shards in [1usize, 2, 8] {
+            let mut weights = vec![0.0f32; n];
+            let mut rows = Vec::new();
+            // deliberately uneven, non-aligned shard boundaries
+            let per = n.div_ceil(n_shards);
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + per).min(n);
+                sampler.draw_range(key, lo, hi, &mut weights[lo..hi], &mut rows);
+                lo = hi;
+            }
+            prop_assert!(weights == full.weights, "weights differ at {n_shards} shards");
+            prop_assert!(rows == full.rows, "rows differ at {n_shards} shards");
+        }
+        // replaying the key is a no-op change; a different version is not
+        let replay = sampler.draw(key);
+        prop_assert!(replay.rows == full.rows, "replay diverged");
+        Ok(())
     });
 }
 

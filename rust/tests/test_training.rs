@@ -93,6 +93,9 @@ fn scoring_engines_train_bit_identically() {
     flat_cfg.scoring = asgbdt::forest::ScoreMode::Flat;
     flat_cfg.score_threads = 4;
     let mut ref_cfg = flat_cfg.clone();
+    // the per-row engine lives on the serial accept path, so this run
+    // also pins the fused pipeline (flat_cfg, default) against it
+    ref_cfg.target = asgbdt::ps::TargetMode::Serial;
     ref_cfg.scoring = asgbdt::forest::ScoreMode::PerRow;
     ref_cfg.score_threads = 1;
     let a = train_serial(&flat_cfg, &tr, Some(&te)).unwrap();
@@ -104,6 +107,36 @@ fn scoring_engines_train_bit_identically() {
     let tb: Vec<f64> = b.curve.points.iter().map(|p| p.test_loss).collect();
     assert_eq!(ta, tb, "test curves diverged between scoring engines");
     assert_eq!(a.forest.n_trees(), b.forest.n_trees());
+    for r in 0..tr.n_rows() {
+        assert_eq!(
+            a.forest.predict_raw(&tr.x, r),
+            b.forest.predict_raw(&tr.x, r),
+            "forests diverged at row {r}"
+        );
+    }
+}
+
+#[test]
+fn fused_and_serial_accept_paths_train_identically() {
+    // end-to-end half of the fused-pipeline acceptance bar: identical
+    // targets per version ⇒ identical trees ⇒ identical curves and
+    // forests, with the fused pass sharded across threads
+    let ds = synthetic::realsim_like(1_300, 11);
+    let mut rng = Rng::new(11);
+    let (tr, te) = ds.split(0.25, &mut rng);
+    let mut fused_cfg = cfg(TrainMode::Serial, 1, 12);
+    fused_cfg.score_threads = 3; // default target=fused
+    let mut serial_cfg = cfg(TrainMode::Serial, 1, 12);
+    serial_cfg.target = asgbdt::ps::TargetMode::Serial;
+    serial_cfg.score_threads = 1;
+    let a = train_serial(&fused_cfg, &tr, Some(&te)).unwrap();
+    let b = train_serial(&serial_cfg, &tr, Some(&te)).unwrap();
+    let la: Vec<f64> = a.curve.points.iter().map(|p| p.train_loss).collect();
+    let lb: Vec<f64> = b.curve.points.iter().map(|p| p.train_loss).collect();
+    assert_eq!(la, lb, "train curves diverged between accept paths");
+    let ta: Vec<f64> = a.curve.points.iter().map(|p| p.test_loss).collect();
+    let tb: Vec<f64> = b.curve.points.iter().map(|p| p.test_loss).collect();
+    assert_eq!(ta, tb, "test curves diverged between accept paths");
     for r in 0..tr.n_rows() {
         assert_eq!(
             a.forest.predict_raw(&tr.x, r),
@@ -141,11 +174,21 @@ fn model_predicts_on_unseen_data_better_than_chance() {
 #[test]
 fn reports_carry_phase_timings() {
     let ds = synthetic::realsim_like(300, 7);
+    // fused accept path (default): one fused pass per accepted tree,
+    // plus the shared init target production
     let rep = train_serial(&cfg(TrainMode::Serial, 1, 8), &ds, None).unwrap();
+    assert!(rep.timer.count("server/fused_pass") == 8);
+    assert!(rep.timer.count("server/flatten_tree") == 8);
+    assert!(rep.timer.count("server/sample") >= 1); // init pass (version 0)
+    assert!(rep.build_times.n == 8);
+    // serial accept path: the separate per-phase sweeps stay measurable
+    let mut serial_cfg = cfg(TrainMode::Serial, 1, 8);
+    serial_cfg.target = asgbdt::ps::TargetMode::Serial;
+    let rep = train_serial(&serial_cfg, &ds, None).unwrap();
     assert!(rep.timer.count("server/produce_target") >= 8);
     assert!(rep.timer.count("server/update_f") == 8);
     assert!(rep.timer.count("server/sample") >= 8);
-    assert!(rep.build_times.n == 8);
+    assert!(rep.timer.count("server/fused_pass") == 0);
 }
 
 #[test]

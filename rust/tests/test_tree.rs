@@ -55,7 +55,12 @@ fn boosting_loop_overfits_small_data() {
     let mut forest = Forest::new(Forest::base_from_positive_rate(ds.positive_rate()));
     let w = ds.m.clone();
     let mut f = vec![forest.base_score; ds.n_rows()];
-    let params = TreeParams { max_leaves: 128, feature_rate: 1.0, lambda: 0.1, ..Default::default() };
+    let params = TreeParams {
+        max_leaves: 128,
+        feature_rate: 1.0,
+        lambda: 0.1,
+        ..Default::default()
+    };
     let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
     let mut rng = Rng::new(6);
     for _ in 0..10 {
