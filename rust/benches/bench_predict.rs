@@ -10,7 +10,7 @@ use asgbdt::forest::score::{self, FlatForest, ScratchPool};
 use asgbdt::forest::Forest;
 use asgbdt::loss::logistic;
 use asgbdt::tree::{build_tree_pooled, FlatTree, HistogramPool, TreeParams};
-use asgbdt::util::Rng;
+use asgbdt::util::{Executor, PoolMode, Rng};
 
 fn main() {
     let scale = Scale::from_env();
@@ -55,11 +55,12 @@ fn main() {
     });
     r.bench("forest/per_row_enum/raw", || forest.predict_all_per_row(&ds.x));
     for threads in [1usize, 2, 4] {
+        let exec = Executor::scoped(threads);
         r.bench(&format!("forest/flat_blocked/binned_t{threads}"), || {
-            flat.predict_all_binned(&b, threads, &mut pool)
+            flat.predict_all_binned(&b, &exec, &mut pool)
         });
         r.bench(&format!("forest/flat_blocked/raw_t{threads}"), || {
-            flat.predict_all_raw(&ds.x, threads, &mut pool)
+            flat.predict_all_raw(&ds.x, &exec, &mut pool)
         });
     }
     // compile cost, for context: flattening is O(nodes), paid once/tree
@@ -75,10 +76,14 @@ fn main() {
         }
     });
     let mut fv = vec![0.0f32; ds.n_rows()];
-    for threads in [1usize, 2, 4] {
-        r.bench(&format!("apply/flat_blocked_t{threads}"), || {
-            score::add_tree_binned(&ft, &b, v, &mut fv, threads, &mut pool)
-        });
+    for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+        for threads in [1usize, 2, 4] {
+            let exec = Executor::new(mode, threads);
+            r.bench(
+                &format!("apply/flat_blocked_{}_t{threads}", mode.as_str()),
+                || score::add_tree_binned(&ft, &b, v, &mut fv, &exec, &mut pool),
+            );
+        }
     }
     r.write_csv().unwrap();
 }

@@ -2,15 +2,43 @@
 //! count — the real-thread half of the Figure 10 story, plus board
 //! pull/publish micro-latencies, the apply-path (Algorithm 3 step 2)
 //! time reported separately for the blocked-SoA and per-row-enum scoring
-//! engines, and the accept-path breakdown: fused one-pass pipeline vs
-//! the serial reference at 1/2/4/8 score threads.
+//! engines, the accept-path breakdown (fused one-pass pipeline vs the
+//! serial reference at 1/2/4/8 score threads), and the pool breakdown:
+//! persistent parked workers vs per-tree scoped spawns on a deliberately
+//! small dataset where spawn/join dominates the accept cost.
 use asgbdt::bench_harness::Runner;
 use asgbdt::config::TrainConfig;
-use asgbdt::coordinator::train_async;
+use asgbdt::coordinator::{train_async, TrainReport};
 use asgbdt::data::synthetic;
 use asgbdt::forest::ScoreMode;
 use asgbdt::ps::{Board, TargetMode, TargetSnapshot};
+use asgbdt::util::PoolMode;
 use std::sync::Arc;
+
+/// The shared 4-worker async workload every breakdown below runs
+/// (eval pinned to the final tree so `server/eval` stays off the
+/// per-tree accept cost).
+fn bench_cfg(n_trees: usize, max_leaves: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 4;
+    cfg.n_trees = n_trees;
+    cfg.step_length = 0.1;
+    cfg.tree.max_leaves = max_leaves;
+    cfg.max_bins = 32;
+    cfg.eval_every = n_trees;
+    cfg
+}
+
+/// Per-tree accept cost on the fused path: everything the server does
+/// between receiving a push and publishing the next target — flatten +
+/// the one sharded pass + the AOT target fallback (zero natively) +
+/// eval. Keep in sync with the serial-side sum in `main`.
+fn fused_accept_cost(rep: &TrainReport) -> f64 {
+    rep.timer.mean("server/flatten_tree")
+        + rep.timer.mean("server/fused_pass")
+        + rep.timer.mean("server/produce_target")
+        + rep.timer.mean("server/eval")
+}
 
 fn main() {
     let mut r = Runner::new("ps_throughput");
@@ -36,13 +64,8 @@ fn main() {
     // update F) broken out — the server-side cost the blocked scorer cuts
     let ds = synthetic::realsim_like(3_000, 9);
     for workers in [1usize, 2, 4, 8] {
-        let mut cfg = TrainConfig::default();
+        let mut cfg = bench_cfg(40, 32);
         cfg.workers = workers;
-        cfg.n_trees = 40;
-        cfg.step_length = 0.1;
-        cfg.tree.max_leaves = 32;
-        cfg.max_bins = 32;
-        cfg.eval_every = 40;
         let rep = train_async(&cfg, &ds, None).unwrap();
         r.record(
             &format!("train_async/trees_per_sec_w{workers} (1/x)"),
@@ -62,13 +85,7 @@ fn main() {
     // scoring-engine contrast on the same workload (4 workers); both on
     // the serial accept path, where the per-row reference engine lives
     for scoring in [ScoreMode::Flat, ScoreMode::PerRow] {
-        let mut cfg = TrainConfig::default();
-        cfg.workers = 4;
-        cfg.n_trees = 40;
-        cfg.step_length = 0.1;
-        cfg.tree.max_leaves = 32;
-        cfg.max_bins = 32;
-        cfg.eval_every = 40;
+        let mut cfg = bench_cfg(40, 32);
         cfg.target = TargetMode::Serial;
         cfg.scoring = scoring;
         let rep = train_async(&cfg, &ds, None).unwrap();
@@ -90,29 +107,16 @@ fn main() {
     // reference, sharded across 1/2/4/8 score threads (4 workers racing)
     for target in [TargetMode::Fused, TargetMode::Serial] {
         for threads in [1usize, 2, 4, 8] {
-            let mut cfg = TrainConfig::default();
-            cfg.workers = 4;
-            cfg.n_trees = 40;
-            cfg.step_length = 0.1;
-            cfg.tree.max_leaves = 32;
-            cfg.max_bins = 32;
-            cfg.eval_every = 40;
+            let mut cfg = bench_cfg(40, 32);
             cfg.target = target;
             cfg.score_threads = threads;
             let rep = train_async(&cfg, &ds, None).unwrap();
-            // per-tree accept cost: everything the server does between
-            // receiving a push and publishing the next target. Both sums
-            // cover the same work — the fused pass folds sampling/target/
-            // eval in, so the serial side must count its separate sweeps
-            // (sample, produce_target, eval) and the fused side its AOT
-            // produce_target fallback (zero natively) for symmetry.
+            // per-tree accept cost: both sums cover the same work — the
+            // fused pass folds sampling/target/eval in, so the serial
+            // side must count its separate sweeps (sample,
+            // produce_target, eval) for symmetry
             let accept = match target {
-                TargetMode::Fused => {
-                    rep.timer.mean("server/flatten_tree")
-                        + rep.timer.mean("server/fused_pass")
-                        + rep.timer.mean("server/produce_target")
-                        + rep.timer.mean("server/eval")
-                }
+                TargetMode::Fused => fused_accept_cost(&rep),
                 TargetMode::Serial => {
                     rep.timer.mean("server/flatten_tree")
                         + rep.timer.mean("server/update_f")
@@ -132,6 +136,35 @@ fn main() {
             println!(
                 "  target {} threads {threads}: accept {:.1}µs/tree, {:.2} trees/s",
                 target.as_str(),
+                accept * 1e6,
+                rep.trees_per_sec(),
+            );
+        }
+    }
+    // pool breakdown: persistent parked workers vs per-tree scoped
+    // spawns, on a deliberately SMALL dataset (~3 row blocks) where one
+    // tree's scoring work is itself only tens of µs — here the scoped
+    // path's per-tree thread spawn/join is the dominant accept cost and
+    // the persistent pool's condvar handoff is what removes it
+    let small = synthetic::realsim_like(1_500, 10);
+    for pool in [PoolMode::Persistent, PoolMode::Scoped] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut cfg = bench_cfg(60, 16);
+            cfg.score_threads = threads;
+            cfg.pool = pool;
+            let rep = train_async(&cfg, &small, None).unwrap();
+            let accept = fused_accept_cost(&rep);
+            r.record(
+                &format!("pool/{}_t{threads}_accept_per_tree", pool.as_str()),
+                accept,
+            );
+            r.record(
+                &format!("pool/{}_t{threads}_trees_per_sec (1/x)", pool.as_str()),
+                1.0 / rep.trees_per_sec(),
+            );
+            println!(
+                "  pool {} threads {threads} (small data): accept {:.1}µs/tree, {:.2} trees/s",
+                pool.as_str(),
                 accept * 1e6,
                 rep.trees_per_sec(),
             );

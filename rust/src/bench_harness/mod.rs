@@ -14,9 +14,13 @@ use crate::util::stats::Summary;
 /// budget for CI smoke runs).
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Untimed warmup budget before measuring.
     pub warmup_secs: f64,
+    /// Measurement budget.
     pub measure_secs: f64,
+    /// Measure at least this many iterations (even over budget).
     pub min_iters: usize,
+    /// Stop after this many iterations (even under budget).
     pub max_iters: usize,
 }
 
@@ -43,12 +47,16 @@ impl Default for BenchConfig {
 /// One benchmark's measured result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (group/case).
     pub name: String,
+    /// Iterations measured.
     pub iters: usize,
+    /// Per-iteration time distribution.
     pub secs_per_iter: Summary,
 }
 
 impl BenchResult {
+    /// Mean seconds per iteration.
     pub fn mean(&self) -> f64 {
         self.secs_per_iter.mean
     }
@@ -88,6 +96,7 @@ pub struct Runner {
 }
 
 impl Runner {
+    /// A runner for a named bench group (one CSV per group).
     pub fn new(group: &str) -> Runner {
         println!("== bench group: {group} ==");
         Runner {
@@ -97,6 +106,7 @@ impl Runner {
         }
     }
 
+    /// Replace the default (env-derived) budget.
     pub fn with_config(mut self, cfg: BenchConfig) -> Runner {
         self.cfg = cfg;
         self
@@ -142,6 +152,7 @@ impl Runner {
         self.results.push(result);
     }
 
+    /// Everything measured so far, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -25,9 +25,13 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first token).
     pub command: String,
+    /// Bare tokens in order (data specs, figure names...).
     pub positionals: Vec<String>,
+    /// `--flag` tokens with no value.
     pub flags: Vec<String>,
+    /// `--opt value` pairs in order.
     pub options: Vec<(String, String)>,
     /// `key=value` config overrides, applied in order.
     pub overrides: Vec<(String, String)>,
@@ -63,6 +67,7 @@ impl Args {
         Ok(args)
     }
 
+    /// Last value of `--name value` (last occurrence wins).
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options
             .iter()
@@ -71,14 +76,17 @@ impl Args {
             .map(|(_, v)| v.as_str())
     }
 
+    /// [`Args::opt`] with a default.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The i-th bare token after the subcommand.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.positionals.get(i).map(|s| s.as_str())
     }

@@ -12,8 +12,16 @@ use crate::forest::ScoreMode;
 use crate::io::Json;
 use crate::ps::TargetMode;
 use crate::tree::{HistogramStrategy, TreeParams};
+use crate::util::PoolMode;
 
-/// Which trainer drives the run.
+/// Which trainer drives the run (config key `mode`).
+///
+/// ```
+/// use asgbdt::config::TrainMode;
+/// assert_eq!(TrainMode::parse("async").unwrap(), TrainMode::Async);
+/// assert_eq!(TrainMode::Sync.as_str(), "sync");
+/// assert!(TrainMode::parse("quantum").is_err());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrainMode {
     /// Asynch-SGBDT on the parameter server (the paper's contribution).
@@ -26,6 +34,7 @@ pub enum TrainMode {
 }
 
 impl TrainMode {
+    /// Parse the `mode=` config/CLI value.
     pub fn parse(s: &str) -> Result<TrainMode> {
         match s {
             "async" => Ok(TrainMode::Async),
@@ -35,6 +44,7 @@ impl TrainMode {
         }
     }
 
+    /// The config/CLI spelling of this mode.
     pub fn as_str(&self) -> &'static str {
         match self {
             TrainMode::Async => "async",
@@ -44,7 +54,14 @@ impl TrainMode {
     }
 }
 
-/// How the tree target is formed from the loss derivatives.
+/// How the tree target is formed from the loss derivatives (config key
+/// `grad_mode`).
+///
+/// ```
+/// use asgbdt::config::GradMode;
+/// assert_eq!(GradMode::parse("newton").unwrap(), GradMode::Newton);
+/// assert_eq!(GradMode::Gradient.as_str(), "gradient");
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GradMode {
     /// Paper setting ("we use gradient step in LightGBM boosting"): trees
@@ -55,6 +72,7 @@ pub enum GradMode {
 }
 
 impl GradMode {
+    /// Parse the `grad_mode=` config/CLI value.
     pub fn parse(s: &str) -> Result<GradMode> {
         match s {
             "gradient" => Ok(GradMode::Gradient),
@@ -63,6 +81,7 @@ impl GradMode {
         }
     }
 
+    /// The config/CLI spelling of this mode.
     pub fn as_str(&self) -> &'static str {
         match self {
             GradMode::Gradient => "gradient",
@@ -75,7 +94,9 @@ impl GradMode {
 /// v = 0.01, sampling rate 0.8, feature rate 0.8, 100 leaves).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Which trainer drives the run (async / sync / serial).
     pub mode: TrainMode,
+    /// Gradient-step (paper) vs Newton-step tree targets.
     pub grad_mode: GradMode,
     /// Total trees the server accepts before stopping (paper: 400/1000).
     pub n_trees: usize,
@@ -91,6 +112,7 @@ pub struct TrainConfig {
     pub max_staleness: Option<u64>,
     /// Histogram bins per feature.
     pub max_bins: usize,
+    /// Tree-construction parameters (leaves, depth, regularisation...).
     pub tree: TreeParams,
     /// Evaluate train/test loss every k accepted trees.
     pub eval_every: usize,
@@ -108,6 +130,13 @@ pub struct TrainConfig {
     /// (serial). 1 (default) keeps the accept path on the server thread;
     /// raise it when the server, not the workers, is the bottleneck.
     pub score_threads: usize,
+    /// Where those threads come from: a server-lifetime pool of parked
+    /// workers (`persistent`, default — per-tree dispatch is a condvar
+    /// wake) or per-tree scoped spawns (`scoped`, the bit-identical
+    /// reference). See DESIGN.md §11.
+    pub pool: PoolMode,
+    /// Base seed for every deterministic stream (sampling pass keys,
+    /// feature sub-sampling, synthetic data).
     pub seed: u64,
     /// Where `make artifacts` put the HLO modules.
     pub artifact_dir: PathBuf,
@@ -129,6 +158,7 @@ impl Default for TrainConfig {
             target: TargetMode::Fused,
             scoring: ScoreMode::Flat,
             score_threads: 1,
+            pool: PoolMode::Persistent,
             seed: 42,
             artifact_dir: PathBuf::from("artifacts"),
         }
@@ -136,6 +166,9 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// The cross-field checks every entrypoint runs before training.
+    /// Rejections from knob conflicts name both knobs involved (the
+    /// DESIGN.md §11 decision table lists every combination).
     pub fn validate(&self) -> Result<()> {
         if self.n_trees == 0 {
             bail!("n_trees must be > 0");
@@ -164,8 +197,15 @@ impl TrainConfig {
         if self.score_threads == 0 {
             bail!("score_threads must be >= 1");
         }
+        // Cross-field checks: name BOTH conflicting knobs and the fix, so
+        // a rejected run tells the user which one to turn (DESIGN.md §11
+        // has the full decision table).
         if self.target == TargetMode::Fused && self.scoring == ScoreMode::PerRow {
-            bail!("scoring=perrow is the serial reference engine; use target=serial with it");
+            bail!(
+                "conflicting knobs scoring=perrow and target=fused: the per-row reference \
+                 engine only exists on the serial accept path — set target=serial (to keep \
+                 scoring=perrow) or scoring=flat (to keep target=fused)"
+            );
         }
         Ok(())
     }
@@ -199,6 +239,7 @@ impl TrainConfig {
             "target" | "target_mode" => self.target = TargetMode::parse(value)?,
             "scoring" | "score_mode" => self.scoring = ScoreMode::parse(value)?,
             "score_threads" => self.score_threads = value.parse()?,
+            "pool" | "pool_mode" => self.pool = PoolMode::parse(value)?,
             "seed" => self.seed = value.parse()?,
             "artifact_dir" => self.artifact_dir = PathBuf::from(value),
             other => bail!("unknown config key '{other}'"),
@@ -206,6 +247,7 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Serialize every knob (the config-file shape `load` reads back).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mode", Json::Str(self.mode.as_str().into())),
@@ -231,6 +273,7 @@ impl TrainConfig {
             ("target", Json::Str(self.target.as_str().into())),
             ("scoring", Json::Str(self.scoring.as_str().into())),
             ("score_threads", Json::Num(self.score_threads as f64)),
+            ("pool", Json::Str(self.pool.as_str().into())),
             ("seed", Json::Num(self.seed as f64)),
             (
                 "artifact_dir",
@@ -239,6 +282,8 @@ impl TrainConfig {
         ])
     }
 
+    /// Build a config from a JSON object: defaults, then every present
+    /// key as an override, then `validate`.
     pub fn from_json(j: &Json) -> Result<TrainConfig> {
         let mut c = TrainConfig::default();
         if let Some(obj) = j.as_obj() {
@@ -257,6 +302,7 @@ impl TrainConfig {
         Ok(c)
     }
 
+    /// Load and validate a JSON config file (`--config path.json`).
     pub fn load(path: &Path) -> Result<TrainConfig> {
         TrainConfig::from_json(&Json::parse_file(path)?)
     }
@@ -288,9 +334,11 @@ mod tests {
         c.set("target", "serial").unwrap();
         c.set("scoring", "perrow").unwrap();
         c.set("score_threads", "4").unwrap();
+        c.set("pool", "scoped").unwrap();
         assert_eq!(c.target, TargetMode::Serial);
         assert_eq!(c.scoring, ScoreMode::PerRow);
         assert_eq!(c.score_threads, 4);
+        assert_eq!(c.pool, PoolMode::Scoped);
         assert_eq!(c.workers, 32);
         assert_eq!(c.mode, TrainMode::Serial);
         assert_eq!(c.max_staleness, Some(16));
@@ -326,13 +374,39 @@ mod tests {
         let mut c = TrainConfig::default();
         c.score_threads = 0;
         assert!(c.validate().is_err());
-        // the per-row reference engine only exists on the serial path
+    }
+
+    #[test]
+    fn rejected_knob_combinations_name_both_knobs() {
+        // every cross-field rejection must tell the user WHICH pair of
+        // knobs conflicts — one test per rejected combination (DESIGN.md
+        // §11 decision table)
+        // (1) scoring=perrow × target=fused
         let mut c = TrainConfig::default();
         c.scoring = ScoreMode::PerRow;
         assert_eq!(c.target, TargetMode::Fused);
-        assert!(c.validate().is_err());
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("scoring=perrow") && msg.contains("target=fused"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("target=serial"), "error must name the fix, got: {msg}");
+        // ...and each side of the pair is fine once the other moves
         c.target = TargetMode::Serial;
         c.validate().unwrap();
+        c.scoring = ScoreMode::Flat;
+        c.target = TargetMode::Fused;
+        c.validate().unwrap();
+        // the pool knob is orthogonal: every mode × target × scoring
+        // combination that validates keeps validating under either pool
+        for pool in [PoolMode::Persistent, PoolMode::Scoped] {
+            let mut c = TrainConfig::default();
+            c.pool = pool;
+            c.validate().unwrap();
+            c.target = TargetMode::Serial;
+            c.scoring = ScoreMode::PerRow;
+            c.validate().unwrap();
+        }
     }
 
     #[test]
@@ -344,6 +418,7 @@ mod tests {
         c.set("target", "serial").unwrap();
         c.set("scoring", "perrow").unwrap();
         c.set("score_threads", "2").unwrap();
+        c.set("pool", "scoped").unwrap();
         let j = c.to_json();
         let back = TrainConfig::from_json(&j).unwrap();
         assert_eq!(back.workers, 8);
@@ -354,5 +429,6 @@ mod tests {
         assert_eq!(back.target, TargetMode::Serial);
         assert_eq!(back.scoring, ScoreMode::PerRow);
         assert_eq!(back.score_threads, 2);
+        assert_eq!(back.pool, PoolMode::Scoped);
     }
 }

@@ -22,9 +22,15 @@
 //! `ps/shard.rs`) folds the F-update, the counter-keyed Bernoulli
 //! sample, the new target's grad/hess and the eval partials into one
 //! sweep across `cfg.score_threads` shards; `target=serial` keeps the
-//! reference sweeps (blocked SoA scoring per `cfg.scoring`). The accept
-//! path bounds accepted trees/sec at high worker counts — measured by
-//! `bench_ps_throughput`'s fused-vs-serial breakdown.
+//! reference sweeps (blocked SoA scoring per `cfg.scoring`). Those
+//! shards run on the server's [`crate::util::Executor`], constructed
+//! once when `ServerCore` is built: under `pool=persistent` (default) a
+//! [`crate::util::ScorePool`] keeps the workers parked between trees,
+//! so the accept path pays a condvar wake instead of `score_threads`
+//! OS-thread spawn/joins per accepted tree. The accept path bounds
+//! accepted trees/sec at high worker counts — measured by
+//! `bench_ps_throughput`'s fused-vs-serial and persistent-vs-scoped
+//! breakdowns.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -40,6 +46,9 @@ use crate::util::Stopwatch;
 
 use super::report::TrainReport;
 
+/// Train asynchronously on the parameter server: `cfg.workers` worker
+/// threads race pulls/builds/pushes while the calling thread runs the
+/// server accept loop until `cfg.n_trees` trees are accepted.
 pub fn train_async(
     cfg: &TrainConfig,
     train: &Dataset,

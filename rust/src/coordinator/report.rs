@@ -14,19 +14,27 @@ use crate::util::timer::PhaseTimer;
 /// Everything a trainer hands back.
 #[derive(Debug)]
 pub struct TrainReport {
+    /// The trained model.
     pub forest: Forest,
+    /// Train/test loss by accepted-tree count and wall clock.
     pub curve: LossCurve,
+    /// Realised staleness of accepted (and count of rejected) pushes.
     pub staleness: StalenessStats,
+    /// Per-phase server/worker time accounting.
     pub timer: PhaseTimer,
     /// Total wall-clock of the training loop.
     pub wall_secs: f64,
+    /// Trees the server accepted (== forest size).
     pub trees_accepted: usize,
+    /// Pushes dropped by the bounded-staleness filter.
     pub trees_rejected: u64,
+    /// Which gradient engine produced the targets (native or AOT).
     pub engine: EngineKind,
     /// Distribution of worker-side tree build times (secs).
     pub build_times: Summary,
     /// Mode tag ("async"/"sync"/"serial") + worker count for outputs.
     pub mode: String,
+    /// Worker count the run was configured with.
     pub workers: usize,
 }
 
@@ -65,6 +73,7 @@ impl TrainReport {
         ])
     }
 
+    /// Write [`TrainReport::to_json`] to a file, creating parent dirs.
     pub fn write_summary(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;

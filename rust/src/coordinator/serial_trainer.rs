@@ -7,7 +7,8 @@
 //! pass (default) or the serial reference sweeps per `cfg.scoring` /
 //! `cfg.score_threads` — just like the sync and async trainers; the
 //! serial mode is where the scoring and accept-path ablations isolate
-//! pure apply cost.
+//! pure apply cost. Scoring threads come from the `ServerCore`'s
+//! [`crate::util::Executor`], built once here at startup (`cfg.pool`).
 
 use std::sync::Arc;
 
@@ -23,6 +24,8 @@ use crate::util::{Rng, Stopwatch};
 
 use super::report::TrainReport;
 
+/// Train strictly serially (Friedman's loop) — the τ ≡ 0 convergence
+/// baseline every figure compares against.
 pub fn train_serial(
     cfg: &TrainConfig,
     train: &Dataset,

@@ -10,7 +10,9 @@
 //! Each accepted tree goes through the accept pipeline selected by
 //! `cfg.target` inside [`ServerCore::apply_tree`] — the fused
 //! row-sharded pass by default, or the serial reference sweeps
-//! (`cfg.scoring` / `cfg.score_threads`).
+//! (`cfg.scoring` / `cfg.score_threads`) — on the scoring
+//! [`crate::util::Executor`] the core builds once at startup
+//! (`cfg.pool`).
 
 use std::sync::Arc;
 
@@ -26,6 +28,8 @@ use crate::util::{Rng, Stopwatch};
 
 use super::report::TrainReport;
 
+/// Train with the synchronous fork-join baseline: serial convergence,
+/// `cfg.workers`-way parallel histogram building per tree.
 pub fn train_sync(
     cfg: &TrainConfig,
     train: &Dataset,

@@ -90,14 +90,19 @@ impl BinMapper {
 /// per-feature mappers and flat-histogram offsets.
 #[derive(Debug, Clone)]
 pub struct BinnedDataset {
+    /// Per-feature value→bin quantizers.
     pub mappers: Vec<BinMapper>,
     /// Row-major nonzero bins: same indptr/indices as the source CSR.
     pub indptr: Vec<usize>,
+    /// Feature id of each nonzero (parallel to `bins`).
     pub feat_ids: Vec<u32>,
+    /// Local bin id of each nonzero (parallel to `feat_ids`).
     pub bins: Vec<u8>,
     /// Flat histogram offset per feature (prefix sum of n_bins).
     pub offsets: Vec<usize>,
+    /// Row count.
     pub n_rows: usize,
+    /// Feature count.
     pub n_features: usize,
 }
 

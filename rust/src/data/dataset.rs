@@ -15,7 +15,9 @@ use crate::util::Rng;
 /// per-sample multiplicities `m_i` (all 1.0 unless constructed otherwise).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Display name (corpus tag) used in logs and outputs.
     pub name: String,
+    /// The feature matrix.
     pub x: CsrMatrix,
     /// Labels in {0.0, 1.0}.
     pub y: Vec<f32>,
@@ -58,10 +60,12 @@ impl Dataset {
         })
     }
 
+    /// Number of samples.
     pub fn n_rows(&self) -> usize {
         self.x.n_rows()
     }
 
+    /// Number of features.
     pub fn n_features(&self) -> usize {
         self.x.n_cols()
     }

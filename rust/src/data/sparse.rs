@@ -8,8 +8,11 @@ use anyhow::{bail, Result};
 pub struct CsrMatrix {
     n_rows: usize,
     n_cols: usize,
+    /// Row start offsets into `indices`/`values` (length n_rows + 1).
     pub indptr: Vec<usize>,
+    /// Column ids of the nonzeros, strictly increasing within a row.
     pub indices: Vec<u32>,
+    /// The nonzero values (parallel to `indices`).
     pub values: Vec<f32>,
 }
 
@@ -81,14 +84,17 @@ impl CsrMatrix {
         Self::from_rows(n_cols, &rows)
     }
 
+    /// Number of rows.
     pub fn n_rows(&self) -> usize {
         self.n_rows
     }
 
+    /// Number of columns.
     pub fn n_cols(&self) -> usize {
         self.n_cols
     }
 
+    /// Number of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.indices.len()
     }

@@ -17,6 +17,8 @@ pub struct SpeciesTable {
 }
 
 impl SpeciesTable {
+    /// Group a dataset's rows into species (identical feature vector +
+    /// label) and accumulate multiplicities.
     pub fn build(ds: &Dataset) -> SpeciesTable {
         let mut ids: HashMap<(u64, u32), u32> = HashMap::new();
         let mut counts: Vec<f64> = Vec::new();
@@ -33,6 +35,7 @@ impl SpeciesTable {
         SpeciesTable { counts, row_species }
     }
 
+    /// Number of distinct species (the paper's Ω).
     pub fn n_species(&self) -> usize {
         self.counts.len()
     }
@@ -59,11 +62,17 @@ impl SpeciesTable {
 ///   least one species: 1 - Π_i (1 - P(Q'_i=1)^2)... computed in log space.
 #[derive(Debug, Clone)]
 pub struct DiversityReport {
+    /// Sample count of the dataset.
     pub n_rows: usize,
+    /// Ω — number of species.
     pub omega: usize,
+    /// Δ — max per-species selection probability.
     pub delta: f64,
+    /// Expected Q′ density per sampling pass.
     pub qprime_density: f64,
+    /// Probability two passes overlap in some species.
     pub rho: f64,
+    /// Ω / n_rows.
     pub diversity_ratio: f64,
 }
 

@@ -21,7 +21,9 @@ use crate::util::Rng;
 /// Spec for a synthetic sparse classification corpus.
 #[derive(Debug, Clone)]
 pub struct SparseSpec {
+    /// Samples to generate.
     pub n_rows: usize,
+    /// Feature-space width.
     pub n_features: usize,
     /// Mean nonzeros per row.
     pub nnz_per_row: usize,

@@ -31,6 +31,7 @@ use crate::tree::HistogramStrategy;
 
 use super::common::{base_cfg, convergence_sweep, split, Scale, Variant};
 
+/// Run the engineering ablation sweep (histogram strategy, scoring engine, accept pipeline) at `scale`, writing CSV + summary JSON into `out_dir`.
 pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     let n_rows = scale.pick(1_500, 12_000);
     let ds = synthetic::realsim_like(n_rows, 111);

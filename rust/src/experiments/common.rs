@@ -16,7 +16,9 @@ use crate::util::Rng;
 /// Experiment size: Smoke for CI/tests, Paper for figure regeneration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// Seconds-scale sizes for CI and tests.
     Smoke,
+    /// Paper-fidelity sizes for figure regeneration.
     Paper,
 }
 
@@ -29,6 +31,7 @@ impl Scale {
         }
     }
 
+    /// Parse the `--scale` CLI value.
     pub fn parse(s: &str) -> Result<Scale> {
         match s {
             "smoke" => Ok(Scale::Smoke),
@@ -37,6 +40,7 @@ impl Scale {
         }
     }
 
+    /// Choose between a smoke-sized and a paper-sized value.
     pub fn pick<T>(&self, smoke: T, paper: T) -> T {
         match self {
             Scale::Smoke => smoke,
@@ -47,7 +51,9 @@ impl Scale {
 
 /// A tagged training variation within a sweep.
 pub struct Variant {
+    /// Row tag in the long-format CSV.
     pub tag: String,
+    /// The full config this variant trains with.
     pub cfg: TrainConfig,
 }
 
@@ -85,8 +91,9 @@ pub fn convergence_sweep(
         let final_test_error = test_ds
             .map(|t| {
                 let mut pool = ScratchPool::new();
+                let exec = crate::util::Executor::scoped(1);
                 let margins =
-                    FlatForest::from_forest(&rep.forest).predict_all_raw(&t.x, 1, &mut pool);
+                    FlatForest::from_forest(&rep.forest).predict_all_raw(&t.x, &exec, &mut pool);
                 metrics::error_rate(&margins, &t.y, &t.m)
             })
             .unwrap_or(f64::NAN);

@@ -42,6 +42,7 @@ fn calibrate(ds: &crate::data::Dataset, cfg: &TrainConfig) -> Result<PhaseTimes>
     ))
 }
 
+/// Run the Figure 10 experiment (simulated cluster speedup sweep, calibrated from measured phase times) at `scale`, writing CSV + summary JSON into `out_dir`.
 pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     let worker_counts: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
     let sim_trees = scale.pick(100, 400);

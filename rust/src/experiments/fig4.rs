@@ -18,6 +18,7 @@ use crate::sampling::{BernoulliSampler, SampleKey};
 
 use super::common::Scale;
 
+/// Run the Figure 4 experiment (sampling-diversity validity) at `scale`, writing CSV + summary JSON into `out_dir`.
 pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     let rates = scale.pick(
         vec![0.001, 0.01, 0.1, 0.5],

@@ -14,6 +14,7 @@ use crate::io::Json;
 
 use super::common::{base_cfg, convergence_sweep, split, worker_counts, Scale, Variant};
 
+/// Run the Figure 5 experiment (higgs-like convergence by worker count) at `scale`, writing CSV + summary JSON into `out_dir`.
 pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     let n_rows = scale.pick(3_000, 60_000);
     let ds = synthetic::higgs_like(n_rows, 505);

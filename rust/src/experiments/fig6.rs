@@ -15,6 +15,7 @@ use crate::io::Json;
 
 use super::common::{base_cfg, convergence_sweep, split, worker_counts, Scale, Variant};
 
+/// Run the Figure 6 experiment (realsim-like convergence by worker count) at `scale`, writing CSV + summary JSON into `out_dir`.
 pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     let n_rows = scale.pick(2_000, 20_000);
     let ds = synthetic::realsim_like(n_rows, 606);

@@ -9,6 +9,7 @@ use crate::io::Json;
 
 use super::common::{base_cfg, convergence_sweep, sampling_rates, split, Scale, Variant};
 
+/// Run the Figure 7 experiment (higgs-like convergence by sampling rate) at `scale`, writing CSV + summary JSON into `out_dir`.
 pub fn run(scale: Scale, out_dir: &Path) -> Result<Json> {
     let n_rows = scale.pick(3_000, 60_000);
     let ds = synthetic::higgs_like(n_rows, 707);

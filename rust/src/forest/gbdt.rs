@@ -12,12 +12,14 @@ use crate::tree::Tree;
 /// constant tree (the paper's server init: mean label mapped to margin).
 #[derive(Debug, Clone, Default)]
 pub struct Forest {
+    /// Margin of the initial constant tree.
     pub base_score: f32,
     /// (step length v at push time, tree)
     pub trees: Vec<(f32, Tree)>,
 }
 
 impl Forest {
+    /// An empty forest with the given initial margin.
     pub fn new(base_score: f32) -> Forest {
         Forest {
             base_score,
@@ -32,6 +34,7 @@ impl Forest {
         (0.5 * (p / (1.0 - p)).ln()) as f32
     }
 
+    /// Number of accepted trees (excluding the constant base).
     pub fn n_trees(&self) -> usize {
         self.trees.len()
     }
@@ -61,14 +64,16 @@ impl Forest {
     /// a [`super::score::FlatForest`] once instead.
     pub fn predict_all(&self, x: &CsrMatrix) -> Vec<f32> {
         let mut pool = super::score::ScratchPool::new();
-        super::score::FlatForest::from_forest(self).predict_all_raw(x, 1, &mut pool)
+        let exec = crate::util::Executor::scoped(1);
+        super::score::FlatForest::from_forest(self).predict_all_raw(x, &exec, &mut pool)
     }
 
     /// Margin predictions on the training (binned) representation, via
     /// the blocked SoA scorer (see [`Forest::predict_all`]).
     pub fn predict_all_binned(&self, b: &BinnedDataset) -> Vec<f32> {
         let mut pool = super::score::ScratchPool::new();
-        super::score::FlatForest::from_forest(self).predict_all_binned(b, 1, &mut pool)
+        let exec = crate::util::Executor::scoped(1);
+        super::score::FlatForest::from_forest(self).predict_all_binned(b, &exec, &mut pool)
     }
 
     /// Reference batch prediction: the per-row enum walk, one
@@ -106,6 +111,7 @@ impl Forest {
 
     // ------------------------------------------------------ serialization
 
+    /// Serialize to the model-file JSON shape (`base_score` + tree list).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("base_score", Json::Num(self.base_score as f64)),
@@ -126,6 +132,7 @@ impl Forest {
         ])
     }
 
+    /// Deserialize a forest produced by [`Forest::to_json`].
     pub fn from_json(j: &Json) -> Result<Forest> {
         let base_score = j.req_f64("base_score")? as f32;
         let mut forest = Forest::new(base_score);
@@ -141,6 +148,7 @@ impl Forest {
         Ok(forest)
     }
 
+    /// Write the model file (creating parent directories as needed).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -149,6 +157,7 @@ impl Forest {
         Ok(())
     }
 
+    /// Load a model file written by [`Forest::save`].
     pub fn load(path: &std::path::Path) -> Result<Forest> {
         Forest::from_json(&Json::parse_file(path)?)
     }

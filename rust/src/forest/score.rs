@@ -14,11 +14,13 @@
 //!   block the tree routes all rows to their leaves in one
 //!   frontier/partition sweep, and the server's step 2 collapses to
 //!   `F[r] += v * leaf_value[leaf_of[r]]` per leaf segment;
-//! * blocks are claimed dynamically by `score_threads` scoped threads —
-//!   the same claim-a-chunk load-balancing as the split search's
-//!   work-stealing cursor in `tree/parallel.rs`, with a mutexed block
-//!   iterator instead of an atomic because each claim hands out a
-//!   disjoint `&mut` slice of F;
+//! * blocks are claimed dynamically by up to `score_threads` workers
+//!   obtained from a [`crate::util::Executor`] (the server-lifetime
+//!   [`crate::util::ScorePool`] under `pool=persistent`, per-call scoped
+//!   spawns under `pool=scoped`) — the same claim-a-chunk load-balancing
+//!   as the split search's work-stealing cursor in `tree/parallel.rs`,
+//!   with a mutexed block iterator instead of an atomic because each
+//!   claim hands out a disjoint `&mut` slice of F;
 //! * the per-block scratch (row-id buffer + partition stack) is pooled
 //!   ([`ScratchPool`]) under the same take/give contract as
 //!   [`crate::tree::HistogramPool`], so a long-lived server allocates
@@ -37,6 +39,7 @@ use std::sync::Mutex;
 use crate::data::sparse::CsrMatrix;
 use crate::data::BinnedDataset;
 use crate::tree::FlatTree;
+use crate::util::Executor;
 
 use super::Forest;
 
@@ -45,7 +48,15 @@ use super::Forest;
 /// the locality the per-row walk gives up.
 pub const ROW_BLOCK: usize = 512;
 
-/// Which engine performs the server's F-update (step 2).
+/// Which engine performs the server's F-update (step 2, config key
+/// `scoring` — serial accept path only; see DESIGN.md §11).
+///
+/// ```
+/// use asgbdt::forest::ScoreMode;
+/// assert_eq!(ScoreMode::parse("flat").unwrap(), ScoreMode::Flat);
+/// assert_eq!(ScoreMode::PerRow.as_str(), "perrow");
+/// assert_eq!(ScoreMode::default(), ScoreMode::Flat);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ScoreMode {
     /// Per-row enum traversal — the reference implementation, kept for
@@ -57,6 +68,7 @@ pub enum ScoreMode {
 }
 
 impl ScoreMode {
+    /// Parse the `scoring=` config/CLI value.
     pub fn parse(s: &str) -> anyhow::Result<ScoreMode> {
         match s {
             "perrow" | "per_row" => Ok(ScoreMode::PerRow),
@@ -65,6 +77,7 @@ impl ScoreMode {
         }
     }
 
+    /// The config/CLI spelling of this mode.
     pub fn as_str(&self) -> &'static str {
         match self {
             ScoreMode::PerRow => "perrow",
@@ -83,6 +96,7 @@ pub struct ScoreScratch {
 }
 
 impl ScoreScratch {
+    /// An empty scratch (buffers grow on first use).
     pub fn new() -> ScoreScratch {
         ScoreScratch::default()
     }
@@ -106,10 +120,13 @@ pub struct ScratchPool {
 }
 
 impl ScratchPool {
+    /// An empty pool; buffers are allocated lazily by `take`.
     pub fn new() -> ScratchPool {
         ScratchPool::default()
     }
 
+    /// Hand out a (possibly dirty) scratch, allocating only when the
+    /// pool is empty.
     pub fn take(&mut self) -> ScoreScratch {
         self.free.pop().unwrap_or_else(|| {
             self.allocated += 1;
@@ -117,6 +134,7 @@ impl ScratchPool {
         })
     }
 
+    /// Return a scratch for reuse.
     pub fn give(&mut self, s: ScoreScratch) {
         self.free.push(s);
     }
@@ -134,20 +152,23 @@ impl ScratchPool {
 }
 
 /// Run `block_fn(start_row, f_block, scratch)` over every [`ROW_BLOCK`]
-/// chunk of `f`. With `n_threads > 1` the chunks are claimed dynamically
-/// off a shared iterator by scoped threads (each chunk is a disjoint
-/// `&mut` slice of F, so claims are mutually exclusive by construction);
-/// otherwise they run on the calling thread. Scratches come from — and
-/// return to — `pool` either way.
+/// chunk of `f`. With more than one executor thread (and enough rows to
+/// be worth it) the chunks are claimed dynamically off a shared iterator
+/// by the executor's workers (each chunk is a disjoint `&mut` slice of
+/// F, so claims are mutually exclusive by construction); otherwise they
+/// run on the calling thread. Scratches come from — and return to —
+/// `pool` either way, and the result is independent of both the worker
+/// count and the executor mode: each block's f32 operations are a pure
+/// function of the block, whichever thread runs it.
 fn drive_blocks(
     f: &mut [f32],
-    n_threads: usize,
+    exec: &Executor,
     pool: &mut ScratchPool,
     block_fn: impl Fn(usize, &mut [f32], &mut ScoreScratch) + Sync,
 ) {
     let n_blocks = f.len().div_ceil(ROW_BLOCK).max(1);
-    let n_threads = n_threads.clamp(1, n_blocks);
-    if n_threads == 1 || f.len() <= 2 * ROW_BLOCK {
+    let n_active = exec.threads().clamp(1, n_blocks);
+    if n_active == 1 || f.len() <= 2 * ROW_BLOCK {
         let mut scratch = pool.take();
         for (bi, chunk) in f.chunks_mut(ROW_BLOCK).enumerate() {
             block_fn(bi * ROW_BLOCK, chunk, &mut scratch);
@@ -155,29 +176,22 @@ fn drive_blocks(
         pool.give(scratch);
         return;
     }
-    let scratches: Vec<ScoreScratch> = (0..n_threads).map(|_| pool.take()).collect();
+    // one scratch slot per worker; the slot mutex is uncontended (each
+    // worker index locks only its own slot, once per dispatch)
+    let scratches: Vec<Mutex<ScoreScratch>> =
+        (0..n_active).map(|_| Mutex::new(pool.take())).collect();
     let work = Mutex::new(f.chunks_mut(ROW_BLOCK).enumerate());
-    let work = &work;
-    let block_fn = &block_fn;
-    let returned: Vec<ScoreScratch> = std::thread::scope(|s| {
-        let handles: Vec<_> = scratches
-            .into_iter()
-            .map(|mut scratch| {
-                s.spawn(move || {
-                    loop {
-                        // claim the next block (lock held for next() only)
-                        let item = work.lock().unwrap().next();
-                        let Some((bi, chunk)) = item else { break };
-                        block_fn(bi * ROW_BLOCK, chunk, &mut scratch);
-                    }
-                    scratch
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    exec.run(n_active, &|tid| {
+        let mut scratch = scratches[tid].lock().unwrap();
+        loop {
+            // claim the next block (lock held for next() only)
+            let item = work.lock().unwrap().next();
+            let Some((bi, chunk)) = item else { break };
+            block_fn(bi * ROW_BLOCK, chunk, &mut scratch);
+        }
     });
-    for s in returned {
-        pool.give(s);
+    for s in scratches {
+        pool.give(s.into_inner().unwrap());
     }
 }
 
@@ -227,16 +241,18 @@ fn add_block_raw(
 }
 
 /// The server's step 2 over the training rows:
-/// `F[r] += v * tree(r)` for every row, bin-space, blocked.
+/// `F[r] += v * tree(r)` for every row, bin-space, blocked. Threads come
+/// from `exec` — the server's long-lived executor on the accept path, or
+/// [`Executor::scoped`] for one-shot callers.
 pub fn add_tree_binned(
     flat: &FlatTree,
     binned: &BinnedDataset,
     v: f32,
     f: &mut [f32],
-    n_threads: usize,
+    exec: &Executor,
     pool: &mut ScratchPool,
 ) {
-    drive_blocks(f, n_threads, pool, |start, chunk, scratch| {
+    drive_blocks(f, exec, pool, |start, chunk, scratch| {
         add_block_binned(flat, binned, v, start, chunk, scratch);
     });
 }
@@ -248,10 +264,10 @@ pub fn add_tree_raw(
     x: &CsrMatrix,
     v: f32,
     f: &mut [f32],
-    n_threads: usize,
+    exec: &Executor,
     pool: &mut ScratchPool,
 ) {
-    drive_blocks(f, n_threads, pool, |start, chunk, scratch| {
+    drive_blocks(f, exec, pool, |start, chunk, scratch| {
         add_block_raw(flat, x, v, start, chunk, scratch);
     });
 }
@@ -264,11 +280,14 @@ pub fn add_tree_raw(
 /// margins).
 #[derive(Debug, Clone, Default)]
 pub struct FlatForest {
+    /// The forest's constant initial margin.
     pub base_score: f32,
+    /// `(step length, compiled tree)` pairs in acceptance order.
     pub trees: Vec<(f32, FlatTree)>,
 }
 
 impl FlatForest {
+    /// Compile every tree of a [`Forest`] into its SoA scoring form.
     pub fn from_forest(forest: &Forest) -> FlatForest {
         FlatForest {
             base_score: forest.base_score,
@@ -280,6 +299,7 @@ impl FlatForest {
         }
     }
 
+    /// Number of compiled trees.
     pub fn n_trees(&self) -> usize {
         self.trees.len()
     }
@@ -288,11 +308,11 @@ impl FlatForest {
     pub fn predict_all_raw(
         &self,
         x: &CsrMatrix,
-        n_threads: usize,
+        exec: &Executor,
         pool: &mut ScratchPool,
     ) -> Vec<f32> {
         let mut f = vec![0.0f32; x.n_rows()];
-        drive_blocks(&mut f, n_threads, pool, |start, chunk, scratch| {
+        drive_blocks(&mut f, exec, pool, |start, chunk, scratch| {
             chunk.fill(self.base_score);
             for (v, t) in &self.trees {
                 add_block_raw(t, x, *v, start, chunk, scratch);
@@ -305,11 +325,11 @@ impl FlatForest {
     pub fn predict_all_binned(
         &self,
         b: &BinnedDataset,
-        n_threads: usize,
+        exec: &Executor,
         pool: &mut ScratchPool,
     ) -> Vec<f32> {
         let mut f = vec![0.0f32; b.n_rows];
-        drive_blocks(&mut f, n_threads, pool, |start, chunk, scratch| {
+        drive_blocks(&mut f, exec, pool, |start, chunk, scratch| {
             chunk.fill(self.base_score);
             for (v, t) in &self.trees {
                 add_block_binned(t, b, *v, start, chunk, scratch);
@@ -325,7 +345,7 @@ mod tests {
     use crate::data::{synthetic, Dataset};
     use crate::loss::logistic;
     use crate::tree::{build_tree, Tree, TreeParams};
-    use crate::util::Rng;
+    use crate::util::{PoolMode, Rng};
 
     fn boosted(ds: &Dataset, b: &BinnedDataset, n_trees: usize, seed: u64) -> Forest {
         let w = vec![1.0f32; ds.n_rows()];
@@ -354,18 +374,21 @@ mod tests {
         let ds = synthetic::realsim_like(1_500, 51);
         let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
         let forest = boosted(&ds, &b, 3, 5);
-        for threads in [1usize, 2, 4] {
-            let mut pool = ScratchPool::new();
-            let mut f_flat = vec![0.1f32; ds.n_rows()];
-            let mut f_ref = vec![0.1f32; ds.n_rows()];
-            for (v, t) in &forest.trees {
-                let flat = FlatTree::from_tree(t);
-                add_tree_binned(&flat, &b, *v, &mut f_flat, threads, &mut pool);
-                for r in 0..ds.n_rows() {
-                    f_ref[r] += v * t.predict_binned(&b, r);
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [1usize, 2, 4] {
+                let exec = Executor::new(mode, threads);
+                let mut pool = ScratchPool::new();
+                let mut f_flat = vec![0.1f32; ds.n_rows()];
+                let mut f_ref = vec![0.1f32; ds.n_rows()];
+                for (v, t) in &forest.trees {
+                    let flat = FlatTree::from_tree(t);
+                    add_tree_binned(&flat, &b, *v, &mut f_flat, &exec, &mut pool);
+                    for r in 0..ds.n_rows() {
+                        f_ref[r] += v * t.predict_binned(&b, r);
+                    }
                 }
+                assert_eq!(f_flat, f_ref, "mode={mode:?} threads={threads}");
             }
-            assert_eq!(f_flat, f_ref, "threads={threads}");
         }
     }
 
@@ -374,17 +397,19 @@ mod tests {
         let ds = synthetic::realsim_like(1_100, 52);
         let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
         let forest = boosted(&ds, &b, 2, 6);
-        let mut pool = ScratchPool::new();
-        let mut f_flat = vec![0.0f32; ds.n_rows()];
-        let mut f_ref = vec![0.0f32; ds.n_rows()];
-        for (v, t) in &forest.trees {
-            let flat = FlatTree::from_tree(t);
-            add_tree_raw(&flat, &ds.x, *v, &mut f_flat, 3, &mut pool);
-            for r in 0..ds.n_rows() {
-                f_ref[r] += v * t.predict_raw(&ds.x, r);
+        for exec in [Executor::scoped(3), Executor::new(PoolMode::Persistent, 3)] {
+            let mut pool = ScratchPool::new();
+            let mut f_flat = vec![0.0f32; ds.n_rows()];
+            let mut f_ref = vec![0.0f32; ds.n_rows()];
+            for (v, t) in &forest.trees {
+                let flat = FlatTree::from_tree(t);
+                add_tree_raw(&flat, &ds.x, *v, &mut f_flat, &exec, &mut pool);
+                for r in 0..ds.n_rows() {
+                    f_ref[r] += v * t.predict_raw(&ds.x, r);
+                }
             }
+            assert_eq!(f_flat, f_ref, "mode={:?}", exec.mode());
         }
-        assert_eq!(f_flat, f_ref);
     }
 
     #[test]
@@ -395,16 +420,19 @@ mod tests {
         let flat = FlatForest::from_forest(&forest);
         assert_eq!(flat.n_trees(), 4);
         let mut pool = ScratchPool::new();
-        for threads in [1usize, 2, 4] {
-            let raw = flat.predict_all_raw(&ds.x, threads, &mut pool);
-            let binned = flat.predict_all_binned(&b, threads, &mut pool);
-            for r in 0..ds.n_rows() {
-                assert_eq!(raw[r], forest.predict_raw(&ds.x, r), "raw row {r}");
-                let mut want = forest.base_score;
-                for (v, t) in &forest.trees {
-                    want += v * t.predict_binned(&b, r);
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [1usize, 2, 4] {
+                let exec = Executor::new(mode, threads);
+                let raw = flat.predict_all_raw(&ds.x, &exec, &mut pool);
+                let binned = flat.predict_all_binned(&b, &exec, &mut pool);
+                for r in 0..ds.n_rows() {
+                    assert_eq!(raw[r], forest.predict_raw(&ds.x, r), "raw row {r}");
+                    let mut want = forest.base_score;
+                    for (v, t) in &forest.trees {
+                        want += v * t.predict_binned(&b, r);
+                    }
+                    assert_eq!(binned[r], want, "binned row {r}");
                 }
-                assert_eq!(binned[r], want, "binned row {r}");
             }
         }
     }
@@ -415,16 +443,18 @@ mod tests {
         let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
         let forest = boosted(&ds, &b, 2, 8);
         let flat = FlatForest::from_forest(&forest);
-        let mut pool = ScratchPool::new();
-        for _ in 0..5 {
-            flat.predict_all_binned(&b, 3, &mut pool);
+        for exec in [Executor::scoped(3), Executor::new(PoolMode::Persistent, 3)] {
+            let mut pool = ScratchPool::new();
+            for _ in 0..5 {
+                flat.predict_all_binned(&b, &exec, &mut pool);
+            }
+            assert!(
+                pool.allocated() <= 3,
+                "pooled scoring allocated {} scratches for 3 threads",
+                pool.allocated()
+            );
+            assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
         }
-        assert!(
-            pool.allocated() <= 3,
-            "pooled scoring allocated {} scratches for 3 threads",
-            pool.allocated()
-        );
-        assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
     }
 
     #[test]
@@ -432,14 +462,18 @@ mod tests {
         let flat = FlatForest::from_forest(&Forest::new(0.25));
         let x = CsrMatrix::from_dense(3, 1, &[1.0, 0.0, 2.0]).unwrap();
         let mut pool = ScratchPool::new();
-        assert_eq!(flat.predict_all_raw(&x, 4, &mut pool), vec![0.25; 3]);
+        let exec = Executor::scoped(4);
+        assert_eq!(flat.predict_all_raw(&x, &exec, &mut pool), vec![0.25; 3]);
         // zero-row input
         let empty = CsrMatrix::from_dense(0, 1, &[]).unwrap();
-        assert_eq!(flat.predict_all_raw(&empty, 2, &mut pool), Vec::<f32>::new());
+        assert_eq!(
+            flat.predict_all_raw(&empty, &exec, &mut pool),
+            Vec::<f32>::new()
+        );
         // constant tree adds its value everywhere
         let mut f = vec![1.0f32; 3];
         let ft = FlatTree::from_tree(&Tree::constant(2.0));
-        add_tree_raw(&ft, &x, 0.5, &mut f, 1, &mut pool);
+        add_tree_raw(&ft, &x, 0.5, &mut f, &Executor::scoped(1), &mut pool);
         assert_eq!(f, vec![2.0; 3]);
     }
 

@@ -16,6 +16,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// A writer with the given header row.
     pub fn new(header: &[&str]) -> Self {
         Self {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -49,6 +50,7 @@ impl CsvWriter {
         self.row(&fields.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
     }
 
+    /// Rows accumulated so far (header excluded).
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

@@ -14,17 +14,24 @@ use anyhow::{anyhow, bail, Result};
 /// serialization matters for golden tests).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key-sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---------------------------------------------------------- accessors
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -32,6 +39,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -39,6 +47,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer (rejects fractions).
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -46,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -53,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -60,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -77,18 +89,21 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
     }
 
+    /// Required string field (see [`Json::req`]).
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.req(key)?
             .as_str()
             .ok_or_else(|| anyhow!("field '{key}' is not a string"))
     }
 
+    /// Required non-negative integer field (see [`Json::req`]).
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.req(key)?
             .as_usize()
             .ok_or_else(|| anyhow!("field '{key}' is not a non-negative integer"))
     }
 
+    /// Required numeric field (see [`Json::req`]).
     pub fn req_f64(&self, key: &str) -> Result<f64> {
         self.req(key)?
             .as_f64()
@@ -97,16 +112,19 @@ impl Json {
 
     // ------------------------------------------------------- construction
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
     // ------------------------------------------------------------ parsing
 
+    /// Parse a complete JSON document (rejects trailing garbage).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -121,6 +139,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Read and parse a JSON file, with the path in any error message.
     pub fn parse_file(path: &std::path::Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("read {}: {e}", path.display()))?;

@@ -20,7 +20,15 @@
 //!   path. Python never runs at training time.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every paper figure to a module and bench target.
+//! mapping every paper figure to a module and bench target — §11 maps
+//! the three scoring engines (per-row, blocked SoA, fused sharded) and
+//! the persistent scoring pool onto Algorithm 3's server steps, with the
+//! decision table for the `scoring`/`target`/`pool` knobs.
+
+// The docs ARE part of the deliverable: every public item carries rustdoc
+// and CI builds `cargo doc` with -D warnings, so a missing doc (or a
+// broken intra-doc link) fails the build rather than rotting silently.
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod cli;

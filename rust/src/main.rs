@@ -81,6 +81,9 @@ CONFIG OVERRIDES (key=value):
                                 bit-identical outputs)
   scoring=flat|perrow          (serial-path F-update engine; perrow requires
                                 target=serial)   score_threads=N
+  pool=persistent|scoped       (where score_threads come from: server-lifetime
+                                parked worker pool vs per-tree scoped spawns;
+                                persistent is default, bit-identical outputs)
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {

@@ -26,18 +26,22 @@ pub struct CurvePoint {
 /// A recorded loss curve.
 #[derive(Debug, Clone, Default)]
 pub struct LossCurve {
+    /// Points in recording order (ascending n_trees).
     pub points: Vec<CurvePoint>,
 }
 
 impl LossCurve {
+    /// Append a point.
     pub fn push(&mut self, p: CurvePoint) {
         self.points.push(p);
     }
 
+    /// Train loss of the last recorded point.
     pub fn final_train_loss(&self) -> Option<f64> {
         self.points.last().map(|p| p.train_loss)
     }
 
+    /// Test loss of the last recorded point.
     pub fn final_test_loss(&self) -> Option<f64> {
         self.points.last().map(|p| p.test_loss)
     }
@@ -99,28 +103,34 @@ impl LossCurve {
 /// histogram over accepted pushes.
 #[derive(Debug, Clone, Default)]
 pub struct StalenessStats {
+    /// τ of every accepted push, in acceptance order.
     pub samples: Vec<u64>,
     /// Pushes rejected by the bounded-staleness filter.
     pub rejected: u64,
 }
 
 impl StalenessStats {
+    /// Record one accepted push's τ.
     pub fn record(&mut self, tau: u64) {
         self.samples.push(tau);
     }
 
+    /// Count one rejected push.
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
     }
 
+    /// Distribution summary of the accepted τ samples.
     pub fn summary(&self) -> Summary {
         Summary::of(&self.samples.iter().map(|&s| s as f64).collect::<Vec<_>>())
     }
 
+    /// Largest accepted τ (0 if none).
     pub fn max(&self) -> u64 {
         self.samples.iter().copied().max().unwrap_or(0)
     }
 
+    /// Mean accepted τ (0 if none).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             0.0

@@ -14,7 +14,9 @@ use crate::tree::Tree;
 pub struct TargetSnapshot {
     /// Server version j: number of trees accepted when this was published.
     pub version: u64,
+    /// Stochastic gradient target (full-length, zero off-support).
     pub grad: Arc<Vec<f32>>,
+    /// Hessian target (weights in gradient mode; full-length).
     pub hess: Arc<Vec<f32>>,
     /// Sampled rows (support of m' > 0), ascending.
     pub rows: Arc<Vec<u32>>,
@@ -31,6 +33,7 @@ impl TargetSnapshot {
         }
     }
 
+    /// Size of the sampled support.
     pub fn n_sampled(&self) -> usize {
         self.rows.len()
     }
@@ -41,8 +44,11 @@ impl TargetSnapshot {
 /// time minus this is the realised delay τ).
 #[derive(Debug, Clone)]
 pub struct TreePush {
+    /// Which worker built the tree.
     pub worker_id: usize,
+    /// Target version the tree was built from (k(j)).
     pub based_on: u64,
+    /// The freshly built tree.
     pub tree: Tree,
     /// Worker-side build time (profiling; calibrates the simulator).
     pub build_secs: f64,

@@ -13,7 +13,11 @@
 //!   pass per row shard** across `score_threads` threads, bit-identical
 //!   to the serial reference path for every shard count. The serial path
 //!   (`target=serial`) keeps the separate sweeps, routed through the
-//!   blocked SoA scoring engine (`forest/score.rs`).
+//!   blocked SoA scoring engine (`forest/score.rs`). Either pipeline
+//!   draws its threads from the server's [`crate::util::Executor`] —
+//!   under `pool=persistent` (default) a server-lifetime
+//!   [`crate::util::ScorePool`] of parked workers, so per-tree dispatch
+//!   is a condvar wake rather than OS thread spawn/join (DESIGN.md §11).
 //! * [`worker`] — the worker loop: pull latest target, build a tree on the
 //!   sampled sub-dataset, push. Workers are mutually blind; only the
 //!   pull/build/push order *within* one worker is serialised, exactly the

@@ -15,7 +15,7 @@ use crate::runtime::GradientEngine;
 use crate::sampling::{BernoulliSampler, SampleKey};
 use crate::tree::{FlatTree, Tree};
 use crate::util::timer::PhaseTimer;
-use crate::util::Stopwatch;
+use crate::util::{Executor, Stopwatch};
 
 use super::messages::TargetSnapshot;
 use super::shard::{fused_accept_pass, AcceptInputs, TargetMode};
@@ -31,6 +31,7 @@ pub struct Board {
 }
 
 impl Board {
+    /// A fresh board holding the empty version-0 snapshot.
     pub fn new() -> Board {
         Board {
             snapshot: RwLock::new(Arc::new(TargetSnapshot::empty())),
@@ -58,10 +59,12 @@ impl Board {
         self.snapshot.read().unwrap().clone()
     }
 
+    /// Flag shutdown; workers observe it on their next poll.
     pub fn request_shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
     }
 
+    /// Whether shutdown has been requested.
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::Acquire)
     }
@@ -104,6 +107,12 @@ pub struct ApplyOutcome {
 /// draw sampling passes from the same counter-based keys and reduce
 /// eval sums through the same blocked fold, so they produce
 /// bit-identical F vectors, targets and loss curves.
+///
+/// Threads for either pipeline come from the core's [`Executor`],
+/// constructed once per server lifetime from `cfg.pool` /
+/// `cfg.score_threads`: `pool=persistent` (default) parks the workers
+/// in a [`crate::util::ScorePool`] between trees, so per-tree dispatch
+/// is a condvar wake instead of `score_threads` OS thread spawns.
 pub struct ServerCore {
     cfg: TrainConfig,
     binned: Arc<BinnedDataset>,
@@ -119,10 +128,19 @@ pub struct ServerCore {
     /// Pooled scoring scratch for the blocked F-update (step 2) — row-id
     /// blocks + partition stacks recycled across every accepted tree.
     score_pool: ScratchPool,
+    /// The execution resource behind every parallel scoring section,
+    /// built once from `cfg.pool` / `cfg.score_threads`: a server-lifetime
+    /// [`crate::util::ScorePool`] of parked workers (`pool=persistent`,
+    /// default) or per-section scoped spawns (`pool=scoped`).
+    exec: Executor,
+    /// The accepted forest F(x).
     pub forest: Forest,
     test: Option<TestSet>,
+    /// Loss-curve points recorded every `eval_every` accepted trees.
     pub curve: LossCurve,
+    /// Realised staleness distribution over accepted/rejected pushes.
     pub staleness: StalenessStats,
+    /// Per-phase wall-clock accounting of the accept path.
     pub timer: PhaseTimer,
     clock: Stopwatch,
     current: TargetSnapshot,
@@ -159,6 +177,7 @@ impl ServerCore {
             sample_seed: cfg.seed ^ SERVER_SEED_SALT,
             f,
             score_pool: ScratchPool::new(),
+            exec: Executor::new(cfg.pool, cfg.score_threads),
             forest,
             test,
             curve: LossCurve::default(),
@@ -182,6 +201,7 @@ impl ServerCore {
         self.current.clone()
     }
 
+    /// Trees accepted so far (== the current target version).
     pub fn n_trees(&self) -> usize {
         self.forest.n_trees()
     }
@@ -253,7 +273,7 @@ impl ServerCore {
                 want_eval: eval_due && native,
             },
             &mut self.f,
-            self.cfg.score_threads,
+            &self.exec,
             &mut self.score_pool,
         );
         self.timer.record("server/fused_pass", t0.elapsed());
@@ -264,7 +284,7 @@ impl ServerCore {
                 &test.x,
                 v,
                 &mut test.f,
-                self.cfg.score_threads,
+                &self.exec,
                 &mut self.score_pool,
             );
             self.timer.record("server/update_f_test", t0.elapsed());
@@ -341,7 +361,7 @@ impl ServerCore {
                     &self.binned,
                     v,
                     &mut self.f,
-                    self.cfg.score_threads,
+                    &self.exec,
                     &mut self.score_pool,
                 );
                 self.timer.record("server/update_f", t0.elapsed());
@@ -352,7 +372,7 @@ impl ServerCore {
                         &test.x,
                         v,
                         &mut test.f,
-                        self.cfg.score_threads,
+                        &self.exec,
                         &mut self.score_pool,
                     );
                     self.timer.record("server/update_f_test", t0.elapsed());
@@ -609,10 +629,12 @@ mod tests {
         let mut cfg_flat = mini_cfg(8);
         cfg_flat.scoring = crate::forest::ScoreMode::Flat;
         cfg_flat.score_threads = 3;
+        cfg_flat.pool = crate::util::PoolMode::Persistent;
         let mut cfg_ref = cfg_flat.clone();
         cfg_ref.target = TargetMode::Serial;
         cfg_ref.scoring = crate::forest::ScoreMode::PerRow;
         cfg_ref.score_threads = 1;
+        cfg_ref.pool = crate::util::PoolMode::Scoped;
         let mut core_a =
             ServerCore::new(&cfg_flat, &tr, binned.clone(), Some(&te), GradientEngine::native())
                 .unwrap();
@@ -652,6 +674,7 @@ mod tests {
         let mut cfg_serial = mini_cfg(10);
         cfg_serial.target = TargetMode::Serial;
         cfg_serial.score_threads = 1;
+        cfg_serial.pool = crate::util::PoolMode::Scoped;
         cfg_serial.eval_every = 2;
         let mut serial = ServerCore::new(
             &cfg_serial,
@@ -672,46 +695,90 @@ mod tests {
             trees.push(tree.clone());
             serial.apply_tree(tree, s.version).unwrap();
         }
-        for threads in [1usize, 2, 4] {
-            let mut cfg_fused = cfg_serial.clone();
-            cfg_fused.target = TargetMode::Fused;
-            cfg_fused.score_threads = threads;
-            let mut fused = ServerCore::new(
-                &cfg_fused,
-                &tr,
-                binned.clone(),
-                Some(&te),
-                GradientEngine::native(),
-            )
-            .unwrap();
-            for tree in &trees {
-                let s = fused.snapshot();
-                // identical state ⇒ identical published targets ⇒ the
-                // serial core's trees are exactly what workers would build
-                let out = fused.apply_tree(tree.clone(), s.version).unwrap();
-                assert!(out.accepted);
+        for pool in [crate::util::PoolMode::Persistent, crate::util::PoolMode::Scoped] {
+            for threads in [1usize, 2, 4, 8] {
+                let mut cfg_fused = cfg_serial.clone();
+                cfg_fused.target = TargetMode::Fused;
+                cfg_fused.score_threads = threads;
+                cfg_fused.pool = pool;
+                let mut fused = ServerCore::new(
+                    &cfg_fused,
+                    &tr,
+                    binned.clone(),
+                    Some(&te),
+                    GradientEngine::native(),
+                )
+                .unwrap();
+                for tree in &trees {
+                    let s = fused.snapshot();
+                    // identical state ⇒ identical published targets ⇒ the
+                    // serial core's trees are exactly what workers would build
+                    let out = fused.apply_tree(tree.clone(), s.version).unwrap();
+                    assert!(out.accepted);
+                }
+                let at = format!("threads={threads} pool={}", pool.as_str());
+                assert_eq!(fused.f, serial.f, "train F diverged ({at})");
+                let sf = fused.snapshot();
+                let ss = serial.snapshot();
+                assert_eq!(sf.version, ss.version);
+                assert_eq!(*sf.rows, *ss.rows, "sampled rows diverged ({at})");
+                assert_eq!(*sf.grad, *ss.grad, "targets diverged ({at})");
+                assert_eq!(*sf.hess, *ss.hess, "hessians diverged ({at})");
+                let curves = |c: &crate::metrics::LossCurve| {
+                    c.points
+                        .iter()
+                        .map(|p| (p.n_trees, p.train_loss, p.test_loss, p.test_error))
+                        .collect::<Vec<_>>()
+                };
+                assert_eq!(
+                    curves(&fused.curve),
+                    curves(&serial.curve),
+                    "loss curves diverged ({at})"
+                );
+                assert_eq!(fused.staleness.samples, serial.staleness.samples);
+                assert_eq!(fused.staleness.rejected, serial.staleness.rejected);
             }
-            assert_eq!(fused.f, serial.f, "train F diverged (threads={threads})");
-            let sf = fused.snapshot();
-            let ss = serial.snapshot();
-            assert_eq!(sf.version, ss.version);
-            assert_eq!(*sf.rows, *ss.rows, "sampled rows diverged");
-            assert_eq!(*sf.grad, *ss.grad, "targets diverged");
-            assert_eq!(*sf.hess, *ss.hess, "hessians diverged");
-            let curves = |c: &crate::metrics::LossCurve| {
-                c.points
-                    .iter()
-                    .map(|p| (p.n_trees, p.train_loss, p.test_loss, p.test_error))
-                    .collect::<Vec<_>>()
-            };
-            assert_eq!(
-                curves(&fused.curve),
-                curves(&serial.curve),
-                "loss curves diverged (threads={threads})"
-            );
-            assert_eq!(fused.staleness.samples, serial.staleness.samples);
-            assert_eq!(fused.staleness.rejected, serial.staleness.rejected);
         }
+    }
+
+    #[test]
+    fn persistent_pool_survives_a_long_accept_stream() {
+        // pool lifecycle at the server level: one ScorePool serves 120
+        // accepted trees (120 fused passes + 120 held-out updates) and the
+        // final state matches a scoped-mode twin bit for bit
+        let ds = synthetic::realsim_like(1_400, 63);
+        let mut rng0 = Rng::new(5);
+        let (tr, te) = ds.split(0.25, &mut rng0);
+        let binned = Arc::new(BinnedDataset::from_dataset(&tr, 16).unwrap());
+        let mut cfg = mini_cfg(120);
+        cfg.tree.max_leaves = 4;
+        cfg.eval_every = 30;
+        cfg.score_threads = 2;
+        cfg.pool = crate::util::PoolMode::Persistent;
+        let mut cfg_scoped = cfg.clone();
+        cfg_scoped.pool = crate::util::PoolMode::Scoped;
+        let mut a = ServerCore::new(&cfg, &tr, binned.clone(), Some(&te), GradientEngine::native())
+            .unwrap();
+        let mut b = ServerCore::new(
+            &cfg_scoped,
+            &tr,
+            binned.clone(),
+            Some(&te),
+            GradientEngine::native(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(11);
+        for _ in 0..120 {
+            let s = a.snapshot();
+            let tree =
+                crate::tree::build_tree(&binned, &s.rows, &s.grad, &s.hess, &cfg.tree, &mut rng);
+            a.apply_tree(tree.clone(), s.version).unwrap();
+            b.apply_tree(tree, b.snapshot().version).unwrap();
+        }
+        assert_eq!(a.n_trees(), 120);
+        assert_eq!(a.f, b.f, "persistent and scoped pools diverged");
+        // scratch recycling survived the whole stream: ≤ one per worker
+        assert!(a.score_pool.allocated() <= 2, "allocated {}", a.score_pool.allocated());
     }
 
     #[test]

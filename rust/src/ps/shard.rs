@@ -15,9 +15,12 @@
 //! updated by the flattened tree, and while they are still
 //! cache-resident the block is sampled, its target rows get grad/hess
 //! on the fresh margins, and its eval partial is taken. Shards execute
-//! in parallel on `score_threads` scoped threads, each owning disjoint
-//! `&mut` slices of F/weights/grad/hess, so no synchronisation exists
-//! inside the pass.
+//! in parallel on up to `score_threads` workers obtained from the
+//! server's [`crate::util::Executor`] — the parked server-lifetime
+//! [`crate::util::ScorePool`] under `pool=persistent` (no per-tree
+//! thread spawn/join), per-pass scoped spawns under `pool=scoped` —
+//! each shard owning disjoint `&mut` slices of F/weights/grad/hess, so
+//! no synchronisation exists inside the pass.
 //!
 //! **Why fused ≡ serial, bit for bit, at every shard count:**
 //!
@@ -46,13 +49,24 @@
 //! engine calls for the target and eval, the same calls the serial
 //! path makes.
 
+use std::sync::Mutex;
+
 use crate::data::BinnedDataset;
 use crate::forest::score::{self, ScoreScratch, ScratchPool, ROW_BLOCK};
 use crate::loss::logistic;
 use crate::sampling::{BernoulliSampler, SampleKey};
 use crate::tree::FlatTree;
+use crate::util::Executor;
 
-/// Which accept pipeline the server runs per accepted tree.
+/// Which accept pipeline the server runs per accepted tree (config key
+/// `target`; see DESIGN.md §11).
+///
+/// ```
+/// use asgbdt::ps::TargetMode;
+/// assert_eq!(TargetMode::parse("fused").unwrap(), TargetMode::Fused);
+/// assert_eq!(TargetMode::Serial.as_str(), "serial");
+/// assert_eq!(TargetMode::default(), TargetMode::Fused);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TargetMode {
     /// One fused sharded pass: F-update + sample + grad/hess + eval
@@ -66,6 +80,7 @@ pub enum TargetMode {
 }
 
 impl TargetMode {
+    /// Parse the `target=` config/CLI value.
     pub fn parse(s: &str) -> anyhow::Result<TargetMode> {
         match s {
             "fused" => Ok(TargetMode::Fused),
@@ -74,6 +89,7 @@ impl TargetMode {
         }
     }
 
+    /// The config/CLI spelling of this mode.
     pub fn as_str(&self) -> &'static str {
         match self {
             TargetMode::Fused => "fused",
@@ -88,6 +104,7 @@ pub struct AcceptInputs<'a> {
     /// The accepted tree, flattened; `None` skips the F-update (the
     /// server's init pass, where only sampling/target/eval run).
     pub flat: Option<&'a FlatTree>,
+    /// The training rows in binned form (what the tree routes on).
     pub binned: &'a BinnedDataset,
     /// Step length v scaling the tree into F.
     pub v: f32,
@@ -95,6 +112,7 @@ pub struct AcceptInputs<'a> {
     pub y: &'a [f32],
     /// Full multiplicities m_i (eval weights).
     pub m: &'a [f32],
+    /// The keyed Bernoulli sampler (step 3).
     pub sampler: &'a BernoulliSampler,
     /// Key of the sampling pass being produced (version = j + 1).
     pub key: SampleKey,
@@ -110,9 +128,13 @@ pub struct AcceptInputs<'a> {
 /// `grad`/`hess` are full-length when `compute_target` was set and
 /// empty otherwise (the AOT fallback produces them on the engine).
 pub struct FusedResult {
+    /// Sampled weights m'_i, full-length.
     pub weights: Vec<f32>,
+    /// Gradient target (empty unless `compute_target`).
     pub grad: Vec<f32>,
+    /// Hessian target (empty unless `compute_target`).
     pub hess: Vec<f32>,
+    /// The sampled support, ascending.
     pub rows: Vec<u32>,
     /// (Σloss, Σerr, Σw) over full multiplicities on the updated
     /// margins; `Some` iff `want_eval` was set.
@@ -181,14 +203,17 @@ fn run_shard(inp: &AcceptInputs<'_>, task: ShardTask<'_>, scratch: &mut ScoreScr
     rows
 }
 
-/// Run one fused accept pass over `f`, sharded across `n_threads`.
-/// Scratch buffers come from — and return to — `pool` (the same
-/// [`ScratchPool`] contract as the blocked scorer). The result is
-/// bit-identical for every `n_threads` (see the module docs).
+/// Run one fused accept pass over `f`, sharded across the executor's
+/// workers (at most one shard per thread of `exec`). Scratch buffers
+/// come from — and return to — `pool` (the same [`ScratchPool`]
+/// contract as the blocked scorer). The result is bit-identical for
+/// every shard count and for both executor modes (see the module docs):
+/// the shard split depends only on the thread budget, and each shard is
+/// a pure function of its rows, whichever thread runs it.
 pub fn fused_accept_pass(
     inp: &AcceptInputs<'_>,
     f: &mut [f32],
-    n_threads: usize,
+    exec: &Executor,
     pool: &mut ScratchPool,
 ) -> FusedResult {
     let n = f.len();
@@ -196,7 +221,7 @@ pub fn fused_accept_pass(
     assert_eq!(inp.m.len(), n);
     assert_eq!(inp.sampler.n_rows(), n);
     let n_blocks = n.div_ceil(ROW_BLOCK).max(1);
-    let n_shards = n_threads.clamp(1, n_blocks);
+    let n_shards = exec.threads().clamp(1, n_blocks);
     let mut weights = vec![0.0f32; n];
     // target vectors only materialise when computed in-shard (native);
     // the AOT fallback produces them whole-vector on the engine instead
@@ -258,22 +283,32 @@ pub fn fused_accept_pass(
             });
             row0 += len;
         }
-        let mut scratches: Vec<_> = (0..n_shards).map(|_| pool.take()).collect();
-        let shard_rows: Vec<Vec<u32>> = std::thread::scope(|sc| {
-            let handles: Vec<_> = tasks
-                .into_iter()
-                .zip(scratches.iter_mut())
-                .map(|(task, scratch)| sc.spawn(move || run_shard(inp, task, scratch)))
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        // one slot per shard: the worker with index `tid` takes task
+        // `tid`, runs it with its own scratch, and parks the shard's
+        // sampled rows back in its slot (slot mutexes are uncontended —
+        // exactly one worker touches each)
+        let slots: Vec<Mutex<(Option<ShardTask<'_>>, ScoreScratch, Vec<u32>)>> = tasks
+            .into_iter()
+            .map(|task| Mutex::new((Some(task), pool.take(), Vec::new())))
+            .collect();
+        exec.run(n_shards, &|tid| {
+            let mut slot = slots[tid].lock().unwrap();
+            let (task, scratch, out) = &mut *slot;
+            let task = task.take().expect("shard task dispatched twice");
+            *out = run_shard(inp, task, scratch);
         });
-        for s in scratches {
-            pool.give(s);
-        }
         // shards are contiguous ascending, so concatenation is ascending
-        let mut rows = Vec::with_capacity(shard_rows.iter().map(Vec::len).sum());
-        for r in &shard_rows {
-            rows.extend_from_slice(r);
+        let parts: Vec<(ScoreScratch, Vec<u32>)> = slots
+            .into_iter()
+            .map(|slot| {
+                let (_, scratch, shard_rows) = slot.into_inner().unwrap();
+                (scratch, shard_rows)
+            })
+            .collect();
+        let mut rows = Vec::with_capacity(parts.iter().map(|(_, r)| r.len()).sum());
+        for (scratch, shard_rows) in parts {
+            pool.give(scratch);
+            rows.extend_from_slice(&shard_rows);
         }
         rows
     };
@@ -295,7 +330,7 @@ mod tests {
     use super::*;
     use crate::data::{synthetic, Dataset};
     use crate::tree::{build_tree, TreeParams};
-    use crate::util::Rng;
+    use crate::util::{PoolMode, Rng};
     use std::sync::Arc;
 
     fn setup(n: usize, seed: u64) -> (Dataset, Arc<BinnedDataset>, FlatTree) {
@@ -344,22 +379,32 @@ mod tests {
         let key = SampleKey { seed: 5, version: 3 };
 
         let mut f_ref = vec![0.05f32; n];
-        score::add_tree_binned(&flat, &b, 0.2, &mut f_ref, 1, &mut ScratchPool::new());
+        score::add_tree_binned(
+            &flat,
+            &b,
+            0.2,
+            &mut f_ref,
+            &Executor::scoped(1),
+            &mut ScratchPool::new(),
+        );
         let pass = sampler.draw(key);
         let gh = logistic::grad_hess_loss(&f_ref, &ds.y, &pass.weights);
         let ev_ref = logistic::eval_sums_blocked(&f_ref, &ds.y, &ds.m, ROW_BLOCK);
 
-        let mut f = vec![0.05f32; n];
-        let mut pool = ScratchPool::new();
         let inp = inputs(&ds, &b, Some(&flat), &sampler, key, true);
-        let out = fused_accept_pass(&inp, &mut f, 3, &mut pool);
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            let exec = Executor::new(mode, 3);
+            let mut f = vec![0.05f32; n];
+            let mut pool = ScratchPool::new();
+            let out = fused_accept_pass(&inp, &mut f, &exec, &mut pool);
 
-        assert_eq!(f, f_ref, "fused F diverged from blocked scorer");
-        assert_eq!(out.weights, pass.weights);
-        assert_eq!(out.rows, pass.rows);
-        assert_eq!(out.grad, gh.grad);
-        assert_eq!(out.hess, gh.hess);
-        assert_eq!(out.eval.unwrap(), ev_ref);
+            assert_eq!(f, f_ref, "fused F diverged from blocked scorer ({mode:?})");
+            assert_eq!(out.weights, pass.weights);
+            assert_eq!(out.rows, pass.rows);
+            assert_eq!(out.grad, gh.grad);
+            assert_eq!(out.hess, gh.hess);
+            assert_eq!(out.eval.unwrap(), ev_ref);
+        }
     }
 
     #[test]
@@ -372,16 +417,20 @@ mod tests {
         let mut pool = ScratchPool::new();
         let inp = inputs(&ds, &b, Some(&flat), &sampler, key, true);
         let mut f1 = base.clone();
-        let one = fused_accept_pass(&inp, &mut f1, 1, &mut pool);
-        for threads in [2usize, 3, 8] {
-            let mut ft = base.clone();
-            let many = fused_accept_pass(&inp, &mut ft, threads, &mut pool);
-            assert_eq!(ft, f1, "F differs at {threads} shards");
-            assert_eq!(many.weights, one.weights, "weights differ at {threads}");
-            assert_eq!(many.rows, one.rows, "rows differ at {threads}");
-            assert_eq!(many.grad, one.grad, "grad differs at {threads}");
-            assert_eq!(many.hess, one.hess, "hess differs at {threads}");
-            assert_eq!(many.eval, one.eval, "eval sums differ at {threads}");
+        let one = fused_accept_pass(&inp, &mut f1, &Executor::scoped(1), &mut pool);
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [2usize, 3, 8] {
+                let exec = Executor::new(mode, threads);
+                let mut ft = base.clone();
+                let many = fused_accept_pass(&inp, &mut ft, &exec, &mut pool);
+                let at = format!("{threads} shards ({mode:?})");
+                assert_eq!(ft, f1, "F differs at {at}");
+                assert_eq!(many.weights, one.weights, "weights differ at {at}");
+                assert_eq!(many.rows, one.rows, "rows differ at {at}");
+                assert_eq!(many.grad, one.grad, "grad differs at {at}");
+                assert_eq!(many.hess, one.hess, "hess differs at {at}");
+                assert_eq!(many.eval, one.eval, "eval sums differ at {at}");
+            }
         }
     }
 
@@ -394,7 +443,7 @@ mod tests {
         let mut f = base.clone();
         let mut pool = ScratchPool::new();
         let inp = inputs(&ds, &b, None, &sampler, key, false);
-        let out = fused_accept_pass(&inp, &mut f, 4, &mut pool);
+        let out = fused_accept_pass(&inp, &mut f, &Executor::scoped(4), &mut pool);
         assert_eq!(f, base, "init pass must not touch F");
         assert!(out.eval.is_none());
         let pass = sampler.draw(key);
@@ -414,7 +463,7 @@ mod tests {
         inp.compute_target = false;
         let mut f = vec![0.0f32; ds.n_rows()];
         let mut pool = ScratchPool::new();
-        let out = fused_accept_pass(&inp, &mut f, 2, &mut pool);
+        let out = fused_accept_pass(&inp, &mut f, &Executor::scoped(2), &mut pool);
         assert!(out.grad.is_empty() && out.hess.is_empty());
         let pass = sampler.draw(key);
         assert_eq!(out.weights, pass.weights);
@@ -426,15 +475,17 @@ mod tests {
     fn scratch_pool_reaches_steady_state_across_passes() {
         let (ds, b, flat) = setup(2_100, 24);
         let sampler = BernoulliSampler::uniform(&ds, 0.6);
-        let mut f = vec![0.0f32; ds.n_rows()];
-        let mut pool = ScratchPool::new();
-        for v in 0..5 {
-            let key = SampleKey { seed: 2, version: v };
-            let inp = inputs(&ds, &b, Some(&flat), &sampler, key, v % 2 == 0);
-            fused_accept_pass(&inp, &mut f, 3, &mut pool);
+        for exec in [Executor::scoped(3), Executor::new(PoolMode::Persistent, 3)] {
+            let mut f = vec![0.0f32; ds.n_rows()];
+            let mut pool = ScratchPool::new();
+            for v in 0..5 {
+                let key = SampleKey { seed: 2, version: v };
+                let inp = inputs(&ds, &b, Some(&flat), &sampler, key, v % 2 == 0);
+                fused_accept_pass(&inp, &mut f, &exec, &mut pool);
+            }
+            assert!(pool.allocated() <= 3, "allocated {}", pool.allocated());
+            assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
         }
-        assert!(pool.allocated() <= 3, "allocated {}", pool.allocated());
-        assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
     }
 
     #[test]

@@ -21,9 +21,13 @@ pub struct Entry {
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and artifacts) live in.
     pub dir: PathBuf,
+    /// Padded row-count buckets, ascending.
     pub buckets: Vec<usize>,
+    /// Pallas block size the kernels were lowered with.
     pub block: usize,
+    /// One entry per compiled (function, bucket) artifact.
     pub entries: Vec<Entry>,
 }
 
@@ -84,6 +88,7 @@ impl Manifest {
         *self.buckets.last().unwrap()
     }
 
+    /// The biggest padded row count any artifact covers.
     pub fn largest_bucket(&self) -> usize {
         *self.buckets.last().unwrap()
     }

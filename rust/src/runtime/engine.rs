@@ -104,6 +104,7 @@ impl GradientEngine {
         GradientEngine::native()
     }
 
+    /// Which backend this engine currently runs on.
     pub fn kind(&self) -> EngineKind {
         if self.aot.is_some() {
             EngineKind::Aot

@@ -20,6 +20,7 @@ use crate::util::rng::{CounterRng, RandStream};
 /// sharded — without coordinating any RNG state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SampleKey {
+    /// Stream seed (the server salts its own from `cfg.seed`).
     pub seed: u64,
     /// Target version this pass produces (the server's accept counter).
     pub version: u64,
@@ -79,6 +80,7 @@ impl BernoulliSampler {
         }
     }
 
+    /// Rows this sampler draws over.
     pub fn n_rows(&self) -> usize {
         self.rates.len()
     }

@@ -5,7 +5,9 @@ use crate::util::Rng;
 /// Network model: fixed per-message latency + bandwidth.
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkSpec {
+    /// Fixed per-message software latency (seconds).
     pub latency_s: f64,
+    /// Effective bandwidth (bytes/second).
     pub bandwidth_bytes_per_s: f64,
 }
 
@@ -28,16 +30,20 @@ impl NetworkSpec {
 /// The simulated cluster.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterSpec {
+    /// Worker-node count.
     pub n_workers: usize,
     /// Coefficient of variation of per-task node speed (the paper: "it is
     /// unlikely that all nodes in a system share the same computation
     /// speed"). 0 = perfectly homogeneous.
     pub speed_cv: f64,
+    /// The interconnect model.
     pub net: NetworkSpec,
+    /// Seed of the simulator's jitter streams.
     pub seed: u64,
 }
 
 impl ClusterSpec {
+    /// Paper-like defaults (gigabit TCP, 15% speed CV) at a worker count.
     pub fn new(n_workers: usize) -> ClusterSpec {
         ClusterSpec {
             n_workers,

@@ -22,6 +22,7 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// Simulated accepted-tree throughput.
     pub fn trees_per_sec(&self) -> f64 {
         self.n_trees as f64 / self.wall_secs.max(1e-12)
     }

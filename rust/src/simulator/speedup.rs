@@ -6,12 +6,16 @@ use super::models::{simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp};
 /// Which simulated system a row belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SystemKind {
+    /// The paper's asynchronous PS system.
     AsynchSgbdt,
+    /// Feature-parallel fork-join baseline (LightGBM-style).
     LightGbmFp,
+    /// AllReduce-per-layer baseline (DimBoost-style).
     DimBoost,
 }
 
 impl SystemKind {
+    /// The CSV/figure tag of this system.
     pub fn as_str(&self) -> &'static str {
         match self {
             SystemKind::AsynchSgbdt => "asynch-sgbdt",
@@ -20,6 +24,7 @@ impl SystemKind {
         }
     }
 
+    /// All simulated systems, figure order.
     pub fn all() -> [SystemKind; 3] {
         [SystemKind::AsynchSgbdt, SystemKind::LightGbmFp, SystemKind::DimBoost]
     }
@@ -28,12 +33,17 @@ impl SystemKind {
 /// One (system, workers) measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct SpeedupRow {
+    /// Which system produced the row.
     pub system: SystemKind,
+    /// Simulated worker count.
     pub workers: usize,
+    /// Simulated wall time for the tree budget.
     pub wall_secs: f64,
     /// wall(1 worker of the same system) / wall(this row).
     pub speedup: f64,
+    /// Mean realised staleness (async only; 0 for sync systems).
     pub mean_staleness: f64,
+    /// Server-busy / barrier-cost fraction of wall.
     pub bottleneck_frac: f64,
 }
 

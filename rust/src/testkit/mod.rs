@@ -10,6 +10,7 @@ use crate::util::Rng;
 
 /// Generation context handed to properties: seeded RNG + current size.
 pub struct Gen {
+    /// Per-case seeded RNG (fork it for independent streams).
     pub rng: Rng,
     /// Grows 1 → 100 across the case ramp.
     pub size: usize,

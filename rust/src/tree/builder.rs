@@ -24,12 +24,17 @@ use super::tree::{Node, Tree};
 /// feature sampling).
 #[derive(Debug, Clone, Copy)]
 pub struct TreeParams {
+    /// Leaf-count cap (leaf-wise growth stops here).
     pub max_leaves: usize,
     /// 0 = unlimited.
     pub max_depth: usize,
+    /// Minimum rows per leaf.
     pub min_leaf_count: u64,
+    /// Minimum hessian mass per leaf.
     pub min_leaf_hess: f64,
+    /// L2 regularisation on leaf values.
     pub lambda: f64,
+    /// Minimum gain for a split to be taken.
     pub min_gain: f64,
     /// Fraction of features considered per tree (paper: 0.8).
     pub feature_rate: f64,

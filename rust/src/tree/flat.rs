@@ -39,6 +39,7 @@ use super::tree::{Node, Tree};
 /// fields of a leaf) are zeroed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlatTree {
+    /// Split feature per node.
     pub feature: Vec<u32>,
     /// Bin-space split (valid against the training `BinnedDataset`).
     pub bin: Vec<u8>,
@@ -46,6 +47,7 @@ pub struct FlatTree {
     pub threshold: Vec<f32>,
     /// Left-child index; `0` marks a leaf. Right child is `left + 1`.
     pub left: Vec<u32>,
+    /// Prediction per leaf node (0 for splits).
     pub leaf_value: Vec<f32>,
 }
 
@@ -103,10 +105,12 @@ impl FlatTree {
         flat
     }
 
+    /// Number of nodes (root included).
     pub fn n_nodes(&self) -> usize {
         self.left.len()
     }
 
+    /// Whether `node` is a leaf (left-child sentinel 0).
     #[inline]
     pub fn is_leaf(&self, node: usize) -> bool {
         self.left[node] == 0

@@ -36,6 +36,7 @@ pub enum HistogramStrategy {
 }
 
 impl HistogramStrategy {
+    /// Parse the `histogram=` config/CLI value.
     pub fn parse(s: &str) -> anyhow::Result<HistogramStrategy> {
         match s {
             "rebuild" => Ok(HistogramStrategy::Rebuild),
@@ -44,6 +45,7 @@ impl HistogramStrategy {
         }
     }
 
+    /// The config/CLI spelling of this strategy.
     pub fn as_str(&self) -> &'static str {
         match self {
             HistogramStrategy::Rebuild => "rebuild",
@@ -55,12 +57,16 @@ impl HistogramStrategy {
 /// Aggregate statistics of a set of rows.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct LeafStats {
+    /// Sum of gradients.
     pub grad: f64,
+    /// Sum of hessians.
     pub hess: f64,
+    /// Number of rows.
     pub count: u64,
 }
 
 impl LeafStats {
+    /// Fold one row's (g, h) in.
     #[inline]
     pub fn add(&mut self, g: f64, h: f64) {
         self.grad += g;
@@ -68,6 +74,7 @@ impl LeafStats {
         self.count += 1;
     }
 
+    /// Component-wise difference (`self − other`).
     #[inline]
     pub fn sub(&self, other: &LeafStats) -> LeafStats {
         LeafStats {
@@ -85,8 +92,11 @@ impl LeafStats {
 /// Invariant: every slot NOT in `touched` is all-zero (grad, hess, count).
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Gradient sum per (feature, bin) slot.
     pub grad: Vec<f64>,
+    /// Hessian sum per (feature, bin) slot.
     pub hess: Vec<f64>,
+    /// Row count per (feature, bin) slot.
     pub count: Vec<u32>,
     /// Slots with at least one accumulated row, unordered, no duplicates.
     pub touched: Vec<u32>,
@@ -95,6 +105,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// An all-zero histogram with `total_bins` slots.
     pub fn zeros(total_bins: usize) -> Histogram {
         Histogram {
             grad: vec![0.0; total_bins],
@@ -261,6 +272,7 @@ pub struct HistogramPool {
 }
 
 impl HistogramPool {
+    /// An empty pool handing out `total_bins`-slot histograms.
     pub fn new(total_bins: usize) -> HistogramPool {
         HistogramPool {
             free: Vec::new(),

@@ -16,23 +16,31 @@ use super::histogram::{Histogram, LeafStats};
 /// A candidate split of a leaf.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SplitInfo {
+    /// Feature the split tests.
     pub feature: u32,
     /// Rows with bin <= `bin` go left (bin is in the feature's local bin
     /// id space, implicit zeros resolved to the feature's zero bin).
     pub bin: u8,
     /// Raw-value threshold equivalent (v <= threshold goes left).
     pub threshold: f32,
+    /// Variance-reduction gain of taking the split.
     pub gain: f64,
+    /// Aggregate grad/hess/count of the left child.
     pub left: LeafStats,
+    /// Aggregate grad/hess/count of the right child.
     pub right: LeafStats,
 }
 
 /// Split-search constraints.
 #[derive(Debug, Clone, Copy)]
 pub struct SplitConstraints {
+    /// L2 regularisation on leaf values.
     pub lambda: f64,
+    /// Minimum rows per child.
     pub min_leaf_count: u64,
+    /// Minimum hessian mass per child.
     pub min_leaf_hess: f64,
+    /// Minimum gain for a split to be taken.
     pub min_gain: f64,
 }
 

@@ -11,16 +11,22 @@ use crate::io::Json;
 /// Implicit zeros of sparse rows evaluate as `0.0 <= threshold`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Node {
+    /// An internal test node.
     Split {
+        /// Feature the split tests.
         feature: u32,
         /// Bin-space split (valid against the training BinnedDataset).
         bin: u8,
         /// Raw-space threshold (valid for any raw feature vector).
         threshold: f32,
+        /// Index of the `<=` child.
         left: u32,
+        /// Index of the `>` child.
         right: u32,
     },
+    /// A terminal prediction node.
     Leaf {
+        /// The leaf's predicted margin contribution.
         value: f32,
     },
 }
@@ -28,6 +34,7 @@ pub enum Node {
 /// A regression tree. Node 0 is the root.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tree {
+    /// All nodes; child indices point into this vector.
     pub nodes: Vec<Node>,
 }
 
@@ -39,10 +46,12 @@ impl Tree {
         }
     }
 
+    /// Number of nodes (splits + leaves).
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Number of leaf nodes.
     pub fn n_leaves(&self) -> usize {
         self.nodes
             .iter()
@@ -202,6 +211,7 @@ impl Tree {
         )
     }
 
+    /// Deserialize (and validate) a tree written by `Tree::to_json`.
     pub fn from_json(j: &Json) -> Result<Tree> {
         let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("tree json must be array"))?;
         let mut nodes = Vec::with_capacity(arr.len());

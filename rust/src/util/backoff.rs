@@ -27,6 +27,7 @@ pub struct Backoff {
 }
 
 impl Backoff {
+    /// A backoff starting in the yield (spin) phase.
     pub fn new() -> Backoff {
         Backoff::default()
     }

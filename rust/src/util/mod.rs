@@ -1,12 +1,15 @@
 //! Small shared utilities: deterministic RNGs (sequential + counter-based),
-//! idle backoff, timing, streaming stats.
+//! idle backoff, the persistent scoring thread pool, timing, streaming
+//! stats.
 
 pub mod backoff;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
 pub use backoff::Backoff;
+pub use pool::{Executor, PoolMode, ScorePool};
 pub use rng::{CounterRng, RandStream, Rng};
 pub use stats::Summary;
 pub use timer::Stopwatch;

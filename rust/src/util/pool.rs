@@ -1,0 +1,513 @@
+//! Server-lifetime scoring thread pool.
+//!
+//! Every accepted tree runs a parallel section on the server's accept
+//! path: the blocked F-update (`forest/score.rs`) and the fused accept
+//! pass (`ps/shard.rs`) both fan work out across `score_threads`
+//! threads. Until this module existed they did so with per-tree
+//! `std::thread::scope` spawns — an OS thread create + join per tree,
+//! which costs tens of microseconds and sits directly on the accept
+//! loop's critical path. On small datasets (where one tree's scoring
+//! work is itself tens of microseconds) spawn/join *dominates* the
+//! accept cost and erases the benefit of sharding; `bench_ps_throughput`
+//! measures exactly this.
+//!
+//! [`ScorePool`] keeps `score_threads` workers parked on a condvar for
+//! the lifetime of the server and hands them one job per parallel
+//! section:
+//!
+//! * **Epoch-stamped handoff** — each [`ScorePool::run`] call bumps an
+//!   epoch counter under the pool mutex and wakes the workers; a worker
+//!   runs a job exactly once per epoch (it remembers the last epoch it
+//!   served), so a spurious wakeup or a slow worker can never run a job
+//!   twice or skip one.
+//! * **Scoped borrows without scoped threads** — the job closure may
+//!   borrow stack data (`&mut` F-slices, scratch buffers): `run` erases
+//!   its lifetime to hand it to the parked workers, and does not return
+//!   until every worker has checked in for the epoch, so the borrow
+//!   outlives every use (the same guarantee `thread::scope` gives,
+//!   amortised over the pool's lifetime).
+//! * **Panic propagation** — a panicking job is caught on the worker,
+//!   carried back under the mutex, and re-raised on the caller thread by
+//!   `run` (first payload wins), mirroring the `join().unwrap()`
+//!   behaviour of the scoped path. The pool itself stays usable after a
+//!   propagated panic.
+//! * **Clean shutdown** — dropping the pool flags shutdown, wakes every
+//!   worker and joins them; no thread outlives the pool.
+//!
+//! [`Executor`] is the knob-selected front door: `pool=persistent`
+//! (default) dispatches parallel sections onto a [`ScorePool`];
+//! `pool=scoped` keeps the original per-section `thread::scope` spawns
+//! as the bit-identical reference implementation. Both run the same job
+//! closures over the same index range, so every engine equivalence test
+//! holds under either mode — the only difference is *where the threads
+//! come from*, never what they compute.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// How parallel scoring sections obtain their threads (config key
+/// `pool=persistent|scoped`; see DESIGN.md §11).
+///
+/// ```
+/// use asgbdt::util::PoolMode;
+/// assert_eq!(PoolMode::parse("persistent").unwrap(), PoolMode::Persistent);
+/// assert_eq!(PoolMode::Scoped.as_str(), "scoped");
+/// assert_eq!(PoolMode::default(), PoolMode::Persistent);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolMode {
+    /// One server-lifetime [`ScorePool`] of parked workers; per-tree
+    /// dispatch is a condvar wake instead of an OS thread spawn.
+    #[default]
+    Persistent,
+    /// Per-section `std::thread::scope` spawns — the reference
+    /// implementation the pool is tested bit-identical against.
+    Scoped,
+}
+
+impl PoolMode {
+    /// Parse the `pool=` config/CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<PoolMode> {
+        match s {
+            "persistent" => Ok(PoolMode::Persistent),
+            "scoped" => Ok(PoolMode::Scoped),
+            other => anyhow::bail!("unknown pool mode '{other}' (persistent|scoped)"),
+        }
+    }
+
+    /// The config/CLI spelling of this mode.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PoolMode::Persistent => "persistent",
+            PoolMode::Scoped => "scoped",
+        }
+    }
+}
+
+/// A borrowed job closure, as every `run` entry point receives it.
+type JobRef<'a> = &'a (dyn Fn(usize) + Sync);
+
+/// [`JobRef`] with its lifetime erased into a raw pointer (`*const dyn`
+/// defaults to the `'static` object bound) for storage in [`PoolState`].
+type RawJob = *const (dyn Fn(usize) + Sync);
+
+/// A dispatched job: a lifetime-erased pointer to the caller's closure
+/// plus how many worker indices participate this epoch.
+///
+/// Safety: the pointer is only dereferenced between the epoch bump that
+/// published it and the last worker check-in for that epoch, and
+/// [`ScorePool::run`] blocks the owning borrow until that check-in.
+#[derive(Clone, Copy)]
+struct Job {
+    ptr: RawJob,
+    active: usize,
+}
+
+// The raw pointer is handed between threads under the pool mutex and only
+// dereferenced while `run` keeps the underlying closure alive (see Job).
+unsafe impl Send for Job {}
+
+/// State shared between the caller and the parked workers, guarded by
+/// one mutex (jobs are rare — one per accepted tree — so contention is
+/// nil; correctness, not throughput, picks the lock).
+struct PoolState {
+    /// Bumped once per dispatched job; workers serve each epoch once.
+    epoch: u64,
+    /// The current job; `None` between epochs.
+    job: Option<Job>,
+    /// Workers that have not yet checked in for the current epoch.
+    remaining: usize,
+    /// First panic payload raised by a job this epoch, if any.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Set by drop: workers exit instead of waiting for the next epoch.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between epochs.
+    work_cv: Condvar,
+    /// The caller parks here until `remaining` hits zero.
+    done_cv: Condvar,
+    /// Held for the whole of [`ScorePool::run`]: the epoch protocol
+    /// assumes one dispatch in flight, and the lifetime-erased job
+    /// pointer makes a second concurrent dispatch unsound, so callers
+    /// racing `run` on a shared pool serialize here instead.
+    dispatch: Mutex<()>,
+}
+
+/// A fixed-size pool of parked scoring workers living as long as its
+/// owner (the server, a trainer, a bench). See the module docs for the
+/// handoff protocol.
+pub struct ScorePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ScorePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScorePool").field("threads", &self.handles.len()).finish()
+    }
+}
+
+impl ScorePool {
+    /// Spawn `threads` parked workers (at least one).
+    pub fn new(threads: usize) -> ScorePool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            dispatch: Mutex::new(()),
+        });
+        let handles = (0..threads)
+            .map(|idx| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("score-{idx}"))
+                    .spawn(move || worker_loop(idx, &shared))
+                    .expect("spawn score pool worker")
+            })
+            .collect();
+        ScorePool { shared, handles }
+    }
+
+    /// Number of pooled workers.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `job(idx)` for every `idx < active` on the pooled workers and
+    /// wait for all of them. `active` is clamped to the pool size;
+    /// `active == 0` is a no-op. Panics raised by the job are re-raised
+    /// here after every worker has checked in.
+    pub fn run(&self, active: usize, job: &(dyn Fn(usize) + Sync)) {
+        let active = active.min(self.threads());
+        if active == 0 {
+            return;
+        }
+        // Erase the borrow's lifetime: safe because this function blocks
+        // until every worker has checked in for the epoch, after which no
+        // worker holds the pointer (see Job).
+        let ptr = unsafe { std::mem::transmute::<JobRef<'_>, RawJob>(job) };
+        // one dispatch in flight at a time (see Shared::dispatch); the
+        // guard also recovers from a previous caller that panicked out
+        let _dispatch = match self.shared.dispatch.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.remaining, 0, "overlapping ScorePool::run calls");
+            st.job = Some(Job { ptr, active });
+            st.epoch += 1;
+            // every worker checks in (inactive indices check in without
+            // running the job) so `remaining == 0` proves nobody still
+            // holds the job pointer
+            st.remaining = self.threads();
+            self.shared.work_cv.notify_all();
+            let mut st = self
+                .shared
+                .done_cv
+                .wait_while(st, |st| st.remaining > 0)
+                .unwrap();
+            st.job = None;
+            if let Some(payload) = st.panic.take() {
+                drop(st);
+                resume_unwind(payload);
+            }
+        }
+    }
+}
+
+impl Drop for ScorePool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            // workers catch job panics, so join only fails if a worker
+            // thread itself died — never panic out of drop for that
+            let _ = h.join();
+        }
+    }
+}
+
+/// The parked-worker loop: wait for an unseen epoch (or shutdown), run
+/// the job for this worker's index if it is active, check in.
+fn worker_loop(idx: usize, shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let Some((epoch, job)) = wait_for_epoch(shared, seen) else {
+            return;
+        };
+        seen = epoch;
+        if idx < job.active {
+            // the caller keeps the closure alive until we check in below
+            let f = unsafe { &*job.ptr };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(idx))) {
+                let mut st = shared.state.lock().unwrap();
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Park until the epoch moves past `seen` (returning the new epoch and
+/// its job) or shutdown is flagged (returning `None`).
+fn wait_for_epoch(shared: &Shared, seen: u64) -> Option<(u64, Job)> {
+    let st = shared.state.lock().unwrap();
+    let st = shared
+        .work_cv
+        .wait_while(st, |st| !st.shutdown && st.epoch == seen)
+        .unwrap();
+    if st.shutdown {
+        return None;
+    }
+    Some((st.epoch, st.job.expect("epoch bumped without a job")))
+}
+
+/// The execution resource behind every parallel scoring section,
+/// selected once at startup by the `pool` knob and owned for the
+/// server's lifetime ([`crate::ps::ServerCore`] constructs one from
+/// `cfg.pool` / `cfg.score_threads`).
+///
+/// `run(active, job)` has identical semantics in both modes — `job(idx)`
+/// for each `idx < active`, return after all complete, propagate job
+/// panics — so engines built on it are oblivious to where their threads
+/// come from, and bit-identity across modes is structural.
+#[derive(Debug)]
+pub enum Executor {
+    /// Per-section `std::thread::scope` spawns (reference).
+    Scoped {
+        /// Thread budget a parallel section may request.
+        threads: usize,
+    },
+    /// Dispatch onto a server-lifetime [`ScorePool`].
+    Persistent(ScorePool),
+}
+
+impl Executor {
+    /// Build the executor for a mode and thread budget (clamped to ≥ 1).
+    ///
+    /// A budget of 1 never engages a parallel section (every engine runs
+    /// its single-thread work inline on the caller), so `persistent`
+    /// falls back to the spawn-free scoped executor rather than parking
+    /// a worker that can never receive work — which is why the default
+    /// config (`score_threads=1`) costs no extra thread.
+    pub fn new(mode: PoolMode, threads: usize) -> Executor {
+        match mode {
+            PoolMode::Persistent if threads > 1 => {
+                Executor::Persistent(ScorePool::new(threads))
+            }
+            _ => Executor::Scoped { threads: threads.max(1) },
+        }
+    }
+
+    /// A scoped executor — the zero-setup default for one-shot callers
+    /// (batch prediction helpers, tests) that don't hold a pool.
+    pub fn scoped(threads: usize) -> Executor {
+        Executor::new(PoolMode::Scoped, threads)
+    }
+
+    /// Which mode this executor runs in.
+    pub fn mode(&self) -> PoolMode {
+        match self {
+            Executor::Scoped { .. } => PoolMode::Scoped,
+            Executor::Persistent(_) => PoolMode::Persistent,
+        }
+    }
+
+    /// The thread budget parallel sections may request from `run`.
+    pub fn threads(&self) -> usize {
+        match self {
+            Executor::Scoped { threads } => *threads,
+            Executor::Persistent(pool) => pool.threads(),
+        }
+    }
+
+    /// Run `job(idx)` for every `idx < active` (clamped to the thread
+    /// budget) and wait for all of them; job panics propagate to the
+    /// caller in both modes.
+    pub fn run(&self, active: usize, job: &(dyn Fn(usize) + Sync)) {
+        match self {
+            Executor::Scoped { threads } => {
+                let active = active.min(*threads);
+                if active == 0 {
+                    return;
+                }
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..active).map(|idx| s.spawn(move || job(idx))).collect();
+                    for h in handles {
+                        if let Err(payload) = h.join() {
+                            resume_unwind(payload);
+                        }
+                    }
+                });
+            }
+            Executor::Persistent(pool) => pool.run(active, job),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn both_modes(threads: usize) -> [Executor; 2] {
+        [
+            Executor::new(PoolMode::Persistent, threads),
+            Executor::new(PoolMode::Scoped, threads),
+        ]
+    }
+
+    #[test]
+    fn runs_every_active_index_exactly_once() {
+        for exec in both_modes(4) {
+            for active in [0usize, 1, 3, 4, 9] {
+                let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+                exec.run(active, &|idx| {
+                    hits[idx].fetch_add(1, Ordering::Relaxed);
+                });
+                let want = active.min(4);
+                for (i, h) in hits.iter().enumerate() {
+                    let expect = usize::from(i < want);
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        expect,
+                        "mode {:?} active {active} idx {i}",
+                        exec.mode()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_pool_reused_across_many_trees() {
+        // the tentpole's reuse contract: one pool serves the whole run —
+        // here 150 "trees" (epochs) of parallel work on the same 3 workers
+        let exec = Executor::new(PoolMode::Persistent, 3);
+        let total = AtomicUsize::new(0);
+        for tree in 0..150 {
+            exec.run(3, &|idx| {
+                total.fetch_add(tree * 3 + idx, Ordering::Relaxed);
+            });
+        }
+        // sum over trees of (3*tree + 0) + (3*tree + 1) + (3*tree + 2)
+        let want: usize = (0..150).map(|t| 9 * t + 3).sum();
+        assert_eq!(total.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn borrowed_mutable_state_visible_after_run() {
+        // run() must not return before every worker finished writing —
+        // the scoped-borrow guarantee the scoring engines rely on
+        for exec in both_modes(4) {
+            let slots: Vec<Mutex<u64>> = (0..4).map(|_| Mutex::new(0)).collect();
+            for round in 1..=5u64 {
+                exec.run(4, &|idx| {
+                    *slots[idx].lock().unwrap() += round;
+                });
+            }
+            for s in &slots {
+                assert_eq!(*s.lock().unwrap(), 15, "mode {:?}", exec.mode());
+            }
+        }
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        for exec in both_modes(2) {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                exec.run(2, &|idx| {
+                    if idx == 1 {
+                        panic!("boom from worker");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "mode {:?} swallowed the panic", exec.mode());
+            // the pool must stay usable after a propagated panic
+            let ok = AtomicUsize::new(0);
+            exec.run(2, &|_| {
+                ok.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(ok.load(Ordering::Relaxed), 2, "mode {:?}", exec.mode());
+        }
+    }
+
+    #[test]
+    fn concurrent_run_callers_serialize_safely() {
+        // two threads racing run() on a shared pool: dispatches must
+        // serialize (Shared::dispatch), each job running to completion
+        let pool = ScorePool::new(2);
+        let counters: Vec<AtomicUsize> = (0..2).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for c in &counters {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        pool.run(2, &|_| {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        for c in &counters {
+            assert_eq!(c.load(Ordering::Relaxed), 100);
+        }
+    }
+
+    #[test]
+    fn drop_shuts_workers_down() {
+        let pool = ScorePool::new(3);
+        let shared = pool.shared.clone();
+        drop(pool); // joins all workers
+        // after drop this is the only Arc left — no worker thread holds one
+        assert_eq!(Arc::strong_count(&shared), 1);
+        assert!(shared.state.lock().unwrap().shutdown);
+    }
+
+    #[test]
+    fn zero_and_oversized_thread_counts_clamp() {
+        let pool = ScorePool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let exec = Executor::new(PoolMode::Scoped, 0);
+        assert_eq!(exec.threads(), 1);
+        // active beyond the budget clamps instead of hanging
+        let n = AtomicUsize::new(0);
+        exec.run(10, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_mode_parse_roundtrip() {
+        assert_eq!(PoolMode::parse("persistent").unwrap(), PoolMode::Persistent);
+        assert_eq!(PoolMode::parse("scoped").unwrap(), PoolMode::Scoped);
+        assert!(PoolMode::parse("rayon").is_err());
+        for m in [PoolMode::Persistent, PoolMode::Scoped] {
+            assert_eq!(PoolMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert_eq!(PoolMode::default(), PoolMode::Persistent);
+    }
+}

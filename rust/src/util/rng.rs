@@ -180,6 +180,7 @@ impl Rng {
 /// this trait (e.g. the Bernoulli sampler's binomial kernel) produces the
 /// same value from the same bits regardless of which generator feeds it.
 pub trait RandStream {
+    /// The next 64 uniform bits of the stream.
     fn next_u64(&mut self) -> u64;
 
     /// Uniform f64 in [0, 1) — same 53-bit construction as [`Rng::uniform`].

@@ -4,13 +4,21 @@
 /// Summary statistics over a sample of f64 values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest value.
     pub min: f64,
+    /// Largest value.
     pub max: f64,
+    /// Median (interpolated).
     pub p50: f64,
+    /// 90th percentile (interpolated).
     pub p90: f64,
+    /// 99th percentile (interpolated).
     pub p99: f64,
 }
 
@@ -71,10 +79,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one observation in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -82,10 +92,12 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Observations so far.
     pub fn n(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before any observation).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -99,6 +111,7 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }

@@ -16,6 +16,7 @@ impl Default for Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn new() -> Self {
         let now = Instant::now();
         Self { start: now, last: now }
@@ -44,6 +45,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// An empty timer.
     pub fn new() -> Self {
         Self::default()
     }

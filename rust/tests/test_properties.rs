@@ -12,7 +12,7 @@ use asgbdt::sampling::{BernoulliSampler, SampleKey};
 use asgbdt::testkit::{check, close, Gen};
 use asgbdt::tree::histogram::Histogram;
 use asgbdt::tree::{build_tree, FlatTree, TreeParams};
-use asgbdt::util::Rng;
+use asgbdt::util::{Backoff, Executor, PoolMode, Rng};
 
 fn random_dataset(g: &mut Gen) -> Dataset {
     let n = 20 + g.usize_in(0, 300);
@@ -366,20 +366,23 @@ fn prop_flat_blocked_scoring_bit_identical_to_per_row() {
             }
         }
         // whole-forest blocked scoring vs the per-row reference, both
-        // traversal spaces, across thread counts
+        // traversal spaces, across thread counts and executor modes
         let ref_raw = forest.predict_all_per_row(&ds.x);
         let ref_binned = forest.predict_all_binned_per_row(&b);
-        for threads in [1usize, 2, 4] {
-            let raw = flat.predict_all_raw(&ds.x, threads, &mut pool);
-            let binned = flat.predict_all_binned(&b, threads, &mut pool);
-            prop_assert!(
-                raw == ref_raw,
-                "raw margins differ (dense={dense}, threads={threads})"
-            );
-            prop_assert!(
-                binned == ref_binned,
-                "binned margins differ (dense={dense}, threads={threads})"
-            );
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [1usize, 2, 4] {
+                let exec = Executor::new(mode, threads);
+                let raw = flat.predict_all_raw(&ds.x, &exec, &mut pool);
+                let binned = flat.predict_all_binned(&b, &exec, &mut pool);
+                prop_assert!(
+                    raw == ref_raw,
+                    "raw margins differ (dense={dense}, threads={threads}, {mode:?})"
+                );
+                prop_assert!(
+                    binned == ref_binned,
+                    "binned margins differ (dense={dense}, threads={threads}, {mode:?})"
+                );
+            }
         }
         // routed entry points stay on the same bits
         prop_assert!(
@@ -431,4 +434,113 @@ fn prop_dataset_split_preserves_rows() {
         );
         Ok(())
     });
+}
+
+/// The worker idle-backoff schedule is a pure function of the round;
+/// pin its wrap/cap edge cases: monotone non-decreasing everywhere,
+/// capped at the documented maximum, and total — no round (including
+/// `u32::MAX` and the values straddling every internal boundary) may
+/// panic or overflow.
+#[test]
+fn prop_backoff_schedule_wrap_and_cap_edges() {
+    check("backoff_schedule", 20, 112, |g| {
+        // random probe points plus the adversarial boundary rounds
+        let mut rounds: Vec<u32> = (0..200).map(|_| g.rng.next_u64() as u32).collect();
+        rounds.extend([
+            0,
+            1,
+            u32::MAX,
+            u32::MAX - 1,
+            62,
+            63,
+            64,
+            65,
+            u32::MAX / 2,
+        ]);
+        let cap = Backoff::pause_after(u32::MAX).expect("huge rounds must sleep");
+        for &r in &rounds {
+            let d = Backoff::pause_after(r);
+            if let Some(d) = d {
+                prop_assert!(d <= cap, "round {r} exceeds cap: {d:?} > {cap:?}");
+                prop_assert!(d.as_micros() > 0, "round {r} sleeps for zero");
+            }
+            // monotone non-decreasing into the saturating region
+            if r < u32::MAX {
+                let next = Backoff::pause_after(r + 1);
+                match (d, next) {
+                    (Some(a), Some(b)) => {
+                        prop_assert!(b >= a, "schedule decreased at round {r}")
+                    }
+                    (Some(_), None) => {
+                        return Err(format!("sleep regressed to yield at round {r}"))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // the saturating tail is flat at the cap
+        prop_assert!(
+            Backoff::pause_after(1_000) == Some(cap) && Backoff::pause_after(100_000) == Some(cap),
+            "tail not flat at cap"
+        );
+        // a fresh (or reset) backoff starts in the yield phase
+        prop_assert!(Backoff::pause_after(0).is_none(), "round 0 must yield");
+        Ok(())
+    });
+}
+
+/// Board::version() must be monotone non-decreasing from every reader's
+/// point of view while a publisher races it, and can never lag a
+/// snapshot the same reader already pulled — the PR 3 regression
+/// (version stored after the snapshot swap) as a property over many
+/// interleavings.
+#[test]
+fn prop_board_version_monotone_under_concurrent_publishes() {
+    use asgbdt::ps::{Board, TargetSnapshot};
+    use std::sync::Arc;
+
+    for trial in 0..3u64 {
+        let board = Arc::new(Board::new());
+        let publishes = 1_500u64;
+        std::thread::scope(|s| {
+            let readers: Vec<_> = (0..4)
+                .map(|_| {
+                    let b = board.clone();
+                    s.spawn(move || {
+                        let mut last_seen = 0u64;
+                        while !b.is_shutdown() {
+                            let snap = b.pull();
+                            let v = b.version();
+                            assert!(
+                                v >= snap.version,
+                                "version() {v} lagged pulled snapshot {}",
+                                snap.version
+                            );
+                            assert!(
+                                snap.version >= last_seen,
+                                "pulled versions went backwards: {} after {last_seen}",
+                                snap.version
+                            );
+                            last_seen = last_seen.max(v);
+                        }
+                        last_seen
+                    })
+                })
+                .collect();
+            for v in 1..=publishes {
+                board.publish(TargetSnapshot {
+                    version: v,
+                    grad: Arc::new(vec![0.0; 2]),
+                    hess: Arc::new(vec![0.0; 2]),
+                    rows: Arc::new(vec![0]),
+                });
+            }
+            board.request_shutdown();
+            for r in readers {
+                let last = r.join().unwrap();
+                assert!(last <= publishes, "reader saw unpublished version {last}");
+            }
+        });
+        assert_eq!(board.version(), publishes, "trial {trial}");
+    }
 }
