@@ -8,7 +8,9 @@
 use asgbdt::bench_harness::Runner;
 use asgbdt::data::{synthetic, BinnedDataset};
 use asgbdt::loss::logistic;
+use asgbdt::tree::build_histogram_sharded;
 use asgbdt::tree::histogram::{Histogram, HistogramPool};
+use asgbdt::util::{Executor, PoolMode};
 
 fn main() {
     let mut r = Runner::new("histogram");
@@ -55,6 +57,23 @@ fn main() {
         });
         pool.give(ch_a);
         pool.give(ch_b);
+
+        // the build pool's dispatch cost in isolation: one sharded
+        // histogram build (the inner fork-join a tree runs once per
+        // leaf; the self-contained entry allocates transient partials,
+        // where tree builds recycle pooled ones — so this is an upper
+        // bound on the in-tree cost), persistent wake vs scoped spawn
+        // at 1/2/4/8 threads
+        let mut sharded = Histogram::zeros(b.total_bins());
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [1usize, 2, 4, 8] {
+                let exec = Executor::new(mode, threads);
+                r.bench(
+                    &format!("sharded/{name}/{}/threads_{threads}", mode.as_str()),
+                    || build_histogram_sharded(&mut sharded, &b, &rows, &gh.grad, &gh.hess, &exec),
+                );
+            }
+        }
     }
     r.write_csv().unwrap();
 }

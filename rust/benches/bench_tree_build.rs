@@ -3,6 +3,15 @@
 //! engine, by leaves and thread count. The deeper-tree configs (more
 //! leaves) are where subtraction pulls furthest ahead: every extra level
 //! splits smaller, more unbalanced leaves.
+//!
+//! The `pool/*` matrix is the worker-side analogue of
+//! `bench_ps_throughput`'s accept-path breakdown: persistent-vs-scoped
+//! per-tree build cost at 1/2/4/8 threads. A tree build runs dozens of
+//! fork-join sections (one sharded histogram per built leaf, one split
+//! search per node), so the scoped mode pays dozens of spawn/join
+//! cycles per tree where the persistent mode pays condvar wakes on one
+//! worker-lifetime pool — the gap is the spawn cost the build pool
+//! removes.
 use asgbdt::bench_harness::Runner;
 use asgbdt::data::{synthetic, BinnedDataset};
 use asgbdt::loss::logistic;
@@ -10,7 +19,7 @@ use asgbdt::tree::{
     build_tree_feature_parallel, build_tree_forkjoin, build_tree_pooled, HistogramPool,
     HistogramStrategy, TreeParams,
 };
-use asgbdt::util::Rng;
+use asgbdt::util::{Executor, PoolMode, Rng};
 
 fn main() {
     let mut r = Runner::new("tree_build");
@@ -44,20 +53,30 @@ fn main() {
         feature_rate: 0.8,
         ..Default::default()
     };
+    // the sync baseline's cost model: sharded histograms + serial split
+    // search on per-section scoped spawns
     for threads in [2usize, 4, 8] {
         let mut rng = Rng::new(5);
+        let exec = Executor::scoped(threads);
         r.bench(&format!("forkjoin/threads_{threads}"), || {
-            build_tree_forkjoin(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, threads)
+            build_tree_forkjoin(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, &exec)
         });
     }
-    for threads in [2usize, 4, 8] {
-        let mut rng = Rng::new(5);
-        let mut pool = HistogramPool::new(b.total_bins());
-        r.bench(&format!("feature_parallel/threads_{threads}"), || {
-            build_tree_feature_parallel(
-                &b, &rows, &gh.grad, &gh.hess, &params, &mut rng, threads, &mut pool,
-            )
-        });
+
+    // the acceptance matrix: persistent-vs-scoped per-tree build cost for
+    // the full feature-parallel engine at 1/2/4/8 threads — at 1 thread
+    // both modes are the inline serial build (the no-dispatch floor)
+    for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+        for threads in [1usize, 2, 4, 8] {
+            let exec = Executor::new(mode, threads);
+            let mut rng = Rng::new(5);
+            let mut pool = HistogramPool::new(b.total_bins());
+            r.bench(&format!("pool/{}/threads_{threads}", mode.as_str()), || {
+                build_tree_feature_parallel(
+                    &b, &rows, &gh.grad, &gh.hess, &params, &mut rng, &exec, &mut pool,
+                )
+            });
+        }
     }
     r.write_csv().unwrap();
 }

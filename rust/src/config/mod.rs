@@ -130,10 +130,22 @@ pub struct TrainConfig {
     /// (serial). 1 (default) keeps the accept path on the server thread;
     /// raise it when the server, not the workers, is the bottleneck.
     pub score_threads: usize,
-    /// Where those threads come from: a server-lifetime pool of parked
-    /// workers (`persistent`, default — per-tree dispatch is a condvar
-    /// wake) or per-tree scoped spawns (`scoped`, the bit-identical
-    /// reference). See DESIGN.md §11.
+    /// Threads each tree build may use for its intra-tree fork-join
+    /// sections (sharded leaf histograms + work-stealing split search).
+    /// 1 (default) builds exactly the serial learner; raise it when
+    /// individual trees, not boosting throughput, are the bottleneck
+    /// (deep trees, wide features, few workers). Every build loop — each
+    /// async worker, the serial trainer — owns one executor of this many
+    /// threads. The sync baseline's fork-join width is its `workers`
+    /// count, so `mode=sync` with `build_threads>1` is rejected by
+    /// `validate` rather than silently ignored. See DESIGN.md §12.
+    pub build_threads: usize,
+    /// Where parallel-section threads come from — the server's
+    /// `score_threads` scoring executor *and* every `build_threads`
+    /// build executor: a lifetime-scoped pool of parked workers
+    /// (`persistent`, default — per-section dispatch is a condvar wake)
+    /// or per-section scoped spawns (`scoped`, the bit-identical
+    /// reference). See DESIGN.md §11–12.
     pub pool: PoolMode,
     /// Base seed for every deterministic stream (sampling pass keys,
     /// feature sub-sampling, synthetic data).
@@ -158,6 +170,7 @@ impl Default for TrainConfig {
             target: TargetMode::Fused,
             scoring: ScoreMode::Flat,
             score_threads: 1,
+            build_threads: 1,
             pool: PoolMode::Persistent,
             seed: 42,
             artifact_dir: PathBuf::from("artifacts"),
@@ -197,6 +210,9 @@ impl TrainConfig {
         if self.score_threads == 0 {
             bail!("score_threads must be >= 1");
         }
+        if self.build_threads == 0 {
+            bail!("build_threads must be >= 1");
+        }
         // Cross-field checks: name BOTH conflicting knobs and the fix, so
         // a rejected run tells the user which one to turn (DESIGN.md §11
         // has the full decision table).
@@ -205,6 +221,15 @@ impl TrainConfig {
                 "conflicting knobs scoring=perrow and target=fused: the per-row reference \
                  engine only exists on the serial accept path — set target=serial (to keep \
                  scoring=perrow) or scoring=flat (to keep target=fused)"
+            );
+        }
+        if self.mode == TrainMode::Sync && self.build_threads > 1 {
+            bail!(
+                "conflicting knobs mode=sync and build_threads={}: the sync baseline's \
+                 fork-join width IS its worker count (it would silently ignore \
+                 build_threads) — set workers=N (to widen sync tree builds) or \
+                 mode=async|serial (to keep build_threads)",
+                self.build_threads
             );
         }
         Ok(())
@@ -239,6 +264,7 @@ impl TrainConfig {
             "target" | "target_mode" => self.target = TargetMode::parse(value)?,
             "scoring" | "score_mode" => self.scoring = ScoreMode::parse(value)?,
             "score_threads" => self.score_threads = value.parse()?,
+            "build_threads" => self.build_threads = value.parse()?,
             "pool" | "pool_mode" => self.pool = PoolMode::parse(value)?,
             "seed" => self.seed = value.parse()?,
             "artifact_dir" => self.artifact_dir = PathBuf::from(value),
@@ -273,6 +299,7 @@ impl TrainConfig {
             ("target", Json::Str(self.target.as_str().into())),
             ("scoring", Json::Str(self.scoring.as_str().into())),
             ("score_threads", Json::Num(self.score_threads as f64)),
+            ("build_threads", Json::Num(self.build_threads as f64)),
             ("pool", Json::Str(self.pool.as_str().into())),
             ("seed", Json::Num(self.seed as f64)),
             (
@@ -334,10 +361,12 @@ mod tests {
         c.set("target", "serial").unwrap();
         c.set("scoring", "perrow").unwrap();
         c.set("score_threads", "4").unwrap();
+        c.set("build_threads", "3").unwrap();
         c.set("pool", "scoped").unwrap();
         assert_eq!(c.target, TargetMode::Serial);
         assert_eq!(c.scoring, ScoreMode::PerRow);
         assert_eq!(c.score_threads, 4);
+        assert_eq!(c.build_threads, 3);
         assert_eq!(c.pool, PoolMode::Scoped);
         assert_eq!(c.workers, 32);
         assert_eq!(c.mode, TrainMode::Serial);
@@ -374,6 +403,9 @@ mod tests {
         let mut c = TrainConfig::default();
         c.score_threads = 0;
         assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.build_threads = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -397,11 +429,30 @@ mod tests {
         c.scoring = ScoreMode::Flat;
         c.target = TargetMode::Fused;
         c.validate().unwrap();
-        // the pool knob is orthogonal: every mode × target × scoring
-        // combination that validates keeps validating under either pool
+        // (2) mode=sync × build_threads>1: sync's fork-join width is its
+        // worker count, so the pair is rejected instead of silently
+        // ignoring build_threads
+        let mut c = TrainConfig::default();
+        c.mode = TrainMode::Sync;
+        c.build_threads = 4;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("mode=sync") && msg.contains("build_threads=4"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("workers="), "error must name the fix, got: {msg}");
+        c.build_threads = 1;
+        c.validate().unwrap();
+        c.mode = TrainMode::Async;
+        c.build_threads = 4;
+        c.validate().unwrap();
+        // the pool knob is orthogonal: every mode × target × scoring ×
+        // build_threads combination that validates keeps validating
+        // under either pool
         for pool in [PoolMode::Persistent, PoolMode::Scoped] {
             let mut c = TrainConfig::default();
             c.pool = pool;
+            c.build_threads = 2;
             c.validate().unwrap();
             c.target = TargetMode::Serial;
             c.scoring = ScoreMode::PerRow;
@@ -418,6 +469,7 @@ mod tests {
         c.set("target", "serial").unwrap();
         c.set("scoring", "perrow").unwrap();
         c.set("score_threads", "2").unwrap();
+        c.set("build_threads", "4").unwrap();
         c.set("pool", "scoped").unwrap();
         let j = c.to_json();
         let back = TrainConfig::from_json(&j).unwrap();
@@ -429,6 +481,7 @@ mod tests {
         assert_eq!(back.target, TargetMode::Serial);
         assert_eq!(back.scoring, ScoreMode::PerRow);
         assert_eq!(back.score_threads, 2);
+        assert_eq!(back.build_threads, 4);
         assert_eq!(back.pool, PoolMode::Scoped);
     }
 }

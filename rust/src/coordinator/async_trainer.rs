@@ -12,9 +12,14 @@
 //! pushes race a given target version and τ grows — the knob the paper's
 //! Proposition 1 ties to the required step length.
 //!
-//! Each spawned worker owns a `HistogramPool` for its whole lifetime (see
-//! `ps::worker`), so the per-worker build loop allocates histogram
-//! buffers only on its first tree; `cfg.tree.strategy` selects sibling
+//! Each spawned worker owns a `HistogramPool` *and* a build
+//! [`crate::util::Executor`] for its whole lifetime (see `ps::worker`):
+//! histogram buffers are allocated only on the first tree, and with
+//! `build_threads>1` the intra-tree fork-join cycles (sharded leaf
+//! histograms, work-stealing split search) dispatch onto the worker's
+//! own pool of parked threads instead of spawning per leaf —
+//! `cfg.pool` governs worker-side build executors exactly as it governs
+//! the server's scoring executor. `cfg.tree.strategy` selects sibling
 //! subtraction (default) or whole-node rebuild for every worker.
 //!
 //! On the server side, every accepted tree runs the accept pipeline
@@ -42,7 +47,7 @@ use crate::data::{BinnedDataset, Dataset};
 use crate::ps::{run_worker, Board, ServerCore};
 use crate::runtime::GradientEngine;
 use crate::util::stats::Summary;
-use crate::util::Stopwatch;
+use crate::util::{Executor, Stopwatch};
 
 use super::report::TrainReport;
 
@@ -76,7 +81,15 @@ pub fn train_async(
             let board_ref = &board;
             let params = cfg.tree;
             let seed = cfg.seed;
-            handles.push(s.spawn(move || run_worker(wid, board_ref, binned, params, tx, seed)));
+            let (pool_mode, build_threads) = (cfg.pool, cfg.build_threads);
+            handles.push(s.spawn(move || {
+                // worker-lifetime build executor, owned on the worker's own
+                // thread: one pool of parked threads per worker (executors
+                // are never shared — ScorePool serializes concurrent
+                // dispatchers, which would serialize the workers' builds)
+                let exec = Executor::new(pool_mode, build_threads);
+                run_worker(wid, board_ref, binned, params, &exec, tx, seed)
+            }));
         }
         drop(tx); // server holds only the receiver
 
@@ -169,6 +182,20 @@ mod tests {
             "8 racing workers should show real staleness, got {}",
             many.staleness.mean()
         );
+    }
+
+    #[test]
+    fn async_with_parallel_build_workers_completes_and_descends() {
+        // every worker holds its own persistent build executor: 3 workers
+        // × 2 build threads racing the server for 15 accepted trees
+        let ds = synthetic::realsim_like(300, 34);
+        let mut cfg = small_cfg(3, 15);
+        cfg.build_threads = 2;
+        let rep = train_async(&cfg, &ds, None).unwrap();
+        assert_eq!(rep.trees_accepted, 15);
+        let first = rep.curve.points.first().unwrap().train_loss;
+        let last = rep.curve.points.last().unwrap().train_loss;
+        assert!(last < first, "loss did not descend: {first} -> {last}");
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! `cfg.score_threads` — just like the sync and async trainers; the
 //! serial mode is where the scoring and accept-path ablations isolate
 //! pure apply cost. Scoring threads come from the `ServerCore`'s
-//! [`crate::util::Executor`], built once here at startup (`cfg.pool`).
+//! [`crate::util::Executor`], built once here at startup (`cfg.pool`);
+//! tree builds run on a separate run-lifetime build executor
+//! (`cfg.build_threads`, default 1 = exactly the serial learner).
 
 use std::sync::Arc;
 
@@ -18,9 +20,9 @@ use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
-use crate::tree::{build_tree_pooled, HistogramPool};
+use crate::tree::{build_tree_feature_parallel, HistogramPool};
 use crate::util::stats::Summary;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{Executor, Rng, Stopwatch};
 
 use super::report::TrainReport;
 
@@ -41,17 +43,23 @@ pub fn train_serial(
     let mut build_times = Vec::with_capacity(cfg.n_trees);
     // histogram buffers recycled across all n_trees builds
     let mut pool = HistogramPool::new(binned.total_bins());
+    // run-lifetime build executor: the default build_threads=1 makes the
+    // feature-parallel engine exactly the serial learner (the τ ≡ 0
+    // baseline stays strictly serial); build_threads>1 parallelises the
+    // inside of each build while keeping the boosting order serial
+    let build_exec = Executor::new(cfg.pool, cfg.build_threads);
 
     while core.n_trees() < cfg.n_trees {
         let snapshot = core.snapshot();
         let mut sw = Stopwatch::new();
-        let tree = build_tree_pooled(
+        let tree = build_tree_feature_parallel(
             &binned,
             &snapshot.rows,
             &snapshot.grad,
             &snapshot.hess,
             &cfg.tree,
             &mut rng,
+            &build_exec,
             &mut pool,
         );
         build_times.push(sw.lap());

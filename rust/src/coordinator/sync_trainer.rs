@@ -12,7 +12,12 @@
 //! row-sharded pass by default, or the serial reference sweeps
 //! (`cfg.scoring` / `cfg.score_threads`) — on the scoring
 //! [`crate::util::Executor`] the core builds once at startup
-//! (`cfg.pool`).
+//! (`cfg.pool`). The tree-building side holds its own run-lifetime
+//! executor of `cfg.workers` threads under the same `pool` knob:
+//! `pool=scoped` reproduces the historical spawn-per-histogram
+//! fork-join cost, `pool=persistent` (default) keeps the barriers but
+//! parks the threads between histograms — same trees bit for bit
+//! either way.
 
 use std::sync::Arc;
 
@@ -24,7 +29,7 @@ use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
 use crate::tree::{build_tree_forkjoin_pooled, HistogramPool};
 use crate::util::stats::Summary;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{Executor, Rng, Stopwatch};
 
 use super::report::TrainReport;
 
@@ -45,6 +50,12 @@ pub fn train_sync(
     let mut build_times = Vec::with_capacity(cfg.n_trees);
     // merged per-leaf histograms recycled across all n_trees builds
     let mut pool = HistogramPool::new(binned.total_bins());
+    // run-lifetime build executor: the fork-join barriers stay (that is
+    // the cost model this baseline exists to measure), but under
+    // pool=persistent the per-histogram spawns become condvar wakes on
+    // one pool of cfg.workers parked threads; pool=scoped keeps the
+    // spawn-per-histogram reference cost
+    let build_exec = Executor::new(cfg.pool, cfg.workers);
 
     while core.n_trees() < cfg.n_trees {
         let snapshot = core.snapshot();
@@ -56,7 +67,7 @@ pub fn train_sync(
             &snapshot.hess,
             &cfg.tree,
             &mut rng,
-            cfg.workers,
+            &build_exec,
             &mut pool,
         );
         build_times.push(sw.lap());

@@ -81,9 +81,13 @@ CONFIG OVERRIDES (key=value):
                                 bit-identical outputs)
   scoring=flat|perrow          (serial-path F-update engine; perrow requires
                                 target=serial)   score_threads=N
-  pool=persistent|scoped       (where score_threads come from: server-lifetime
-                                parked worker pool vs per-tree scoped spawns;
-                                persistent is default, bit-identical outputs)
+  build_threads=N              (threads per tree build: sharded leaf histograms
+                                + work-stealing split search; 1 is default and
+                                exactly the serial learner)
+  pool=persistent|scoped       (where score_threads AND build_threads come
+                                from: lifetime-scoped parked worker pools vs
+                                per-section scoped spawns; persistent is
+                                default, bit-identical outputs)
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {

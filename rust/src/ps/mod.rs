@@ -23,8 +23,12 @@
 //!   pull/build/push order *within* one worker is serialised, exactly the
 //!   paper's asynchrony model. Each worker owns a
 //!   [`crate::tree::HistogramPool`] for its lifetime, so tree builds stop
-//!   allocating histogram buffers after the first tree; idle polls back
-//!   off exponentially ([`crate::util::Backoff`]) instead of spinning.
+//!   allocating histogram buffers after the first tree, and a
+//!   worker-lifetime build [`crate::util::Executor`] (`build_threads` ×
+//!   `pool`), so intra-tree fork-join sections dispatch onto parked
+//!   threads instead of spawning per leaf (DESIGN.md §12); idle polls
+//!   back off exponentially ([`crate::util::Backoff`]) instead of
+//!   spinning.
 //!
 //! Transport is in-process (threads as workers, as in the paper's validity
 //! experiments): an unbounded mpsc channel for pushes and an RwLock'd

@@ -10,24 +10,37 @@
 //! and recycled across every node of every subsequent tree (see the pool's
 //! ownership contract), so the steady-state build loop is allocation-free
 //! on its hot path.
+//!
+//! Each worker also receives a worker-lifetime
+//! [`crate::util::Executor`] for *intra-tree* parallelism: every tree is
+//! built through [`crate::tree::build_tree_feature_parallel`], whose
+//! per-leaf sharded histogram builds and work-stealing split searches
+//! dispatch onto the executor. With the default `build_threads=1` the
+//! executor is a free pass-through and the build is exactly the serial
+//! learner; with `build_threads>1` under `pool=persistent` one pool of
+//! parked threads serves every fork-join cycle of every tree the worker
+//! ever builds — the worker-side removal of the per-histogram spawn/join
+//! cost the paper's §II attributes to fork-join GBDT (DESIGN.md §12).
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::data::BinnedDataset;
-use crate::tree::{build_tree_pooled, HistogramPool, TreeParams};
-use crate::util::{Backoff, Rng, Stopwatch};
+use crate::tree::{build_tree_feature_parallel, HistogramPool, TreeParams};
+use crate::util::{Backoff, Executor, Rng, Stopwatch};
 
 use super::messages::TreePush;
 use super::server::Board;
 
 /// Run one worker loop until the board signals shutdown or the push
-/// channel closes. Returns the number of trees pushed.
+/// channel closes. `exec` is the worker-lifetime build executor (see the
+/// module docs). Returns the number of trees pushed.
 pub fn run_worker(
     worker_id: usize,
     board: &Board,
     binned: Arc<BinnedDataset>,
     params: TreeParams,
+    exec: &Executor,
     tx: Sender<TreePush>,
     seed: u64,
 ) -> usize {
@@ -48,15 +61,17 @@ pub fn run_worker(
             continue;
         }
         backoff.reset();
-        // 2. build Tree_t on the sampled sub-dataset (pooled buffers)
+        // 2. build Tree_t on the sampled sub-dataset (pooled buffers,
+        //    executor-backed intra-tree parallelism)
         let mut sw = Stopwatch::new();
-        let tree = build_tree_pooled(
+        let tree = build_tree_feature_parallel(
             &binned,
             &snapshot.rows,
             &snapshot.grad,
             &snapshot.hess,
             &params,
             &mut rng,
+            exec,
             &mut pool,
         );
         let build_secs = sw.lap();
@@ -79,19 +94,17 @@ pub fn run_worker(
 mod tests {
     use super::*;
     use crate::data::{synthetic, Dataset};
-    use crate::loss::logistic;
+    use crate::testkit;
     use std::sync::mpsc;
 
     fn board_with_target(ds: &Dataset, binned: &BinnedDataset) -> Board {
         let board = Board::new();
-        let f = vec![0.0f32; ds.n_rows()];
-        let w = vec![1.0f32; ds.n_rows()];
-        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let fx = testkit::logistic_fixture(ds, 16);
         board.publish(crate::ps::TargetSnapshot {
             version: 0,
-            grad: Arc::new(gh.grad),
-            hess: Arc::new(w),
-            rows: Arc::new((0..ds.n_rows() as u32).collect()),
+            grad: Arc::new(fx.grad),
+            hess: Arc::new(vec![1.0f32; ds.n_rows()]),
+            rows: Arc::new(fx.rows),
         });
         let _ = binned;
         board
@@ -110,7 +123,10 @@ mod tests {
         std::thread::scope(|s| {
             let board_ref = &board;
             let b = binned.clone();
-            let h = s.spawn(move || run_worker(3, board_ref, b, params, tx, 7));
+            let h = s.spawn(move || {
+                let exec = Executor::scoped(1);
+                run_worker(3, board_ref, b, params, &exec, tx, 7)
+            });
             // collect a few pushes then stop
             let mut got = Vec::new();
             for _ in 0..3 {
@@ -149,7 +165,8 @@ mod tests {
                     max_leaves: 4,
                     ..Default::default()
                 };
-                run_worker(1, board_ref, b, params, tx, 11)
+                let exec = Executor::scoped(1);
+                run_worker(1, board_ref, b, params, &exec, tx, 11)
             });
             // let the worker reach the deep end of its backoff schedule
             std::thread::sleep(std::time::Duration::from_millis(20));
@@ -177,12 +194,45 @@ mod tests {
                     max_leaves: 2,
                     ..Default::default()
                 };
-                run_worker(0, board_ref, b, params, tx, 1)
+                let exec = Executor::scoped(1);
+                run_worker(0, board_ref, b, params, &exec, tx, 1)
             });
             let _first = rx.recv().unwrap();
             drop(rx); // hang up
             let pushed = h.join().unwrap();
             assert!(pushed >= 1);
+        });
+    }
+
+    #[test]
+    fn worker_with_parallel_build_executor_pushes_valid_trees() {
+        // the worker-lifetime persistent executor path: intra-tree builds
+        // dispatch onto one pool across every pushed tree
+        let ds = synthetic::realsim_like(200, 5);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let board = board_with_target(&ds, &binned);
+        let (tx, rx) = mpsc::channel();
+        std::thread::scope(|s| {
+            let board_ref = &board;
+            let b = binned.clone();
+            let h = s.spawn(move || {
+                let params = TreeParams {
+                    max_leaves: 8,
+                    ..Default::default()
+                };
+                let exec = Executor::new(crate::util::PoolMode::Persistent, 2);
+                run_worker(2, board_ref, b, params, &exec, tx, 23)
+            });
+            let mut got = Vec::new();
+            for _ in 0..5 {
+                got.push(rx.recv().unwrap());
+            }
+            board.request_shutdown();
+            while rx.try_recv().is_ok() {}
+            assert!(h.join().unwrap() >= 5);
+            for p in &got {
+                p.tree.validate().unwrap();
+            }
         });
     }
 }

@@ -1,12 +1,56 @@
-//! Mini property-based testing harness.
+//! Mini property-based testing harness + shared dataset fixtures.
 //!
 //! proptest is not in the offline vendor set (DESIGN.md §7), so this is a
 //! small substitute: seeded generators with a *size ramp* (early cases are
 //! small, so the first failure tends to be near-minimal — a poor man's
 //! shrinking) and a failure report that pins the exact case seed for
 //! deterministic reproduction.
+//!
+//! The fixture side ([`BinnedFixture`], [`logistic_fixture`],
+//! [`Gen::binned_dataset`]) centralises the dataset setup that the tree
+//! and PS integration tests used to hand-roll at every call site: bin a
+//! dataset, take the logistic gradients at margin 0 with unit weights
+//! (grad ±1.0, hess 1.0 — dyadic rationals, so f64 partial sums are
+//! *exact* and bit-identity assertions are robust to summation order),
+//! and list every row id.
 
+use crate::data::{BinnedDataset, CsrMatrix, Dataset};
+use crate::loss::logistic;
 use crate::util::Rng;
+
+/// A binned dataset with matching tree-build targets: the shape every
+/// histogram/tree/PS test needs before it can build anything.
+pub struct BinnedFixture {
+    /// The raw labelled dataset the fixture was binned from.
+    pub dataset: Dataset,
+    /// The dataset binned for histogram building.
+    pub binned: BinnedDataset,
+    /// Logistic gradients at margin 0 with unit weights (±1.0 per row:
+    /// l' = 2(p − y) at p = ½).
+    pub grad: Vec<f32>,
+    /// Logistic hessians at margin 0 with unit weights (1.0 per row:
+    /// l'' = 4p(1 − p) at p = ½).
+    pub hess: Vec<f32>,
+    /// Every row id, `0..n_rows` — the full-dataset build set.
+    pub rows: Vec<u32>,
+}
+
+/// Bin `ds` and compute the margin-0 logistic targets — the hand-rolled
+/// `f=0 / w=1 / grad_hess_loss / rows` block previously copy-pasted
+/// across `tests/test_tree.rs` and `tests/test_ps.rs`.
+pub fn logistic_fixture(ds: &Dataset, max_bins: usize) -> BinnedFixture {
+    let binned = BinnedDataset::from_dataset(ds, max_bins).expect("fixture binning");
+    let f = vec![0.0f32; ds.n_rows()];
+    let w = vec![1.0f32; ds.n_rows()];
+    let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+    BinnedFixture {
+        dataset: ds.clone(),
+        binned,
+        grad: gh.grad,
+        hess: gh.hess,
+        rows: (0..ds.n_rows() as u32).collect(),
+    }
+}
 
 /// Generation context handed to properties: seeded RNG + current size.
 pub struct Gen {
@@ -39,6 +83,41 @@ impl Gen {
         (0..n)
             .map(|_| if self.rng.bernoulli(0.5) { 1.0 } else { 0.0 })
             .collect()
+    }
+
+    /// A randomly generated sparse binary-classification dataset, binned
+    /// and paired with matching margin-0 logistic grad/hess targets.
+    ///
+    /// Each of the `features` columns is present in a row with
+    /// probability `1 − sparsity`; values are drawn from a small integer
+    /// set so bins are well-populated at any size. Rows may be entirely
+    /// implicit-zero — the histogram code must handle that, so fixtures
+    /// exercise it.
+    pub fn binned_dataset(
+        &mut self,
+        rows: usize,
+        features: usize,
+        sparsity: f64,
+    ) -> BinnedFixture {
+        let features = features.max(1);
+        let mut mat: Vec<Vec<(u32, f32)>> = vec![Vec::new(); rows];
+        for (r, row) in mat.iter_mut().enumerate() {
+            for f in 0..features {
+                if !self.rng.bernoulli(sparsity) {
+                    let v = 1.0 + self.rng.below(5) as f32;
+                    row.push((f as u32, v));
+                }
+            }
+            // keep the matrix non-degenerate at extreme sparsity: row 0
+            // always carries at least one explicit nonzero
+            if r == 0 && row.is_empty() {
+                row.push((0, 1.0));
+            }
+        }
+        let x = CsrMatrix::from_rows(features, &mat).expect("fixture matrix");
+        let y = self.labels(rows);
+        let ds = Dataset::new("gen", x, y);
+        logistic_fixture(&ds, 16)
     }
 
     /// Non-negative weights with occasional zeros (padding-like).
@@ -152,6 +231,28 @@ mod tests {
         assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
         assert!(close(1e6, 1e6 + 1.0, 1e-5).is_ok());
         assert!(close(1.0, 2.0, 1e-6).is_err());
+    }
+
+    #[test]
+    fn binned_dataset_fixture_is_consistent() {
+        let mut g = Gen {
+            rng: Rng::new(7),
+            size: 100,
+        };
+        let fx = g.binned_dataset(60, 12, 0.5);
+        assert_eq!(fx.dataset.n_rows(), 60);
+        assert_eq!(fx.dataset.n_features(), 12);
+        assert_eq!(fx.binned.n_features, 12);
+        assert_eq!(fx.grad.len(), 60);
+        assert_eq!(fx.hess.len(), 60);
+        assert_eq!(fx.rows.len(), 60);
+        // margin-0 logistic targets are dyadic: ±1.0 grads, 1.0 hessians
+        assert!(fx.grad.iter().all(|&gr| gr == 1.0 || gr == -1.0));
+        assert!(fx.hess.iter().all(|&h| h == 1.0));
+        // sparsity=1 degenerates gracefully (one seeded nonzero survives)
+        let fx = g.binned_dataset(5, 3, 1.0);
+        assert_eq!(fx.dataset.n_rows(), 5);
+        assert!(fx.dataset.x.density() > 0.0);
     }
 
     #[test]

@@ -449,7 +449,7 @@ mod tests {
 
     #[test]
     fn rebuild_strategy_matches_subtract_strategy() {
-        // logistic grads at f=0 are dyadic rationals (±0.5, hess 0.25), so
+        // logistic grads at f=0 are dyadic rationals (±1.0, hess 1.0), so
         // both strategies' f64 sums are exact and the trees are identical
         let (ds, b) = xor_data(240);
         let (g, h) = grad_for(&ds, &vec![0.0; ds.n_rows()]);

@@ -258,8 +258,10 @@ impl Histogram {
 /// * Every buffer a tree build takes is given back before the build
 ///   returns (the builder returns all leaf histograms at the end), so a
 ///   pool held across trees reaches a steady state of at most
-///   `max_leaves + 2` buffers: the live leaves plus the parent and the
-///   in-flight child during one split.
+///   `max_leaves + 2` buffers — the live leaves plus the parent and the
+///   in-flight child during one split — plus one shard partial per
+///   build thread when the executor-backed engines shard histograms
+///   (`tree/parallel.rs` takes those once per build, not per leaf).
 /// * Hold **one pool per worker thread** for the whole training run
 ///   (see `ps::worker`): allocation then happens once per worker instead
 ///   of once per node per tree. Pools are plain `&mut` state — never

@@ -22,7 +22,10 @@
 //!   `[n_features × n_bins]` arrays recycled across nodes *and* trees;
 //!   workers hold one pool each and stop allocating after the first tree.
 //! * **Parallel engines** ([`parallel`]): row-sharded fork-join histogram
-//!   building and per-feature work-stealing split search.
+//!   building and per-feature work-stealing split search, running on a
+//!   caller-owned [`crate::util::Executor`] — under `pool=persistent`
+//!   the per-leaf fork-join cycles dispatch onto parked workers instead
+//!   of spawning threads (DESIGN.md §12).
 //! * **Flat scoring form** ([`flat`]): shipped trees compile once into a
 //!   breadth-first SoA [`FlatTree`] whose frontier/partition pass powers
 //!   the server's blocked F-update (see `forest/score.rs`); the per-row
@@ -39,8 +42,8 @@ pub use builder::{build_tree, build_tree_pooled, TreeParams};
 pub use flat::FlatTree;
 pub use histogram::{Histogram, HistogramPool, HistogramStrategy};
 pub use parallel::{
-    best_split_parallel, build_tree_feature_parallel, build_tree_forkjoin,
-    build_tree_forkjoin_pooled,
+    best_split_parallel, build_histogram_sharded, build_tree_feature_parallel,
+    build_tree_forkjoin, build_tree_forkjoin_pooled,
 };
 pub use split::SplitInfo;
 pub use tree::{Node, Tree};

@@ -3,31 +3,44 @@
 //! Two axes of intra-tree parallelism, composable with the sibling
 //! subtraction + pooled buffers of [`super::builder`]:
 //!
-//! * **Row-sharded histogram building** ([`build_tree_forkjoin`]) — the
-//!   "parallel part only exists in the sub-step of building the tree"
-//!   pattern the paper attributes to LightGBM/TencentBoost (§II): the
-//!   rows of each leaf are sharded across `n_threads`, each shard builds
-//!   a partial histogram in parallel, and a barrier (thread join) merges
-//!   them before split finding — one synchronisation *per histogram*,
-//!   many per tree, which is precisely the cost structure asynch-SGBDT
-//!   removes at the boosting level.
+//! * **Row-sharded histogram building** ([`build_histogram_sharded`]) —
+//!   the "parallel part only exists in the sub-step of building the
+//!   tree" pattern the paper attributes to LightGBM/TencentBoost (§II):
+//!   the rows of each leaf are sharded across the executor's threads,
+//!   each shard builds a partial histogram in parallel, and a barrier
+//!   (the executor's check-in) merges them before split finding — one
+//!   synchronisation *per histogram*, many per tree, which is precisely
+//!   the cost structure asynch-SGBDT removes at the boosting level.
 //! * **Per-feature work-stealing split search**
 //!   ([`best_split_parallel`]) — the candidate features of a leaf are
-//!   claimed in chunks off a shared atomic cursor by `n_threads` scanners,
-//!   so wide/sparse datasets (real-sim: tens of thousands of features,
-//!   skewed per-feature bin occupancy) load-balance instead of sharding
-//!   statically. The merged result is identical to the serial scan:
-//!   per-feature scans are the same code, and ties on gain break towards
-//!   the lower feature id exactly like the serial ascending iteration.
+//!   claimed in chunks off a shared atomic cursor by the executor's
+//!   scanners, so wide/sparse datasets (real-sim: tens of thousands of
+//!   features, skewed per-feature bin occupancy) load-balance instead of
+//!   sharding statically. The merged result is identical to the serial
+//!   scan: per-feature scans are the same code, and ties on gain break
+//!   towards the lower feature id exactly like the serial ascending
+//!   iteration.
 //!
-//! [`build_tree_feature_parallel`] combines both with a caller-owned
-//! [`HistogramPool`] — the full feature-parallel engine used by the
-//! benches.
+//! Every engine draws its threads from a caller-owned
+//! [`Executor`](crate::util::Executor) instead of spawning per section:
+//! under `pool=persistent` the executor parks its workers between
+//! sections, so the dozens of fork-join cycles inside one tree build pay
+//! a condvar wake each instead of an OS thread spawn/join each (the
+//! worker-side analogue of the server's scoring pool — DESIGN.md §12).
+//! `pool=scoped` keeps per-section `thread::scope` spawns as the
+//! bit-identical reference. Shard boundaries, partial-merge order and
+//! split tie-breaking are pure functions of the executor's *thread
+//! count*, never of its mode, so trees are bit-identical across modes.
+//!
+//! [`build_tree_feature_parallel`] combines both engines with a
+//! caller-owned [`HistogramPool`] — the full feature-parallel engine
+//! used by the async workers, the trainers and the benches.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::data::BinnedDataset;
-use crate::util::Rng;
+use crate::util::{Executor, Rng};
 
 use super::builder::{grow_tree, TreeParams};
 use super::histogram::{Histogram, HistogramPool};
@@ -39,40 +52,96 @@ use super::tree::Tree;
 const STEAL_CHUNK: usize = 8;
 
 /// Row-sharded histogram build with a merge barrier (the fork-join
-/// "allreduce"). Falls back to a serial build for leaves too small to
-/// amortise thread spawn.
-fn build_sharded(
+/// "allreduce"): each executor worker builds a partial histogram over a
+/// contiguous row shard, and the partials are merged in shard order.
+///
+/// Allocates transient per-shard buffers — the self-contained entry
+/// point for one-shot callers (benches). Tree builds run dozens of
+/// sharded builds per tree, so the builders below recycle one set of
+/// shard partials from their [`HistogramPool`] across every leaf
+/// instead (see the private `build_sharded_into`).
+pub fn build_histogram_sharded(
     hist: &mut Histogram,
     binned: &BinnedDataset,
     leaf_rows: &[u32],
     grad: &[f32],
     hess: &[f32],
-    n_threads: usize,
+    exec: &Executor,
 ) {
-    if n_threads <= 1 || leaf_rows.len() < 2 * n_threads {
+    let threads = exec.threads();
+    if threads <= 1 || leaf_rows.len() < threads {
         hist.build(binned, leaf_rows, grad, hess);
         return;
     }
-    // fork: one partial histogram per row shard
-    let shard = leaf_rows.len().div_ceil(n_threads);
-    let partials: Vec<Histogram> = std::thread::scope(|s| {
-        let handles: Vec<_> = leaf_rows
-            .chunks(shard)
-            .map(|chunk| {
-                s.spawn(move || {
-                    let mut h = Histogram::zeros(binned.total_bins());
-                    h.build(binned, chunk, grad, hess);
-                    h
-                })
-            })
-            .collect();
-        // join: the synchronisation barrier
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    let partials: Vec<Mutex<Histogram>> = (0..threads)
+        .map(|_| Mutex::new(Histogram::zeros(binned.total_bins())))
+        .collect();
+    build_sharded_into(hist, binned, leaf_rows, grad, hess, exec, &partials);
+}
+
+/// [`build_histogram_sharded`] over caller-owned per-worker partial
+/// buffers (`partials.len() >= exec.threads()`, one slot per worker —
+/// the mutexes are uncontended and exist to hand each worker `&mut`
+/// access to its own slot).
+///
+/// Falls back to a serial build only when a shard would be empty
+/// (`leaf_rows.len() < threads`). The old threshold was `2 × threads`
+/// rows — sized to amortise a per-call `thread::scope` spawn — but with
+/// dispatch on a persistent executor and pooled partials a parallel
+/// section costs a condvar wake plus an O(|touched|) clear, so tiny
+/// leaves shard too. The threshold is a function of the thread count
+/// only (never the pool mode), which keeps shard boundaries — and
+/// therefore f64 merge order — bit-identical across
+/// `pool=persistent|scoped`.
+fn build_sharded_into(
+    hist: &mut Histogram,
+    binned: &BinnedDataset,
+    leaf_rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    exec: &Executor,
+    partials: &[Mutex<Histogram>],
+) {
+    let threads = exec.threads();
+    if threads <= 1 || leaf_rows.len() < threads {
+        hist.build(binned, leaf_rows, grad, hess);
+        return;
+    }
+    debug_assert!(partials.len() >= threads, "one partial slot per executor worker");
+    // fork: one partial histogram per contiguous row shard
+    let shard = leaf_rows.len().div_ceil(threads);
+    let n_shards = leaf_rows.len().div_ceil(shard);
+    exec.run(n_shards, &|idx| {
+        let start = idx * shard;
+        let end = (start + shard).min(leaf_rows.len());
+        // slot idx belongs to worker idx alone; build() clears the
+        // recycled buffer in O(|touched|) before accumulating
+        let mut h = partials[idx].lock().unwrap();
+        h.build(binned, &leaf_rows[start..end], grad, hess);
     });
-    // allreduce-equivalent merge
+    // allreduce-equivalent merge, in shard order (slot i always holds
+    // shard i regardless of scheduling)
     hist.clear();
-    for p in &partials {
-        hist.merge(p);
+    for m in &partials[..n_shards] {
+        hist.merge(&m.lock().unwrap());
+    }
+}
+
+/// Take `threads` shard-partial buffers from the pool (none needed for
+/// a single-thread executor: the sharded build runs inline).
+fn take_partials(pool: &mut HistogramPool, threads: usize) -> Vec<Mutex<Histogram>> {
+    if threads <= 1 {
+        return Vec::new();
+    }
+    (0..threads).map(|_| Mutex::new(pool.take())).collect()
+}
+
+/// Return shard-partial buffers to the pool after a build. Only reached
+/// on the non-panicking path (a panicking job unwinds the whole build
+/// and simply drops the buffers), so the mutexes cannot be poisoned.
+fn give_partials(pool: &mut HistogramPool, partials: Vec<Mutex<Histogram>>) {
+    for m in partials {
+        pool.give(m.into_inner().unwrap());
     }
 }
 
@@ -90,19 +159,23 @@ fn take_better(best: &mut Option<SplitInfo>, cand: Option<SplitInfo>) {
     }
 }
 
-/// Best split across the enabled features, scanned by `n_threads` workers
-/// pulling feature chunks off a shared work-stealing cursor.
+/// Best split across the enabled features, scanned by the executor's
+/// workers pulling feature chunks off a shared work-stealing cursor.
 ///
 /// Candidate pruning matches [`best_split`]: for sparse leaves only the
 /// touched features are enumerated (a feature with no touched slot has
 /// every leaf row in its zero bin and cannot split). Returns exactly what
-/// the serial scan would.
+/// the serial scan would: chunk assignment is scheduling-dependent, but
+/// each per-feature scan is the same code, and the merge's
+/// lower-feature-id tie-break makes the merged winner independent of
+/// which scanner saw it (pinned by the tie property test in
+/// `tests/test_build_pool.rs`).
 pub fn best_split_parallel(
     hist: &Histogram,
     binned: &BinnedDataset,
     feature_mask: &[bool],
     cons: &SplitConstraints,
-    n_threads: usize,
+    exec: &Executor,
 ) -> Option<SplitInfo> {
     // same touched-density switch as the serial path, so the candidate
     // set (and therefore the result) is identical
@@ -116,7 +189,8 @@ pub fn best_split_parallel(
             .filter(|&f| feature_mask[f as usize])
             .collect()
     };
-    if n_threads <= 1 || candidates.len() < 2 * STEAL_CHUNK {
+    let threads = exec.threads();
+    if threads <= 1 || candidates.len() < 2 * STEAL_CHUNK {
         let mut best: Option<SplitInfo> = None;
         for &f in &candidates {
             take_better(&mut best, best_split_for_feature(hist, binned, f as usize, cons));
@@ -124,30 +198,23 @@ pub fn best_split_parallel(
         return best;
     }
     let cursor = AtomicUsize::new(0);
-    let locals: Vec<Option<SplitInfo>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..n_threads)
-            .map(|_| {
-                s.spawn(|| {
-                    let mut local: Option<SplitInfo> = None;
-                    loop {
-                        // steal the next chunk of features
-                        let start = cursor.fetch_add(STEAL_CHUNK, Ordering::Relaxed);
-                        if start >= candidates.len() {
-                            break;
-                        }
-                        let end = (start + STEAL_CHUNK).min(candidates.len());
-                        for &f in &candidates[start..end] {
-                            take_better(
-                                &mut local,
-                                best_split_for_feature(hist, binned, f as usize, cons),
-                            );
-                        }
-                    }
-                    local
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    let locals: Vec<Option<SplitInfo>> = exec.run_collect(threads, &|_idx| {
+        let mut local: Option<SplitInfo> = None;
+        loop {
+            // steal the next chunk of features
+            let start = cursor.fetch_add(STEAL_CHUNK, Ordering::Relaxed);
+            if start >= candidates.len() {
+                break;
+            }
+            let end = (start + STEAL_CHUNK).min(candidates.len());
+            for &f in &candidates[start..end] {
+                take_better(
+                    &mut local,
+                    best_split_for_feature(hist, binned, f as usize, cons),
+                );
+            }
+        }
+        local
     });
     let mut best: Option<SplitInfo> = None;
     for local in locals {
@@ -157,8 +224,8 @@ pub fn best_split_parallel(
 }
 
 /// Like [`super::build_tree`], but histogram construction is sharded
-/// across `n_threads` with a merge barrier (fork-join). Split search stays
-/// serial — this is the synchronous-baseline cost model.
+/// across the executor's threads with a merge barrier (fork-join). Split
+/// search stays serial — this is the synchronous-baseline cost model.
 pub fn build_tree_forkjoin(
     binned: &BinnedDataset,
     rows: &[u32],
@@ -166,15 +233,17 @@ pub fn build_tree_forkjoin(
     hess: &[f32],
     params: &TreeParams,
     rng: &mut Rng,
-    n_threads: usize,
+    exec: &Executor,
 ) -> Tree {
     let mut pool = HistogramPool::new(binned.total_bins());
-    build_tree_forkjoin_pooled(binned, rows, grad, hess, params, rng, n_threads, &mut pool)
+    build_tree_forkjoin_pooled(binned, rows, grad, hess, params, rng, exec, &mut pool)
 }
 
 /// [`build_tree_forkjoin`] with a caller-owned histogram pool (see the
-/// [`HistogramPool`] recycling contract). Only the merged per-leaf
-/// histograms are pooled; shard partials are thread-local.
+/// [`HistogramPool`] recycling contract). Merged per-leaf histograms
+/// *and* the `threads` shard partials come from the pool — the partials
+/// are taken once per build and shared by every leaf's fork-join, so a
+/// deep tree's many small leaves never pay a buffer allocation.
 #[allow(clippy::too_many_arguments)]
 pub fn build_tree_forkjoin_pooled(
     binned: &BinnedDataset,
@@ -183,11 +252,11 @@ pub fn build_tree_forkjoin_pooled(
     hess: &[f32],
     params: &TreeParams,
     rng: &mut Rng,
-    n_threads: usize,
+    exec: &Executor,
     pool: &mut HistogramPool,
 ) -> Tree {
-    let n_threads = n_threads.max(1);
-    grow_tree(
+    let partials = take_partials(pool, exec.threads());
+    let tree = grow_tree(
         binned,
         rows,
         grad,
@@ -195,15 +264,22 @@ pub fn build_tree_forkjoin_pooled(
         params,
         rng,
         pool,
-        &mut |hist, leaf_rows| build_sharded(hist, binned, leaf_rows, grad, hess, n_threads),
+        &mut |hist, leaf_rows| {
+            build_sharded_into(hist, binned, leaf_rows, grad, hess, exec, &partials)
+        },
         &|hist, mask, cons| best_split(hist, binned, mask, cons),
-    )
+    );
+    give_partials(pool, partials);
+    tree
 }
 
 /// The full feature-parallel engine: row-sharded histogram building *and*
-/// per-feature work-stealing split search, over a caller-owned pool.
-/// Produces the same tree as [`super::build_tree`] given the same RNG
-/// (modulo f64 merge-order rounding in the sharded histogram sums).
+/// per-feature work-stealing split search, over a caller-owned buffer
+/// pool and a caller-owned (worker-lifetime) executor. Produces the same
+/// tree as [`super::build_tree`] given the same RNG (modulo f64
+/// merge-order rounding in the sharded histogram sums); with a
+/// single-thread executor it IS [`super::build_tree_pooled`],
+/// bit for bit.
 #[allow(clippy::too_many_arguments)]
 pub fn build_tree_feature_parallel(
     binned: &BinnedDataset,
@@ -212,11 +288,11 @@ pub fn build_tree_feature_parallel(
     hess: &[f32],
     params: &TreeParams,
     rng: &mut Rng,
-    n_threads: usize,
+    exec: &Executor,
     pool: &mut HistogramPool,
 ) -> Tree {
-    let n_threads = n_threads.max(1);
-    grow_tree(
+    let partials = take_partials(pool, exec.threads());
+    let tree = grow_tree(
         binned,
         rows,
         grad,
@@ -224,9 +300,13 @@ pub fn build_tree_feature_parallel(
         params,
         rng,
         pool,
-        &mut |hist, leaf_rows| build_sharded(hist, binned, leaf_rows, grad, hess, n_threads),
-        &|hist, mask, cons| best_split_parallel(hist, binned, mask, cons, n_threads),
-    )
+        &mut |hist, leaf_rows| {
+            build_sharded_into(hist, binned, leaf_rows, grad, hess, exec, &partials)
+        },
+        &|hist, mask, cons| best_split_parallel(hist, binned, mask, cons, exec),
+    );
+    give_partials(pool, partials);
+    tree
 }
 
 #[cfg(test)]
@@ -234,6 +314,14 @@ mod tests {
     use super::*;
     use crate::data::{synthetic, BinnedDataset};
     use crate::loss::logistic;
+    use crate::util::PoolMode;
+
+    fn both_modes(threads: usize) -> [Executor; 2] {
+        [
+            Executor::new(PoolMode::Persistent, threads),
+            Executor::new(PoolMode::Scoped, threads),
+        ]
+    }
 
     #[test]
     fn forkjoin_tree_equals_serial_tree() {
@@ -252,16 +340,18 @@ mod tests {
             &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(5),
         );
         for threads in [2usize, 4, 8] {
-            let par = build_tree_forkjoin(
-                &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(5), threads,
-            );
-            // identical splits: merge order only changes f64 rounding in the
-            // 15th digit; structure and leaf count must match exactly.
-            assert_eq!(par.n_leaves(), serial.n_leaves(), "threads={threads}");
-            for r in 0..ds.n_rows() {
-                let a = serial.predict_binned(&binned, r);
-                let b = par.predict_binned(&binned, r);
-                assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+            for exec in both_modes(threads) {
+                let par = build_tree_forkjoin(
+                    &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(5), &exec,
+                );
+                // identical splits: merge order only changes f64 rounding in the
+                // 15th digit; structure and leaf count must match exactly.
+                assert_eq!(par.n_leaves(), serial.n_leaves(), "threads={threads}");
+                for r in 0..ds.n_rows() {
+                    let a = serial.predict_binned(&binned, r);
+                    let b = par.predict_binned(&binned, r);
+                    assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+                }
             }
         }
     }
@@ -281,26 +371,56 @@ mod tests {
         };
         let a =
             super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3));
-        let b =
-            build_tree_forkjoin(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3), 1);
+        let b = build_tree_forkjoin(
+            &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(3), &Executor::scoped(1),
+        );
         assert_eq!(a, b);
     }
 
     #[test]
     fn forkjoin_handles_tiny_leaves() {
-        // fewer rows than 2*threads: falls back to serial build per leaf
+        // fewer rows than threads: falls back to serial build per leaf
         let ds = synthetic::realsim_like(10, 3);
         let binned = BinnedDataset::from_dataset(&ds, 16).unwrap();
         let f = vec![0.0f32; 10];
         let w = vec![1.0f32; 10];
         let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
         let rows: Vec<u32> = (0..10).collect();
-        let t = build_tree_forkjoin(
-            &binned, &rows, &gh.grad, &gh.hess,
-            &TreeParams { max_leaves: 4, feature_rate: 1.0, ..Default::default() },
-            &mut Rng::new(4), 8,
-        );
-        t.validate().unwrap();
+        for exec in both_modes(8) {
+            let t = build_tree_forkjoin(
+                &binned, &rows, &gh.grad, &gh.hess,
+                &TreeParams { max_leaves: 4, feature_rate: 1.0, ..Default::default() },
+                &mut Rng::new(4), &exec,
+            );
+            t.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sharded_histogram_matches_serial_build_on_small_leaves() {
+        // the lowered fallback threshold: any leaf with >= threads rows
+        // shards; counts must match the serial build exactly and f64 sums
+        // to rounding (exactly, for the dyadic f=0 logistic grads)
+        let ds = synthetic::realsim_like(64, 21);
+        let binned = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let mut serial = Histogram::zeros(binned.total_bins());
+        serial.build(&binned, &rows[..9], &gh.grad, &gh.hess);
+        for exec in both_modes(8) {
+            // 9 rows on 8 threads: shards of 2 rows, 5 shards — parallel
+            // under the new threshold (old: serial below 16 rows)
+            let mut sharded = Histogram::zeros(binned.total_bins());
+            build_histogram_sharded(&mut sharded, &binned, &rows[..9], &gh.grad, &gh.hess, &exec);
+            assert_eq!(sharded.totals, serial.totals, "mode {:?}", exec.mode());
+            for s in 0..binned.total_bins() {
+                assert_eq!(sharded.count[s], serial.count[s], "slot {s}");
+                assert_eq!(sharded.grad[s], serial.grad[s], "slot {s}");
+                assert_eq!(sharded.hess[s], serial.hess[s], "slot {s}");
+            }
+        }
     }
 
     #[test]
@@ -317,15 +437,17 @@ mod tests {
         let cons = SplitConstraints::default();
         let serial = best_split(&hist, &binned, &mask, &cons);
         for threads in [1usize, 2, 4, 8] {
-            let par = best_split_parallel(&hist, &binned, &mask, &cons, threads);
-            assert_eq!(par, serial, "threads={threads}");
+            for exec in both_modes(threads) {
+                let par = best_split_parallel(&hist, &binned, &mask, &cons, &exec);
+                assert_eq!(par, serial, "threads={threads} mode={:?}", exec.mode());
+            }
         }
         // and on a sparse subset (touched-features pruning path)
         let few: Vec<u32> = rows.iter().copied().take(20).collect();
         hist.build(&binned, &few, &gh.grad, &gh.hess);
         let serial = best_split(&hist, &binned, &mask, &cons);
-        for threads in [2usize, 4] {
-            assert_eq!(best_split_parallel(&hist, &binned, &mask, &cons, threads), serial);
+        for exec in both_modes(4) {
+            assert_eq!(best_split_parallel(&hist, &binned, &mask, &cons, &exec), serial);
         }
     }
 
@@ -342,15 +464,18 @@ mod tests {
             &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(9),
         );
         for threads in [2usize, 4] {
-            let mut pool = HistogramPool::new(binned.total_bins());
-            let par = build_tree_feature_parallel(
-                &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(9), threads, &mut pool,
-            );
-            assert_eq!(par.n_leaves(), serial.n_leaves(), "threads={threads}");
-            for r in 0..ds.n_rows() {
-                let a = serial.predict_binned(&binned, r);
-                let b = par.predict_binned(&binned, r);
-                assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+            for exec in both_modes(threads) {
+                let mut pool = HistogramPool::new(binned.total_bins());
+                let par = build_tree_feature_parallel(
+                    &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(9), &exec,
+                    &mut pool,
+                );
+                assert_eq!(par.n_leaves(), serial.n_leaves(), "threads={threads}");
+                for r in 0..ds.n_rows() {
+                    let a = serial.predict_binned(&binned, r);
+                    let b = par.predict_binned(&binned, r);
+                    assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+                }
             }
         }
     }
@@ -372,8 +497,37 @@ mod tests {
             super::super::build_tree(&binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6));
         let mut pool = HistogramPool::new(binned.total_bins());
         let b = build_tree_feature_parallel(
-            &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6), 1, &mut pool,
+            &binned, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(6), &Executor::scoped(1),
+            &mut pool,
         );
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn one_persistent_executor_serves_many_tree_builds() {
+        // worker-lifetime reuse: the same pool of parked workers builds
+        // 30 trees back to back, each bit-identical to its scoped twin
+        let ds = synthetic::realsim_like(300, 14);
+        let binned = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let f = vec![0.0f32; ds.n_rows()];
+        let w = vec![1.0f32; ds.n_rows()];
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let params = TreeParams { max_leaves: 8, feature_rate: 1.0, ..Default::default() };
+        let persistent = Executor::new(PoolMode::Persistent, 4);
+        let scoped = Executor::scoped(4);
+        let mut pool_p = HistogramPool::new(binned.total_bins());
+        let mut pool_s = HistogramPool::new(binned.total_bins());
+        let mut rng_p = Rng::new(15);
+        let mut rng_s = Rng::new(15);
+        for tree in 0..30 {
+            let a = build_tree_feature_parallel(
+                &binned, &rows, &gh.grad, &gh.hess, &params, &mut rng_p, &persistent, &mut pool_p,
+            );
+            let b = build_tree_feature_parallel(
+                &binned, &rows, &gh.grad, &gh.hess, &params, &mut rng_s, &scoped, &mut pool_s,
+            );
+            assert_eq!(a, b, "tree {tree} diverged across pool modes");
+        }
     }
 }

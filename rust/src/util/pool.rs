@@ -1,4 +1,5 @@
-//! Server-lifetime scoring thread pool.
+//! Persistent thread pools for every per-tree parallel section —
+//! server-side scoring *and* worker-side tree building.
 //!
 //! Every accepted tree runs a parallel section on the server's accept
 //! path: the blocked F-update (`forest/score.rs`) and the fused accept
@@ -10,6 +11,22 @@
 //! work is itself tens of microseconds) spawn/join *dominates* the
 //! accept cost and erases the benefit of sharding; `bench_ps_throughput`
 //! measures exactly this.
+//!
+//! The worker's tree builder has the same cost structure, only worse:
+//! `tree/parallel.rs` runs one sharded histogram build per leaf and one
+//! work-stealing split search per node — dozens of parallel sections
+//! *per tree* (the fork-join-inside-tree-building pattern the paper's
+//! §II pins on LightGBM/TencentBoost). Those sections produce
+//! per-worker *outputs* — per-scanner `SplitInfo` candidates, partial
+//! `Histogram`s — which is what [`Executor::run_collect`] adds on top
+//! of the fire-and-forget [`Executor::run`]: each active index's return
+//! value lands in its own slot, in index order, so merge order is a
+//! pure function of the index range and bit-identity across pool modes
+//! stays structural. (The tree builders' histogram sections use the
+//! same per-worker-slot idea with pooled buffers through `run` — see
+//! `tree/parallel.rs` — so their hot path allocates nothing per leaf.)
+//! `bench_tree_build`/`bench_histogram` measure the per-tree build cost
+//! under both modes.
 //!
 //! [`ScorePool`] keeps `score_threads` workers parked on a condvar for
 //! the lifetime of the server and hands them one job per parallel
@@ -46,8 +63,10 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// How parallel scoring sections obtain their threads (config key
-/// `pool=persistent|scoped`; see DESIGN.md §11).
+/// How parallel sections obtain their threads (config key
+/// `pool=persistent|scoped`; see DESIGN.md §11–12). One knob governs
+/// both pools: the server's scoring executor (`score_threads`) and each
+/// worker's tree-build executor (`build_threads`).
 ///
 /// ```
 /// use asgbdt::util::PoolMode;
@@ -283,15 +302,19 @@ fn wait_for_epoch(shared: &Shared, seen: u64) -> Option<(u64, Job)> {
     Some((st.epoch, st.job.expect("epoch bumped without a job")))
 }
 
-/// The execution resource behind every parallel scoring section,
-/// selected once at startup by the `pool` knob and owned for the
-/// server's lifetime ([`crate::ps::ServerCore`] constructs one from
-/// `cfg.pool` / `cfg.score_threads`).
+/// The execution resource behind every parallel section, selected once
+/// at startup by the `pool` knob and owned for its user's lifetime:
+/// [`crate::ps::ServerCore`] constructs one from `cfg.pool` /
+/// `cfg.score_threads` for the accept path, and every tree-building
+/// loop (each async worker, the sync/serial trainers) constructs one
+/// from `cfg.pool` / its build thread budget for
+/// [`crate::tree::build_tree_feature_parallel`] and friends.
 ///
-/// `run(active, job)` has identical semantics in both modes — `job(idx)`
-/// for each `idx < active`, return after all complete, propagate job
-/// panics — so engines built on it are oblivious to where their threads
-/// come from, and bit-identity across modes is structural.
+/// `run(active, job)` / `run_collect(active, job)` have identical
+/// semantics in both modes — `job(idx)` for each `idx < active`, return
+/// after all complete (outputs in index order), propagate job panics —
+/// so engines built on them are oblivious to where their threads come
+/// from, and bit-identity across modes is structural.
 #[derive(Debug)]
 pub enum Executor {
     /// Per-section `std::thread::scope` spawns (reference).
@@ -340,6 +363,37 @@ impl Executor {
             Executor::Scoped { threads } => *threads,
             Executor::Persistent(pool) => pool.threads(),
         }
+    }
+
+    /// Like [`Executor::run`], but each `job(idx)` produces an output,
+    /// returned as a `Vec` in **index order** (slot `i` holds `job(i)`'s
+    /// result regardless of which OS thread ran it or when it finished).
+    /// This is the entry point for fork-join sections whose workers
+    /// produce values to merge — partial histograms, per-scanner split
+    /// candidates — where a deterministic merge order is what keeps the
+    /// result independent of scheduling. `active` clamps to the thread
+    /// budget; job panics propagate after every worker has checked in,
+    /// and the executor stays usable afterwards.
+    pub fn run_collect<T: Send>(&self, active: usize, job: &(dyn Fn(usize) -> T + Sync)) -> Vec<T> {
+        let active = active.min(self.threads());
+        if active == 0 {
+            return Vec::new();
+        }
+        // one slot per active index: each worker writes only its own slot,
+        // so the mutexes are uncontended and exist purely to move T out
+        let slots: Vec<Mutex<Option<T>>> = (0..active).map(|_| Mutex::new(None)).collect();
+        self.run(active, &|idx| {
+            let out = job(idx);
+            *slots[idx].lock().unwrap() = Some(out);
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("slot mutex cannot be poisoned: no panic can occur while it is held")
+                    .expect("run returned, so every active worker filled its slot")
+            })
+            .collect()
     }
 
     /// Run `job(idx)` for every `idx < active` (clamped to the thread
@@ -430,6 +484,46 @@ mod tests {
             for s in &slots {
                 assert_eq!(*s.lock().unwrap(), 15, "mode {:?}", exec.mode());
             }
+        }
+    }
+
+    #[test]
+    fn run_collect_returns_outputs_in_index_order() {
+        for exec in both_modes(4) {
+            for active in [0usize, 1, 3, 4, 9] {
+                let got = exec.run_collect(active, &|idx| idx * 10 + 1);
+                let want: Vec<usize> = (0..active.min(4)).map(|i| i * 10 + 1).collect();
+                assert_eq!(got, want, "mode {:?} active {active}", exec.mode());
+            }
+        }
+    }
+
+    #[test]
+    fn run_collect_moves_nontrivial_owned_outputs() {
+        // the shape the tree builder uses: each worker returns an owned
+        // heap value (a partial histogram stand-in), merged in slot order
+        for exec in both_modes(3) {
+            let parts = exec.run_collect(3, &|idx| vec![idx as u64; idx + 1]);
+            assert_eq!(parts, vec![vec![0], vec![1, 1], vec![2, 2, 2]]);
+        }
+    }
+
+    #[test]
+    fn run_collect_panic_propagates_and_executor_stays_usable() {
+        // the output-producing path must give the same panic contract as
+        // run(): first payload re-raised, pool reusable afterwards
+        for exec in both_modes(3) {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                exec.run_collect(3, &|idx| {
+                    if idx == 1 {
+                        panic!("boom from collecting worker");
+                    }
+                    idx
+                })
+            }));
+            assert!(r.is_err(), "mode {:?} swallowed the panic", exec.mode());
+            let ok = exec.run_collect(3, &|idx| idx + 100);
+            assert_eq!(ok, vec![100, 101, 102], "mode {:?}", exec.mode());
         }
     }
 

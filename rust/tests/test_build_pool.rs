@@ -1,0 +1,258 @@
+//! The worker-side build pool's equivalence matrix: tree construction
+//! must be **bit-identical** across `pool=persistent|scoped` at every
+//! histogram strategy and thread count (node-by-node, not just
+//! predictions), the work-stealing split search must pin the serial
+//! scan's lower-feature-id tie-break under any chunk scheduling, and one
+//! persistent executor must survive an entire (≥100-tree) training run.
+
+use asgbdt::config::TrainConfig;
+use asgbdt::coordinator::{train_async, train_sync};
+use asgbdt::data::{synthetic, CsrMatrix, Dataset};
+use asgbdt::testkit::{self, BinnedFixture};
+use asgbdt::tree::histogram::Histogram;
+use asgbdt::tree::split::{best_split, best_split_for_feature, SplitConstraints};
+use asgbdt::tree::{
+    best_split_parallel, build_tree_feature_parallel, HistogramPool, HistogramStrategy, Node,
+    Tree, TreeParams,
+};
+use asgbdt::util::{Executor, PoolMode, Rng};
+
+/// Assert two trees are identical node by node, with enough context in
+/// the failure message to localise the divergence.
+fn assert_trees_identical(a: &Tree, b: &Tree, at: &str) {
+    assert_eq!(a.nodes.len(), b.nodes.len(), "{at}: node count");
+    for (ni, (na, nb)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        match (na, nb) {
+            (
+                Node::Split { feature: fa, bin: ba, threshold: ta, left: la, right: ra },
+                Node::Split { feature: fb, bin: bb, threshold: tb, left: lb, right: rb },
+            ) => {
+                assert_eq!(fa, fb, "{at} node {ni}: split feature");
+                assert_eq!(ba, bb, "{at} node {ni}: split bin");
+                assert_eq!(ta, tb, "{at} node {ni}: threshold (must be bit-equal)");
+                assert_eq!((la, ra), (lb, rb), "{at} node {ni}: children");
+            }
+            (Node::Leaf { value: va }, Node::Leaf { value: vb }) => {
+                // bit-identity, not tolerance: both pool modes must run the
+                // exact same f64 reductions in the exact same order
+                assert_eq!(va, vb, "{at} node {ni}: leaf value");
+            }
+            _ => panic!("{at} node {ni}: structure mismatch"),
+        }
+    }
+}
+
+fn build_with(fx: &BinnedFixture, params: &TreeParams, seed: u64, exec: &Executor) -> Tree {
+    let mut pool = HistogramPool::new(fx.binned.total_bins());
+    build_tree_feature_parallel(
+        &fx.binned, &fx.rows, &fx.grad, &fx.hess, params, &mut Rng::new(seed), exec, &mut pool,
+    )
+}
+
+/// Satellite: the full equivalence matrix —
+/// `histogram=subtract|rebuild` × `pool=persistent|scoped` × 1/2/4/8
+/// threads, on a sparse (real-sim-like) and a dense (higgs-like)
+/// dataset. Within each (strategy, threads) cell the two pool modes must
+/// grow the identical tree; shard boundaries and merge order depend only
+/// on the thread count, so this is structural, and any regression
+/// (a mode-dependent threshold, a scheduling-dependent merge) trips it.
+#[test]
+fn tree_building_is_bit_identical_across_pool_modes() {
+    let datasets = [
+        ("sparse", synthetic::realsim_like(700, 51)),
+        ("dense", synthetic::higgs_like(500, 52)),
+    ];
+    for (kind, ds) in &datasets {
+        let fx = testkit::logistic_fixture(ds, 32);
+        for strategy in [HistogramStrategy::Subtract, HistogramStrategy::Rebuild] {
+            let params = TreeParams {
+                max_leaves: 16,
+                feature_rate: 1.0,
+                strategy,
+                ..Default::default()
+            };
+            for threads in [1usize, 2, 4, 8] {
+                let scoped = build_with(&fx, &params, 31, &Executor::scoped(threads));
+                let persistent =
+                    build_with(&fx, &params, 31, &Executor::new(PoolMode::Persistent, threads));
+                let at = format!(
+                    "{kind} histogram={} threads={threads}",
+                    strategy.as_str()
+                );
+                assert_trees_identical(&scoped, &persistent, &at);
+            }
+        }
+    }
+}
+
+/// Feature-subsampled trees share the same RNG stream in both modes, so
+/// the matrix holds under `feature_rate < 1` too (the mask is drawn
+/// before any parallel section runs).
+#[test]
+fn pool_modes_agree_under_feature_subsampling() {
+    let ds = synthetic::realsim_like(400, 53);
+    let fx = testkit::logistic_fixture(&ds, 16);
+    let params = TreeParams {
+        max_leaves: 12,
+        feature_rate: 0.5,
+        ..Default::default()
+    };
+    for threads in [2usize, 4] {
+        let a = build_with(&fx, &params, 77, &Executor::scoped(threads));
+        let b = build_with(&fx, &params, 77, &Executor::new(PoolMode::Persistent, threads));
+        assert_trees_identical(&a, &b, &format!("feature_rate=0.5 threads={threads}"));
+    }
+}
+
+/// Satellite: property test — `best_split_parallel` ≡ serial
+/// [`best_split`] on histograms engineered to contain equal-gain ties.
+/// Every generated feature column is duplicated (column 2k+1 is a copy
+/// of column 2k), so the two columns bin identically and their best
+/// splits tie at *exactly* equal f64 gain; the winner must be the lower
+/// feature id no matter which work-stealing scanner saw it first.
+#[test]
+fn parallel_split_search_pins_lower_feature_tie_break() {
+    let execs: Vec<Executor> = [2usize, 4, 8]
+        .iter()
+        .flat_map(|&t| [Executor::scoped(t), Executor::new(PoolMode::Persistent, t)])
+        .collect();
+    testkit::check("best_split_parallel ≡ best_split under ties", 32, 0xBEEF, |g| {
+        let n_rows = 20 + g.usize_in(0, 180);
+        // up to 24 duplicated pairs = 48 features: enough candidates to
+        // engage the work-stealing path (≥ 2 chunks) in the larger cases
+        let n_base = 2 + g.usize_in(0, 22);
+        let mut mat: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n_rows];
+        for f in 0..n_base {
+            for row in mat.iter_mut() {
+                if g.rng.bernoulli(0.7) {
+                    // few distinct values => well-populated bins => ties
+                    // between non-duplicate features happen too
+                    let v = 1.0 + g.rng.below(3) as f32;
+                    row.push((2 * f as u32, v));
+                    row.push((2 * f as u32 + 1, v));
+                }
+            }
+        }
+        let x = CsrMatrix::from_rows(2 * n_base, &mat).map_err(|e| e.to_string())?;
+        let ds = Dataset::new("ties", x, g.labels(n_rows));
+        let fx = testkit::logistic_fixture(&ds, 8);
+        let mut hist = Histogram::zeros(fx.binned.total_bins());
+        hist.build(&fx.binned, &fx.rows, &fx.grad, &fx.hess);
+        let mask = vec![true; 2 * n_base];
+        let cons = SplitConstraints::default();
+        let serial = best_split(&hist, &fx.binned, &mask, &cons);
+        for exec in &execs {
+            let par = best_split_parallel(&hist, &fx.binned, &mask, &cons, exec);
+            asgbdt::prop_assert!(
+                par == serial,
+                "parallel {:?} != serial {:?} (threads={} mode={:?})",
+                par,
+                serial,
+                exec.threads(),
+                exec.mode()
+            );
+        }
+        if let Some(s) = serial {
+            // the engineered tie must be real and broken downwards: the
+            // winner is the even (lower) id of its duplicated pair, and
+            // its odd twin scores exactly the same gain
+            asgbdt::prop_assert!(
+                s.feature % 2 == 0,
+                "tie broke upwards: winner {} has a lower-id duplicate",
+                s.feature
+            );
+            let twin =
+                best_split_for_feature(&hist, &fx.binned, s.feature as usize + 1, &cons);
+            asgbdt::prop_assert!(
+                twin.map(|t| t.gain) == Some(s.gain),
+                "duplicate column gain diverged: {:?} vs {}",
+                twin.map(|t| t.gain),
+                s.gain
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The generated-fixture path exercises the whole engine end to end:
+/// random sparse datasets from `Gen::binned_dataset`, every pool mode
+/// agreeing with the single-thread serial build structurally.
+#[test]
+fn generated_datasets_build_identically_across_modes() {
+    testkit::check("feature-parallel build matrix on generated data", 12, 0xFEED, |g| {
+        let n_rows = 30 + g.usize_in(0, 170);
+        let n_feat = 4 + g.usize_in(0, 28);
+        let fx = g.binned_dataset(n_rows, n_feat, 0.6);
+        let params = TreeParams {
+            max_leaves: 8,
+            feature_rate: 1.0,
+            ..Default::default()
+        };
+        for threads in [2usize, 4] {
+            let a = build_with(&fx, &params, 3, &Executor::scoped(threads));
+            let b = build_with(&fx, &params, 3, &Executor::new(PoolMode::Persistent, threads));
+            asgbdt::prop_assert!(
+                a == b,
+                "pool modes diverged at threads={threads} ({} rows)",
+                fx.rows.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+fn lifecycle_cfg(n_trees: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_trees = n_trees;
+    cfg.step_length = 0.2;
+    cfg.sampling_rate = 0.9;
+    cfg.tree.max_leaves = 6;
+    cfg.max_bins = 16;
+    cfg.eval_every = 25;
+    cfg.build_threads = 2;
+    cfg.pool = PoolMode::Persistent;
+    cfg
+}
+
+/// Satellite: worker-side pool lifecycle — each async worker's one
+/// persistent executor serves every fork-join section of ≥100 trees
+/// (dozens of dispatches per tree) without wedging, leaking, or
+/// corrupting a build.
+#[test]
+fn worker_build_pool_survives_100_tree_async_run() {
+    let ds = synthetic::realsim_like(500, 71);
+    let mut cfg = lifecycle_cfg(100);
+    cfg.workers = 2;
+    let rep = train_async(&cfg, &ds, None).unwrap();
+    assert_eq!(rep.trees_accepted, 100);
+    assert_eq!(rep.forest.n_trees(), 100);
+    let first = rep.curve.points.first().unwrap().train_loss;
+    let last = rep.curve.points.last().unwrap().train_loss;
+    assert!(last < first, "loss did not descend: {first} -> {last}");
+}
+
+/// The sync trainer is deterministic, so its persistent and scoped twins
+/// must match bit for bit over a long run — trainer-level proof that a
+/// build pool reused across 120 trees never drifts from per-call spawns.
+#[test]
+fn sync_trainer_pool_modes_identical_over_long_run() {
+    let ds = synthetic::realsim_like(400, 72);
+    let mut cfg = lifecycle_cfg(120);
+    cfg.mode = asgbdt::config::TrainMode::Sync;
+    // sync's fork-join width is its worker count; build_threads>1 with
+    // mode=sync is a validate()-rejected pair
+    cfg.build_threads = 1;
+    cfg.workers = 3;
+    let mut cfg_scoped = cfg.clone();
+    cfg_scoped.pool = PoolMode::Scoped;
+    let a = train_sync(&cfg, &ds, None).unwrap();
+    let b = train_sync(&cfg_scoped, &ds, None).unwrap();
+    assert_eq!(a.trees_accepted, 120);
+    let la: Vec<f64> = a.curve.points.iter().map(|p| p.train_loss).collect();
+    let lb: Vec<f64> = b.curve.points.iter().map(|p| p.train_loss).collect();
+    assert_eq!(la, lb, "persistent and scoped sync runs diverged");
+    for (ti, ((va, ta), (vb, tb))) in a.forest.trees.iter().zip(&b.forest.trees).enumerate() {
+        assert_eq!(va, vb, "sync tree {ti}: step length");
+        assert_trees_identical(ta, tb, &format!("sync tree {ti}"));
+    }
+}

@@ -1,16 +1,21 @@
 //! Parameter-server invariants under real concurrency: version
 //! monotonicity, exact tree accounting, clean shutdown, rejection
 //! bookkeeping, and failure injection (dead workers).
+//!
+//! Each worker gets a single-thread scoped build executor (the serial
+//! build path) — the build-parallel matrix lives in
+//! `tests/test_build_pool.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use asgbdt::config::TrainConfig;
-use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::data::{synthetic, BinnedDataset, Dataset};
 use asgbdt::ps::{run_worker, Board, ServerCore, TargetSnapshot};
 use asgbdt::runtime::GradientEngine;
 use asgbdt::tree::TreeParams;
+use asgbdt::util::Executor;
 
 fn mini_cfg(workers: usize, n_trees: usize) -> TrainConfig {
     let mut cfg = TrainConfig::default();
@@ -22,6 +27,13 @@ fn mini_cfg(workers: usize, n_trees: usize) -> TrainConfig {
     cfg.max_bins = 16;
     cfg.eval_every = n_trees;
     cfg
+}
+
+/// Bin a dataset at the config's bin count (these tests publish their
+/// own board snapshots, so the full `testkit::logistic_fixture` —
+/// which also computes grad/hess targets — would be wasted here).
+fn binned_for(ds: &Dataset, cfg: &TrainConfig) -> Arc<BinnedDataset> {
+    Arc::new(BinnedDataset::from_dataset(ds, cfg.max_bins).unwrap())
 }
 
 #[test]
@@ -61,7 +73,7 @@ fn board_versions_are_monotone_under_concurrent_pulls() {
 fn server_accepts_exactly_n_trees_with_racing_workers() {
     let ds = synthetic::realsim_like(250, 1);
     let cfg = mini_cfg(6, 25);
-    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let binned = binned_for(&ds, &cfg);
     let mut core =
         ServerCore::new(&cfg, &ds, binned.clone(), None, GradientEngine::native()).unwrap();
     let board = Board::new();
@@ -74,7 +86,10 @@ fn server_accepts_exactly_n_trees_with_racing_workers() {
             let b = binned.clone();
             let board_ref = &board;
             let params = TreeParams { max_leaves: 4, ..Default::default() };
-            s.spawn(move || run_worker(wid, board_ref, b, params, tx, 99));
+            s.spawn(move || {
+                let exec = Executor::scoped(1);
+                run_worker(wid, board_ref, b, params, &exec, tx, 99)
+            });
         }
         drop(tx);
         while core.n_trees() < cfg.n_trees {
@@ -100,7 +115,7 @@ fn dead_worker_does_not_wedge_training() {
     // the remaining workers must still complete the run.
     let ds = synthetic::realsim_like(200, 2);
     let cfg = mini_cfg(3, 12);
-    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let binned = binned_for(&ds, &cfg);
     let mut core =
         ServerCore::new(&cfg, &ds, binned.clone(), None, GradientEngine::native()).unwrap();
     let board = Board::new();
@@ -116,7 +131,10 @@ fn dead_worker_does_not_wedge_training() {
             let b = binned.clone();
             let board_ref = &board;
             let params = TreeParams { max_leaves: 4, ..Default::default() };
-            s.spawn(move || run_worker(wid, board_ref, b, params, tx, 5));
+            s.spawn(move || {
+                let exec = Executor::scoped(1);
+                run_worker(wid, board_ref, b, params, &exec, tx, 5)
+            });
         }
         drop(tx);
         while core.n_trees() < cfg.n_trees {
@@ -136,7 +154,7 @@ fn staleness_bound_filters_but_run_completes() {
     let ds = synthetic::realsim_like(200, 3);
     let mut cfg = mini_cfg(4, 15);
     cfg.max_staleness = Some(1);
-    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let binned = binned_for(&ds, &cfg);
     let mut core =
         ServerCore::new(&cfg, &ds, binned.clone(), None, GradientEngine::native()).unwrap();
     let board = Board::new();
@@ -149,7 +167,10 @@ fn staleness_bound_filters_but_run_completes() {
             let b = binned.clone();
             let board_ref = &board;
             let params = TreeParams { max_leaves: 4, ..Default::default() };
-            s.spawn(move || run_worker(wid, board_ref, b, params, tx, 17));
+            s.spawn(move || {
+                let exec = Executor::scoped(1);
+                run_worker(wid, board_ref, b, params, &exec, tx, 17)
+            });
         }
         drop(tx);
         while core.n_trees() < cfg.n_trees {
@@ -169,7 +190,7 @@ fn staleness_bound_filters_but_run_completes() {
 fn snapshot_rows_match_weight_support() {
     let ds = synthetic::realsim_like(300, 4);
     let cfg = mini_cfg(1, 3);
-    let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+    let binned = binned_for(&ds, &cfg);
     let core =
         ServerCore::new(&cfg, &ds, binned, None, GradientEngine::native()).unwrap();
     let snap = core.snapshot();

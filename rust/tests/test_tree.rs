@@ -1,10 +1,15 @@
 //! Tree-learner integration: learning power, consistency between binned
 //! and raw prediction, boosting end-to-end with the forest, and the
 //! Subtract/Rebuild histogram-strategy equivalence property.
+//!
+//! Dataset setup comes from `testkit::logistic_fixture` (binned dataset
+//! + margin-0 logistic targets + full row list) — the block every test
+//! here used to hand-roll.
 
 use asgbdt::data::{synthetic, BinnedDataset, Dataset};
 use asgbdt::forest::Forest;
 use asgbdt::loss::{logistic, metrics};
+use asgbdt::testkit::logistic_fixture;
 use asgbdt::tree::{
     build_tree, build_tree_pooled, HistogramPool, HistogramStrategy, Node, Tree, TreeParams,
 };
@@ -33,15 +38,11 @@ fn single_tree_reduces_training_loss() {
 #[test]
 fn binned_and_raw_prediction_agree_on_training_data() {
     let ds = synthetic::realsim_like(500, 3);
-    let b = BinnedDataset::from_dataset(&ds, 64).unwrap();
-    let f0 = vec![0.0f32; ds.n_rows()];
-    let w = vec![1.0f32; ds.n_rows()];
-    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
-    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let fx = logistic_fixture(&ds, 64);
     let params = TreeParams { max_leaves: 64, feature_rate: 1.0, ..Default::default() };
-    let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(4));
+    let tree = build_tree(&fx.binned, &fx.rows, &fx.grad, &fx.hess, &params, &mut Rng::new(4));
     for r in 0..ds.n_rows() {
-        let pb = tree.predict_binned(&b, r);
+        let pb = tree.predict_binned(&fx.binned, r);
         let pr = tree.predict_raw(&ds.x, r);
         assert_eq!(pb, pr, "row {r}: binned {pb} vs raw {pr}");
     }
@@ -83,14 +84,10 @@ fn boosting_loop_overfits_small_data() {
 #[test]
 fn feature_sampling_restricts_split_features() {
     let ds = synthetic::realsim_like(400, 7);
-    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
-    let f0 = vec![0.0f32; ds.n_rows()];
-    let w = vec![1.0f32; ds.n_rows()];
-    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
-    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let fx = logistic_fixture(&ds, 32);
     // rate 0.05: only ~5% of features available; tree still builds
     let params = TreeParams { max_leaves: 8, feature_rate: 0.05, ..Default::default() };
-    let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(8));
+    let tree = build_tree(&fx.binned, &fx.rows, &fx.grad, &fx.hess, &params, &mut Rng::new(8));
     tree.validate().unwrap();
     assert!(tree.n_leaves() >= 1);
 }
@@ -189,16 +186,15 @@ fn histogram_pool_allocations_bounded_across_trees() {
 #[test]
 fn forest_serialization_roundtrip_with_real_trees() {
     let ds = synthetic::realsim_like(200, 9);
-    let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
-    let f0 = vec![0.0f32; ds.n_rows()];
-    let w = vec![1.0f32; ds.n_rows()];
-    let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
-    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let fx = logistic_fixture(&ds, 16);
     let params = TreeParams { max_leaves: 16, feature_rate: 0.8, ..Default::default() };
     let mut forest = Forest::new(0.1);
     let mut rng = Rng::new(10);
     for _ in 0..3 {
-        forest.push(0.01, build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng));
+        forest.push(
+            0.01,
+            build_tree(&fx.binned, &fx.rows, &fx.grad, &fx.hess, &params, &mut rng),
+        );
     }
     let path = std::env::temp_dir().join("asgbdt_it_forest.json");
     forest.save(&path).unwrap();
