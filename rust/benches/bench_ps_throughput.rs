@@ -6,13 +6,21 @@
 //! serial reference at 1/2/4/8 score threads), and the pool breakdown:
 //! persistent parked workers vs per-tree scoped spawns on a deliberately
 //! small dataset where spawn/join dominates the accept cost.
-use asgbdt::bench_harness::Runner;
+//!
+//! Besides the human-readable table/CSV, the run emits the machine-
+//! readable snapshot `results/BENCH_ps_throughput.json` (per-config
+//! trees/sec plus accept-phase fractions) and verifies it parses back.
+//! `cargo bench --bench bench_ps_throughput -- --test` runs the same
+//! pipeline on a tiny budget — the CI smoke mode.
+use asgbdt::bench_harness::{BenchConfig, Runner};
 use asgbdt::config::TrainConfig;
 use asgbdt::coordinator::{train_async, TrainReport};
 use asgbdt::data::synthetic;
 use asgbdt::forest::ScoreMode;
+use asgbdt::io::Json;
 use asgbdt::ps::{Board, TargetMode, TargetSnapshot};
 use asgbdt::util::PoolMode;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// The shared 4-worker async workload every breakdown below runs
@@ -41,7 +49,22 @@ fn fused_accept_cost(rep: &TrainReport) -> f64 {
 }
 
 fn main() {
+    // `-- --test`: CI smoke mode — same pipeline, tiny tree counts and
+    // measurement budget, so the JSON snapshot shape is exercised cheaply
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let trees = |full: usize| if test_mode { 8 } else { full };
     let mut r = Runner::new("ps_throughput");
+    if test_mode {
+        r = r.with_config(BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.05,
+            min_iters: 2,
+            max_iters: 10,
+        });
+    }
+    // machine-readable sections for results/BENCH_ps_throughput.json
+    let mut trees_per_sec: BTreeMap<String, Json> = BTreeMap::new();
+    let mut accept_fracs: BTreeMap<String, Json> = BTreeMap::new();
     // micro: board pull/publish
     let board = Board::new();
     let n = 100_000;
@@ -64,9 +87,10 @@ fn main() {
     // update F) broken out — the server-side cost the blocked scorer cuts
     let ds = synthetic::realsim_like(3_000, 9);
     for workers in [1usize, 2, 4, 8] {
-        let mut cfg = bench_cfg(40, 32);
+        let mut cfg = bench_cfg(trees(40), 32);
         cfg.workers = workers;
         let rep = train_async(&cfg, &ds, None).unwrap();
+        trees_per_sec.insert(format!("async_w{workers}"), Json::Num(rep.trees_per_sec()));
         r.record(
             &format!("train_async/trees_per_sec_w{workers} (1/x)"),
             1.0 / rep.trees_per_sec(),
@@ -85,7 +109,7 @@ fn main() {
     // scoring-engine contrast on the same workload (4 workers); both on
     // the serial accept path, where the per-row reference engine lives
     for scoring in [ScoreMode::Flat, ScoreMode::PerRow] {
-        let mut cfg = bench_cfg(40, 32);
+        let mut cfg = bench_cfg(trees(40), 32);
         cfg.target = TargetMode::Serial;
         cfg.scoring = scoring;
         let rep = train_async(&cfg, &ds, None).unwrap();
@@ -107,24 +131,41 @@ fn main() {
     // reference, sharded across 1/2/4/8 score threads (4 workers racing)
     for target in [TargetMode::Fused, TargetMode::Serial] {
         for threads in [1usize, 2, 4, 8] {
-            let mut cfg = bench_cfg(40, 32);
+            let mut cfg = bench_cfg(trees(40), 32);
             cfg.target = target;
             cfg.score_threads = threads;
             let rep = train_async(&cfg, &ds, None).unwrap();
-            // per-tree accept cost: both sums cover the same work — the
-            // fused pass folds sampling/target/eval in, so the serial
-            // side must count its separate sweeps (sample,
+            // per-tree accept cost by phase: both sums cover the same
+            // work — the fused pass folds sampling/target/eval in, so
+            // the serial side must count its separate sweeps (sample,
             // produce_target, eval) for symmetry
-            let accept = match target {
-                TargetMode::Fused => fused_accept_cost(&rep),
-                TargetMode::Serial => {
-                    rep.timer.mean("server/flatten_tree")
-                        + rep.timer.mean("server/update_f")
-                        + rep.timer.mean("server/sample")
-                        + rep.timer.mean("server/produce_target")
-                        + rep.timer.mean("server/eval")
-                }
+            let phases: Vec<(&str, f64)> = match target {
+                TargetMode::Fused => vec![
+                    ("flatten", rep.timer.mean("server/flatten_tree")),
+                    ("fused_pass", rep.timer.mean("server/fused_pass")),
+                    ("produce_target", rep.timer.mean("server/produce_target")),
+                    ("eval", rep.timer.mean("server/eval")),
+                ],
+                TargetMode::Serial => vec![
+                    ("flatten", rep.timer.mean("server/flatten_tree")),
+                    ("update_f", rep.timer.mean("server/update_f")),
+                    ("sample", rep.timer.mean("server/sample")),
+                    ("produce_target", rep.timer.mean("server/produce_target")),
+                    ("eval", rep.timer.mean("server/eval")),
+                ],
             };
+            let accept: f64 = phases.iter().map(|&(_, s)| s).sum();
+            let key = format!("{}_t{threads}", target.as_str());
+            trees_per_sec.insert(key.clone(), Json::Num(rep.trees_per_sec()));
+            accept_fracs.insert(
+                key,
+                Json::obj(
+                    phases
+                        .iter()
+                        .map(|&(k, s)| (k, Json::Num(if accept > 0.0 { s / accept } else { 0.0 })))
+                        .collect(),
+                ),
+            );
             r.record(
                 &format!("accept/{}_t{threads}_per_tree", target.as_str()),
                 accept,
@@ -149,11 +190,15 @@ fn main() {
     let small = synthetic::realsim_like(1_500, 10);
     for pool in [PoolMode::Persistent, PoolMode::Scoped] {
         for threads in [1usize, 2, 4, 8] {
-            let mut cfg = bench_cfg(60, 16);
+            let mut cfg = bench_cfg(trees(60), 16);
             cfg.score_threads = threads;
             cfg.pool = pool;
             let rep = train_async(&cfg, &small, None).unwrap();
             let accept = fused_accept_cost(&rep);
+            trees_per_sec.insert(
+                format!("pool_{}_t{threads}", pool.as_str()),
+                Json::Num(rep.trees_per_sec()),
+            );
             r.record(
                 &format!("pool/{}_t{threads}_accept_per_tree", pool.as_str()),
                 accept,
@@ -171,4 +216,18 @@ fn main() {
         }
     }
     r.write_csv().unwrap();
+    // the machine-readable snapshot, then prove it parses back with the
+    // documented sections — the CI smoke mode's whole point
+    let path = r
+        .write_json(vec![
+            ("trees_per_sec", Json::Obj(trees_per_sec)),
+            ("accept_phase_fractions", Json::Obj(accept_fracs)),
+        ])
+        .unwrap();
+    let back = Json::parse_file(&path).unwrap();
+    assert_eq!(back.req_str("group").unwrap(), "ps_throughput");
+    assert!(!back.req("results").unwrap().as_arr().unwrap().is_empty());
+    assert!(back.req("trees_per_sec").unwrap().as_obj().is_some());
+    assert!(back.req("accept_phase_fractions").unwrap().as_obj().is_some());
+    println!("-- snapshot {} parses back", path.display());
 }

@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use crate::io::Json;
 use crate::util::stats::Summary;
 
 /// Harness configuration (env-tunable: ASGBDT_BENCH_FAST=1 shrinks the
@@ -157,6 +158,42 @@ impl Runner {
         &self.results
     }
 
+    /// Write `results/BENCH_<group>.json` — the machine-readable twin of
+    /// the CSV table: every measured result (name, iters, mean/std/p50/
+    /// p99 seconds) plus any caller-provided top-level sections (derived
+    /// tables like per-config throughput). Deterministic key order (the
+    /// [`Json`] object is sorted), so snapshots diff cleanly. Returns the
+    /// written path so callers can self-check the snapshot parses.
+    pub fn write_json(&self, sections: Vec<(&str, Json)>) -> anyhow::Result<std::path::PathBuf> {
+        let results = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("iters", Json::Num(r.iters as f64)),
+                        ("mean_s", Json::Num(r.secs_per_iter.mean)),
+                        ("std_s", Json::Num(r.secs_per_iter.std)),
+                        ("p50_s", Json::Num(r.secs_per_iter.p50)),
+                        ("p99_s", Json::Num(r.secs_per_iter.p99)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("group", Json::Str(self.group.clone())),
+            ("results", results),
+        ];
+        pairs.extend(sections);
+        let path = std::path::Path::new("results").join(format!("BENCH_{}.json", self.group));
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, Json::obj(pairs).to_string())?;
+        println!("-- wrote {}", path.display());
+        Ok(path)
+    }
+
     /// Write `results/bench_<group>.csv`.
     pub fn write_csv(&self) -> anyhow::Result<()> {
         let mut w = crate::io::csv::CsvWriter::new(&[
@@ -202,6 +239,21 @@ mod tests {
         r.record("external", 1.5);
         assert_eq!(r.results().len(), 2);
         assert!((r.results()[1].mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn write_json_emits_a_parseable_snapshot() {
+        let mut r = Runner::new("selftest_json").with_config(fast());
+        r.bench("noop", || 1 + 1);
+        r.record("external", 0.5);
+        let path = r
+            .write_json(vec![("extra", Json::obj(vec![("k", Json::Num(1.0))]))])
+            .unwrap();
+        let back = Json::parse_file(&path).unwrap();
+        assert_eq!(back.req_str("group").unwrap(), "selftest_json");
+        assert_eq!(back.req("results").unwrap().as_arr().unwrap().len(), 2);
+        assert!((back.req("extra").unwrap().req_f64("k").unwrap() - 1.0).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -130,6 +130,15 @@ pub struct TrainConfig {
     /// (serial). 1 (default) keeps the accept path on the server thread;
     /// raise it when the server, not the workers, is the bottleneck.
     pub score_threads: usize,
+    /// Server shards the parameter state is row-partitioned across
+    /// (`ps/sharded.rs`): each shard owns a contiguous whole-block slice
+    /// of F/weights/grad/hess and publishes its own version; the board
+    /// snapshot composes the per-shard versions. 1 (default) is the
+    /// single-`ServerCore` path, bit-identical to every prior release;
+    /// larger counts are bit-identical by construction (same whole-block
+    /// carving as the fused pass) and exist to remove the single-server
+    /// serialization point. See DESIGN.md §13.
+    pub ps_shards: usize,
     /// Threads each tree build may use for its intra-tree fork-join
     /// sections (sharded leaf histograms + work-stealing split search).
     /// 1 (default) builds exactly the serial learner; raise it when
@@ -170,6 +179,7 @@ impl Default for TrainConfig {
             target: TargetMode::Fused,
             scoring: ScoreMode::Flat,
             score_threads: 1,
+            ps_shards: 1,
             build_threads: 1,
             pool: PoolMode::Persistent,
             seed: 42,
@@ -209,6 +219,9 @@ impl TrainConfig {
         }
         if self.score_threads == 0 {
             bail!("score_threads must be >= 1");
+        }
+        if self.ps_shards == 0 {
+            bail!("ps_shards must be >= 1");
         }
         if self.build_threads == 0 {
             bail!("build_threads must be >= 1");
@@ -264,6 +277,7 @@ impl TrainConfig {
             "target" | "target_mode" => self.target = TargetMode::parse(value)?,
             "scoring" | "score_mode" => self.scoring = ScoreMode::parse(value)?,
             "score_threads" => self.score_threads = value.parse()?,
+            "ps_shards" => self.ps_shards = value.parse()?,
             "build_threads" => self.build_threads = value.parse()?,
             "pool" | "pool_mode" => self.pool = PoolMode::parse(value)?,
             "seed" => self.seed = value.parse()?,
@@ -299,6 +313,7 @@ impl TrainConfig {
             ("target", Json::Str(self.target.as_str().into())),
             ("scoring", Json::Str(self.scoring.as_str().into())),
             ("score_threads", Json::Num(self.score_threads as f64)),
+            ("ps_shards", Json::Num(self.ps_shards as f64)),
             ("build_threads", Json::Num(self.build_threads as f64)),
             ("pool", Json::Str(self.pool.as_str().into())),
             ("seed", Json::Num(self.seed as f64)),
@@ -363,9 +378,11 @@ mod tests {
         c.set("score_threads", "4").unwrap();
         c.set("build_threads", "3").unwrap();
         c.set("pool", "scoped").unwrap();
+        c.set("ps_shards", "4").unwrap();
         assert_eq!(c.target, TargetMode::Serial);
         assert_eq!(c.scoring, ScoreMode::PerRow);
         assert_eq!(c.score_threads, 4);
+        assert_eq!(c.ps_shards, 4);
         assert_eq!(c.build_threads, 3);
         assert_eq!(c.pool, PoolMode::Scoped);
         assert_eq!(c.workers, 32);
@@ -406,6 +423,30 @@ mod tests {
         let mut c = TrainConfig::default();
         c.build_threads = 0;
         assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.ps_shards = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ps_shards_defaults_to_single_shard_and_is_orthogonal() {
+        // the sharded PS must be opt-in: the default config stays on the
+        // single-ServerCore path, and any shard count validates against
+        // every target/pool combination (no cross-field conflicts — the
+        // sharded pass is bit-identical to the fused one by construction)
+        let c = TrainConfig::default();
+        assert_eq!(c.ps_shards, 1);
+        for shards in [1usize, 2, 8] {
+            for target in [TargetMode::Fused, TargetMode::Serial] {
+                for pool in [PoolMode::Persistent, PoolMode::Scoped] {
+                    let mut c = TrainConfig::default();
+                    c.ps_shards = shards;
+                    c.target = target;
+                    c.pool = pool;
+                    c.validate().unwrap();
+                }
+            }
+        }
     }
 
     #[test]
@@ -471,6 +512,7 @@ mod tests {
         c.set("score_threads", "2").unwrap();
         c.set("build_threads", "4").unwrap();
         c.set("pool", "scoped").unwrap();
+        c.set("ps_shards", "2").unwrap();
         let j = c.to_json();
         let back = TrainConfig::from_json(&j).unwrap();
         assert_eq!(back.workers, 8);
@@ -483,5 +525,6 @@ mod tests {
         assert_eq!(back.score_threads, 2);
         assert_eq!(back.build_threads, 4);
         assert_eq!(back.pool, PoolMode::Scoped);
+        assert_eq!(back.ps_shards, 2);
     }
 }

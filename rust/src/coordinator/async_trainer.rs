@@ -36,6 +36,14 @@
 //! accepted trees/sec at high worker counts — measured by
 //! `bench_ps_throughput`'s fused-vs-serial and persistent-vs-scoped
 //! breakdowns.
+//!
+//! With `cfg.ps_shards > 1` the server routes its fused pass through the
+//! sharded PS (`ps/sharded.rs`): the accept sweep is carved at the row
+//! partition's boundaries instead of the thread budget's, and each
+//! publish advances every shard's version cell before composing the
+//! board-visible version. The coordinator is unchanged — same board,
+//! same channel, same loop — because sharding is a server-internal
+//! layout, pinned bit-identical by `tests/test_sharded_ps.rs`.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -191,6 +199,22 @@ mod tests {
         let ds = synthetic::realsim_like(300, 34);
         let mut cfg = small_cfg(3, 15);
         cfg.build_threads = 2;
+        let rep = train_async(&cfg, &ds, None).unwrap();
+        assert_eq!(rep.trees_accepted, 15);
+        let first = rep.curve.points.first().unwrap().train_loss;
+        let last = rep.curve.points.last().unwrap().train_loss;
+        assert!(last < first, "loss did not descend: {first} -> {last}");
+    }
+
+    #[test]
+    fn async_with_sharded_ps_completes_and_descends() {
+        // ps_shards=2 through the full async lifecycle: the sharded
+        // accept route and composed versions behind a live worker race
+        // (bit-identity is pinned separately in tests/test_sharded_ps.rs)
+        let ds = synthetic::realsim_like(1_200, 35);
+        let mut cfg = small_cfg(3, 15);
+        cfg.ps_shards = 2;
+        cfg.score_threads = 2;
         let rep = train_async(&cfg, &ds, None).unwrap();
         assert_eq!(rep.trees_accepted, 15);
         let first = rep.curve.points.first().unwrap().train_loss;

@@ -11,6 +11,10 @@
 //! [`crate::util::Executor`], built once here at startup (`cfg.pool`);
 //! tree builds run on a separate run-lifetime build executor
 //! (`cfg.build_threads`, default 1 = exactly the serial learner).
+//! `cfg.ps_shards > 1` likewise routes the apply half through the
+//! sharded PS (`ps/sharded.rs`) without touching this loop — the
+//! sharded carving is bit-identical, so even the serial baseline can
+//! run on a sharded server and reproduce itself exactly.
 
 use std::sync::Arc;
 
@@ -112,6 +116,22 @@ mod tests {
         assert!(last.train_loss < first.train_loss);
         assert!(last.test_loss.is_finite());
         assert!(rep.trees_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn sharded_server_reproduces_the_serial_baseline_exactly() {
+        // ps_shards=4 under the strictly serial loop: the sharded accept
+        // carving must leave the τ ≡ 0 baseline bit-identical
+        let ds = synthetic::realsim_like(2_600, 19);
+        let a = train_serial(&small_cfg(), &ds, None).unwrap();
+        let mut cfg = small_cfg();
+        cfg.ps_shards = 4;
+        cfg.score_threads = 2;
+        let b = train_serial(&cfg, &ds, None).unwrap();
+        let la: Vec<f64> = a.curve.points.iter().map(|p| p.train_loss).collect();
+        let lb: Vec<f64> = b.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_eq!(la, lb, "sharded serial curve diverged");
+        assert_eq!(a.forest.n_trees(), b.forest.n_trees());
     }
 
     #[test]

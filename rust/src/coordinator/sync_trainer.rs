@@ -17,7 +17,8 @@
 //! `pool=scoped` reproduces the historical spawn-per-histogram
 //! fork-join cost, `pool=persistent` (default) keeps the barriers but
 //! parks the threads between histograms — same trees bit for bit
-//! either way.
+//! either way. As in the other trainers, `cfg.ps_shards` only changes
+//! the server-internal accept layout (`ps/sharded.rs`), never the trees.
 
 use std::sync::Arc;
 

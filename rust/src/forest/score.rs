@@ -33,6 +33,13 @@
 //! Both engines produce **bit-identical** F vectors: the blocked pass
 //! performs exactly the same f32 operations in the same per-row order,
 //! only grouped by leaf instead of by row.
+//!
+//! The whole-block carving rule established here (`ROW_BLOCK`-aligned
+//! contiguous shards, per/rem spread) is load-bearing beyond this
+//! module: the fused accept pass (`ps/shard.rs`) and the sharded
+//! parameter server's row partition (`ps/sharded.rs::RowPartition`) cut
+//! at the same boundaries, which is why server shards can re-run this
+//! engine's kernels over their owned slices and stay bit-identical.
 
 use std::sync::Mutex;
 

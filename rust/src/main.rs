@@ -88,6 +88,10 @@ CONFIG OVERRIDES (key=value):
                                 from: lifetime-scoped parked worker pools vs
                                 per-section scoped spawns; persistent is
                                 default, bit-identical outputs)
+  ps_shards=N                  (server shards the PS state is row-partitioned
+                                across; shards exchange sparse histograms and
+                                publish composed versions; 1 is default,
+                                bit-identical outputs at every N)
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {

@@ -1,7 +1,17 @@
 //! PS wire types.
+//!
+//! Besides the snapshot/push pair the single-server path speaks, this
+//! module carries the shard ↔ shard histogram exchange of the sharded
+//! parameter server (`ps/sharded.rs`): a [`SparseBins`] payload encodes
+//! only the **touched** bins of a slot range — Vasiloudis et al.'s
+//! sparse-communication observation (PAPERS.md) — so shard traffic is
+//! O(nnz) instead of O(total_bins), and [`HistShardMsg`] wraps one such
+//! payload with its routing metadata.
 
+use std::ops::Range;
 use std::sync::Arc;
 
+use crate::tree::histogram::{Histogram, LeafStats};
 use crate::tree::Tree;
 
 /// What workers pull: one version of the stochastic target `L'_random`
@@ -54,6 +64,103 @@ pub struct TreePush {
     pub build_secs: f64,
 }
 
+/// Sparse encoding of one slot range of a flat [`Histogram`]: only the
+/// touched (nonzero) slots cross a shard boundary, as parallel arrays
+/// keyed by ascending global slot id.
+///
+/// The ascending order is load-bearing twice over: it makes the encoding
+/// a pure function of the histogram's *contents* (the builder's
+/// `touched` list is insertion-ordered, i.e. row-order dependent), and
+/// it lets [`SparseBins::apply_to`] replay deterministically. Combined
+/// with receivers merging messages in `from_shard` order, the assembled
+/// histogram is bit-identical for any row sharding of the same rows —
+/// each slot's f64 sum is grouped per source shard exactly as the dense
+/// whole-matrix build groups it per row run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseBins {
+    /// Touched global slot ids, strictly ascending.
+    pub slots: Vec<u32>,
+    /// Gradient sum per listed slot.
+    pub grad: Vec<f64>,
+    /// Hessian sum per listed slot.
+    pub hess: Vec<f64>,
+    /// Row count per listed slot.
+    pub count: Vec<u32>,
+}
+
+impl SparseBins {
+    /// Encode the touched slots of `h` that fall in `slot_range`
+    /// (a feature-partition's half-open global slot window), ascending.
+    pub fn from_histogram(h: &Histogram, slot_range: Range<usize>) -> SparseBins {
+        let mut slots: Vec<u32> = h
+            .touched
+            .iter()
+            .copied()
+            .filter(|&s| slot_range.contains(&(s as usize)))
+            .collect();
+        slots.sort_unstable();
+        let mut out = SparseBins {
+            grad: Vec::with_capacity(slots.len()),
+            hess: Vec::with_capacity(slots.len()),
+            count: Vec::with_capacity(slots.len()),
+            slots,
+        };
+        for &s in &out.slots {
+            let s = s as usize;
+            out.grad.push(h.grad[s]);
+            out.hess.push(h.hess[s]);
+            out.count.push(h.count[s]);
+        }
+        out
+    }
+
+    /// Accumulate this payload into a flat histogram (the receiving
+    /// shard's merge step), maintaining the untouched-slots-are-zero
+    /// invariant. Slot totals are NOT folded here — the sender ships
+    /// row totals once per message ([`HistShardMsg::totals`]), not per
+    /// destination, so a row split across feature shards counts once.
+    pub fn apply_to(&self, h: &mut Histogram) {
+        for (i, &slot) in self.slots.iter().enumerate() {
+            let s = slot as usize;
+            if h.count[s] == 0 && self.count[i] > 0 {
+                h.touched.push(slot);
+            }
+            h.grad[s] += self.grad[i];
+            h.hess[s] += self.hess[i];
+            h.count[s] += self.count[i];
+        }
+    }
+
+    /// Number of encoded slots.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Bytes this payload would occupy on a wire (4-byte slot id +
+    /// two f64 sums + 4-byte count per slot) — what the simulator's
+    /// shard-exchange cost model charges per message.
+    pub fn wire_bytes(&self) -> usize {
+        self.slots.len() * 24
+    }
+}
+
+/// One shard → shard histogram message of the sharded PS: the sender's
+/// sparse contribution to the receiver's owned slot window, plus the
+/// sender's row totals (shipped once per message so the receiver can
+/// reassemble `Histogram::totals` without double counting).
+#[derive(Debug, Clone)]
+pub struct HistShardMsg {
+    /// Sending shard id (receivers merge in ascending sender order —
+    /// part of the bit-identity argument, see [`SparseBins`]).
+    pub from_shard: usize,
+    /// Receiving shard id (owner of every slot in `bins`).
+    pub to_shard: usize,
+    /// The sparse payload, restricted to the receiver's slot window.
+    pub bins: SparseBins,
+    /// Totals over the sender's rows (grad/hess/count sums).
+    pub totals: LeafStats,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +184,73 @@ mod tests {
         assert!(Arc::ptr_eq(&s.grad, &t.grad));
         assert_eq!(t.version, 3);
         assert_eq!(t.n_sampled(), 1000);
+    }
+
+    /// A hand-built 8-slot histogram with deliberately out-of-order
+    /// `touched` (as `Histogram::build` produces: insertion order).
+    fn scattered_hist() -> Histogram {
+        let mut h = Histogram::zeros(8);
+        for (slot, g, hs, c) in [(5u32, 2.0f64, 1.0f64, 2u32), (1, -3.0, 0.5, 1), (6, 4.0, 2.0, 3)] {
+            let s = slot as usize;
+            h.grad[s] = g;
+            h.hess[s] = hs;
+            h.count[s] = c;
+            h.touched.push(slot);
+            h.totals.grad += g;
+            h.totals.hess += hs;
+            h.totals.count += c as u64;
+        }
+        h
+    }
+
+    #[test]
+    fn sparse_bins_encode_only_touched_slots_in_window_ascending() {
+        let h = scattered_hist();
+        let b = SparseBins::from_histogram(&h, 0..8);
+        assert_eq!(b.slots, vec![1, 5, 6], "ascending regardless of touch order");
+        assert_eq!(b.grad, vec![-3.0, 2.0, 4.0]);
+        assert_eq!(b.count, vec![1, 2, 3]);
+        assert_eq!(b.n_slots(), 3);
+        assert_eq!(b.wire_bytes(), 3 * 24);
+        // a narrower window drops slots outside it
+        let lo = SparseBins::from_histogram(&h, 0..4);
+        assert_eq!(lo.slots, vec![1]);
+        let hi = SparseBins::from_histogram(&h, 4..8);
+        assert_eq!(hi.slots, vec![5, 6]);
+        assert_eq!(SparseBins::from_histogram(&h, 2..5).n_slots(), 0);
+    }
+
+    #[test]
+    fn sparse_bins_apply_reassembles_the_source_bins() {
+        let h = scattered_hist();
+        // split the slot space into two windows, ship each, reassemble
+        let mut back = Histogram::zeros(8);
+        SparseBins::from_histogram(&h, 0..4).apply_to(&mut back);
+        SparseBins::from_histogram(&h, 4..8).apply_to(&mut back);
+        for s in 0..8 {
+            assert_eq!(back.grad[s], h.grad[s], "slot {s}");
+            assert_eq!(back.hess[s], h.hess[s], "slot {s}");
+            assert_eq!(back.count[s], h.count[s], "slot {s}");
+        }
+        let mut got: Vec<u32> = back.touched.clone();
+        let mut want: Vec<u32> = h.touched.clone();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "touched invariant after apply");
+    }
+
+    #[test]
+    fn hist_shard_msg_carries_totals_once() {
+        let h = scattered_hist();
+        let msg = HistShardMsg {
+            from_shard: 0,
+            to_shard: 1,
+            bins: SparseBins::from_histogram(&h, 4..8),
+            totals: h.totals,
+        };
+        // totals describe the sender's rows, not the shipped window:
+        // count 6 even though the window holds only slots 5 and 6
+        assert_eq!(msg.totals.count, 6);
+        assert_eq!(msg.bins.n_slots(), 2);
     }
 }

@@ -18,6 +18,15 @@
 //!   under `pool=persistent` (default) a server-lifetime
 //!   [`crate::util::ScorePool`] of parked workers, so per-tree dispatch
 //!   is a condvar wake rather than OS thread spawn/join (DESIGN.md §11).
+//! * [`sharded`] — the sharded parameter server (`ps_shards=N`): server
+//!   state row-partitioned across shards (each running its slice of the
+//!   accept pass through the same `shard` kernel), features partitioned
+//!   for histogram aggregation with only **touched** bins crossing shard
+//!   boundaries ([`messages::SparseBins`]), and published snapshots
+//!   composed from per-shard versions — no global lock, bit-identical to
+//!   the single-shard path for every shard count. Shard ↔ shard
+//!   communication sits behind [`sharded::ShardTransport`] so a
+//!   multi-process PS swaps the transport, not the logic.
 //! * [`worker`] — the worker loop: pull latest target, build a tree on the
 //!   sampled sub-dataset, push. Workers are mutually blind; only the
 //!   pull/build/push order *within* one worker is serialised, exactly the
@@ -38,9 +47,14 @@
 pub mod messages;
 pub mod server;
 pub mod shard;
+pub mod sharded;
 pub mod worker;
 
-pub use messages::{TargetSnapshot, TreePush};
+pub use messages::{HistShardMsg, SparseBins, TargetSnapshot, TreePush};
 pub use server::{Board, ServerCore};
 pub use shard::{fused_accept_pass, AcceptInputs, FusedResult, TargetMode};
+pub use sharded::{
+    aggregate_sharded, compose_version, sharded_accept_pass, FeaturePartition, LocalTransport,
+    RowPartition, ShardTransport, ShardVersions,
+};
 pub use worker::run_worker;

@@ -19,11 +19,18 @@ use crate::util::{Executor, Stopwatch};
 
 use super::messages::TargetSnapshot;
 use super::shard::{fused_accept_pass, AcceptInputs, TargetMode};
+use super::sharded::{sharded_accept_pass, RowPartition, ShardVersions};
 
 /// The shared pull/push surface between server and workers.
 ///
 /// Publishing is an Arc pointer swap under a short write lock; pulling is
 /// a pointer clone under a read lock — workers never copy target vectors.
+///
+/// Under the sharded PS (`ps_shards>1`) the version carried by the
+/// published snapshot is a *composition* of per-shard versions
+/// ([`super::sharded::compose_version`]): the server advances every
+/// shard's cell and publishes the composed minimum, so a board reader
+/// still sees one monotone version without any shard-spanning lock.
 #[derive(Debug)]
 pub struct Board {
     snapshot: RwLock<Arc<TargetSnapshot>>,
@@ -133,6 +140,13 @@ pub struct ServerCore {
     /// [`crate::util::ScorePool`] of parked workers (`pool=persistent`,
     /// default) or per-section scoped spawns (`pool=scoped`).
     exec: Executor,
+    /// Row ownership of the server shards (`cfg.ps_shards`, clamped to
+    /// the block count). One shard — the default — is the single-server
+    /// layout; more route the fused pass through `ps/sharded.rs`.
+    partition: RowPartition,
+    /// Per-shard published versions; the snapshot's version is their
+    /// composition (min), identical to the raw counter at one shard.
+    shard_versions: ShardVersions,
     /// The accepted forest F(x).
     pub forest: Forest,
     test: Option<TestSet>,
@@ -167,6 +181,8 @@ impl ServerCore {
             w: t.m.clone(),
             x: t.x.clone(),
         });
+        let partition = RowPartition::new(train.n_rows(), cfg.ps_shards);
+        let shard_versions = ShardVersions::new(partition.n_shards());
         let mut core = ServerCore {
             cfg: cfg.clone(),
             binned,
@@ -178,6 +194,8 @@ impl ServerCore {
             f,
             score_pool: ScratchPool::new(),
             exec: Executor::new(cfg.pool, cfg.score_threads),
+            partition,
+            shard_versions,
             forest,
             test,
             curve: LossCurve::default(),
@@ -256,26 +274,35 @@ impl ServerCore {
         // AOT engines are not shard-wise: keep scoring + sampling fused,
         // fall back to whole-vector engine calls for target and eval
         let native = self.engine.supports_ranges();
-        let t0 = std::time::Instant::now();
-        let fused = fused_accept_pass(
-            &AcceptInputs {
-                flat: Some(&flat),
-                binned: &self.binned,
-                v,
-                y: &self.train_y,
-                m: &self.train_m,
-                sampler: &self.sampler,
-                key: SampleKey {
-                    seed: self.sample_seed,
-                    version: new_version,
-                },
-                compute_target: native,
-                want_eval: eval_due && native,
+        let inp = AcceptInputs {
+            flat: Some(&flat),
+            binned: &self.binned,
+            v,
+            y: &self.train_y,
+            m: &self.train_m,
+            sampler: &self.sampler,
+            key: SampleKey {
+                seed: self.sample_seed,
+                version: new_version,
             },
-            &mut self.f,
-            &self.exec,
-            &mut self.score_pool,
-        );
+            compute_target: native,
+            want_eval: eval_due && native,
+        };
+        let t0 = std::time::Instant::now();
+        // one server shard: the thread-carved fused pass; more: the same
+        // kernel carved at the row partition's boundaries (bit-identical
+        // for every shard count — `ps/sharded.rs`)
+        let fused = if self.partition.n_shards() > 1 {
+            sharded_accept_pass(
+                &inp,
+                &mut self.f,
+                &self.partition,
+                &self.exec,
+                &mut self.score_pool,
+            )
+        } else {
+            fused_accept_pass(&inp, &mut self.f, &self.exec, &mut self.score_pool)
+        };
         self.timer.record("server/fused_pass", t0.elapsed());
         if let Some(test) = &mut self.test {
             let t0 = std::time::Instant::now();
@@ -312,7 +339,7 @@ impl ServerCore {
             (gh.grad, hess)
         };
         self.current = TargetSnapshot {
-            version: new_version,
+            version: self.advance_shards(new_version),
             grad: Arc::new(grad),
             hess: Arc::new(hess),
             rows: Arc::new(fused.rows),
@@ -429,12 +456,34 @@ impl ServerCore {
             GradMode::Gradient => pass.weights.clone(),
         };
         self.current = TargetSnapshot {
-            version,
+            version: self.advance_shards(version),
             grad: Arc::new(gh.grad),
             hess: Arc::new(hess),
             rows: Arc::new(pass.rows),
         };
         Ok(())
+    }
+
+    /// Advance every shard's version cell to `new_version` and return
+    /// the composed (min) version for the published snapshot. With one
+    /// shard this is the raw counter; with more, the composition step
+    /// itself is exercised on every publish — a shard left behind would
+    /// hold the published version back, which the staleness tests pin.
+    fn advance_shards(&self, new_version: u64) -> u64 {
+        for s in 0..self.shard_versions.n_shards() {
+            self.shard_versions.publish(s, new_version);
+        }
+        self.shard_versions.composed()
+    }
+
+    /// Row ownership of the server shards (test/diagnostic surface).
+    pub fn row_partition(&self) -> &RowPartition {
+        &self.partition
+    }
+
+    /// Per-shard published versions (test/diagnostic surface).
+    pub fn shard_versions(&self) -> &ShardVersions {
+        &self.shard_versions
     }
 
     /// Held-out metrics on the incrementally-maintained test margins.
@@ -739,6 +788,52 @@ mod tests {
                 assert_eq!(fused.staleness.rejected, serial.staleness.rejected);
             }
         }
+    }
+
+    #[test]
+    fn sharded_core_matches_single_shard_and_composes_versions() {
+        // the server-level route: ps_shards=3 must reproduce the default
+        // single-shard core bit for bit, and every publish must advance
+        // all shard cells so the composed version equals the counter
+        // (the exhaustive matrix lives in tests/test_sharded_ps.rs)
+        let ds = synthetic::realsim_like(2_600, 64);
+        let cfg = mini_cfg(6);
+        let mut single = core_on(&ds, &cfg);
+        let mut cfg_sharded = cfg.clone();
+        cfg_sharded.ps_shards = 3;
+        cfg_sharded.score_threads = 2;
+        cfg_sharded.pool = crate::util::PoolMode::Persistent;
+        let mut sharded = core_on(&ds, &cfg_sharded);
+        assert_eq!(sharded.row_partition().n_shards(), 3);
+        assert_eq!(single.row_partition().n_shards(), 1);
+        let mut rng = Rng::new(21);
+        for _ in 0..6 {
+            let s = single.snapshot();
+            let tree = crate::tree::build_tree(
+                &single.binned.clone(),
+                &s.rows,
+                &s.grad,
+                &s.hess,
+                &cfg.tree,
+                &mut rng,
+            );
+            single.apply_tree(tree.clone(), s.version).unwrap();
+            sharded
+                .apply_tree(tree, sharded.snapshot().version)
+                .unwrap();
+        }
+        assert_eq!(sharded.f, single.f, "sharded F diverged");
+        let (a, b) = (sharded.snapshot(), single.snapshot());
+        assert_eq!(a.version, b.version);
+        assert_eq!(*a.rows, *b.rows, "sampled rows diverged");
+        assert_eq!(*a.grad, *b.grad, "targets diverged");
+        assert_eq!(*a.hess, *b.hess, "hessians diverged");
+        // every cell advanced with the counter; composition is exact
+        let sv = sharded.shard_versions();
+        for shard in 0..sv.n_shards() {
+            assert_eq!(sv.shard_version(shard), 6);
+        }
+        assert_eq!(sv.composed(), 6);
     }
 
     #[test]

@@ -143,21 +143,30 @@ pub struct FusedResult {
 
 /// One shard's disjoint mutable views (rows `[start_row, start_row +
 /// f.len())`, whole [`ROW_BLOCK`]s except possibly the global tail).
-struct ShardTask<'a> {
-    start_row: usize,
-    f: &'a mut [f32],
-    weights: &'a mut [f32],
-    grad: &'a mut [f32],
-    hess: &'a mut [f32],
+///
+/// `pub(super)` so the sharded parameter server (`ps/sharded.rs`) can
+/// hand each *server shard's* owned slices through the identical kernel
+/// — sharing the struct is part of the bit-identity argument.
+pub(super) struct ShardTask<'a> {
+    pub(super) start_row: usize,
+    pub(super) f: &'a mut [f32],
+    pub(super) weights: &'a mut [f32],
+    pub(super) grad: &'a mut [f32],
+    pub(super) hess: &'a mut [f32],
     /// Per-block eval partials, one slot per block of this shard (empty
     /// when eval is off).
-    eval: &'a mut [(f64, f64, f64)],
+    pub(super) eval: &'a mut [(f64, f64, f64)],
 }
 
 /// The per-shard kernel: block loop running score → sample → target →
 /// eval on each [`ROW_BLOCK`]. Returns the shard's sampled rows
-/// (ascending global ids).
-fn run_shard(inp: &AcceptInputs<'_>, task: ShardTask<'_>, scratch: &mut ScoreScratch) -> Vec<u32> {
+/// (ascending global ids). `pub(super)`: `ps/sharded.rs` runs the same
+/// kernel over its own row partition.
+pub(super) fn run_shard(
+    inp: &AcceptInputs<'_>,
+    task: ShardTask<'_>,
+    scratch: &mut ScoreScratch,
+) -> Vec<u32> {
     let ShardTask {
         start_row,
         f,

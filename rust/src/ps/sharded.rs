@@ -1,0 +1,787 @@
+//! The sharded parameter server: row- and feature-partitioned server
+//! state with sparse histogram exchange (`ps_shards=N`).
+//!
+//! The single-`ServerCore` accept loop is a global serialization point:
+//! every accepted tree runs its fused pass, target production and
+//! publish on one thread, so accepted trees/sec plateaus once workers
+//! outnumber what one server can absorb (the paper's Eq. 13 bound, and
+//! the motivation Vasiloudis et al.'s *block-distributed GBT* gives for
+//! partitioning the server — see PAPERS.md). This module partitions the
+//! server state two ways:
+//!
+//! * **Rows** ([`RowPartition`]) — each of `ps_shards` server shards
+//!   owns a contiguous, whole-[`ROW_BLOCK`] slice of **F**, the sampled
+//!   weights and the grad/hess targets, and runs its slice of the fused
+//!   accept pass ([`sharded_accept_pass`]) through the *same* per-shard
+//!   kernel `ps/shard.rs` uses (`run_shard` is shared, not reimplemented).
+//! * **Features** ([`FeaturePartition`]) — for histogram aggregation each
+//!   shard owns a contiguous feature range, i.e. a contiguous global
+//!   *slot* window of the flat histogram layout. Shards exchange only
+//!   the **touched** bins of each window as [`SparseBins`] payloads
+//!   (Vasiloudis et al.'s sparse-communication argument: on sparse data
+//!   the touched fraction is small, so shard traffic is O(nnz), not
+//!   O(features × bins)).
+//!
+//! Published snapshots compose per-shard versions ([`ShardVersions`]):
+//! each shard bumps its own atomic version cell and the board-visible
+//! version is the minimum across cells ([`compose_version`]) — readers
+//! get a consistent versioned view without any global lock (the cells
+//! are independent atomics; `fetch_max` keeps every cell monotone under
+//! racing publishes).
+//!
+//! **Why `ps_shards` cannot change results, bit for bit:** the row
+//! carving uses the *same* whole-block per/rem rule as the fused pass's
+//! thread carving, and every per-row quantity (scored margin, keyed
+//! Bernoulli draw, grad/hess) is a pure function of the row — so a row's
+//! bits do not depend on which shard owns it. Eval partials are taken
+//! per *global* block and folded in block order; sampled rows are
+//! concatenated in ascending shard order. The only f64 caveat is the
+//! histogram exchange: a slot's sum is grouped per *sender* shard, so
+//! bin-for-bin equality with the dense whole-matrix build is exact when
+//! the per-row values have exact f64 sums (the gradient-mode ±1/weight
+//! targets used by the equivalence tests) and within rounding otherwise
+//! — identical to the grouping already introduced by the tree builders'
+//! fork-join histogram merge.
+//!
+//! **Transport seam:** shard ↔ shard messages go through
+//! [`ShardTransport`], a two-method trait ([`ShardTransport::send`] /
+//! [`ShardTransport::drain`]). [`LocalTransport`] is the in-process
+//! mailbox implementation (mutexed inboxes, cross-shard bytes counted);
+//! a multi-process PS replaces the transport, not the aggregation or
+//! accept logic. Dispatch inside this module rides the server's
+//! existing persistent [`Executor`] — shards may outnumber the thread
+//! budget, in which case active workers claim shard tasks off a shared
+//! counter instead of leaving shards unserved (`Executor::run` clamps
+//! its `active` argument to the budget).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::data::BinnedDataset;
+use crate::forest::score::{ScoreScratch, ScratchPool, ROW_BLOCK};
+use crate::loss::logistic;
+use crate::tree::histogram::Histogram;
+use crate::util::Executor;
+
+use super::messages::{HistShardMsg, SparseBins};
+use super::shard::{run_shard, AcceptInputs, FusedResult, ShardTask};
+
+/// Contiguous whole-[`ROW_BLOCK`] row ownership of the server shards.
+///
+/// The carving is the fused pass's per/rem rule: `n_blocks` blocks split
+/// as evenly as possible, the first `n_blocks % n_shards` shards taking
+/// one extra block, every boundary a block multiple (only the global
+/// tail block may be short). Boundaries are a pure function of
+/// `(n_rows, ps_shards)` — never of the data — which is the
+/// shard-invariance property the test layer pins.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowPartition {
+    /// `n_shards + 1` ascending row boundaries; `starts[0] == 0`,
+    /// `starts[n_shards] == n_rows`.
+    starts: Vec<usize>,
+}
+
+impl RowPartition {
+    /// Carve `n_rows` into at most `ps_shards` shards (clamped to the
+    /// block count so no shard is empty; `ps_shards=1` is one shard
+    /// owning everything — the single-server layout).
+    pub fn new(n_rows: usize, ps_shards: usize) -> RowPartition {
+        let n_blocks = n_rows.div_ceil(ROW_BLOCK).max(1);
+        let n_shards = ps_shards.clamp(1, n_blocks);
+        let per = n_blocks / n_shards;
+        let rem = n_blocks % n_shards;
+        let mut starts = Vec::with_capacity(n_shards + 1);
+        starts.push(0usize);
+        let mut row0 = 0usize;
+        for s in 0..n_shards {
+            let blocks = per + usize::from(s < rem);
+            row0 += (blocks * ROW_BLOCK).min(n_rows - row0);
+            starts.push(row0);
+        }
+        debug_assert_eq!(row0, n_rows);
+        RowPartition { starts }
+    }
+
+    /// Number of shards actually carved (≤ the requested count).
+    pub fn n_shards(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Total rows partitioned.
+    pub fn n_rows(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// Shard `s`'s half-open row range.
+    pub fn range(&self, shard: usize) -> Range<usize> {
+        self.starts[shard]..self.starts[shard + 1]
+    }
+
+    /// Which shard owns global row `row`.
+    pub fn shard_of_row(&self, row: usize) -> usize {
+        debug_assert!(row < self.n_rows());
+        self.starts.partition_point(|&b| b <= row) - 1
+    }
+
+    /// The raw boundary list (for the shard-invariance tests).
+    pub fn boundaries(&self) -> &[usize] {
+        &self.starts
+    }
+}
+
+/// Contiguous feature ownership of the server shards for histogram
+/// aggregation, aligned to the flat histogram layout: shard `s` owns the
+/// features of `feature_range(s)` and therefore the global slot window
+/// `slot_range(s)` (feature boundaries map to slot boundaries through
+/// `BinnedDataset::offsets`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FeaturePartition {
+    /// `n_shards + 1` ascending feature boundaries.
+    feat_starts: Vec<usize>,
+    /// The same boundaries as global slot ids (`offsets[feat_starts]`).
+    slot_starts: Vec<usize>,
+}
+
+impl FeaturePartition {
+    /// Carve the dataset's features into at most `ps_shards` contiguous
+    /// ranges (same per/rem rule as [`RowPartition`], clamped so no
+    /// shard is featureless).
+    pub fn new(binned: &BinnedDataset, ps_shards: usize) -> FeaturePartition {
+        let n_features = binned.n_features;
+        let n_shards = ps_shards.clamp(1, n_features.max(1));
+        let per = n_features / n_shards;
+        let rem = n_features % n_shards;
+        let mut feat_starts = Vec::with_capacity(n_shards + 1);
+        feat_starts.push(0usize);
+        let mut f0 = 0usize;
+        for s in 0..n_shards {
+            f0 += per + usize::from(s < rem);
+            feat_starts.push(f0);
+        }
+        let slot_starts = feat_starts.iter().map(|&f| binned.offsets[f]).collect();
+        FeaturePartition {
+            feat_starts,
+            slot_starts,
+        }
+    }
+
+    /// Number of shards actually carved (≤ the requested count).
+    pub fn n_shards(&self) -> usize {
+        self.feat_starts.len() - 1
+    }
+
+    /// Shard `s`'s half-open feature range.
+    pub fn feature_range(&self, shard: usize) -> Range<usize> {
+        self.feat_starts[shard]..self.feat_starts[shard + 1]
+    }
+
+    /// Shard `s`'s half-open global slot window.
+    pub fn slot_range(&self, shard: usize) -> Range<usize> {
+        self.slot_starts[shard]..self.slot_starts[shard + 1]
+    }
+
+    /// Which shard owns global slot `slot`.
+    pub fn owner_of_slot(&self, slot: usize) -> usize {
+        debug_assert!(slot < *self.slot_starts.last().unwrap());
+        self.slot_starts.partition_point(|&b| b <= slot) - 1
+    }
+}
+
+/// Compose per-shard versions into the board-visible version: the
+/// minimum — a snapshot is "at version v" only once *every* shard has
+/// published v, so a reader composing the cells can never observe a
+/// version no shard state backs yet. Empty input composes to 0.
+pub fn compose_version(versions: &[u64]) -> u64 {
+    versions.iter().copied().min().unwrap_or(0)
+}
+
+/// Per-shard version cells, each advanced independently (no global
+/// lock): a shard publishes with `fetch_max`, so cells are monotone even
+/// under racing publishes, and the composed view ([`compose_version`])
+/// is monotone because a min of monotone sequences is monotone.
+#[derive(Debug)]
+pub struct ShardVersions {
+    versions: Vec<AtomicU64>,
+}
+
+impl ShardVersions {
+    /// `n_shards` cells, all at version 0 (at least one).
+    pub fn new(n_shards: usize) -> ShardVersions {
+        ShardVersions {
+            versions: (0..n_shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of cells.
+    pub fn n_shards(&self) -> usize {
+        self.versions.len()
+    }
+
+    /// Advance shard `s` to at least `version` (monotone: an older
+    /// publish racing a newer one can never move a cell backwards).
+    pub fn publish(&self, shard: usize, version: u64) {
+        self.versions[shard].fetch_max(version, Ordering::AcqRel);
+    }
+
+    /// Shard `s`'s current version.
+    pub fn shard_version(&self, shard: usize) -> u64 {
+        self.versions[shard].load(Ordering::Acquire)
+    }
+
+    /// The composed (board-visible) version: min across cells.
+    pub fn composed(&self) -> u64 {
+        self.versions
+            .iter()
+            .map(|v| v.load(Ordering::Acquire))
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// The shard ↔ shard message fabric — the seam a multi-process PS
+/// replaces. Implementations must deliver every sent message to exactly
+/// one subsequent `drain(msg.to_shard)`; ordering across senders is NOT
+/// required (receivers sort by sender, see [`aggregate_sharded`]).
+pub trait ShardTransport: Sync {
+    /// Enqueue one message for its destination shard.
+    fn send(&self, msg: HistShardMsg);
+    /// Take everything queued for `shard` (empties the inbox).
+    fn drain(&self, shard: usize) -> Vec<HistShardMsg>;
+}
+
+/// In-process [`ShardTransport`]: one mutexed inbox per shard. Counts
+/// the wire bytes of cross-shard payloads (self-sends are free — a real
+/// deployment keeps them in memory) so benches and the simulator's cost
+/// model can be validated against observed traffic.
+#[derive(Debug)]
+pub struct LocalTransport {
+    inboxes: Vec<Mutex<Vec<HistShardMsg>>>,
+    bytes: AtomicU64,
+}
+
+impl LocalTransport {
+    /// A transport connecting `n_shards` shards (at least one).
+    pub fn new(n_shards: usize) -> LocalTransport {
+        LocalTransport {
+            inboxes: (0..n_shards.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Total cross-shard payload bytes sent so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+impl ShardTransport for LocalTransport {
+    fn send(&self, msg: HistShardMsg) {
+        if msg.from_shard != msg.to_shard {
+            self.bytes
+                .fetch_add(msg.bins.wire_bytes() as u64, Ordering::Relaxed);
+        }
+        self.inboxes[msg.to_shard].lock().unwrap().push(msg);
+    }
+
+    fn drain(&self, shard: usize) -> Vec<HistShardMsg> {
+        std::mem::take(&mut *self.inboxes[shard].lock().unwrap())
+    }
+}
+
+/// Sharded histogram aggregation: each row shard builds a local
+/// histogram over its slice of `rows`, encodes the touched bins of every
+/// destination's slot window as [`SparseBins`], and ships them through
+/// the transport; each feature shard then merges what it received in
+/// ascending sender order. Returns the assembled whole-matrix histogram
+/// (slot windows are disjoint, so assembly is just every destination's
+/// merge landing in one buffer; row totals fold once per sender).
+///
+/// Determinism: source builds run in parallel on `exec` (workers claim
+/// sources off a shared counter), but sends happen afterwards in
+/// ascending source order and receivers sort by `from_shard` before
+/// merging — the result is a pure function of `(rows, partitions)`,
+/// never of scheduling. Equals the dense `Histogram::build` over all of
+/// `rows` bin-for-bin: exactly when per-slot f64 sums are exact (integer
+/// -valued targets), within grouping rounding otherwise (module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate_sharded(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    grad: &[f32],
+    hess: &[f32],
+    rowp: &RowPartition,
+    featp: &FeaturePartition,
+    transport: &dyn ShardTransport,
+    exec: &Executor,
+) -> Histogram {
+    let n_src = rowp.n_shards();
+    let n_dst = featp.n_shards();
+    // `rows` is ascending, so each source's slice is one contiguous run
+    let mut cuts = Vec::with_capacity(n_src + 1);
+    cuts.push(0usize);
+    for src in 0..n_src {
+        let end = rowp.range(src).end;
+        let prev = *cuts.last().unwrap();
+        cuts.push(prev + rows[prev..].partition_point(|&r| (r as usize) < end));
+    }
+    // source phase (parallel, claimed off a counter): build the local
+    // histogram, encode one payload per destination window — empty
+    // payloads still ship, carrying the source's row totals
+    let next = AtomicUsize::new(0);
+    let batches: Vec<Mutex<Vec<HistShardMsg>>> =
+        (0..n_src).map(|_| Mutex::new(Vec::new())).collect();
+    let active = exec.threads().min(n_src).max(1);
+    exec.run(active, &|_tid| {
+        let mut local = Histogram::zeros(binned.total_bins());
+        loop {
+            let src = next.fetch_add(1, Ordering::Relaxed);
+            if src >= n_src {
+                break;
+            }
+            local.build(binned, &rows[cuts[src]..cuts[src + 1]], grad, hess);
+            let msgs: Vec<HistShardMsg> = (0..n_dst)
+                .map(|dst| HistShardMsg {
+                    from_shard: src,
+                    to_shard: dst,
+                    bins: SparseBins::from_histogram(&local, featp.slot_range(dst)),
+                    totals: local.totals,
+                })
+                .collect();
+            *batches[src].lock().unwrap() = msgs;
+        }
+    });
+    for batch in batches {
+        for msg in batch.into_inner().unwrap() {
+            transport.send(msg);
+        }
+    }
+    // destination phase: drain, order by sender, merge into the owned
+    // window; totals fold once per sender (off destination 0's inbox,
+    // which every sender addresses)
+    let mut out = Histogram::zeros(binned.total_bins());
+    for dst in 0..n_dst {
+        let mut msgs = transport.drain(dst);
+        msgs.sort_by_key(|m| m.from_shard);
+        for m in &msgs {
+            m.bins.apply_to(&mut out);
+            if dst == 0 {
+                out.totals.grad += m.totals.grad;
+                out.totals.hess += m.totals.hess;
+                out.totals.count += m.totals.count;
+            }
+        }
+    }
+    out
+}
+
+/// The sharded accept pass: [`super::shard::fused_accept_pass`]'s block
+/// kernel run over a fixed [`RowPartition`] instead of a thread-count
+/// carving — each server shard's owned slices go through the *same*
+/// `run_shard` kernel, so the result is bit-identical to the fused pass
+/// (and hence to the serial reference) for every shard count, executor
+/// mode and thread budget. When shards outnumber `exec`'s threads,
+/// active workers claim shard tasks off a shared counter
+/// (`Executor::run` clamps its width, so naive one-task-per-index
+/// dispatch would strand the excess shards).
+pub fn sharded_accept_pass(
+    inp: &AcceptInputs<'_>,
+    f: &mut [f32],
+    part: &RowPartition,
+    exec: &Executor,
+    pool: &mut ScratchPool,
+) -> FusedResult {
+    let n = f.len();
+    assert_eq!(part.n_rows(), n, "partition does not cover F");
+    assert_eq!(inp.y.len(), n);
+    assert_eq!(inp.m.len(), n);
+    assert_eq!(inp.sampler.n_rows(), n);
+    let n_blocks = n.div_ceil(ROW_BLOCK).max(1);
+    let n_shards = part.n_shards();
+    let mut weights = vec![0.0f32; n];
+    let target_len = if inp.compute_target { n } else { 0 };
+    let mut grad = vec![0.0f32; target_len];
+    let mut hess = vec![0.0f32; target_len];
+    let mut eval_blocks =
+        vec![(0.0f64, 0.0f64, 0.0f64); if inp.want_eval { n_blocks } else { 0 }];
+
+    let rows = if n_shards == 1 {
+        let mut scratch = pool.take();
+        let rows = run_shard(
+            inp,
+            ShardTask {
+                start_row: 0,
+                f,
+                weights: &mut weights,
+                grad: &mut grad,
+                hess: &mut hess,
+                eval: &mut eval_blocks,
+            },
+            &mut scratch,
+        );
+        pool.give(scratch);
+        rows
+    } else {
+        // carve disjoint &mut views at the partition's own boundaries
+        // (whole blocks by construction, so per-shard eval slot counts
+        // sum to the global block count)
+        let mut tasks = Vec::with_capacity(n_shards);
+        let mut f_rest = f;
+        let mut w_rest = weights.as_mut_slice();
+        let mut g_rest = grad.as_mut_slice();
+        let mut h_rest = hess.as_mut_slice();
+        let mut e_rest = eval_blocks.as_mut_slice();
+        for s in 0..n_shards {
+            let range = part.range(s);
+            let len = range.len();
+            let blocks = len.div_ceil(ROW_BLOCK);
+            let (f_s, fr) = f_rest.split_at_mut(len);
+            f_rest = fr;
+            let (w_s, wr) = w_rest.split_at_mut(len);
+            w_rest = wr;
+            let target_len = if inp.compute_target { len } else { 0 };
+            let (g_s, gr) = g_rest.split_at_mut(target_len);
+            g_rest = gr;
+            let (h_s, hr) = h_rest.split_at_mut(target_len);
+            h_rest = hr;
+            let (e_s, er) = e_rest.split_at_mut(if inp.want_eval { blocks } else { 0 });
+            e_rest = er;
+            tasks.push(ShardTask {
+                start_row: range.start,
+                f: f_s,
+                weights: w_s,
+                grad: g_s,
+                hess: h_s,
+                eval: e_s,
+            });
+        }
+        let slots: Vec<Mutex<(Option<ShardTask<'_>>, ScoreScratch, Vec<u32>)>> = tasks
+            .into_iter()
+            .map(|task| Mutex::new((Some(task), pool.take(), Vec::new())))
+            .collect();
+        let next = AtomicUsize::new(0);
+        let active = exec.threads().min(n_shards).max(1);
+        exec.run(active, &|_tid| loop {
+            let s = next.fetch_add(1, Ordering::Relaxed);
+            if s >= n_shards {
+                break;
+            }
+            let mut slot = slots[s].lock().unwrap();
+            let (task, scratch, out) = &mut *slot;
+            let task = task.take().expect("shard task dispatched twice");
+            *out = run_shard(inp, task, scratch);
+        });
+        let parts: Vec<(ScoreScratch, Vec<u32>)> = slots
+            .into_iter()
+            .map(|slot| {
+                let (_, scratch, shard_rows) = slot.into_inner().unwrap();
+                (scratch, shard_rows)
+            })
+            .collect();
+        let mut rows = Vec::with_capacity(parts.iter().map(|(_, r)| r.len()).sum());
+        for (scratch, shard_rows) in parts {
+            pool.give(scratch);
+            rows.extend_from_slice(&shard_rows);
+        }
+        rows
+    };
+
+    let eval = inp
+        .want_eval
+        .then(|| logistic::fold_eval_blocks(&eval_blocks));
+    FusedResult {
+        weights,
+        grad,
+        hess,
+        rows,
+        eval,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::shard::fused_accept_pass;
+    use super::*;
+    use crate::data::{synthetic, Dataset};
+    use crate::sampling::{BernoulliSampler, SampleKey};
+    use crate::tree::{build_tree, FlatTree, TreeParams};
+    use crate::util::{PoolMode, Rng};
+    use std::sync::Arc;
+
+    #[test]
+    fn row_partition_carves_whole_blocks_and_covers() {
+        for (n_rows, shards) in [
+            (10usize, 1usize),
+            (10, 4),      // fewer blocks than shards: clamps to 1
+            (5_000, 3),   // 10 blocks over 3 shards: 4/3/3
+            (4_096, 8),   // exactly 8 blocks
+            (4_100, 8),   // 9 blocks over 8 shards, short tail
+            (100_000, 7),
+        ] {
+            let p = RowPartition::new(n_rows, shards);
+            assert!(p.n_shards() >= 1 && p.n_shards() <= shards);
+            assert_eq!(p.n_rows(), n_rows);
+            let b = p.boundaries();
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), n_rows);
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "empty shard in {b:?}");
+            }
+            // interior boundaries are block multiples (only the global
+            // tail may be ragged)
+            for &x in &b[1..p.n_shards()] {
+                assert_eq!(x % ROW_BLOCK, 0, "boundary {x} not block-aligned");
+            }
+            // shard_of_row agrees with range() on every boundary's sides
+            for s in 0..p.n_shards() {
+                let r = p.range(s);
+                assert_eq!(p.shard_of_row(r.start), s);
+                assert_eq!(p.shard_of_row(r.end - 1), s);
+            }
+        }
+        // blocks spread per/rem: first shards get the extra block
+        let p = RowPartition::new(5_000, 3); // 10 blocks: 4, 3, 3
+        assert_eq!(p.boundaries(), &[0, 4 * ROW_BLOCK, 7 * ROW_BLOCK, 5_000]);
+    }
+
+    #[test]
+    fn row_partition_depends_only_on_count_and_shards() {
+        // shard-invariance: boundaries are a pure function of the pair
+        let a = RowPartition::new(9_999, 4);
+        let b = RowPartition::new(9_999, 4);
+        assert_eq!(a, b);
+        assert_eq!(RowPartition::new(9_999, 1).boundaries(), &[0, 9_999]);
+    }
+
+    #[test]
+    fn feature_partition_aligns_slot_windows_to_offsets() {
+        let ds = synthetic::realsim_like(400, 11);
+        let binned = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        for shards in [1usize, 2, 3, 64] {
+            let p = FeaturePartition::new(&binned, shards);
+            assert!(p.n_shards() >= 1 && p.n_shards() <= shards.max(1));
+            // feature ranges tile [0, n_features); slot ranges tile
+            // [0, total_bins) and land on feature boundaries
+            let mut f_next = 0usize;
+            let mut s_next = 0usize;
+            for s in 0..p.n_shards() {
+                let fr = p.feature_range(s);
+                let sr = p.slot_range(s);
+                assert_eq!(fr.start, f_next);
+                assert_eq!(sr.start, s_next);
+                assert_eq!(sr.start, binned.offsets[fr.start]);
+                assert_eq!(sr.end, binned.offsets[fr.end]);
+                for slot in sr.clone() {
+                    assert_eq!(p.owner_of_slot(slot), s);
+                }
+                f_next = fr.end;
+                s_next = sr.end;
+            }
+            assert_eq!(f_next, binned.n_features);
+            assert_eq!(s_next, binned.total_bins());
+        }
+    }
+
+    #[test]
+    fn shard_versions_compose_to_the_minimum_and_stay_monotone() {
+        assert_eq!(compose_version(&[]), 0);
+        assert_eq!(compose_version(&[7]), 7);
+        assert_eq!(compose_version(&[5, 3, 9]), 3);
+        let v = ShardVersions::new(3);
+        assert_eq!(v.composed(), 0);
+        v.publish(0, 4);
+        v.publish(1, 4);
+        assert_eq!(v.composed(), 0, "shard 2 has not published yet");
+        v.publish(2, 4);
+        assert_eq!(v.composed(), 4);
+        // a stale publish cannot move a cell backwards
+        v.publish(1, 2);
+        assert_eq!(v.shard_version(1), 4);
+        assert_eq!(v.composed(), 4);
+    }
+
+    #[test]
+    fn shard_versions_monotone_under_concurrent_publishes() {
+        let v = Arc::new(ShardVersions::new(4));
+        std::thread::scope(|s| {
+            for shard in 0..4usize {
+                let v = v.clone();
+                s.spawn(move || {
+                    for ver in 1..=500u64 {
+                        v.publish(shard, ver);
+                    }
+                });
+            }
+            // a racing reader must see a non-decreasing composed view
+            let v = v.clone();
+            s.spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..2_000 {
+                    let c = v.composed();
+                    assert!(c >= last, "composed went backwards: {c} < {last}");
+                    last = c;
+                }
+            });
+        });
+        assert_eq!(v.composed(), 500);
+    }
+
+    #[test]
+    fn local_transport_counts_only_cross_shard_bytes() {
+        let t = LocalTransport::new(2);
+        let mut h = Histogram::zeros(4);
+        h.grad[1] = 1.0;
+        h.hess[1] = 1.0;
+        h.count[1] = 1;
+        h.touched.push(1);
+        let bins = SparseBins::from_histogram(&h, 0..4);
+        t.send(HistShardMsg {
+            from_shard: 0,
+            to_shard: 0,
+            bins: bins.clone(),
+            totals: h.totals,
+        });
+        assert_eq!(t.bytes_sent(), 0, "self-sends are free");
+        t.send(HistShardMsg {
+            from_shard: 0,
+            to_shard: 1,
+            bins: bins.clone(),
+            totals: h.totals,
+        });
+        assert_eq!(t.bytes_sent(), bins.wire_bytes() as u64);
+        assert_eq!(t.drain(0).len(), 1);
+        assert_eq!(t.drain(1).len(), 1);
+        assert!(t.drain(1).is_empty(), "drain must empty the inbox");
+    }
+
+    #[test]
+    fn sharded_aggregation_equals_dense_build_bin_for_bin() {
+        // integer-valued targets (gradient mode's ±1 / unit weights) so
+        // every per-slot f64 sum is exact and equality is bitwise
+        let ds = synthetic::realsim_like(3_000, 31);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let n = ds.n_rows();
+        let grad: Vec<f32> = (0..n).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let hess = vec![1.0f32; n];
+        let rows: Vec<u32> = (0..n as u32).filter(|r| r % 3 != 0).collect();
+        let mut dense = Histogram::zeros(binned.total_bins());
+        dense.build(&binned, &rows, &grad, &hess);
+        let exec = Executor::scoped(3);
+        for row_shards in [1usize, 2, 4] {
+            for feat_shards in [1usize, 2, 3] {
+                let rowp = RowPartition::new(n, row_shards);
+                let featp = FeaturePartition::new(&binned, feat_shards);
+                let transport = LocalTransport::new(featp.n_shards());
+                let got = aggregate_sharded(
+                    &binned, &rows, &grad, &hess, &rowp, &featp, &transport, &exec,
+                );
+                let at = format!("{row_shards}x{feat_shards} shards");
+                for slot in 0..binned.total_bins() {
+                    assert_eq!(got.grad[slot], dense.grad[slot], "grad slot {slot} ({at})");
+                    assert_eq!(got.hess[slot], dense.hess[slot], "hess slot {slot} ({at})");
+                    assert_eq!(got.count[slot], dense.count[slot], "count slot {slot} ({at})");
+                }
+                assert_eq!(got.totals, dense.totals, "totals ({at})");
+                let mut tg: Vec<u32> = got.touched.clone();
+                let mut td: Vec<u32> = dense.touched.clone();
+                tg.sort_unstable();
+                td.sort_unstable();
+                assert_eq!(tg, td, "touched sets differ ({at})");
+                // sparse exchange really is sparse: cross-shard traffic
+                // is bounded by the touched slots, not the bin space
+                if row_shards > 1 && feat_shards > 1 {
+                    assert!(
+                        (transport.bytes_sent() as usize) <= dense.touched.len() * 24 * row_shards,
+                        "traffic exceeds touched-bin budget ({at})"
+                    );
+                }
+            }
+        }
+    }
+
+    fn accept_setup(n: usize, seed: u64) -> (Dataset, Arc<BinnedDataset>, FlatTree) {
+        let ds = synthetic::realsim_like(n, seed);
+        let b = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let w = vec![1.0f32; n];
+        let f0 = vec![0.0f32; n];
+        let gh = logistic::grad_hess_loss(&f0, &ds.y, &w);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let params = TreeParams {
+            max_leaves: 12,
+            feature_rate: 0.9,
+            ..Default::default()
+        };
+        let tree = build_tree(&b, &rows, &gh.grad, &gh.hess, &params, &mut Rng::new(seed));
+        (ds, b, FlatTree::from_tree(&tree))
+    }
+
+    #[test]
+    fn sharded_accept_pass_matches_fused_for_every_partition() {
+        // the tentpole invariant: any RowPartition (including more
+        // shards than executor threads — the claim loop) reproduces the
+        // single-shard fused pass bit for bit
+        let (ds, b, flat) = accept_setup(4_600, 41);
+        let n = ds.n_rows();
+        let sampler = BernoulliSampler::uniform(&ds, 0.6);
+        let key = SampleKey { seed: 17, version: 5 };
+        let inp = AcceptInputs {
+            flat: Some(&flat),
+            binned: &b,
+            v: 0.2,
+            y: &ds.y,
+            m: &ds.m,
+            sampler: &sampler,
+            key,
+            compute_target: true,
+            want_eval: true,
+        };
+        let base = vec![0.1f32; n];
+        let mut pool = ScratchPool::new();
+        let mut f_ref = base.clone();
+        let reference = fused_accept_pass(&inp, &mut f_ref, &Executor::scoped(1), &mut pool);
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [1usize, 2, 8] {
+                for shards in [1usize, 2, 4, 8] {
+                    let part = RowPartition::new(n, shards);
+                    let exec = Executor::new(mode, threads);
+                    let mut f = base.clone();
+                    let out = sharded_accept_pass(&inp, &mut f, &part, &exec, &mut pool);
+                    let at = format!("{shards} shards on {threads} threads ({mode:?})");
+                    assert_eq!(f, f_ref, "F diverged at {at}");
+                    assert_eq!(out.weights, reference.weights, "weights diverged at {at}");
+                    assert_eq!(out.rows, reference.rows, "rows diverged at {at}");
+                    assert_eq!(out.grad, reference.grad, "grad diverged at {at}");
+                    assert_eq!(out.hess, reference.hess, "hess diverged at {at}");
+                    assert_eq!(out.eval, reference.eval, "eval diverged at {at}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_pass_scratch_returns_to_the_pool() {
+        let (ds, b, flat) = accept_setup(2_600, 43);
+        let sampler = BernoulliSampler::uniform(&ds, 0.5);
+        let part = RowPartition::new(ds.n_rows(), 4);
+        let exec = Executor::new(PoolMode::Persistent, 2);
+        let mut pool = ScratchPool::new();
+        let mut f = vec![0.0f32; ds.n_rows()];
+        for v in 0..4u64 {
+            let inp = AcceptInputs {
+                flat: Some(&flat),
+                binned: &b,
+                v: 0.2,
+                y: &ds.y,
+                m: &ds.m,
+                sampler: &sampler,
+                key: SampleKey { seed: 2, version: v },
+                compute_target: true,
+                want_eval: v % 2 == 0,
+            };
+            sharded_accept_pass(&inp, &mut f, &part, &exec, &mut pool);
+        }
+        // one scratch per shard slot at most, all back in the pool
+        assert!(pool.allocated() <= part.n_shards(), "allocated {}", pool.allocated());
+        assert_eq!(pool.idle(), pool.allocated(), "scratch leaked");
+    }
+}

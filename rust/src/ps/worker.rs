@@ -21,6 +21,12 @@
 //! parked threads serves every fork-join cycle of every tree the worker
 //! ever builds — the worker-side removal of the per-histogram spawn/join
 //! cost the paper's §II attributes to fork-join GBDT (DESIGN.md §12).
+//!
+//! Workers are oblivious to `ps_shards`: the sharded PS
+//! (`ps/sharded.rs`) changes how the *server* produces a snapshot (its
+//! version becomes a composition of per-shard versions), but the board
+//! still hands workers one immutable `TargetSnapshot` — the pull → build
+//! → push loop is byte-for-byte the same at every shard count.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;

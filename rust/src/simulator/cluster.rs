@@ -80,6 +80,12 @@ pub struct PhaseTimes {
     pub target_bytes: f64,
     /// Per-feature histogram block size (bytes) — sync allgather payloads.
     pub hist_bytes: f64,
+    /// Fraction of histogram bins actually touched by a sampled tree's
+    /// rows — what a *sparse* shard exchange ships instead of the dense
+    /// `hist_bytes` (Vasiloudis et al.'s sparse-communication argument;
+    /// the sharded-PS cost model multiplies `hist_bytes` by this).
+    /// 1.0 models a dense exchange.
+    pub sparse_touch_frac: f64,
 }
 
 impl PhaseTimes {
@@ -94,6 +100,9 @@ impl PhaseTimes {
             tree_bytes: 16e3,
             target_bytes: 600e3,
             hist_bytes: 2.5e6,
+            // real-sim sparsity: ~10% of (feature, bin) slots touched per
+            // sampled tree (matches the testkit fixtures' touch rates)
+            sparse_touch_frac: 0.10,
         }
     }
 
@@ -108,6 +117,8 @@ impl PhaseTimes {
             tree_bytes: 30e3,
             target_bytes: 130e3,
             hist_bytes: 12e6,
+            // E2006's ~4M-feature space is touched even more thinly
+            sparse_touch_frac: 0.05,
         }
     }
 
@@ -132,6 +143,8 @@ impl PhaseTimes {
             target_bytes: (n_rows * 8) as f64,
             // one histogram: bins * features * (g,h,c) = 20 bytes
             hist_bytes: (n_features * max_bins * 20) as f64,
+            // conservative single-node default; workload presets override
+            sparse_touch_frac: 0.15,
         }
     }
 }

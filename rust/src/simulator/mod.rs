@@ -17,6 +17,13 @@
 //! * **DimBoost** — PS-based fork-join: histogram allgather through a
 //!   central server whose cost grows linearly in worker count.
 //!
+//! A fourth model, [`simulate_sharded_ps`], reprices the asynch-SGBDT
+//! server as `ps_shards` row/feature shards (`ps/sharded.rs`): apply and
+//! target production parallelise across shards while a sparse histogram
+//! exchange (`PhaseTimes::sparse_touch_frac` of the dense payload) joins
+//! the critical path — the cost model behind the sharded PS's
+//! staleness-distribution tests.
+//!
 //! Phase-time inputs are *calibrated from real single-node measurements*
 //! (`PhaseTimes::calibrate`) taken from this crate's own trainers, so the
 //! simulated shapes inherit the real compute/communication ratios.
@@ -26,5 +33,8 @@ pub mod models;
 pub mod speedup;
 
 pub use cluster::{ClusterSpec, NetworkSpec, PhaseTimes};
-pub use models::{simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp, SimResult};
+pub use models::{
+    simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp, simulate_sharded_ps,
+    simulate_sharded_ps_trace, SimResult,
+};
 pub use speedup::{eq13_upper_bound, speedup_sweep, SpeedupRow, SystemKind};

@@ -33,11 +33,55 @@ impl SimResult {
 /// Workers cycle independently: pull target (net) → build (jittered) →
 /// push tree (net). The server is a FCFS queue applying pushes
 /// (`apply + target` per acceptance). No barrier anywhere.
+///
+/// Equivalent to [`simulate_sharded_ps`] at `ps_shards=1` — same RNG
+/// stream, same event order, same staleness trace, same wall clock.
 pub fn simulate_async_ps(
     spec: &ClusterSpec,
     times: &PhaseTimes,
     n_trees: usize,
 ) -> SimResult {
+    simulate_sharded_ps_trace(spec, times, n_trees, 1).0
+}
+
+/// Per-acceptance server service time of a `ps_shards`-way sharded PS.
+///
+/// Apply + produce-target parallelise across the row shards (each owns
+/// `1/S` of the rows); what sharding *adds* is the histogram exchange on
+/// the critical path: `2(S-1)` messages per acceptance (scatter one
+/// window per peer, gather one per peer), each carrying only the
+/// **touched** fraction of its `1/S` slot window
+/// (`hist_bytes · sparse_touch_frac / S` — Vasiloudis et al.'s sparse
+/// communication). A dense exchange (`sparse_touch_frac = 1`) at high
+/// shard counts costs *more* than not sharding at all, which is exactly
+/// the regime the sparse encoding exists to avoid.
+fn shard_service(spec: &ClusterSpec, times: &PhaseTimes, ps_shards: usize) -> f64 {
+    let single = times.apply_secs + times.target_secs;
+    if ps_shards <= 1 {
+        return single;
+    }
+    let s = ps_shards as f64;
+    let exchange_msg = times.hist_bytes * times.sparse_touch_frac / s;
+    single / s + 2.0 * (s - 1.0) * spec.net.xfer(exchange_msg)
+}
+
+/// [`simulate_sharded_ps`] plus the per-acceptance staleness trace
+/// (τ of each accepted push, in acceptance order) — the observable the
+/// staleness-distribution tests compare across shard counts.
+///
+/// The trace is **arrival-driven**: a worker's next push time is
+/// `arrive + pull + build·jitter + push`, independent of the server's
+/// service time, so changing `ps_shards` (which only changes service
+/// time) reshapes the wall clock but leaves the acceptance order and
+/// hence the τ sequence bit-identical at a fixed seed. The tests pin
+/// that invariant; composed shard versions change *when* a version is
+/// visible, never *which* version a push was built against.
+pub fn simulate_sharded_ps_trace(
+    spec: &ClusterSpec,
+    times: &PhaseTimes,
+    n_trees: usize,
+    ps_shards: usize,
+) -> (SimResult, Vec<u64>) {
     let mut rng = Rng::new(spec.seed);
     let w = spec.n_workers.max(1);
     let pull = spec.net.xfer(times.target_bytes);
@@ -63,17 +107,20 @@ pub fn simulate_async_ps(
     let mut version_at_start = vec![0u64; w];
     let mut version = 0u64;
     let mut staleness_sum = 0.0f64;
+    let mut trace = Vec::with_capacity(n_trees);
 
     while accepted < n_trees {
         let Reverse((tk, wid)) = heap.pop().expect("heap never empties");
         let arrive = from_key(tk);
         let start = arrive.max(server_free);
-        let service = times.apply_secs + times.target_secs;
+        let service = shard_service(spec, times, ps_shards);
         let done = start + service;
         server_free = done;
         server_busy_total += service;
         accepted += 1;
-        staleness_sum += (version - version_at_start[wid]) as f64;
+        let tau = version - version_at_start[wid];
+        staleness_sum += tau as f64;
+        trace.push(tau);
         version += 1;
         last_done = done;
         if accepted >= n_trees {
@@ -88,12 +135,26 @@ pub fn simulate_async_ps(
         heap.push(Reverse((to_key(next), wid)));
     }
 
-    SimResult {
+    let result = SimResult {
         wall_secs: last_done,
         n_trees,
         mean_staleness: staleness_sum / n_trees.max(1) as f64,
         bottleneck_frac: server_busy_total / last_done.max(1e-12),
-    }
+    };
+    (result, trace)
+}
+
+/// Asynch-SGBDT on a `ps_shards`-way sharded parameter server: the
+/// [`simulate_async_ps`] event model with the per-acceptance service
+/// time replaced by the sharded cost (parallel apply/target plus the
+/// sparse histogram exchange — see `shard_service`).
+pub fn simulate_sharded_ps(
+    spec: &ClusterSpec,
+    times: &PhaseTimes,
+    n_trees: usize,
+    ps_shards: usize,
+) -> SimResult {
+    simulate_sharded_ps_trace(spec, times, n_trees, ps_shards).0
 }
 
 /// LightGBM feature-parallel (fork-join): each tree costs
@@ -254,5 +315,45 @@ mod tests {
         let a = simulate_async_ps(&spec(8), &t, 50);
         let b = simulate_async_ps(&spec(8), &t, 50);
         assert_eq!(a.wall_secs, b.wall_secs);
+    }
+
+    #[test]
+    fn sharded_at_one_shard_is_the_async_model_exactly() {
+        let t = PhaseTimes::realsim_like();
+        let a = simulate_async_ps(&spec(16), &t, 120);
+        let s = simulate_sharded_ps(&spec(16), &t, 120, 1);
+        assert_eq!(a.wall_secs, s.wall_secs);
+        assert_eq!(a.mean_staleness, s.mean_staleness);
+        assert_eq!(a.bottleneck_frac, s.bottleneck_frac);
+    }
+
+    #[test]
+    fn sparse_sharding_speeds_a_saturated_server() {
+        // at 128 workers the single server is the bottleneck (Eq. 13);
+        // sparse-exchange shards cut the per-acceptance service time, so
+        // throughput rises — while a *dense* exchange at high shard
+        // counts costs more than not sharding at all
+        let t = PhaseTimes::realsim_like();
+        let single = simulate_sharded_ps(&spec(128), &t, 300, 1).trees_per_sec();
+        let s4 = simulate_sharded_ps(&spec(128), &t, 300, 4).trees_per_sec();
+        assert!(s4 > 1.5 * single, "4 sparse shards: {s4:.1} vs {single:.1}");
+        let mut dense = t;
+        dense.sparse_touch_frac = 1.0;
+        let d8 = simulate_sharded_ps(&spec(128), &dense, 300, 8).trees_per_sec();
+        assert!(d8 < single, "dense 8-shard exchange should lose: {d8:.1} vs {single:.1}");
+    }
+
+    #[test]
+    fn staleness_trace_is_arrival_driven_and_shard_invariant() {
+        // service time never feeds back into push arrival times, so the
+        // acceptance order — and hence every τ — is identical at any
+        // shard count for a fixed seed
+        let t = PhaseTimes::realsim_like();
+        let (r1, trace1) = simulate_sharded_ps_trace(&spec(16), &t, 150, 1);
+        for shards in [2usize, 4, 8] {
+            let (rs, ts) = simulate_sharded_ps_trace(&spec(16), &t, 150, shards);
+            assert_eq!(ts, trace1, "τ trace diverged at {shards} shards");
+            assert_eq!(rs.mean_staleness, r1.mean_staleness);
+        }
     }
 }

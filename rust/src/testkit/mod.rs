@@ -14,6 +14,9 @@
 //! *exact* and bit-identity assertions are robust to summation order),
 //! and list every row id.
 
+use std::sync::Arc;
+
+use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, CsrMatrix, Dataset};
 use crate::loss::logistic;
 use crate::util::Rng;
@@ -50,6 +53,14 @@ pub fn logistic_fixture(ds: &Dataset, max_bins: usize) -> BinnedFixture {
         hess: gh.hess,
         rows: (0..ds.n_rows() as u32).collect(),
     }
+}
+
+/// Bin `ds` at the config's bin count and share it behind an [`Arc`] —
+/// the setup the PS integration tests need when they publish their own
+/// board snapshots (where the full [`logistic_fixture`], which also
+/// computes grad/hess targets, would be wasted work).
+pub fn binned_for(ds: &Dataset, cfg: &TrainConfig) -> Arc<BinnedDataset> {
+    Arc::new(BinnedDataset::from_dataset(ds, cfg.max_bins).expect("fixture binning"))
 }
 
 /// Generation context handed to properties: seeded RNG + current size.
@@ -253,6 +264,20 @@ mod tests {
         let fx = g.binned_dataset(5, 3, 1.0);
         assert_eq!(fx.dataset.n_rows(), 5);
         assert!(fx.dataset.x.density() > 0.0);
+    }
+
+    #[test]
+    fn binned_for_bins_at_the_configs_bin_count() {
+        let mut g = Gen {
+            rng: Rng::new(9),
+            size: 100,
+        };
+        let fx = g.binned_dataset(40, 6, 0.4);
+        let mut cfg = TrainConfig::default();
+        cfg.max_bins = 8;
+        let b = binned_for(&fx.dataset, &cfg);
+        assert_eq!(b.n_features, 6);
+        assert!(b.total_bins() <= 6 * 8, "bins exceed max_bins budget");
     }
 
     #[test]

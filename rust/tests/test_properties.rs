@@ -489,6 +489,115 @@ fn prop_backoff_schedule_wrap_and_cap_edges() {
     });
 }
 
+/// Sparse-aggregation equivalence (the sharded-PS satellite): the
+/// union-of-touched-bins merge across row × feature shards must equal
+/// the dense whole-matrix `Histogram::build` bin for bin. The fixture's
+/// margin-0 logistic targets are dyadic (grad ±1.0, hess 1.0), so every
+/// f64 partial sum is exact and bit-equality is well-defined at any
+/// grouping of the summands.
+#[test]
+fn prop_sparse_shard_aggregation_equals_dense_build() {
+    use asgbdt::ps::{aggregate_sharded, FeaturePartition, LocalTransport, RowPartition};
+
+    check("sparse_shard_agg", 8, 113, |g| {
+        let n = 600 + g.usize_in(0, 2_500);
+        let d = 3 + g.usize_in(0, 24);
+        let fx = g.binned_dataset(n, d, g.f64_in(0.0, 0.9));
+        let b = &fx.binned;
+        // ascending build subset — some rows sampled out, like a server pass
+        let rows: Vec<u32> = (0..n as u32).filter(|_| g.rng.bernoulli(0.7)).collect();
+        let mut dense = Histogram::zeros(b.total_bins());
+        dense.build(b, &rows, &fx.grad, &fx.hess);
+        let exec = Executor::scoped(2);
+        for row_shards in [1usize, 3] {
+            for feat_shards in [1usize, 2, 5] {
+                let rowp = RowPartition::new(n, row_shards);
+                let featp = FeaturePartition::new(b, feat_shards);
+                let transport = LocalTransport::new(featp.n_shards());
+                let got = aggregate_sharded(
+                    b, &rows, &fx.grad, &fx.hess, &rowp, &featp, &transport, &exec,
+                );
+                let at = format!("{row_shards}x{feat_shards} shards");
+                prop_assert!(got.totals == dense.totals, "totals diverged ({at})");
+                for slot in 0..b.total_bins() {
+                    prop_assert!(
+                        got.grad[slot] == dense.grad[slot]
+                            && got.hess[slot] == dense.hess[slot]
+                            && got.count[slot] == dense.count[slot],
+                        "slot {slot} diverged ({at})"
+                    );
+                }
+                // union of touched slots matches the dense touched set
+                let mut gt = got.touched.clone();
+                let mut dt = dense.touched.clone();
+                gt.sort_unstable();
+                dt.sort_unstable();
+                prop_assert!(gt == dt, "touched-set union diverged ({at})");
+                // sparse budget: each source's rows are a subset of the
+                // dense build's, so every shipped slot is dense-touched —
+                // cross-shard traffic never exceeds shards × touched bins
+                let cap = (rowp.n_shards() * dense.touched.len() * 24) as u64;
+                prop_assert!(
+                    transport.bytes_sent() <= cap,
+                    "traffic {} exceeds sparse budget {cap} ({at})",
+                    transport.bytes_sent()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The row partition is a pure function of (row count, shard ask): a
+/// contiguous, exact, `ROW_BLOCK`-aligned cover whose boundaries depend
+/// on nothing else — the shard-invariance half of the sharded-PS
+/// bit-identity argument.
+#[test]
+fn prop_row_partition_is_a_pure_block_aligned_cover() {
+    use asgbdt::forest::score::ROW_BLOCK;
+    use asgbdt::ps::RowPartition;
+
+    check("row_partition", 40, 114, |g| {
+        let n = 1 + g.usize_in(0, 20_000);
+        let s = 1 + g.usize_in(0, 12);
+        let part = RowPartition::new(n, s);
+        prop_assert!(
+            part == RowPartition::new(n, s),
+            "not a pure function of (n={n}, shards={s})"
+        );
+        prop_assert!(part.n_rows() == n, "row count changed");
+        prop_assert!(
+            part.n_shards() >= 1 && part.n_shards() <= s,
+            "shard count {} outside [1, {s}]",
+            part.n_shards()
+        );
+        // contiguous exact cover with no empty shard
+        let mut covered = 0usize;
+        for shard in 0..part.n_shards() {
+            let r = part.range(shard);
+            prop_assert!(r.start == covered, "gap/overlap at shard {shard}");
+            prop_assert!(r.end > r.start, "empty shard {shard}");
+            covered = r.end;
+        }
+        prop_assert!(covered == n, "cover incomplete: {covered} != {n}");
+        // interior boundaries sit on whole ROW_BLOCKs (the carving rule
+        // the fused accept pass and the eval fold both rely on)
+        for &bnd in &part.boundaries()[1..part.n_shards()] {
+            prop_assert!(bnd % ROW_BLOCK == 0, "boundary {bnd} not block-aligned");
+        }
+        // shard_of_row inverts range()
+        for _ in 0..50 {
+            let row = g.rng.below(n as u64) as usize;
+            let owner = part.shard_of_row(row);
+            prop_assert!(
+                part.range(owner).contains(&row),
+                "shard_of_row({row}) -> {owner} does not own it"
+            );
+        }
+        Ok(())
+    });
+}
+
 /// Board::version() must be monotone non-decreasing from every reader's
 /// point of view while a publisher races it, and can never lag a
 /// snapshot the same reader already pulled — the PR 3 regression

@@ -11,9 +11,10 @@ use std::sync::mpsc;
 use std::sync::Arc;
 
 use asgbdt::config::TrainConfig;
-use asgbdt::data::{synthetic, BinnedDataset, Dataset};
+use asgbdt::data::synthetic;
 use asgbdt::ps::{run_worker, Board, ServerCore, TargetSnapshot};
 use asgbdt::runtime::GradientEngine;
+use asgbdt::testkit::binned_for;
 use asgbdt::tree::TreeParams;
 use asgbdt::util::Executor;
 
@@ -27,13 +28,6 @@ fn mini_cfg(workers: usize, n_trees: usize) -> TrainConfig {
     cfg.max_bins = 16;
     cfg.eval_every = n_trees;
     cfg
-}
-
-/// Bin a dataset at the config's bin count (these tests publish their
-/// own board snapshots, so the full `testkit::logistic_fixture` —
-/// which also computes grad/hess targets — would be wasted here).
-fn binned_for(ds: &Dataset, cfg: &TrainConfig) -> Arc<BinnedDataset> {
-    Arc::new(BinnedDataset::from_dataset(ds, cfg.max_bins).unwrap())
 }
 
 #[test]

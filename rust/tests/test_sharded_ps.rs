@@ -1,0 +1,187 @@
+//! Shard-equivalence test layer for the sharded parameter server
+//! (`ps/sharded.rs`).
+//!
+//! The acceptance bar of the sharded-PS change is that `ps_shards` is a
+//! pure server-layout knob: every shard count must reproduce the
+//! single-shard server bit for bit. The matrix tests drive a
+//! `ps_shards=1` reference core, record every tree plus the post-accept
+//! state, then replay the identical trees into `ps_shards ∈ {2, 4, 8}`
+//! twins across both accept pipelines (`target=fused|serial`) and both
+//! executor pool modes (`pool=persistent|scoped`), comparing after every
+//! accept (node by node: F, version, sampled rows, targets) and at the
+//! end (final-forest serialization, loss curves, staleness stats) — on
+//! both a sparse and a dense `testkit` fixture.
+//!
+//! The lifecycle test runs the real async coordinator for ≥100 trees on
+//! persistent executors with a sharded server, pinning that the
+//! composed-version publishes and the per-shard accept carving survive
+//! a long racing run.
+
+use asgbdt::config::TrainConfig;
+use asgbdt::coordinator::train_async;
+use asgbdt::data::{synthetic, Dataset};
+use asgbdt::ps::{ServerCore, TargetMode, TargetSnapshot};
+use asgbdt::runtime::GradientEngine;
+use asgbdt::testkit::{binned_for, Gen};
+use asgbdt::tree::build_tree;
+use asgbdt::util::{PoolMode, Rng};
+
+const N_TREES: usize = 8;
+
+fn cfg_base(target: TargetMode) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_trees = N_TREES;
+    cfg.step_length = 0.3;
+    cfg.sampling_rate = 0.9;
+    cfg.tree.max_leaves = 8;
+    cfg.tree.feature_rate = 1.0;
+    cfg.max_bins = 16;
+    cfg.eval_every = 2;
+    cfg.target = target;
+    cfg
+}
+
+/// Drive a `ps_shards=1` reference core under `target`, then replay the
+/// identical trees into every (pool, shard-count) twin and assert
+/// node-by-node and final bit-identity.
+fn assert_shard_matrix(fixture: &str, ds: &Dataset) {
+    for target in [TargetMode::Fused, TargetMode::Serial] {
+        let cfg_ref = cfg_base(target);
+        let binned = binned_for(ds, &cfg_ref);
+        let mut reference =
+            ServerCore::new(&cfg_ref, ds, binned.clone(), None, GradientEngine::native()).unwrap();
+        let mut rng = Rng::new(29);
+        let mut trees = Vec::new();
+        let mut states: Vec<(Vec<f32>, TargetSnapshot)> = Vec::new();
+        for _ in 0..N_TREES {
+            let s = reference.snapshot();
+            let tree = build_tree(&binned, &s.rows, &s.grad, &s.hess, &cfg_ref.tree, &mut rng);
+            trees.push(tree.clone());
+            reference.apply_tree(tree, s.version).unwrap();
+            states.push((reference.f.clone(), reference.snapshot()));
+        }
+        let reference_forest = reference.forest.to_json().to_string();
+        let curve_points = |core: &ServerCore| {
+            core.curve
+                .points
+                .iter()
+                .map(|p| (p.n_trees, p.train_loss))
+                .collect::<Vec<_>>()
+        };
+        for pool in [PoolMode::Persistent, PoolMode::Scoped] {
+            for shards in [2usize, 4, 8] {
+                let mut cfg = cfg_ref.clone();
+                cfg.ps_shards = shards;
+                cfg.pool = pool;
+                cfg.score_threads = 3;
+                let mut core =
+                    ServerCore::new(&cfg, ds, binned.clone(), None, GradientEngine::native())
+                        .unwrap();
+                // the partition clamps to whole ROW_BLOCKs but always
+                // covers the dataset and splits it when asked to
+                assert_eq!(core.row_partition().n_rows(), ds.n_rows());
+                assert!(core.row_partition().n_shards() >= 2);
+                assert!(core.row_partition().n_shards() <= shards);
+                for (i, tree) in trees.iter().enumerate() {
+                    let s = core.snapshot();
+                    let out = core.apply_tree(tree.clone(), s.version).unwrap();
+                    let at = format!(
+                        "{fixture} target={} pool={} shards={shards} tree={i}",
+                        target.as_str(),
+                        pool.as_str()
+                    );
+                    assert!(out.accepted, "push rejected ({at})");
+                    let (ref_f, ref_snap) = &states[i];
+                    assert_eq!(&core.f, ref_f, "F diverged ({at})");
+                    let snap = core.snapshot();
+                    assert_eq!(snap.version, ref_snap.version, "version diverged ({at})");
+                    assert_eq!(*snap.rows, *ref_snap.rows, "sampled rows diverged ({at})");
+                    assert_eq!(*snap.grad, *ref_snap.grad, "grad targets diverged ({at})");
+                    assert_eq!(*snap.hess, *ref_snap.hess, "hess targets diverged ({at})");
+                }
+                let at = format!(
+                    "{fixture} target={} pool={} shards={shards}",
+                    target.as_str(),
+                    pool.as_str()
+                );
+                assert_eq!(
+                    core.forest.to_json().to_string(),
+                    reference_forest,
+                    "final forest diverged ({at})"
+                );
+                assert_eq!(
+                    curve_points(&core),
+                    curve_points(&reference),
+                    "loss curves diverged ({at})"
+                );
+                assert_eq!(
+                    core.staleness.samples, reference.staleness.samples,
+                    "staleness diverged ({at})"
+                );
+                // every shard cell advanced with the counter
+                let sv = core.shard_versions();
+                for shard in 0..sv.n_shards() {
+                    assert_eq!(sv.shard_version(shard), N_TREES as u64, "({at})");
+                }
+                assert_eq!(sv.composed(), N_TREES as u64, "({at})");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_fixture_every_shard_count_matches_single_shard() {
+    // 4,600 rows = 9 whole ROW_BLOCKs: ps_shards=8 gets a real multi-
+    // block carve (one shard owns two blocks, the rest one each)
+    let mut g = Gen {
+        rng: Rng::new(401),
+        size: 100,
+    };
+    let fx = g.binned_dataset(4_600, 31, 0.7);
+    assert_shard_matrix("sparse", &fx.dataset);
+}
+
+#[test]
+fn dense_fixture_every_shard_count_matches_single_shard() {
+    // sparsity 0.0: every feature present in every row — the dense
+    // extreme of the histogram/accept layout (6 blocks, so ps_shards=8
+    // also exercises the shard-count clamp)
+    let mut g = Gen {
+        rng: Rng::new(402),
+        size: 100,
+    };
+    let fx = g.binned_dataset(2_600, 13, 0.0);
+    assert_shard_matrix("dense", &fx.dataset);
+}
+
+#[test]
+fn sharded_async_lifecycle_survives_a_long_run_on_persistent_executors() {
+    // ≥100 trees through the real async coordinator with a 4-shard
+    // server on persistent executors: racing workers, repeated sharded
+    // accept passes, and composed-version publishes on every accept
+    let ds = synthetic::realsim_like(1_400, 77);
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 4;
+    cfg.n_trees = 120;
+    cfg.step_length = 0.2;
+    cfg.sampling_rate = 0.8;
+    cfg.tree.max_leaves = 4;
+    cfg.max_bins = 16;
+    cfg.eval_every = 30;
+    cfg.ps_shards = 4;
+    cfg.score_threads = 2;
+    cfg.pool = PoolMode::Persistent;
+    let rep = train_async(&cfg, &ds, None).unwrap();
+    assert_eq!(rep.trees_accepted, 120);
+    assert_eq!(rep.forest.n_trees(), 120);
+    // staleness recorded for every accepted push
+    assert_eq!(rep.staleness.samples.len(), 120);
+    let first = rep.curve.points.first().unwrap();
+    let last = rep.curve.points.last().unwrap();
+    assert!(
+        last.train_loss < first.train_loss,
+        "no descent: {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+}

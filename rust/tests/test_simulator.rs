@@ -3,7 +3,7 @@
 
 use asgbdt::simulator::{
     eq13_upper_bound, simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp,
-    speedup_sweep, ClusterSpec, PhaseTimes, SystemKind,
+    simulate_sharded_ps_trace, speedup_sweep, ClusterSpec, PhaseTimes, SystemKind,
 };
 
 fn spec(w: usize, seed: u64) -> ClusterSpec {
@@ -97,6 +97,98 @@ fn eq13_bound_predicts_async_saturation() {
         tp_4x < tp_bound * 1.25,
         "Eq.13: tp at bound {tp_bound:.1} vs 4x {tp_4x:.1} (bound {bound:.0})"
     );
+}
+
+#[test]
+fn sharded_tau_distribution_matches_the_single_board() {
+    // the staleness a worker observes is arrival-driven (pull → build →
+    // push), so splitting the server into shards that publish composed
+    // versions must not move the τ distribution: same support, same
+    // per-acceptance trace, same mean — only the service time changes
+    let t = PhaseTimes::realsim_like();
+    for workers in [8usize, 16] {
+        let (base, trace1) = simulate_sharded_ps_trace(&spec(workers, 11), &t, 200, 1);
+        assert_eq!(trace1.len(), 200, "one τ sample per acceptance");
+        // support sanity: τ is bounded by the version counter, and real
+        // asynchrony shows up (stale pushes exist at ≥8 racing workers)
+        assert!(trace1.iter().all(|&tau| tau < 200), "τ exceeded the version counter");
+        assert!(trace1.iter().any(|&tau| tau > 0), "no staleness at {workers} workers");
+        for shards in [2usize, 4, 8] {
+            let (r, tr) = simulate_sharded_ps_trace(&spec(workers, 11), &t, 200, shards);
+            assert_eq!(
+                tr, trace1,
+                "τ trace diverged at {shards} shards / {workers} workers"
+            );
+            assert_eq!(
+                r.mean_staleness, base.mean_staleness,
+                "mean τ diverged at {shards} shards / {workers} workers"
+            );
+        }
+    }
+    // monotonicity across scale survives sharding: more workers in
+    // flight ⇒ staler pushes, at 1 shard and at 4 alike
+    for shards in [1usize, 4] {
+        let mean_at = |w: usize| {
+            simulate_sharded_ps_trace(&spec(w, 11), &t, 200, shards)
+                .0
+                .mean_staleness
+        };
+        assert!(
+            mean_at(32) > mean_at(8),
+            "mean τ must grow with workers at {shards} shards"
+        );
+    }
+}
+
+#[test]
+fn composed_shard_versions_are_monotone_under_concurrent_publishes() {
+    use asgbdt::ps::{compose_version, ShardVersions};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    // composition is the min over cells; empty composes to the init version
+    assert_eq!(compose_version(&[3, 5, 4]), 3);
+    assert_eq!(compose_version(&[]), 0);
+
+    let sv = ShardVersions::new(4);
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let reader = {
+            let sv = &sv;
+            let done = &done;
+            s.spawn(move || {
+                let mut last = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let c = sv.composed();
+                    assert!(c >= last, "composed version went backwards: {c} < {last}");
+                    // cells are monotone, so a composed read can never
+                    // exceed any cell observed at-or-after it
+                    for shard in 0..sv.n_shards() {
+                        assert!(c <= sv.shard_version(shard), "composed {c} passed a cell");
+                    }
+                    last = c;
+                }
+                last
+            })
+        };
+        let publishers: Vec<_> = (0..4usize)
+            .map(|shard| {
+                let sv = &sv;
+                s.spawn(move || {
+                    for v in 1..=500u64 {
+                        sv.publish(shard, v);
+                    }
+                })
+            })
+            .collect();
+        for p in publishers {
+            p.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+        let last = reader.join().unwrap();
+        assert!(last <= 500, "reader saw unpublished composed version {last}");
+    });
+    // all cells at 500 ⇒ the composition lands exactly on the counter
+    assert_eq!(sv.composed(), 500);
 }
 
 #[test]
