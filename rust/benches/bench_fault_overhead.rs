@@ -1,0 +1,99 @@
+//! Fault-layer overhead: trees/sec with the fault layer off (the
+//! zero-cost default path), with supervision armed but quiet
+//! (`worker_restarts` only — heartbeats + catch_unwind, no plan), and
+//! with a full plan injecting drops/duplicates — the cost of chaos
+//! itself. The all-defaults run constructs no `FaultPlan` and no
+//! wrapper, so any gap between `faults_off` and `supervision_only` is
+//! the supervision harness, and the gap to `faults_armed` is the
+//! injected faults (DESIGN.md §14).
+//!
+//! Emits the machine-readable snapshot
+//! `results/BENCH_fault_overhead.json` (per-config trees/sec plus the
+//! armed-overhead fraction) and verifies it parses back.
+//! `cargo bench --bench bench_fault_overhead -- --test` runs the same
+//! pipeline on a tiny budget — the CI smoke mode.
+use asgbdt::bench_harness::{BenchConfig, Runner};
+use asgbdt::config::TrainConfig;
+use asgbdt::coordinator::train_async;
+use asgbdt::data::synthetic;
+use asgbdt::io::Json;
+use std::collections::BTreeMap;
+
+fn bench_cfg(n_trees: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 4;
+    cfg.n_trees = n_trees;
+    cfg.step_length = 0.1;
+    cfg.tree.max_leaves = 32;
+    cfg.max_bins = 32;
+    cfg.eval_every = n_trees;
+    cfg
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let trees = |full: usize| if test_mode { 8 } else { full };
+    let mut r = Runner::new("fault_overhead");
+    if test_mode {
+        r = r.with_config(BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.05,
+            min_iters: 2,
+            max_iters: 10,
+        });
+    }
+    let ds = synthetic::realsim_like(3_000, 9);
+    // the three contrast points: all-defaults (no plan, no harness
+    // atomics), supervision armed with no faults, and a live chaos plan
+    // (completion-safe: drops/dups only, no panics)
+    let mut cfg_supervised = bench_cfg(trees(40));
+    cfg_supervised.worker_restarts = 2;
+    let mut cfg_armed = bench_cfg(trees(40));
+    cfg_armed.fault_seed = Some(7);
+    cfg_armed.fault_drop_rate = 0.05;
+    cfg_armed.fault_dup_rate = 0.02;
+    cfg_armed.worker_restarts = 2;
+    let configs: Vec<(&str, TrainConfig)> = vec![
+        ("faults_off", bench_cfg(trees(40))),
+        ("supervision_only", cfg_supervised),
+        ("faults_armed", cfg_armed),
+    ];
+    let mut trees_per_sec: BTreeMap<String, Json> = BTreeMap::new();
+    let mut tps_of: BTreeMap<&str, f64> = BTreeMap::new();
+    for (name, cfg) in &configs {
+        let rep = train_async(cfg, &ds, None).unwrap();
+        assert_eq!(rep.trees_accepted, cfg.n_trees, "({name})");
+        trees_per_sec.insert((*name).to_string(), Json::Num(rep.trees_per_sec()));
+        tps_of.insert(name, rep.trees_per_sec());
+        r.record(
+            &format!("train/{name}_trees_per_sec (1/x)"),
+            1.0 / rep.trees_per_sec(),
+        );
+        println!(
+            "  {name}: {:.2} trees/s, {} faults injected, {} deaths",
+            rep.trees_per_sec(),
+            rep.fault_trace.len(),
+            rep.supervision.deaths,
+        );
+    }
+    let off = tps_of["faults_off"];
+    let armed = tps_of["faults_armed"];
+    let armed_frac = if off > 0.0 { (off - armed) / off } else { 0.0 };
+    println!("  armed overhead: {:.1}% of faults-off throughput", armed_frac * 100.0);
+    r.write_csv().unwrap();
+    let path = r
+        .write_json(vec![
+            ("trees_per_sec", Json::Obj(trees_per_sec)),
+            (
+                "overhead",
+                Json::obj(vec![("armed_frac", Json::Num(armed_frac))]),
+            ),
+        ])
+        .unwrap();
+    let back = Json::parse_file(&path).unwrap();
+    assert_eq!(back.req_str("group").unwrap(), "fault_overhead");
+    assert!(!back.req("results").unwrap().as_arr().unwrap().is_empty());
+    assert!(back.req("trees_per_sec").unwrap().as_obj().is_some());
+    assert!(back.req("overhead").unwrap().as_obj().is_some());
+    println!("-- snapshot {} parses back", path.display());
+}

@@ -12,6 +12,7 @@ use crate::forest::ScoreMode;
 use crate::io::Json;
 use crate::ps::TargetMode;
 use crate::tree::{HistogramStrategy, TreeParams};
+use crate::util::fault::{FaultPlan, FaultSpec};
 use crate::util::PoolMode;
 
 /// Which trainer drives the run (config key `mode`).
@@ -159,6 +160,29 @@ pub struct TrainConfig {
     /// Base seed for every deterministic stream (sampling pass keys,
     /// feature sub-sampling, synthetic data).
     pub seed: u64,
+    /// Arms the deterministic fault-injection layer (DESIGN.md §14).
+    /// `None` (default) means **no fault-layer code runs**: no
+    /// [`crate::util::FaultPlan`] is built, workers take the bare
+    /// unharnessed path, and the default config is byte-identical to
+    /// every prior release. `Some(seed)` keys every injected
+    /// drop/duplicate/delay/panic as a pure function of
+    /// `(seed, site, attempt)`, so chaos runs replay exactly.
+    pub fault_seed: Option<u64>,
+    /// Probability an armed plan drops a message per send attempt
+    /// (senders retry under bounded backoff; see `ps/faulty.rs`).
+    pub fault_drop_rate: f64,
+    /// Probability an armed plan duplicates a delivered message.
+    pub fault_dup_rate: f64,
+    /// Probability an armed plan delays a delivery (bounded latency).
+    pub fault_delay_rate: f64,
+    /// Probability an armed plan panics a worker at a build cycle.
+    pub fault_panic_rate: f64,
+    /// Restarts the supervisor grants each async worker after a panic
+    /// (injected or real). Each restart gets a fresh
+    /// incarnation-derived identity seed; past the budget the worker
+    /// retires and training degrades gracefully. 0 (default) means a
+    /// panicked worker just retires.
+    pub worker_restarts: u64,
     /// Where `make artifacts` put the HLO modules.
     pub artifact_dir: PathBuf,
 }
@@ -183,6 +207,12 @@ impl Default for TrainConfig {
             build_threads: 1,
             pool: PoolMode::Persistent,
             seed: 42,
+            fault_seed: None,
+            fault_drop_rate: 0.0,
+            fault_dup_rate: 0.0,
+            fault_delay_rate: 0.0,
+            fault_panic_rate: 0.0,
+            worker_restarts: 0,
             artifact_dir: PathBuf::from("artifacts"),
         }
     }
@@ -245,7 +275,62 @@ impl TrainConfig {
                 self.build_threads
             );
         }
+        let rates = [
+            ("fault_drop_rate", self.fault_drop_rate),
+            ("fault_dup_rate", self.fault_dup_rate),
+            ("fault_delay_rate", self.fault_delay_rate),
+            ("fault_panic_rate", self.fault_panic_rate),
+        ];
+        for (name, rate) in rates {
+            if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                bail!("{name} must be a finite probability in [0, 1], got {rate}");
+            }
+        }
+        let msg_mass = self.fault_drop_rate + self.fault_dup_rate + self.fault_delay_rate;
+        if msg_mass > 1.0 {
+            bail!(
+                "conflicting knobs fault_drop_rate={} + fault_dup_rate={} + \
+                 fault_delay_rate={} exceed 1.0: the three message faults partition one \
+                 decision per send attempt — lower them until they sum to at most 1.0",
+                self.fault_drop_rate,
+                self.fault_dup_rate,
+                self.fault_delay_rate
+            );
+        }
+        if self.fault_seed.is_none() {
+            if let Some((name, rate)) = rates.iter().find(|(_, r)| *r > 0.0) {
+                bail!(
+                    "conflicting knobs {name}={rate} and fault_seed=none: fault rates only \
+                     take effect under an armed plan — set fault_seed=N (to inject faults \
+                     deterministically) or zero the rates (to keep the fault layer off)"
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Build the armed [`FaultPlan`] from `fault_seed` + the rates, or
+    /// `None` when the fault layer is off — callers on the `None` path
+    /// construct no wrapper and run no fault-layer code (DESIGN.md §14).
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        self.fault_seed.map(|seed| {
+            FaultPlan::new(
+                seed,
+                FaultSpec {
+                    drop_rate: self.fault_drop_rate,
+                    dup_rate: self.fault_dup_rate,
+                    delay_rate: self.fault_delay_rate,
+                    panic_rate: self.fault_panic_rate,
+                    ..FaultSpec::default()
+                },
+            )
+        })
+    }
+
+    /// Whether the async trainer runs the supervision machinery
+    /// (heartbeats + restart loop): armed faults or a restart budget.
+    pub fn supervised(&self) -> bool {
+        self.fault_seed.is_some() || self.worker_restarts > 0
     }
 
     /// Apply a `key=value` override (CLI surface).
@@ -281,6 +366,18 @@ impl TrainConfig {
             "build_threads" => self.build_threads = value.parse()?,
             "pool" | "pool_mode" => self.pool = PoolMode::parse(value)?,
             "seed" => self.seed = value.parse()?,
+            "fault_seed" => {
+                self.fault_seed = if value == "none" {
+                    None
+                } else {
+                    Some(value.parse()?)
+                }
+            }
+            "fault_drop_rate" => self.fault_drop_rate = value.parse()?,
+            "fault_dup_rate" => self.fault_dup_rate = value.parse()?,
+            "fault_delay_rate" => self.fault_delay_rate = value.parse()?,
+            "fault_panic_rate" => self.fault_panic_rate = value.parse()?,
+            "worker_restarts" => self.worker_restarts = value.parse()?,
             "artifact_dir" => self.artifact_dir = PathBuf::from(value),
             other => bail!("unknown config key '{other}'"),
         }
@@ -317,6 +414,17 @@ impl TrainConfig {
             ("build_threads", Json::Num(self.build_threads as f64)),
             ("pool", Json::Str(self.pool.as_str().into())),
             ("seed", Json::Num(self.seed as f64)),
+            (
+                "fault_seed",
+                self.fault_seed
+                    .map(|s| Json::Num(s as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("fault_drop_rate", Json::Num(self.fault_drop_rate)),
+            ("fault_dup_rate", Json::Num(self.fault_dup_rate)),
+            ("fault_delay_rate", Json::Num(self.fault_delay_rate)),
+            ("fault_panic_rate", Json::Num(self.fault_panic_rate)),
+            ("worker_restarts", Json::Num(self.worker_restarts as f64)),
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.display().to_string()),
@@ -499,6 +607,83 @@ mod tests {
             c.scoring = ScoreMode::PerRow;
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn fault_layer_defaults_to_off() {
+        // the all-defaults path must build no plan and run unsupervised —
+        // the zero-cost guarantee DESIGN.md §14 promises
+        let c = TrainConfig::default();
+        assert_eq!(c.fault_seed, None);
+        assert!(c.fault_plan().is_none());
+        assert!(!c.supervised());
+        assert_eq!(c.worker_restarts, 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_knobs_set_arm_and_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.set("fault_seed", "7").unwrap();
+        c.set("fault_drop_rate", "0.1").unwrap();
+        c.set("fault_dup_rate", "0.05").unwrap();
+        c.set("fault_delay_rate", "0.02").unwrap();
+        c.set("fault_panic_rate", "0.01").unwrap();
+        c.set("worker_restarts", "2").unwrap();
+        c.validate().unwrap();
+        assert!(c.supervised());
+        let plan = c.fault_plan().unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert!((plan.spec().drop_rate - 0.1).abs() < 1e-12);
+        assert!((plan.spec().panic_rate - 0.01).abs() < 1e-12);
+        let back = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.fault_seed, Some(7));
+        assert!((back.fault_dup_rate - 0.05).abs() < 1e-12);
+        assert_eq!(back.worker_restarts, 2);
+        // disarming through the CLI spelling mirrors max_staleness=none
+        c.set("fault_seed", "none").unwrap();
+        assert_eq!(c.fault_seed, None);
+        // restart budget alone still turns supervision on (real panics
+        // are supervised even with no injected ones)
+        let mut c = TrainConfig::default();
+        c.worker_restarts = 1;
+        assert!(c.supervised());
+        assert!(c.fault_plan().is_none());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_rate_rejections_name_both_knobs() {
+        // a nonzero rate with no seed is a silent no-op — reject it and
+        // name both knobs plus the fix
+        let mut c = TrainConfig::default();
+        c.fault_drop_rate = 0.3;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("fault_drop_rate=0.3") && msg.contains("fault_seed=none"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("fault_seed=N"), "error must name the fix, got: {msg}");
+        c.fault_seed = Some(1);
+        c.validate().unwrap();
+        // rates outside [0, 1] are rejected by name
+        let mut c = TrainConfig::default();
+        c.fault_seed = Some(1);
+        c.fault_panic_rate = 1.5;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(msg.contains("fault_panic_rate"), "got: {msg}");
+        // the three message faults partition one draw — their sum > 1.0
+        // is rejected naming all three
+        let mut c = TrainConfig::default();
+        c.fault_seed = Some(1);
+        c.fault_drop_rate = 0.5;
+        c.fault_dup_rate = 0.4;
+        c.fault_delay_rate = 0.2;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("fault_drop_rate") && msg.contains("fault_delay_rate"),
+            "error must name the rates, got: {msg}"
+        );
     }
 
     #[test]

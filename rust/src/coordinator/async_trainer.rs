@@ -45,19 +45,42 @@
 //! same channel, same loop — because sharding is a server-internal
 //! layout, pinned bit-identical by `tests/test_sharded_ps.rs`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
-use crate::ps::{run_worker, Board, ServerCore};
+use crate::metrics::SupervisionStats;
+use crate::ps::{run_worker_harnessed, Board, ServerCore, WorkerHarness};
 use crate::runtime::GradientEngine;
+use crate::util::fault::worker_identity_seed;
 use crate::util::stats::Summary;
 use crate::util::{Executor, Stopwatch};
 
 use super::report::TrainReport;
+
+/// What one worker thread's supervision loop reports back on exit.
+struct WorkerExit {
+    /// The final panic message if the worker retired dead (restart
+    /// budget exhausted, or shutdown arrived while it was down).
+    died: Option<String>,
+    /// Restarts the supervisor granted this worker.
+    restarts: u64,
+}
+
+/// Render a panic payload for the run report / stall error.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Train asynchronously on the parameter server: `cfg.workers` worker
 /// threads race pulls/builds/pushes while the calling thread runs the
@@ -74,29 +97,78 @@ pub fn train_async(
     let engine = GradientEngine::auto(&cfg.artifact_dir);
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
 
-    let board = Board::new();
+    // the fault plan and supervision flag drive everything below; with
+    // the default config (`fault_seed=none`, `worker_restarts=0`) no
+    // plan exists, the board has no heartbeat cells and each worker runs
+    // a single bare incarnation — the zero-cost path (DESIGN.md §14)
+    let plan = cfg.fault_plan();
+    let supervised = cfg.supervised();
+    let restarts_allowed = if supervised { cfg.worker_restarts } else { 0 };
+
+    let board = if supervised {
+        Board::with_heartbeats(cfg.workers)
+    } else {
+        Board::new()
+    };
     board.publish(core.snapshot());
     let (tx, rx) = mpsc::channel();
 
     let mut build_times: Vec<f64> = Vec::with_capacity(cfg.n_trees);
 
-    std::thread::scope(|s| -> Result<()> {
-        // fork the workers
+    let exits = std::thread::scope(|s| -> Result<Vec<(usize, WorkerExit)>> {
+        // fork the workers, each under its own supervision loop
         let mut handles = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
             let tx = tx.clone();
             let binned = binned.clone();
             let board_ref = &board;
             let params = cfg.tree;
-            let seed = cfg.seed;
+            let base_seed = cfg.seed;
+            let plan_ref = plan.as_ref();
             let (pool_mode, build_threads) = (cfg.pool, cfg.build_threads);
             handles.push(s.spawn(move || {
-                // worker-lifetime build executor, owned on the worker's own
-                // thread: one pool of parked threads per worker (executors
-                // are never shared — ScorePool serializes concurrent
-                // dispatchers, which would serialize the workers' builds)
-                let exec = Executor::new(pool_mode, build_threads);
-                run_worker(wid, board_ref, binned, params, &exec, tx, seed)
+                let mut incarnation = 0u64;
+                let mut restarts = 0u64;
+                loop {
+                    // each incarnation gets a fresh derived identity so a
+                    // restarted worker never replays its predecessor's
+                    // sampling/fault streams
+                    let seed = worker_identity_seed(base_seed, wid, incarnation);
+                    let harness = WorkerHarness {
+                        incarnation,
+                        faults: plan_ref,
+                        heartbeat: supervised,
+                    };
+                    // worker-lifetime build executor, owned on the worker's
+                    // own thread: one pool of parked threads per worker
+                    // (executors are never shared — ScorePool serializes
+                    // concurrent dispatchers, which would serialize the
+                    // workers' builds)
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        let exec = Executor::new(pool_mode, build_threads);
+                        run_worker_harnessed(
+                            wid,
+                            board_ref,
+                            binned.clone(),
+                            params,
+                            &exec,
+                            tx.clone(),
+                            seed,
+                            &harness,
+                        )
+                    }));
+                    match result {
+                        Ok(_pushed) => return WorkerExit { died: None, restarts },
+                        Err(payload) => {
+                            let msg = panic_message(payload.as_ref());
+                            if restarts >= restarts_allowed || board_ref.is_shutdown() {
+                                return WorkerExit { died: Some(msg), restarts };
+                            }
+                            restarts += 1;
+                            incarnation += 1;
+                        }
+                    }
+                }
             }));
         }
         drop(tx); // server holds only the receiver
@@ -105,7 +177,7 @@ pub fn train_async(
         while core.n_trees() < cfg.n_trees {
             let push = match rx.recv() {
                 Ok(p) => p,
-                Err(_) => break, // all workers gone (shouldn't happen)
+                Err(_) => break, // every worker retired: surface a stall below
             };
             build_times.push(push.build_secs);
             let outcome = core.apply_tree(push.tree, push.based_on)?;
@@ -117,13 +189,50 @@ pub fn train_async(
         // stop the world; drain in-flight pushes so senders never block
         board.request_shutdown();
         while let Ok(_ignored) = rx.try_recv() {}
-        for h in handles {
-            let _ = h.join();
+        let mut exits: Vec<(usize, WorkerExit)> = Vec::with_capacity(handles.len());
+        for (wid, h) in handles.into_iter().enumerate() {
+            let exit = match h.join() {
+                Ok(e) => e,
+                // a panic that escaped the supervision loop itself (not
+                // the harnessed worker body) still surfaces by name
+                Err(payload) => WorkerExit {
+                    died: Some(panic_message(payload.as_ref())),
+                    restarts: 0,
+                },
+            };
+            exits.push((wid, exit));
         }
         // final drain (workers may have pushed between drain and join)
         while let Ok(_ignored) = rx.try_recv() {}
-        Ok(())
+
+        // a worker panic must never hang or silently truncate training:
+        // if the run stalled short, name every dead worker and its panic
+        if core.n_trees() < cfg.n_trees {
+            let dead: Vec<String> = exits
+                .iter()
+                .filter_map(|(wid, e)| e.died.as_ref().map(|m| format!("worker {wid}: {m}")))
+                .collect();
+            let detail = if dead.is_empty() {
+                "no panics recorded — push channel closed early".to_string()
+            } else {
+                dead.join("; ")
+            };
+            bail!(
+                "async training stalled at {}/{} trees: all workers exited ({detail})",
+                core.n_trees(),
+                cfg.n_trees
+            );
+        }
+        Ok(exits)
     })?;
+
+    let deaths: u64 = exits
+        .iter()
+        .map(|(_, e)| e.restarts + u64::from(e.died.is_some()))
+        .sum();
+    let restarts: u64 = exits.iter().map(|(_, e)| e.restarts).sum();
+    let workers_final = exits.iter().filter(|(_, e)| e.died.is_none()).count();
+    let fault_trace = plan.as_ref().map(|p| p.trace()).unwrap_or_default();
 
     let engine = core.engine_kind();
     Ok(TrainReport {
@@ -134,6 +243,13 @@ pub fn train_async(
         engine,
         mode: "async".into(),
         workers: cfg.workers,
+        supervision: SupervisionStats {
+            workers: cfg.workers,
+            deaths,
+            restarts,
+            workers_final,
+        },
+        fault_trace,
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,
@@ -168,6 +284,9 @@ mod tests {
         let last = rep.curve.points.last().unwrap().train_loss;
         assert!(last < first, "loss did not descend: {first} -> {last}");
         assert_eq!(rep.mode, "async");
+        // unsupervised default: no deaths, no faults, everyone alive
+        assert_eq!(rep.supervision, SupervisionStats::all_alive(4));
+        assert!(rep.fault_trace.is_empty());
     }
 
     #[test]

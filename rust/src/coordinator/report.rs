@@ -6,8 +6,9 @@ use anyhow::Result;
 
 use crate::forest::Forest;
 use crate::io::Json;
-use crate::metrics::{LossCurve, StalenessStats};
+use crate::metrics::{LossCurve, StalenessStats, SupervisionStats};
 use crate::runtime::EngineKind;
+use crate::util::fault::FaultEvent;
 use crate::util::stats::Summary;
 use crate::util::timer::PhaseTimer;
 
@@ -36,6 +37,16 @@ pub struct TrainReport {
     pub mode: String,
     /// Worker count the run was configured with.
     pub workers: usize,
+    /// Supervision outcome: deaths, restarts and the realised worker
+    /// count at shutdown (all-alive for sync/serial and unsupervised
+    /// async runs).
+    pub supervision: SupervisionStats,
+    /// Every fault the armed [`crate::util::FaultPlan`] injected, in
+    /// canonical `(site, attempt)` order — empty when the fault layer is
+    /// off. Two runs with the same `fault_seed` and rates record
+    /// identical traces over the attempts both runs exercised
+    /// (DESIGN.md §14).
+    pub fault_trace: Vec<FaultEvent>,
 }
 
 impl TrainReport {
@@ -70,6 +81,19 @@ impl TrainReport {
             ("staleness_mean", Json::Num(self.staleness.mean())),
             ("staleness_max", Json::Num(self.staleness.max() as f64)),
             ("build_time_mean", Json::Num(self.build_times.mean)),
+            ("worker_deaths", Json::Num(self.supervision.deaths as f64)),
+            (
+                "worker_restarts",
+                Json::Num(self.supervision.restarts as f64),
+            ),
+            (
+                "workers_final",
+                Json::Num(self.supervision.workers_final as f64),
+            ),
+            (
+                "faults_injected",
+                Json::Num(self.fault_trace.len() as f64),
+            ),
         ])
     }
 

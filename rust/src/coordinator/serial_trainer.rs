@@ -22,6 +22,7 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
+use crate::metrics::SupervisionStats;
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
 use crate::tree::{build_tree_feature_parallel, HistogramPool};
@@ -79,6 +80,8 @@ pub fn train_serial(
         engine,
         mode: "serial".into(),
         workers: 1,
+        supervision: SupervisionStats::all_alive(1),
+        fault_trace: Vec::new(),
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,

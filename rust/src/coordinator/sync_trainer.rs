@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
+use crate::metrics::SupervisionStats;
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
 use crate::tree::{build_tree_forkjoin_pooled, HistogramPool};
@@ -84,6 +85,8 @@ pub fn train_sync(
         engine,
         mode: "sync".into(),
         workers: cfg.workers,
+        supervision: SupervisionStats::all_alive(cfg.workers),
+        fault_trace: Vec::new(),
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,

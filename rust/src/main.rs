@@ -92,6 +92,18 @@ CONFIG OVERRIDES (key=value):
                                 across; shards exchange sparse histograms and
                                 publish composed versions; 1 is default,
                                 bit-identical outputs at every N)
+  fault_seed=N|none            (arm the deterministic fault-injection layer:
+                                every drop/duplicate/delay/panic is a pure
+                                function of (seed, site, attempt), so chaos
+                                runs replay exactly; none is default — no
+                                fault-layer code runs)
+  fault_drop_rate=R fault_dup_rate=R fault_delay_rate=R fault_panic_rate=R
+                               (per-attempt fault probabilities under an armed
+                                plan; the three message rates must sum to <= 1)
+  worker_restarts=N            (restarts the supervisor grants each panicked
+                                async worker, with a fresh derived identity per
+                                incarnation; 0 is default — panicked workers
+                                retire and training degrades gracefully)
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {

@@ -1,5 +1,6 @@
-//! Training telemetry: loss curves (the paper's Figures 5–9 raw data) and
-//! staleness statistics (the observed delay τ distribution).
+//! Training telemetry: loss curves (the paper's Figures 5–9 raw data),
+//! staleness statistics (the observed delay τ distribution), and worker
+//! supervision outcomes (deaths/restarts under fault injection).
 
 use std::path::Path;
 
@@ -140,6 +141,41 @@ impl StalenessStats {
     }
 }
 
+/// Worker supervision outcome of one training run: how many workers the
+/// run was configured with, how many lives were lost to (injected or
+/// real) panics, how many restarts the supervisor granted, and how many
+/// workers were still alive at shutdown. Invariant:
+/// `deaths - restarts == workers - workers_final` (every death is either
+/// restarted or retires its worker).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SupervisionStats {
+    /// Workers the run was configured with.
+    pub workers: usize,
+    /// Worker deaths observed (each panic of an incarnation is one).
+    pub deaths: u64,
+    /// Restarts the supervisor granted (each consumed one death).
+    pub restarts: u64,
+    /// Workers still alive when the run shut down.
+    pub workers_final: usize,
+}
+
+impl SupervisionStats {
+    /// Stats for a run with no supervision events: every worker lives.
+    pub fn all_alive(workers: usize) -> SupervisionStats {
+        SupervisionStats {
+            workers,
+            deaths: 0,
+            restarts: 0,
+            workers_final: workers,
+        }
+    }
+
+    /// Workers that permanently died (restart budget exhausted).
+    pub fn workers_lost(&self) -> usize {
+        self.workers.saturating_sub(self.workers_final)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,5 +240,24 @@ mod tests {
         assert!((s.mean() - 3.2).abs() < 1e-12);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.summary().n, 5);
+    }
+
+    #[test]
+    fn supervision_stats_invariant_and_defaults() {
+        let quiet = SupervisionStats::all_alive(4);
+        assert_eq!(quiet.workers_final, 4);
+        assert_eq!(quiet.workers_lost(), 0);
+        let churned = SupervisionStats {
+            workers: 4,
+            deaths: 5,
+            restarts: 3,
+            workers_final: 2,
+        };
+        // deaths - restarts == workers - workers_final
+        assert_eq!(
+            churned.deaths - churned.restarts,
+            (churned.workers - churned.workers_final) as u64
+        );
+        assert_eq!(churned.workers_lost(), 2);
     }
 }

@@ -1,0 +1,213 @@
+//! A lossy [`ShardTransport`] wrapper driven by a deterministic
+//! [`FaultPlan`] (DESIGN.md §14).
+//!
+//! [`FaultyTransport`] sits between `aggregate_sharded` and any inner
+//! transport and injects, per send, whatever the plan decided for the
+//! `(shard_send, from → to, attempt)` key:
+//!
+//! * **Drop** — the message is discarded and the sender retries under a
+//!   bounded [`Backoff`], consuming fresh attempt numbers, until a
+//!   non-drop decision or the [`MAX_SEND_ATTEMPTS`] delivery timeout
+//!   forces it through (liveness is unconditional).
+//! * **Duplicate** — the live copy is delivered twice in the current
+//!   round (exercising the receiver's same-epoch dedup) and a third,
+//!   stale copy is parked until a later drain (exercising the
+//!   cross-epoch filter).
+//! * **Delay** — the message is delivered after the plan's bounded
+//!   injected latency.
+//!
+//! The attempt counter per `(from, to)` pair is the only shared state a
+//! send touches besides the inner transport, so concurrent senders to
+//! different pairs never contend — and because every decision is a pure
+//! function of its key, the set of faults a run experiences depends only
+//! on which attempt numbers get exercised, not on thread scheduling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::fault::{FaultAction, FaultPlan, FaultSite};
+use crate::util::Backoff;
+
+use super::messages::HistShardMsg;
+use super::sharded::ShardTransport;
+
+/// Delivery timeout: after this many consecutive injected drops of one
+/// message the wrapper delivers it anyway. Keeps chaos runs live at any
+/// drop rate (even 1.0) while still exercising the retry loop — forced
+/// deliveries are counted so tests can see when the timeout fired.
+pub const MAX_SEND_ATTEMPTS: u64 = 16;
+
+/// The fault-injecting transport wrapper. See the module docs for the
+/// per-action semantics; `drain` releases parked stale replays (aged by
+/// one per drain) before forwarding to the inner transport.
+pub struct FaultyTransport<'a> {
+    inner: &'a dyn ShardTransport,
+    plan: &'a FaultPlan,
+    max_shards: usize,
+    /// Per-(from, to) attempt counters, `from * max_shards + to`.
+    attempts: Vec<AtomicU64>,
+    /// Stale replays parked per destination: (drains to wait, message).
+    parked: Vec<Mutex<Vec<(u8, HistShardMsg)>>>,
+    forced: AtomicU64,
+}
+
+impl<'a> FaultyTransport<'a> {
+    /// Wrap `inner`, injecting `plan`'s shard-send faults. `max_shards`
+    /// must exceed every `from_shard`/`to_shard` this transport will see
+    /// (use the larger of the row- and feature-shard counts).
+    pub fn new(
+        inner: &'a dyn ShardTransport,
+        plan: &'a FaultPlan,
+        max_shards: usize,
+    ) -> FaultyTransport<'a> {
+        let m = max_shards.max(1);
+        FaultyTransport {
+            inner,
+            plan,
+            max_shards: m,
+            attempts: (0..m * m).map(|_| AtomicU64::new(0)).collect(),
+            parked: (0..m).map(|_| Mutex::new(Vec::new())).collect(),
+            forced: AtomicU64::new(0),
+        }
+    }
+
+    /// How many messages the delivery timeout forced through after
+    /// [`MAX_SEND_ATTEMPTS`] consecutive drops.
+    pub fn forced_deliveries(&self) -> u64 {
+        self.forced.load(Ordering::Relaxed)
+    }
+}
+
+impl ShardTransport for FaultyTransport<'_> {
+    fn send(&self, msg: HistShardMsg) {
+        assert!(
+            msg.from_shard < self.max_shards && msg.to_shard < self.max_shards,
+            "shard id out of range for this FaultyTransport"
+        );
+        let site = FaultSite::shard_send(msg.from_shard, msg.to_shard);
+        let pair = msg.from_shard * self.max_shards + msg.to_shard;
+        let mut backoff = Backoff::new();
+        let mut drops = 0u64;
+        loop {
+            let attempt = self.attempts[pair].fetch_add(1, Ordering::Relaxed);
+            match self.plan.apply(site, attempt) {
+                FaultAction::Drop => {
+                    drops += 1;
+                    if drops >= MAX_SEND_ATTEMPTS {
+                        // delivery timeout: stop retrying, force through
+                        self.forced.fetch_add(1, Ordering::Relaxed);
+                        self.inner.send(msg);
+                        return;
+                    }
+                    backoff.idle();
+                }
+                FaultAction::Duplicate => {
+                    // two live copies now + one stale replay parked for a
+                    // future round's drain
+                    self.inner.send(msg.clone());
+                    self.inner.send(msg.clone());
+                    self.parked[msg.to_shard].lock().unwrap().push((1, msg));
+                    return;
+                }
+                FaultAction::Delay => {
+                    std::thread::sleep(self.plan.delay_for(site, attempt));
+                    self.inner.send(msg);
+                    return;
+                }
+                // Panic never occurs on shard-send sites (see FaultPlan::
+                // decide) — treat it as a clean delivery for exhaustiveness
+                FaultAction::Deliver | FaultAction::Panic => {
+                    self.inner.send(msg);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drain(&self, shard: usize) -> Vec<HistShardMsg> {
+        // release parked replays whose wait expired; age the rest
+        let mut out = Vec::new();
+        {
+            let mut q = self.parked[shard].lock().unwrap();
+            let mut still = Vec::with_capacity(q.len());
+            for (wait, m) in q.drain(..) {
+                if wait == 0 {
+                    out.push(m);
+                } else {
+                    still.push((wait - 1, m));
+                }
+            }
+            *q = still;
+        }
+        out.extend(self.inner.drain(shard));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::sharded::LocalTransport;
+    use crate::tree::histogram::LeafStats;
+    use crate::util::fault::FaultSpec;
+
+    fn msg(from: usize, to: usize, epoch: u64) -> HistShardMsg {
+        HistShardMsg {
+            from_shard: from,
+            to_shard: to,
+            bins: Default::default(),
+            totals: LeafStats::default(),
+            epoch,
+        }
+    }
+
+    #[test]
+    fn every_send_is_delivered_even_at_drop_rate_one() {
+        let inner = LocalTransport::new(2);
+        let plan = FaultPlan::new(
+            1,
+            FaultSpec {
+                drop_rate: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        let t = FaultyTransport::new(&inner, &plan, 2);
+        for i in 0..3u64 {
+            t.send(msg(0, 1, i));
+        }
+        assert_eq!(t.drain(1).len(), 3, "liveness despite 100% drops");
+        assert_eq!(t.forced_deliveries(), 3, "every delivery was forced");
+        let c = plan.counts();
+        assert_eq!(c.drops, 3 * MAX_SEND_ATTEMPTS);
+    }
+
+    #[test]
+    fn duplicates_deliver_twice_now_and_park_a_stale_replay() {
+        let inner = LocalTransport::new(2);
+        let plan = FaultPlan::new(
+            2,
+            FaultSpec {
+                dup_rate: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        let t = FaultyTransport::new(&inner, &plan, 2);
+        t.send(msg(0, 1, 7));
+        assert_eq!(t.drain(1).len(), 2, "two live copies this round");
+        assert_eq!(t.drain(1).len(), 1, "stale replay released next round");
+        assert!(t.drain(1).is_empty());
+        assert_eq!(plan.counts().dups, 1);
+    }
+
+    #[test]
+    fn clean_plan_is_a_passthrough() {
+        let inner = LocalTransport::new(2);
+        let plan = FaultPlan::new(3, FaultSpec::default());
+        let t = FaultyTransport::new(&inner, &plan, 2);
+        t.send(msg(1, 0, 0));
+        t.send(msg(0, 0, 0));
+        assert_eq!(t.drain(0).len(), 2);
+        assert!(plan.trace().is_empty());
+        assert_eq!(t.forced_deliveries(), 0);
+    }
+}

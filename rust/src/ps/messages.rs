@@ -159,6 +159,11 @@ pub struct HistShardMsg {
     pub bins: SparseBins,
     /// Totals over the sender's rows (grad/hess/count sums).
     pub totals: LeafStats,
+    /// Aggregation round this message belongs to. Receivers keep only
+    /// the current round and at most one message per `(from_shard,
+    /// epoch)` — the at-most-once contract that makes the exchange safe
+    /// under retries, duplicates, and stale replays (DESIGN.md §14).
+    pub epoch: u64,
 }
 
 #[cfg(test)]
@@ -247,6 +252,7 @@ mod tests {
             to_shard: 1,
             bins: SparseBins::from_histogram(&h, 4..8),
             totals: h.totals,
+            epoch: 0,
         };
         // totals describe the sender's rows, not the shipped window:
         // count 6 even though the window holds only slots 5 and 6

@@ -27,6 +27,11 @@
 //!   the single-shard path for every shard count. Shard ↔ shard
 //!   communication sits behind [`sharded::ShardTransport`] so a
 //!   multi-process PS swaps the transport, not the logic.
+//! * [`faulty`] — a lossy [`ShardTransport`] wrapper driven by a
+//!   deterministic [`crate::util::FaultPlan`]: per-site drop / duplicate /
+//!   delay with send-side retry under bounded backoff and a delivery
+//!   timeout, proving the aggregation's `(source, epoch)` at-most-once
+//!   contract holds under failure (DESIGN.md §14).
 //! * [`worker`] — the worker loop: pull latest target, build a tree on the
 //!   sampled sub-dataset, push. Workers are mutually blind; only the
 //!   pull/build/push order *within* one worker is serialised, exactly the
@@ -44,12 +49,14 @@
 //! `Arc` snapshot for pulls — publish is O(1) pointer swap, pulls never
 //! block publishes for long.
 
+pub mod faulty;
 pub mod messages;
 pub mod server;
 pub mod shard;
 pub mod sharded;
 pub mod worker;
 
+pub use faulty::FaultyTransport;
 pub use messages::{HistShardMsg, SparseBins, TargetSnapshot, TreePush};
 pub use server::{Board, ServerCore};
 pub use shard::{fused_accept_pass, AcceptInputs, FusedResult, TargetMode};
@@ -57,4 +64,4 @@ pub use sharded::{
     aggregate_sharded, compose_version, sharded_accept_pass, FeaturePartition, LocalTransport,
     RowPartition, ShardTransport, ShardVersions,
 };
-pub use worker::run_worker;
+pub use worker::{run_worker, run_worker_harnessed, WorkerHarness};

@@ -1,6 +1,6 @@
 //! Server side of the PS: state machine + shared board.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
@@ -35,6 +35,10 @@ use super::sharded::{sharded_accept_pass, RowPartition, ShardVersions};
 pub struct Board {
     snapshot: RwLock<Arc<TargetSnapshot>>,
     shutdown: AtomicBool,
+    /// Per-worker liveness counters (supervised runs only — the default
+    /// board allocates none, so the unsupervised worker loop stays
+    /// atomic-free; see [`Board::beat`]).
+    heartbeats: Vec<AtomicU64>,
 }
 
 impl Board {
@@ -43,12 +47,30 @@ impl Board {
         Board {
             snapshot: RwLock::new(Arc::new(TargetSnapshot::empty())),
             shutdown: AtomicBool::new(false),
+            heartbeats: Vec::new(),
         }
     }
 
-    /// Publish a new target version (server only).
-    pub fn publish(&self, s: TargetSnapshot) {
+    /// A board with one heartbeat cell per worker — what the supervised
+    /// async trainer allocates so worker liveness is observable.
+    pub fn with_heartbeats(n_workers: usize) -> Board {
+        Board {
+            heartbeats: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+            ..Board::new()
+        }
+    }
+
+    /// Publish a new target version (server only). Returns `false` and
+    /// leaves the board untouched after shutdown — the poisoned-state
+    /// guard: once a run is stopped, nothing (a racing supervisor, a
+    /// late server loop) can resurrect worker activity by publishing a
+    /// fresh target into it.
+    pub fn publish(&self, s: TargetSnapshot) -> bool {
+        if self.is_shutdown() {
+            return false;
+        }
         *self.snapshot.write().unwrap() = Arc::new(s);
+        true
     }
 
     /// Latest published version. Derived from the snapshot itself (one
@@ -66,14 +88,35 @@ impl Board {
         self.snapshot.read().unwrap().clone()
     }
 
-    /// Flag shutdown; workers observe it on their next poll.
-    pub fn request_shutdown(&self) {
-        self.shutdown.store(true, Ordering::Release);
+    /// Flag shutdown; workers observe it on their next poll. Idempotent:
+    /// returns `true` only for the call that actually transitioned the
+    /// board, so a supervisor retiring a dead worker while the server
+    /// shuts down cannot double-shutdown — later calls are no-ops that
+    /// report `false`.
+    pub fn request_shutdown(&self) -> bool {
+        !self.shutdown.swap(true, Ordering::AcqRel)
     }
 
     /// Whether shutdown has been requested.
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Bump worker `wid`'s heartbeat (one relaxed add per build cycle).
+    /// No-op on a board without heartbeat cells — the default
+    /// unsupervised path never pays the atomic.
+    pub fn beat(&self, wid: usize) {
+        if let Some(cell) = self.heartbeats.get(wid) {
+            cell.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Worker `wid`'s heartbeat count (0 on a board without cells).
+    pub fn heartbeat(&self, wid: usize) -> u64 {
+        self.heartbeats
+            .get(wid)
+            .map(|cell| cell.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 }
 
@@ -589,6 +632,52 @@ mod tests {
             }
         });
         assert_eq!(board.version(), 2_000);
+    }
+
+    fn snapshot_v(version: u64) -> TargetSnapshot {
+        TargetSnapshot {
+            version,
+            grad: Arc::new(vec![0.0; 2]),
+            hess: Arc::new(vec![0.0; 2]),
+            rows: Arc::new(vec![0, 1]),
+        }
+    }
+
+    #[test]
+    fn request_shutdown_is_idempotent() {
+        let board = Board::new();
+        assert!(!board.is_shutdown());
+        assert!(board.request_shutdown(), "first call transitions");
+        assert!(board.is_shutdown());
+        assert!(!board.request_shutdown(), "second call is a no-op");
+        assert!(!board.request_shutdown(), "and so is every later one");
+        assert!(board.is_shutdown());
+    }
+
+    #[test]
+    fn publish_after_shutdown_is_refused() {
+        let board = Board::new();
+        assert!(board.publish(snapshot_v(1)));
+        board.request_shutdown();
+        // poisoned-state guard: the stopped board keeps its last target
+        assert!(!board.publish(snapshot_v(2)));
+        assert_eq!(board.version(), 1);
+        assert_eq!(board.pull().version, 1);
+    }
+
+    #[test]
+    fn heartbeats_count_per_worker_and_default_board_has_none() {
+        let plain = Board::new();
+        plain.beat(0); // no cells: silently a no-op
+        assert_eq!(plain.heartbeat(0), 0);
+        let sup = Board::with_heartbeats(2);
+        sup.beat(0);
+        sup.beat(0);
+        sup.beat(1);
+        sup.beat(7); // out of range: ignored
+        assert_eq!(sup.heartbeat(0), 2);
+        assert_eq!(sup.heartbeat(1), 1);
+        assert_eq!(sup.heartbeat(7), 0);
     }
 
     #[test]

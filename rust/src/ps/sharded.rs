@@ -304,6 +304,15 @@ impl ShardTransport for LocalTransport {
 /// never of scheduling. Equals the dense `Histogram::build` over all of
 /// `rows` bin-for-bin: exactly when per-slot f64 sums are exact (integer
 /// -valued targets), within grouping rounding otherwise (module docs).
+///
+/// Retry safety: every payload is stamped with `epoch` (the caller's
+/// aggregation round) and receivers keep at most one message per
+/// `(from_shard, epoch)` — messages from other rounds are discarded and
+/// same-round duplicates deduped before merging. A lossy transport (see
+/// `ps::faulty::FaultyTransport`) may therefore retry, duplicate, or
+/// replay sends without changing the merged histogram; on a clean
+/// transport the filter is a no-op and the result is byte-identical to
+/// the pre-epoch behavior (DESIGN.md §14).
 #[allow(clippy::too_many_arguments)]
 pub fn aggregate_sharded(
     binned: &BinnedDataset,
@@ -314,6 +323,7 @@ pub fn aggregate_sharded(
     featp: &FeaturePartition,
     transport: &dyn ShardTransport,
     exec: &Executor,
+    epoch: u64,
 ) -> Histogram {
     let n_src = rowp.n_shards();
     let n_dst = featp.n_shards();
@@ -346,6 +356,7 @@ pub fn aggregate_sharded(
                     to_shard: dst,
                     bins: SparseBins::from_histogram(&local, featp.slot_range(dst)),
                     totals: local.totals,
+                    epoch,
                 })
                 .collect();
             *batches[src].lock().unwrap() = msgs;
@@ -356,13 +367,17 @@ pub fn aggregate_sharded(
             transport.send(msg);
         }
     }
-    // destination phase: drain, order by sender, merge into the owned
+    // destination phase: drain, keep only the current epoch at most once
+    // per sender (the at-most-once contract — stale replays and retry
+    // duplicates vanish here), order by sender, merge into the owned
     // window; totals fold once per sender (off destination 0's inbox,
     // which every sender addresses)
     let mut out = Histogram::zeros(binned.total_bins());
     for dst in 0..n_dst {
         let mut msgs = transport.drain(dst);
+        msgs.retain(|m| m.epoch == epoch);
         msgs.sort_by_key(|m| m.from_shard);
+        msgs.dedup_by_key(|m| m.from_shard);
         for m in &msgs {
             m.bins.apply_to(&mut out);
             if dst == 0 {
@@ -640,6 +655,7 @@ mod tests {
             to_shard: 0,
             bins: bins.clone(),
             totals: h.totals,
+            epoch: 0,
         });
         assert_eq!(t.bytes_sent(), 0, "self-sends are free");
         t.send(HistShardMsg {
@@ -647,6 +663,7 @@ mod tests {
             to_shard: 1,
             bins: bins.clone(),
             totals: h.totals,
+            epoch: 0,
         });
         assert_eq!(t.bytes_sent(), bins.wire_bytes() as u64);
         assert_eq!(t.drain(0).len(), 1);
@@ -673,7 +690,7 @@ mod tests {
                 let featp = FeaturePartition::new(&binned, feat_shards);
                 let transport = LocalTransport::new(featp.n_shards());
                 let got = aggregate_sharded(
-                    &binned, &rows, &grad, &hess, &rowp, &featp, &transport, &exec,
+                    &binned, &rows, &grad, &hess, &rowp, &featp, &transport, &exec, 0,
                 );
                 let at = format!("{row_shards}x{feat_shards} shards");
                 for slot in 0..binned.total_bins() {

@@ -33,14 +33,37 @@ use std::sync::Arc;
 
 use crate::data::BinnedDataset;
 use crate::tree::{build_tree_feature_parallel, HistogramPool, TreeParams};
+use crate::util::fault::{FaultAction, FaultPlan, FaultSite};
 use crate::util::{Backoff, Executor, Rng, Stopwatch};
 
 use super::messages::TreePush;
 use super::server::Board;
 
+/// Fault/supervision context for one worker *incarnation* — what the
+/// supervised async trainer wires in, and what the default loop runs
+/// without. The default harness (`WorkerHarness::default()`) arms
+/// nothing: no plan, no heartbeats, incarnation 0 — the loop body is
+/// then byte-identical to the pre-supervision worker (two always-false
+/// branches on stack data; no atomics, DESIGN.md §14).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerHarness<'a> {
+    /// Which life of the worker this is (0 = first spawn; each
+    /// supervisor restart increments it and derives a fresh RNG
+    /// identity via [`crate::util::fault::worker_identity_seed`]).
+    pub incarnation: u64,
+    /// Armed fault plan: injected panics at
+    /// `(worker_panic, wid, incarnation)` sites and push faults at
+    /// `(worker_push, wid, incarnation)` sites, keyed by build cycle.
+    pub faults: Option<&'a FaultPlan>,
+    /// Bump the board's per-worker heartbeat each cycle so the
+    /// supervisor can observe liveness.
+    pub heartbeat: bool,
+}
+
 /// Run one worker loop until the board signals shutdown or the push
 /// channel closes. `exec` is the worker-lifetime build executor (see the
-/// module docs). Returns the number of trees pushed.
+/// module docs). Returns the number of trees pushed. Equivalent to
+/// [`run_worker_harnessed`] with the default (unarmed) harness.
 pub fn run_worker(
     worker_id: usize,
     board: &Board,
@@ -50,6 +73,36 @@ pub fn run_worker(
     tx: Sender<TreePush>,
     seed: u64,
 ) -> usize {
+    run_worker_harnessed(
+        worker_id,
+        board,
+        binned,
+        params,
+        exec,
+        tx,
+        seed,
+        &WorkerHarness::default(),
+    )
+}
+
+/// [`run_worker`] with a supervision/fault harness: the same
+/// pull → build → push loop, plus (when armed) a heartbeat per cycle, a
+/// deterministic injected panic check before each build, and
+/// deterministic drop/duplicate/delay faults on each push. Every fault
+/// decision is keyed on `(site, build_cycle)` where the cycle counter
+/// advances only on successful pulls — so the schedule of faults is a
+/// pure function of the plan, not of timing.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_harnessed(
+    worker_id: usize,
+    board: &Board,
+    binned: Arc<BinnedDataset>,
+    params: TreeParams,
+    exec: &Executor,
+    tx: Sender<TreePush>,
+    seed: u64,
+    harness: &WorkerHarness<'_>,
+) -> usize {
     let mut rng = Rng::new(seed ^ (worker_id as u64).wrapping_mul(0xA24B_AED4_963E_E407));
     let mut pushed = 0usize;
     // one pool per worker, held across trees: allocate once, recycle forever
@@ -58,7 +111,13 @@ pub fn run_worker(
     // a raw yield-spin burns a core (and steals cycles from the server
     // producing version 0); parked sleeps cap the cost, reset on success
     let mut backoff = Backoff::new();
+    // build-cycle counter: the per-incarnation attempt index every fault
+    // decision below is keyed on (empty polls don't advance it)
+    let mut cycle = 0u64;
     while !board.is_shutdown() {
+        if harness.heartbeat {
+            board.beat(worker_id);
+        }
         // 1. pull the current L'_random
         let snapshot = board.pull();
         if snapshot.grad.is_empty() {
@@ -67,6 +126,20 @@ pub fn run_worker(
             continue;
         }
         backoff.reset();
+        let this_cycle = cycle;
+        cycle += 1;
+        // injected crash: a pure function of (fault_seed, worker,
+        // incarnation, cycle), so a chaos run's death schedule is
+        // replayable from the plan alone
+        if let Some(plan) = harness.faults {
+            let site = FaultSite::worker_panic(worker_id, harness.incarnation);
+            if plan.apply(site, this_cycle) == FaultAction::Panic {
+                panic!(
+                    "injected fault: worker {worker_id} incarnation {} panics at build cycle {this_cycle}",
+                    harness.incarnation
+                );
+            }
+        }
         // 2. build Tree_t on the sampled sub-dataset (pooled buffers,
         //    executor-backed intra-tree parallelism)
         let mut sw = Stopwatch::new();
@@ -81,15 +154,42 @@ pub fn run_worker(
             &mut pool,
         );
         let build_secs = sw.lap();
-        // 3. send Tree_t to server
+        // 3. send Tree_t to server — possibly faulted
         let push = TreePush {
             worker_id,
             based_on: snapshot.version,
             tree,
             build_secs,
         };
-        if tx.send(push).is_err() {
-            break; // server hung up
+        let push_site = FaultSite::worker_push(worker_id, harness.incarnation);
+        let action = match harness.faults {
+            Some(plan) => plan.apply(push_site, this_cycle),
+            None => FaultAction::Deliver,
+        };
+        match action {
+            FaultAction::Drop => {
+                // the tree is lost in flight; build the next one
+                continue;
+            }
+            FaultAction::Duplicate => {
+                // the server sees the same tree twice (the second copy is
+                // stale on arrival and stresses the accept path)
+                if tx.send(push.clone()).is_err() || tx.send(push).is_err() {
+                    break; // server hung up
+                }
+            }
+            FaultAction::Delay => {
+                let plan = harness.faults.expect("delay decided without a plan");
+                std::thread::sleep(plan.delay_for(push_site, this_cycle));
+                if tx.send(push).is_err() {
+                    break; // server hung up
+                }
+            }
+            FaultAction::Deliver | FaultAction::Panic => {
+                if tx.send(push).is_err() {
+                    break; // server hung up
+                }
+            }
         }
         pushed += 1;
     }
@@ -239,6 +339,56 @@ mod tests {
             for p in &got {
                 p.tree.validate().unwrap();
             }
+        });
+    }
+
+    #[test]
+    fn harnessed_worker_beats_heartbeats_and_panics_on_schedule() {
+        use crate::util::fault::{FaultPlan, FaultSpec};
+
+        let ds = synthetic::realsim_like(120, 4);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, 16).unwrap());
+        let board = Board::with_heartbeats(1);
+        board.publish(board_with_target(&ds, &binned).pull().as_ref().clone());
+        // panic_rate 1.0: incarnation 0 must die at build cycle 0, before
+        // pushing anything — the deterministic crash the supervisor catches
+        let plan = FaultPlan::new(
+            13,
+            FaultSpec {
+                panic_rate: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        std::thread::scope(|s| {
+            let board_ref = &board;
+            let b = binned.clone();
+            let plan_ref = &plan;
+            let h = s.spawn(move || {
+                let params = TreeParams {
+                    max_leaves: 4,
+                    ..Default::default()
+                };
+                let exec = Executor::scoped(1);
+                let harness = WorkerHarness {
+                    incarnation: 0,
+                    faults: Some(plan_ref),
+                    heartbeat: true,
+                };
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_worker_harnessed(0, board_ref, b, params, &exec, tx, 5, &harness)
+                }))
+            });
+            let outcome = h.join().unwrap();
+            let payload = outcome.expect_err("rigged worker must panic");
+            let msg = payload.downcast_ref::<String>().unwrap();
+            assert!(msg.contains("worker 0"), "panic names the worker: {msg}");
+            assert!(msg.contains("cycle 0"), "panic names the cycle: {msg}");
+            assert!(rx.try_recv().is_err(), "died before any push");
+            assert!(board.heartbeat(0) >= 1, "beat at least once before dying");
+            let trace = plan.trace();
+            assert_eq!(trace.len(), 1, "exactly the injected panic recorded");
+            assert_eq!(trace[0].action, crate::util::FaultAction::Panic);
         });
     }
 }

@@ -64,6 +64,38 @@ impl ClusterSpec {
     }
 }
 
+/// Worker failure model for the churn simulation
+/// (`simulate_async_ps_churn`): exponentially-distributed failures at a
+/// mean time between failures, a fixed restart cost per revival, and a
+/// restart budget per worker — the simulator mirror of the trainer's
+/// `worker_restarts` supervision (DESIGN.md §14).
+#[derive(Debug, Clone, Copy)]
+pub struct FailureModel {
+    /// Mean time between failures per worker (seconds); infinite = no
+    /// failures ever.
+    pub mtbf_secs: f64,
+    /// Downtime per granted restart (detection + respawn + warmup).
+    pub restart_secs: f64,
+    /// Restarts each worker may consume before it retires for good.
+    pub max_restarts: usize,
+}
+
+impl FailureModel {
+    /// No failures: churn simulation reduces exactly to the base model.
+    pub fn none() -> FailureModel {
+        FailureModel {
+            mtbf_secs: f64::INFINITY,
+            restart_secs: 0.0,
+            max_restarts: 0,
+        }
+    }
+
+    /// Whether this model ever injects a failure.
+    pub fn is_active(&self) -> bool {
+        self.mtbf_secs.is_finite()
+    }
+}
+
 /// Single-node phase times + message sizes: the calibration inputs every
 /// simulated system shares.
 #[derive(Debug, Clone, Copy)]
@@ -184,6 +216,18 @@ mod tests {
         };
         let mut rng = Rng::new(2);
         assert_eq!(spec.jitter(&mut rng), 1.0);
+    }
+
+    #[test]
+    fn failure_model_none_is_inactive() {
+        let fm = FailureModel::none();
+        assert!(!fm.is_active());
+        let real = FailureModel {
+            mtbf_secs: 30.0,
+            restart_secs: 2.0,
+            max_restarts: 3,
+        };
+        assert!(real.is_active());
     }
 
     #[test]

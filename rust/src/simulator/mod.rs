@@ -24,6 +24,12 @@
 //! the critical path — the cost model behind the sharded PS's
 //! staleness-distribution tests.
 //!
+//! A fifth, [`simulate_async_ps_churn`], runs the asynch-SGBDT model
+//! under a worker [`FailureModel`] (exponential MTBF + restart cost +
+//! restart budget) — the simulator mirror of the trainer's fault
+//! injection and supervision (DESIGN.md §14), predicting trees/sec under
+//! churn and stalling short when every worker retires.
+//!
 //! Phase-time inputs are *calibrated from real single-node measurements*
 //! (`PhaseTimes::calibrate`) taken from this crate's own trainers, so the
 //! simulated shapes inherit the real compute/communication ratios.
@@ -32,9 +38,9 @@ pub mod cluster;
 pub mod models;
 pub mod speedup;
 
-pub use cluster::{ClusterSpec, NetworkSpec, PhaseTimes};
+pub use cluster::{ClusterSpec, FailureModel, NetworkSpec, PhaseTimes};
 pub use models::{
-    simulate_async_ps, simulate_dimboost, simulate_lightgbm_fp, simulate_sharded_ps,
-    simulate_sharded_ps_trace, SimResult,
+    simulate_async_ps, simulate_async_ps_churn, simulate_dimboost, simulate_lightgbm_fp,
+    simulate_sharded_ps, simulate_sharded_ps_trace, SimResult,
 };
 pub use speedup::{eq13_upper_bound, speedup_sweep, SpeedupRow, SystemKind};

@@ -5,14 +5,16 @@ use std::collections::BinaryHeap;
 
 use crate::util::Rng;
 
-use super::cluster::{ClusterSpec, PhaseTimes};
+use super::cluster::{ClusterSpec, FailureModel, PhaseTimes};
 
 /// Result of simulating one training run.
 #[derive(Debug, Clone, Copy)]
 pub struct SimResult {
     /// Wall-clock seconds until the target tree count was reached.
     pub wall_secs: f64,
-    /// Trees accepted (== requested n_trees).
+    /// Trees accepted. Equal to the requested n_trees for every model
+    /// except [`simulate_async_ps_churn`], where a run whose workers all
+    /// retire (restart budgets exhausted) stalls short.
     pub n_trees: usize,
     /// Mean realised staleness (async only; 0 for sync systems).
     pub mean_staleness: f64,
@@ -142,6 +144,123 @@ pub fn simulate_sharded_ps_trace(
         bottleneck_frac: server_busy_total / last_done.max(1e-12),
     };
     (result, trace)
+}
+
+/// Per-worker churn state for [`simulate_async_ps_churn`]: pending
+/// failure times, remaining restart budgets and the failure RNG stream
+/// (separate from the jitter stream, so arming churn never perturbs the
+/// base model's build-time draws).
+struct ChurnState<'a> {
+    fm: &'a FailureModel,
+    next_fail: Vec<f64>,
+    lives: Vec<usize>,
+    frng: Rng,
+}
+
+impl ChurnState<'_> {
+    /// When does `wid`'s cycle starting at `start` actually finish?
+    /// Every failure inside the cycle loses the in-progress tree and
+    /// restarts the cycle after the restart cost — until the cycle fits
+    /// between failures (`Some(end)`) or the worker's restart budget
+    /// runs out mid-cycle (`None`: the worker retires).
+    fn cycle_end(&mut self, wid: usize, mut start: f64, cycle_secs: f64) -> Option<f64> {
+        loop {
+            if self.next_fail[wid] >= start + cycle_secs {
+                return Some(start + cycle_secs);
+            }
+            if self.lives[wid] == 0 {
+                return None;
+            }
+            self.lives[wid] -= 1;
+            start = self.next_fail[wid] + self.fm.restart_secs;
+            self.next_fail[wid] = start + self.fm.mtbf_secs * self.frng.exponential();
+        }
+    }
+}
+
+/// [`simulate_async_ps`] under worker churn: each worker fails with
+/// exponentially-distributed inter-failure times (mean
+/// `failure.mtbf_secs`), loses its in-progress tree, pays
+/// `failure.restart_secs` of downtime per granted restart, and retires
+/// once its `failure.max_restarts` budget is spent — the simulator
+/// mirror of the trainer's supervision loop, predicting trees/sec under
+/// churn (DESIGN.md §14). An inactive model ([`FailureModel::none`])
+/// reduces to the base model *exactly* (same RNG stream, same events).
+/// If every worker retires, the run stalls short: the result's
+/// `n_trees` is the accepted count, not the request.
+pub fn simulate_async_ps_churn(
+    spec: &ClusterSpec,
+    times: &PhaseTimes,
+    n_trees: usize,
+    failure: &FailureModel,
+) -> SimResult {
+    if !failure.is_active() {
+        return simulate_async_ps(spec, times, n_trees);
+    }
+    let mut rng = Rng::new(spec.seed);
+    let mut frng = Rng::new(spec.seed ^ 0xFA11);
+    let w = spec.n_workers.max(1);
+    let pull = spec.net.xfer(times.target_bytes);
+    let push = spec.net.xfer(times.tree_bytes);
+    let mut churn = ChurnState {
+        fm: failure,
+        next_fail: (0..w)
+            .map(|_| failure.mtbf_secs * frng.exponential())
+            .collect(),
+        lives: vec![failure.max_restarts; w],
+        frng,
+    };
+
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let to_key = |t: f64| (t * 1e9) as u64;
+    let from_key = |k: u64| k as f64 / 1e9;
+
+    for wid in 0..w {
+        let cycle = pull + times.build_secs * spec.jitter(&mut rng) + push;
+        if let Some(t) = churn.cycle_end(wid, 0.0, cycle) {
+            heap.push(Reverse((to_key(t), wid)));
+        }
+    }
+
+    let mut server_free = 0.0f64;
+    let mut server_busy_total = 0.0f64;
+    let mut accepted = 0usize;
+    let mut last_done = 0.0f64;
+    let mut version_at_start = vec![0u64; w];
+    let mut version = 0u64;
+    let mut staleness_sum = 0.0f64;
+
+    while accepted < n_trees {
+        // an empty heap means every worker retired: stall short
+        let Some(Reverse((tk, wid))) = heap.pop() else {
+            break;
+        };
+        let arrive = from_key(tk);
+        let start = arrive.max(server_free);
+        let service = times.apply_secs + times.target_secs;
+        let done = start + service;
+        server_free = done;
+        server_busy_total += service;
+        accepted += 1;
+        staleness_sum += (version - version_at_start[wid]) as f64;
+        version += 1;
+        last_done = done;
+        if accepted >= n_trees {
+            break;
+        }
+        version_at_start[wid] = version;
+        let cycle = pull + times.build_secs * spec.jitter(&mut rng) + push;
+        if let Some(t) = churn.cycle_end(wid, arrive, cycle) {
+            heap.push(Reverse((to_key(t), wid)));
+        }
+    }
+
+    SimResult {
+        wall_secs: last_done,
+        n_trees: accepted,
+        mean_staleness: staleness_sum / accepted.max(1) as f64,
+        bottleneck_frac: server_busy_total / last_done.max(1e-12),
+    }
 }
 
 /// Asynch-SGBDT on a `ps_shards`-way sharded parameter server: the
@@ -341,6 +460,76 @@ mod tests {
         dense.sparse_touch_frac = 1.0;
         let d8 = simulate_sharded_ps(&spec(128), &dense, 300, 8).trees_per_sec();
         assert!(d8 < single, "dense 8-shard exchange should lose: {d8:.1} vs {single:.1}");
+    }
+
+    #[test]
+    fn churn_with_no_failures_is_the_base_model_exactly() {
+        let t = PhaseTimes::realsim_like();
+        let base = simulate_async_ps(&spec(8), &t, 80);
+        let churn = simulate_async_ps_churn(&spec(8), &t, 80, &FailureModel::none());
+        assert_eq!(base.wall_secs, churn.wall_secs);
+        assert_eq!(base.mean_staleness, churn.mean_staleness);
+        assert_eq!(base.n_trees, churn.n_trees);
+    }
+
+    #[test]
+    fn churn_lowers_throughput_monotonically() {
+        // shorter MTBF → more lost trees + more restart downtime →
+        // fewer trees/sec; the restart budget is generous so no worker
+        // retires and every run still delivers all requested trees
+        let t = PhaseTimes::realsim_like();
+        let fm = |mtbf: f64| FailureModel {
+            mtbf_secs: mtbf,
+            restart_secs: 1.0,
+            max_restarts: 1000,
+        };
+        let clean = simulate_async_ps_churn(&spec(8), &t, 100, &FailureModel::none());
+        let mild = simulate_async_ps_churn(&spec(8), &t, 100, &fm(2.0));
+        let harsh = simulate_async_ps_churn(&spec(8), &t, 100, &fm(0.5));
+        assert_eq!(mild.n_trees, 100);
+        assert_eq!(harsh.n_trees, 100);
+        assert!(
+            clean.trees_per_sec() > mild.trees_per_sec(),
+            "mild churn should cost throughput: {} vs {}",
+            clean.trees_per_sec(),
+            mild.trees_per_sec()
+        );
+        assert!(
+            mild.trees_per_sec() > harsh.trees_per_sec(),
+            "harsher churn should cost more: {} vs {}",
+            mild.trees_per_sec(),
+            harsh.trees_per_sec()
+        );
+    }
+
+    #[test]
+    fn churn_retires_workers_and_stalls_short() {
+        // failures arrive every ~1 ms against a ~0.6 s build: no cycle
+        // ever completes, each worker burns its one restart and retires,
+        // and the run reports the trees it actually accepted (none)
+        let t = PhaseTimes::realsim_like();
+        let fm = FailureModel {
+            mtbf_secs: 1e-3,
+            restart_secs: 0.1,
+            max_restarts: 1,
+        };
+        let r = simulate_async_ps_churn(&spec(4), &t, 50, &fm);
+        assert!(r.n_trees < 50, "all workers retired, got {} trees", r.n_trees);
+    }
+
+    #[test]
+    fn churn_is_deterministic_under_seed() {
+        let t = PhaseTimes::realsim_like();
+        let fm = FailureModel {
+            mtbf_secs: 1.5,
+            restart_secs: 0.5,
+            max_restarts: 10,
+        };
+        let a = simulate_async_ps_churn(&spec(8), &t, 60, &fm);
+        let b = simulate_async_ps_churn(&spec(8), &t, 60, &fm);
+        assert_eq!(a.wall_secs, b.wall_secs);
+        assert_eq!(a.n_trees, b.n_trees);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Deterministic fault injection (DESIGN.md §14).
+//!
+//! A [`FaultPlan`] decides, for every *(site, attempt)* key, whether the
+//! action at that key is delivered cleanly or suffers an injected fault
+//! (drop / duplicate / delay on message sites, panic on worker sites).
+//! Decisions come from [`CounterRng::keyed`] on
+//! `(fault_seed, site_code, attempt)` — a pure function of the key, with
+//! no sequential RNG state — so a chaos run is exactly replayable: the
+//! same seed and the same exercised keys produce the same faults, no
+//! matter how threads interleave. The plan also records every injected
+//! fault into a trace ([`FaultPlan::trace`]) that tests diff across runs
+//! and the run report surfaces.
+//!
+//! With `fault_seed` unset no plan exists at all: the trainers skip the
+//! wrapper types entirely and the hot path carries zero fault-layer
+//! atomics (see `coordinator/async_trainer.rs`).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::{CounterRng, RandStream};
+
+/// Which class of injection site a fault key addresses. The kind is the
+/// high bits of the site code, so streams never collide across kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FaultKind {
+    /// A `HistShardMsg` send on the shard transport (index packs
+    /// `from_shard << 16 | to_shard`).
+    ShardSend,
+    /// A worker's tree push into the server channel (index packs
+    /// `worker_id << 16 | incarnation`).
+    WorkerPush,
+    /// A worker build cycle that may panic (index packs
+    /// `worker_id << 16 | incarnation`).
+    WorkerPanic,
+}
+
+impl FaultKind {
+    /// Stable numeric code (the high 16 bits of a site code).
+    pub fn code(self) -> u64 {
+        match self {
+            FaultKind::ShardSend => 1,
+            FaultKind::WorkerPush => 2,
+            FaultKind::WorkerPanic => 3,
+        }
+    }
+
+    /// Human-readable kind name (trace rendering).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::ShardSend => "shard_send",
+            FaultKind::WorkerPush => "worker_push",
+            FaultKind::WorkerPanic => "worker_panic",
+        }
+    }
+}
+
+/// One injection site: a kind plus a packed entity index. Together with
+/// an attempt counter it forms the full key every decision is derived
+/// from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FaultSite {
+    /// The site class.
+    pub kind: FaultKind,
+    /// Packed entity index (see [`FaultKind`] for each kind's packing).
+    pub index: u64,
+}
+
+impl FaultSite {
+    /// The transport site for messages from `from_shard` to `to_shard`.
+    pub fn shard_send(from_shard: usize, to_shard: usize) -> FaultSite {
+        FaultSite {
+            kind: FaultKind::ShardSend,
+            index: ((from_shard as u64) << 16) | to_shard as u64,
+        }
+    }
+
+    /// The push site for one worker incarnation.
+    pub fn worker_push(worker_id: usize, incarnation: u64) -> FaultSite {
+        FaultSite {
+            kind: FaultKind::WorkerPush,
+            index: ((worker_id as u64) << 16) | incarnation,
+        }
+    }
+
+    /// The panic site for one worker incarnation.
+    pub fn worker_panic(worker_id: usize, incarnation: u64) -> FaultSite {
+        FaultSite {
+            kind: FaultKind::WorkerPanic,
+            index: ((worker_id as u64) << 16) | incarnation,
+        }
+    }
+
+    /// The site's `CounterRng` stream: kind in the high bits, packed
+    /// index below — distinct sites never share a key stream.
+    pub fn stream(self) -> u64 {
+        (self.kind.code() << 48) | self.index
+    }
+}
+
+/// What the plan decided for one *(site, attempt)* key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultAction {
+    /// No fault: the action proceeds normally.
+    Deliver,
+    /// The message is lost (the sender retries with a fresh attempt).
+    Drop,
+    /// The message is delivered twice now plus a stale replay later —
+    /// exercising both same-epoch dedup and the cross-epoch filter.
+    Duplicate,
+    /// The message is delivered after a bounded injected latency.
+    Delay,
+    /// The worker incarnation panics at this build cycle.
+    Panic,
+}
+
+impl FaultAction {
+    /// Human-readable action name (trace rendering).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultAction::Deliver => "deliver",
+            FaultAction::Drop => "drop",
+            FaultAction::Duplicate => "duplicate",
+            FaultAction::Delay => "delay",
+            FaultAction::Panic => "panic",
+        }
+    }
+}
+
+/// One recorded injected fault: the key it fired at and what happened.
+/// Clean deliveries are not recorded (the trace holds faults only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// The site the fault fired at.
+    pub site: FaultSite,
+    /// The attempt counter value at that site.
+    pub attempt: u64,
+    /// The injected action (never [`FaultAction::Deliver`]).
+    pub action: FaultAction,
+}
+
+/// Fault-rate configuration: one decision per message-site key
+/// partitions a single uniform draw into drop / duplicate / delay /
+/// deliver (so the three rates must sum to ≤ 1); worker-panic sites use
+/// `panic_rate` independently.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// Probability a message-site key drops its message.
+    pub drop_rate: f64,
+    /// Probability a message-site key duplicates its message.
+    pub dup_rate: f64,
+    /// Probability a message-site key delays its message.
+    pub delay_rate: f64,
+    /// Probability a worker-panic-site key panics the incarnation.
+    pub panic_rate: f64,
+    /// Upper bound on an injected delay, microseconds.
+    pub max_delay_us: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            drop_rate: 0.0,
+            dup_rate: 0.0,
+            delay_rate: 0.0,
+            panic_rate: 0.0,
+            max_delay_us: 500,
+        }
+    }
+}
+
+/// Tally of a trace by action — what the run report surfaces.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Messages dropped.
+    pub drops: u64,
+    /// Messages duplicated.
+    pub dups: u64,
+    /// Messages delayed.
+    pub delays: u64,
+    /// Worker incarnations panicked.
+    pub panics: u64,
+}
+
+impl FaultCounts {
+    /// Tally a trace.
+    pub fn of(trace: &[FaultEvent]) -> FaultCounts {
+        let mut c = FaultCounts::default();
+        for e in trace {
+            match e.action {
+                FaultAction::Drop => c.drops += 1,
+                FaultAction::Duplicate => c.dups += 1,
+                FaultAction::Delay => c.delays += 1,
+                FaultAction::Panic => c.panics += 1,
+                FaultAction::Deliver => {}
+            }
+        }
+        c
+    }
+
+    /// Total injected faults.
+    pub fn total(&self) -> u64 {
+        self.drops + self.dups + self.delays + self.panics
+    }
+}
+
+/// Salt separating the delay-magnitude draw from the action draw, so
+/// both are independent pure functions of the same *(site, attempt)* key.
+const DELAY_SALT: u64 = 0xDE1A_ED01;
+
+/// Salt for worker-incarnation identity seeds (see
+/// [`worker_identity_seed`]).
+const IDENTITY_SALT: u64 = 0x1DE2_717E;
+
+/// The deterministic fault plan: seed + rates + the trace of every fault
+/// actually injected. Decisions ([`FaultPlan::decide`]) are pure; only
+/// recording ([`FaultPlan::apply`]) touches shared state, behind a mutex
+/// that exists only when faults are armed.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+    trace: Mutex<Vec<FaultEvent>>,
+}
+
+impl FaultPlan {
+    /// A plan from a seed and rates.
+    pub fn new(seed: u64, spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            seed,
+            spec,
+            trace: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The plan's rates.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// The action at one *(site, attempt)* key — a pure function of
+    /// `(seed, site, attempt)`: calling it any number of times, from any
+    /// thread, in any order, yields the same answer. Message sites
+    /// partition a single uniform draw by the cumulative rates;
+    /// worker-panic sites draw an independent Bernoulli at `panic_rate`.
+    pub fn decide(&self, site: FaultSite, attempt: u64) -> FaultAction {
+        let mut rng = CounterRng::keyed(self.seed, site.stream(), attempt);
+        if site.kind == FaultKind::WorkerPanic {
+            return if rng.bernoulli(self.spec.panic_rate) {
+                FaultAction::Panic
+            } else {
+                FaultAction::Deliver
+            };
+        }
+        let u = rng.uniform();
+        if u < self.spec.drop_rate {
+            FaultAction::Drop
+        } else if u < self.spec.drop_rate + self.spec.dup_rate {
+            FaultAction::Duplicate
+        } else if u < self.spec.drop_rate + self.spec.dup_rate + self.spec.delay_rate {
+            FaultAction::Delay
+        } else {
+            FaultAction::Deliver
+        }
+    }
+
+    /// [`decide`](FaultPlan::decide), recording the event into the trace
+    /// when it is a fault. The injection points call this exactly once
+    /// per exercised key, so the trace is the set of exercised keys that
+    /// decided non-`Deliver`.
+    pub fn apply(&self, site: FaultSite, attempt: u64) -> FaultAction {
+        let action = self.decide(site, attempt);
+        if action != FaultAction::Deliver {
+            self.trace.lock().unwrap().push(FaultEvent {
+                site,
+                attempt,
+                action,
+            });
+        }
+        action
+    }
+
+    /// The injected delay at one key — pure, bounded by
+    /// `spec.max_delay_us`, drawn independently of the action decision.
+    pub fn delay_for(&self, site: FaultSite, attempt: u64) -> Duration {
+        let mut rng = CounterRng::keyed(self.seed ^ DELAY_SALT, site.stream(), attempt);
+        Duration::from_micros((rng.uniform() * self.spec.max_delay_us as f64) as u64)
+    }
+
+    /// The recorded fault trace in canonical *(kind, index, attempt)*
+    /// order — identical regardless of the thread interleaving that
+    /// produced it, since each event's content is a pure function of its
+    /// key.
+    pub fn trace(&self) -> Vec<FaultEvent> {
+        let mut t = self.trace.lock().unwrap().clone();
+        t.sort_unstable_by_key(|e| (e.site.kind.code(), e.site.index, e.attempt));
+        t
+    }
+
+    /// Tally of the recorded trace.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts::of(&self.trace())
+    }
+}
+
+/// The RNG seed for one worker incarnation. Incarnation 0 keeps the
+/// run's base seed unchanged (a supervised but fault-free run builds the
+/// same trees as an unsupervised one); each restart derives a fresh
+/// identity from `CounterRng` so a replacement worker never replays its
+/// predecessor's sampling stream.
+pub fn worker_identity_seed(base_seed: u64, worker_id: usize, incarnation: u64) -> u64 {
+    if incarnation == 0 {
+        return base_seed;
+    }
+    CounterRng::keyed(base_seed ^ IDENTITY_SALT, worker_id as u64, incarnation).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FaultSpec {
+        FaultSpec {
+            drop_rate: 0.2,
+            dup_rate: 0.1,
+            delay_rate: 0.1,
+            panic_rate: 0.3,
+            max_delay_us: 200,
+        }
+    }
+
+    fn all_sites() -> Vec<FaultSite> {
+        let mut sites = Vec::new();
+        for from in 0..3 {
+            for to in 0..3 {
+                sites.push(FaultSite::shard_send(from, to));
+            }
+        }
+        for wid in 0..4 {
+            for inc in 0..3 {
+                sites.push(FaultSite::worker_push(wid, inc));
+                sites.push(FaultSite::worker_panic(wid, inc));
+            }
+        }
+        sites
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_the_key() {
+        let a = FaultPlan::new(7, spec());
+        let b = FaultPlan::new(7, spec());
+        let c = FaultPlan::new(8, spec());
+        let mut diverged = false;
+        for site in all_sites() {
+            for attempt in 0..50 {
+                assert_eq!(a.decide(site, attempt), b.decide(site, attempt));
+                // re-asking the same plan never changes the answer
+                assert_eq!(a.decide(site, attempt), a.decide(site, attempt));
+                diverged |= a.decide(site, attempt) != c.decide(site, attempt);
+            }
+        }
+        assert!(diverged, "different seeds should disagree somewhere");
+    }
+
+    #[test]
+    fn all_actions_occur_and_rates_partition_one_draw() {
+        let plan = FaultPlan::new(11, spec());
+        let mut seen = std::collections::HashSet::new();
+        for attempt in 0..500 {
+            seen.insert(plan.decide(FaultSite::shard_send(0, 1), attempt));
+            seen.insert(plan.decide(FaultSite::worker_panic(0, 0), attempt));
+        }
+        for action in [
+            FaultAction::Deliver,
+            FaultAction::Drop,
+            FaultAction::Duplicate,
+            FaultAction::Delay,
+            FaultAction::Panic,
+        ] {
+            assert!(seen.contains(&action), "never saw {}", action.as_str());
+        }
+        // message sites never panic; panic sites never drop
+        for attempt in 0..500 {
+            assert_ne!(
+                plan.decide(FaultSite::shard_send(0, 1), attempt),
+                FaultAction::Panic
+            );
+            let p = plan.decide(FaultSite::worker_panic(0, 0), attempt);
+            assert!(p == FaultAction::Panic || p == FaultAction::Deliver);
+        }
+    }
+
+    #[test]
+    fn zero_rates_never_fault_and_rate_one_always_does() {
+        let off = FaultPlan::new(3, FaultSpec::default());
+        for site in all_sites() {
+            for attempt in 0..100 {
+                assert_eq!(off.decide(site, attempt), FaultAction::Deliver);
+            }
+        }
+        let hard = FaultPlan::new(
+            3,
+            FaultSpec {
+                drop_rate: 1.0,
+                panic_rate: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        assert_eq!(
+            hard.decide(FaultSite::shard_send(1, 0), 9),
+            FaultAction::Drop
+        );
+        assert_eq!(
+            hard.decide(FaultSite::worker_panic(2, 1), 0),
+            FaultAction::Panic
+        );
+    }
+
+    #[test]
+    fn trace_is_canonical_and_replays() {
+        let plan = FaultPlan::new(5, spec());
+        // exercise keys in a deliberately scrambled order
+        for attempt in [7u64, 1, 4, 0, 9, 3] {
+            for site in [
+                FaultSite::worker_push(1, 0),
+                FaultSite::shard_send(2, 0),
+                FaultSite::worker_panic(0, 1),
+            ] {
+                plan.apply(site, attempt);
+            }
+        }
+        let trace = plan.trace();
+        assert!(!trace.is_empty(), "rates high enough to fault somewhere");
+        // canonical order: sorted by (kind, index, attempt)
+        let mut keys: Vec<_> = trace
+            .iter()
+            .map(|e| (e.site.kind.code(), e.site.index, e.attempt))
+            .collect();
+        let sorted = {
+            let mut s = keys.clone();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(keys, sorted);
+        keys.dedup();
+        assert_eq!(keys.len(), trace.len(), "each key recorded at most once");
+        // replay: re-deciding every traced key reproduces its action
+        for e in &trace {
+            assert_eq!(plan.decide(e.site, e.attempt), e.action);
+        }
+        // counts tally the trace
+        let c = plan.counts();
+        assert_eq!(c.total() as usize, trace.len());
+    }
+
+    #[test]
+    fn delays_are_bounded_and_pure() {
+        let plan = FaultPlan::new(6, spec());
+        for attempt in 0..50 {
+            let d = plan.delay_for(FaultSite::shard_send(0, 1), attempt);
+            assert!(d.as_micros() <= 200);
+            assert_eq!(d, plan.delay_for(FaultSite::shard_send(0, 1), attempt));
+        }
+    }
+
+    #[test]
+    fn identity_seeds_fresh_per_incarnation() {
+        assert_eq!(worker_identity_seed(42, 3, 0), 42);
+        let a = worker_identity_seed(42, 3, 1);
+        let b = worker_identity_seed(42, 3, 2);
+        let c = worker_identity_seed(42, 2, 1);
+        assert_ne!(a, 42);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, worker_identity_seed(42, 3, 1));
+    }
+}

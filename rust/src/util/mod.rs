@@ -1,14 +1,16 @@
 //! Small shared utilities: deterministic RNGs (sequential + counter-based),
-//! idle backoff, the persistent scoring thread pool, timing, streaming
-//! stats.
+//! idle backoff, the persistent scoring thread pool, deterministic fault
+//! injection, timing, streaming stats.
 
 pub mod backoff;
+pub mod fault;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
 pub use backoff::Backoff;
+pub use fault::{FaultAction, FaultCounts, FaultEvent, FaultKind, FaultPlan, FaultSite, FaultSpec};
 pub use pool::{Executor, PoolMode, ScorePool};
 pub use rng::{CounterRng, RandStream, Rng};
 pub use stats::Summary;

@@ -515,7 +515,7 @@ fn prop_sparse_shard_aggregation_equals_dense_build() {
                 let featp = FeaturePartition::new(b, feat_shards);
                 let transport = LocalTransport::new(featp.n_shards());
                 let got = aggregate_sharded(
-                    b, &rows, &fx.grad, &fx.hess, &rowp, &featp, &transport, &exec,
+                    b, &rows, &fx.grad, &fx.hess, &rowp, &featp, &transport, &exec, 0,
                 );
                 let at = format!("{row_shards}x{feat_shards} shards");
                 prop_assert!(got.totals == dense.totals, "totals diverged ({at})");
