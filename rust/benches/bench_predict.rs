@@ -2,7 +2,10 @@
 //! enum walk on the same forest — the two halves of the PR 2 ablation,
 //! isolated from training. Also measures the server's single-tree apply
 //! primitive (Algorithm 3 step 2), which is what bounds accepted
-//! trees/sec once workers outpace the server.
+//! trees/sec once workers outpace the server, and the `microbatch/*`
+//! sweep: per-call cost of scoring (and request-time binning) 1/8/64/512
+//! rows — the measured basis of the serving `serve_batch` knob
+//! (DESIGN.md §15).
 use asgbdt::bench_harness::Runner;
 use asgbdt::data::{synthetic, BinnedDataset};
 use asgbdt::experiments::Scale;
@@ -84,6 +87,24 @@ fn main() {
                 || score::add_tree_binned(&ft, &b, v, &mut fv, &exec, &mut pool),
             );
         }
+    }
+
+    // micro-batch sweep: what one serving-sized call costs. Score and
+    // request-time binning are measured separately — their ratio at each
+    // size is what the serve_batch knob trades against queue wait.
+    let cuts = b.cuts();
+    let exec1 = Executor::scoped(1);
+    for per_call in [1usize, 8, 64, 512] {
+        let idx: Vec<usize> = (0..per_call).map(|i| i % ds.n_rows()).collect();
+        let sub = ds.x.select_rows(&idx);
+        let batch = cuts.bin_batch(&sub).unwrap();
+        let mut margins = Vec::new();
+        r.bench(&format!("microbatch/score_rows{per_call}"), || {
+            flat.predict_binned_into(&batch, &mut margins, &exec1, &mut pool)
+        });
+        r.bench(&format!("microbatch/bin_rows{per_call}"), || {
+            cuts.bin_batch(&sub).unwrap()
+        });
     }
     r.write_csv().unwrap();
 }

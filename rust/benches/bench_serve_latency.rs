@@ -1,0 +1,141 @@
+//! Closed-loop serving bench: p50/p99 request latency and throughput of
+//! the `serve` subsystem across micro-batch size × scoring-thread
+//! count, with one model hot-swap published mid-stream in every run (so
+//! the measured path includes the swap protocol, not an idealized
+//! single-model loop). Each config replays the same synthetic request
+//! stream through [`asgbdt::serve::drive_replay`] — the same driver
+//! `asgbdt serve` and the hot-swap tests use.
+//!
+//! Emits the machine-readable snapshot
+//! `results/BENCH_serve_latency.json` (per-config p50/p99 seconds and
+//! requests/sec) and verifies it parses back. `cargo bench --bench
+//! bench_serve_latency -- --test` runs the same sweep on a tiny budget
+//! — the CI smoke mode.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use asgbdt::bench_harness::{BenchConfig, Runner};
+use asgbdt::data::{synthetic, BinnedDataset};
+use asgbdt::forest::{FlatForest, Forest};
+use asgbdt::io::Json;
+use asgbdt::loss::logistic;
+use asgbdt::serve::{drive_replay, ModelSlot, ServeOptions, Service};
+use asgbdt::tree::{build_tree_pooled, HistogramPool, TreeParams};
+use asgbdt::util::{PoolMode, Rng, Summary};
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let mut r = Runner::new("serve_latency");
+    if test_mode {
+        r = r.with_config(BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.05,
+            min_iters: 1,
+            max_iters: 2,
+        });
+    }
+    let n_rows = if test_mode { 1_200 } else { 6_000 };
+    let n_trees = if test_mode { 6 } else { 40 };
+    let n_requests = if test_mode { 240 } else { 4_000 };
+
+    // a boosted forest over the replayed stream's own cuts (the same
+    // construction as bench_predict, smaller)
+    let ds = synthetic::realsim_like(n_rows, 7);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let w = vec![1.0f32; ds.n_rows()];
+    let mut f = vec![0.0f32; ds.n_rows()];
+    let mut forest = Forest::new(0.0);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let params = TreeParams {
+        max_leaves: 32,
+        feature_rate: 0.8,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(3);
+    let mut hpool = HistogramPool::new(b.total_bins());
+    for _ in 0..n_trees {
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let t = build_tree_pooled(&b, &rows, &gh.grad, &gh.hess, &params, &mut rng, &mut hpool);
+        for (fr, row) in f.iter_mut().zip(0..ds.n_rows()) {
+            *fr += 0.1 * t.predict_binned(&b, row);
+        }
+        forest.push(0.1, t);
+    }
+    let flat = FlatForest::from_forest(&forest);
+    let cuts = b.cuts();
+    println!(
+        "serving {} trees, {} requests/config over {} rows x {} features",
+        flat.n_trees(),
+        n_requests,
+        ds.n_rows(),
+        ds.n_features()
+    );
+
+    // the acceptance sweep: >= 3 batch sizes x >= 2 thread counts, one
+    // hot-swap per run (republishing the same forest — the swap cost
+    // without a model change)
+    let mut configs: BTreeMap<String, Json> = BTreeMap::new();
+    for &batch in &[1usize, 8, 64] {
+        for &threads in &[1usize, 2] {
+            let slot = Arc::new(ModelSlot::new(flat.clone(), cuts.clone()));
+            let opts = ServeOptions {
+                batch,
+                max_wait: Duration::from_micros(200),
+                threads,
+                pool: PoolMode::Persistent,
+            };
+            let service = Service::start(Arc::clone(&slot), opts);
+            let swap = Some((n_requests / 2, flat.clone(), cuts.clone()));
+            let inflight = (batch * 2).max(8);
+            let outcome = drive_replay(&service, &ds.x, n_requests, inflight, swap).unwrap();
+            let stats = service.shutdown();
+            assert_eq!(stats.requests as usize, n_requests, "(b{batch}_t{threads})");
+            // requests submitted after the publish must carry the new tag
+            assert!(
+                outcome.version_of.iter().any(|&v| v == 2),
+                "hot-swap never observed (b{batch}_t{threads})"
+            );
+            let lat = Summary::of(&outcome.latency_secs);
+            let rps = n_requests as f64 / outcome.wall_secs.max(1e-12);
+            r.record(&format!("serve/b{batch}_t{threads}/p50_latency"), lat.p50);
+            r.record(&format!("serve/b{batch}_t{threads}/p99_latency"), lat.p99);
+            let rps_name = format!("serve/b{batch}_t{threads}/throughput_rps (1/x)");
+            r.record(&rps_name, 1.0 / rps);
+            println!(
+                "  b{batch}_t{threads}: p50 {:.1}us p99 {:.1}us | {:.0} req/s, {} batches (max {})",
+                lat.p50 * 1e6,
+                lat.p99 * 1e6,
+                rps,
+                stats.batches,
+                stats.max_batch
+            );
+            configs.insert(
+                format!("b{batch}_t{threads}"),
+                Json::obj(vec![
+                    ("batch", Json::Num(batch as f64)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("p50_latency_s", Json::Num(lat.p50)),
+                    ("p99_latency_s", Json::Num(lat.p99)),
+                    ("throughput_rps", Json::Num(rps)),
+                    ("batches", Json::Num(stats.batches as f64)),
+                    ("max_batch", Json::Num(stats.max_batch as f64)),
+                ]),
+            );
+        }
+    }
+    r.write_csv().unwrap();
+    let path = r.write_json(vec![("configs", Json::Obj(configs))]).unwrap();
+    let back = Json::parse_file(&path).unwrap();
+    assert_eq!(back.req_str("group").unwrap(), "serve_latency");
+    assert!(!back.req("results").unwrap().as_arr().unwrap().is_empty());
+    let cfgs = back.req("configs").unwrap().as_obj().unwrap();
+    assert_eq!(cfgs.len(), 6, "3 batch sizes x 2 thread counts");
+    for (name, c) in cfgs {
+        for key in ["p50_latency_s", "p99_latency_s", "throughput_rps"] {
+            assert!(c.req_f64(key).unwrap().is_finite(), "{name}.{key}");
+        }
+    }
+    println!("-- snapshot {} parses back", path.display());
+}

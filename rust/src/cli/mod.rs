@@ -13,6 +13,10 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("train", "train a model (mode=async|sync|serial) on a data spec"),
     ("predict", "score a saved model on a data spec"),
     (
+        "serve",
+        "batched low-latency prediction service with model hot-swap (mode=serve)",
+    ),
+    (
         "experiment",
         "reproduce a paper figure (fig4..fig10, ablation, all)",
     ),

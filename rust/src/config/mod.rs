@@ -32,6 +32,9 @@ pub enum TrainMode {
     Sync,
     /// Strictly serial reference.
     Serial,
+    /// No trainer at all: load a saved forest (`serve_model`) and run
+    /// the batched prediction service (`serve/`, DESIGN.md §15).
+    Serve,
 }
 
 impl TrainMode {
@@ -41,7 +44,8 @@ impl TrainMode {
             "async" => Ok(TrainMode::Async),
             "sync" => Ok(TrainMode::Sync),
             "serial" => Ok(TrainMode::Serial),
-            other => bail!("unknown mode '{other}' (async|sync|serial)"),
+            "serve" => Ok(TrainMode::Serve),
+            other => bail!("unknown mode '{other}' (async|sync|serial|serve)"),
         }
     }
 
@@ -51,6 +55,7 @@ impl TrainMode {
             TrainMode::Async => "async",
             TrainMode::Sync => "sync",
             TrainMode::Serial => "serial",
+            TrainMode::Serve => "serve",
         }
     }
 }
@@ -185,6 +190,20 @@ pub struct TrainConfig {
     pub worker_restarts: u64,
     /// Where `make artifacts` put the HLO modules.
     pub artifact_dir: PathBuf,
+    /// Serving micro-batch size: how many queued requests one scoring
+    /// call coalesces (`serve/queue.rs`). Only read under `mode=serve` —
+    /// training paths construct no serve machinery.
+    pub serve_batch: usize,
+    /// How long (microseconds) a non-full micro-batch waits for late
+    /// arrivals before scoring anyway. The latency/throughput trade:
+    /// 0 legal only with `serve_batch=1`.
+    pub serve_max_wait_us: u64,
+    /// Scoring executor width for the service's server-lifetime
+    /// `Executor` (the serving twin of `score_threads`).
+    pub serve_threads: usize,
+    /// Forest to serve, as saved by `asgbdt train --model` (`io/json.rs`
+    /// dump). Required under `mode=serve`; `none` resets.
+    pub serve_model: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -214,6 +233,10 @@ impl Default for TrainConfig {
             fault_panic_rate: 0.0,
             worker_restarts: 0,
             artifact_dir: PathBuf::from("artifacts"),
+            serve_batch: 64,
+            serve_max_wait_us: 200,
+            serve_threads: 1,
+            serve_model: None,
         }
     }
 }
@@ -256,6 +279,12 @@ impl TrainConfig {
         if self.build_threads == 0 {
             bail!("build_threads must be >= 1");
         }
+        if self.serve_batch == 0 {
+            bail!("serve_batch must be >= 1 (rows coalesced per scoring call)");
+        }
+        if self.serve_threads == 0 {
+            bail!("serve_threads must be >= 1");
+        }
         // Cross-field checks: name BOTH conflicting knobs and the fix, so
         // a rejected run tells the user which one to turn (DESIGN.md §11
         // has the full decision table).
@@ -273,6 +302,23 @@ impl TrainConfig {
                  build_threads) — set workers=N (to widen sync tree builds) or \
                  mode=async|serial (to keep build_threads)",
                 self.build_threads
+            );
+        }
+        if self.serve_batch > 1 && self.serve_max_wait_us == 0 {
+            bail!(
+                "conflicting knobs serve_batch={} and serve_max_wait_us=0: a coalescing \
+                 micro-batch needs a wait budget to ever fill — set serve_max_wait_us=N \
+                 (to let batches coalesce) or serve_batch=1 (to score every request \
+                 alone, no wait)",
+                self.serve_batch
+            );
+        }
+        if self.mode == TrainMode::Serve && self.serve_model.is_none() {
+            bail!(
+                "conflicting knobs mode=serve and serve_model=none: the serving mode \
+                 scores a trained forest, not a trainer — set serve_model=path/to/model.json \
+                 (as saved by `asgbdt train --model`) or mode=async|sync|serial (to train \
+                 instead)"
             );
         }
         let rates = [
@@ -379,6 +425,16 @@ impl TrainConfig {
             "fault_panic_rate" => self.fault_panic_rate = value.parse()?,
             "worker_restarts" => self.worker_restarts = value.parse()?,
             "artifact_dir" => self.artifact_dir = PathBuf::from(value),
+            "serve_batch" => self.serve_batch = value.parse()?,
+            "serve_max_wait_us" => self.serve_max_wait_us = value.parse()?,
+            "serve_threads" => self.serve_threads = value.parse()?,
+            "serve_model" => {
+                self.serve_model = if value == "none" {
+                    None
+                } else {
+                    Some(PathBuf::from(value))
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -428,6 +484,19 @@ impl TrainConfig {
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.display().to_string()),
+            ),
+            ("serve_batch", Json::Num(self.serve_batch as f64)),
+            (
+                "serve_max_wait_us",
+                Json::Num(self.serve_max_wait_us as f64),
+            ),
+            ("serve_threads", Json::Num(self.serve_threads as f64)),
+            (
+                "serve_model",
+                self.serve_model
+                    .as_ref()
+                    .map(|p| Json::Str(p.display().to_string()))
+                    .unwrap_or(Json::Null),
             ),
         ])
     }
@@ -684,6 +753,85 @@ mod tests {
             msg.contains("fault_drop_rate") && msg.contains("fault_delay_rate"),
             "error must name the rates, got: {msg}"
         );
+    }
+
+    #[test]
+    fn serve_knobs_default_to_inert_and_roundtrip() {
+        // training configs must not change shape: the serve knobs exist
+        // with defaults that validate, but nothing on a training path
+        // reads them (the §15 zero-cost guarantee)
+        let c = TrainConfig::default();
+        assert_eq!(c.serve_batch, 64);
+        assert_eq!(c.serve_max_wait_us, 200);
+        assert_eq!(c.serve_threads, 1);
+        assert_eq!(c.serve_model, None);
+        c.validate().unwrap();
+        let mut c = TrainConfig::default();
+        c.set("serve_batch", "16").unwrap();
+        c.set("serve_max_wait_us", "500").unwrap();
+        c.set("serve_threads", "2").unwrap();
+        c.set("serve_model", "models/f.json").unwrap();
+        let back = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.serve_batch, 16);
+        assert_eq!(back.serve_max_wait_us, 500);
+        assert_eq!(back.serve_threads, 2);
+        assert_eq!(back.serve_model, Some(PathBuf::from("models/f.json")));
+        // the CLI reset spelling mirrors max_staleness/fault_seed
+        c.set("serve_model", "none").unwrap();
+        assert_eq!(c.serve_model, None);
+    }
+
+    #[test]
+    fn serve_zero_knobs_are_rejected_by_name() {
+        let mut c = TrainConfig::default();
+        c.serve_batch = 0;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(msg.contains("serve_batch"), "got: {msg}");
+        let mut c = TrainConfig::default();
+        c.serve_threads = 0;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(msg.contains("serve_threads"), "got: {msg}");
+    }
+
+    #[test]
+    fn serve_batch_without_wait_names_both_knobs() {
+        // a multi-row batch with a zero wait budget can never coalesce —
+        // reject the pair instead of silently degrading to singles
+        let mut c = TrainConfig::default();
+        c.serve_batch = 32;
+        c.serve_max_wait_us = 0;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("serve_batch=32") && msg.contains("serve_max_wait_us=0"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("serve_batch=1"), "error must name the fix, got: {msg}");
+        // either side moving resolves it
+        c.serve_batch = 1;
+        c.validate().unwrap();
+        c.serve_batch = 32;
+        c.serve_max_wait_us = 100;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_mode_without_model_names_both_knobs() {
+        let mut c = TrainConfig::default();
+        c.mode = TrainMode::Serve;
+        assert_eq!(c.serve_model, None);
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("mode=serve") && msg.contains("serve_model=none"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("serve_model=path"), "error must name the fix, got: {msg}");
+        c.serve_model = Some(PathBuf::from("model.json"));
+        c.validate().unwrap();
+        // and a model path without serve mode is fine (train then serve
+        // from one config file)
+        let mut c = TrainConfig::default();
+        c.serve_model = Some(PathBuf::from("model.json"));
+        c.validate().unwrap();
     }
 
     #[test]

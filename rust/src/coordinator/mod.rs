@@ -16,7 +16,7 @@ pub use report::TrainReport;
 pub use serial_trainer::train_serial;
 pub use sync_trainer::train_sync;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{TrainConfig, TrainMode};
 use crate::data::Dataset;
@@ -27,5 +27,9 @@ pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Resu
         TrainMode::Async => train_async(cfg, train, test),
         TrainMode::Sync => train_sync(cfg, train, test),
         TrainMode::Serial => train_serial(cfg, train, test),
+        TrainMode::Serve => bail!(
+            "mode=serve is not a trainer — run `asgbdt serve --model path/to/model.json` \
+             (serve::Service scores a saved forest; see DESIGN.md §15)"
+        ),
     }
 }

@@ -179,6 +179,160 @@ impl BinnedDataset {
             Err(_) => self.mappers[feat as usize].zero_bin,
         }
     }
+
+    /// Extract the training-derived cuts (mappers + offsets) without the
+    /// training matrix — everything request-time binning needs. The
+    /// serving layer (`serve/`) carries one [`BinCuts`] next to each
+    /// model so arriving raw feature vectors quantize onto exactly the
+    /// bins the trees were built against.
+    pub fn cuts(&self) -> BinCuts {
+        BinCuts {
+            mappers: self.mappers.clone(),
+            offsets: self.offsets.clone(),
+        }
+    }
+}
+
+/// Training-derived quantizer state detached from the training matrix:
+/// the per-feature [`BinMapper`]s plus the flat-histogram offsets.
+///
+/// Until this type existed only whole training matrices could be binned
+/// ([`BinnedDataset::from_csr`] derives fresh cuts from the data it
+/// bins). `BinCuts` re-applies *existing* cuts to new rows —
+/// [`BinCuts::bin_row`] for a single raw feature vector at request time,
+/// [`BinCuts::bin_batch`] for a matrix — producing the same `(feature,
+/// bin)` pattern training-time binning of the same rows would have
+/// produced (property-tested in `tests/test_properties.rs`). That makes
+/// the output directly scoreable by the bin-space engines
+/// ([`crate::tree::FlatTree::partition_binned`]): a tree split `bin_of(v)
+/// <= bin` decides identically to its raw-space twin `v <= upper_of(bin)`
+/// because both sides come from the same mapper.
+#[derive(Debug, Clone)]
+pub struct BinCuts {
+    mappers: Vec<BinMapper>,
+    offsets: Vec<usize>,
+}
+
+impl BinCuts {
+    /// Number of features the cuts were derived from.
+    pub fn n_features(&self) -> usize {
+        self.mappers.len()
+    }
+
+    /// Total flat histogram size (sum of per-feature bins).
+    pub fn total_bins(&self) -> usize {
+        *self.offsets.last().unwrap_or(&0)
+    }
+
+    /// The per-feature quantizers.
+    pub fn mappers(&self) -> &[BinMapper] {
+        &self.mappers
+    }
+
+    /// The shared row-binning core: validates and quantizes one row's
+    /// `(feature, value)` pairs, appending to `feat_out`/`bin_out`.
+    ///
+    /// Rejections (malformed serving input): feature ids not strictly
+    /// increasing, or non-finite values. Feature ids at or beyond
+    /// [`BinCuts::n_features`] are silently *dropped* instead: no tree
+    /// built on these cuts ever tests such a feature, so dropping is
+    /// exactly what the raw-space scorer's "never asked for" behaviour
+    /// does — and it keeps requests from models of a different width
+    /// scoreable across a hot-swap.
+    fn bin_row_inner<I>(&self, row: I, feat_out: &mut Vec<u32>, bin_out: &mut Vec<u8>) -> Result<()>
+    where
+        I: Iterator<Item = (u32, f32)>,
+    {
+        let mut prev: Option<u32> = None;
+        for (c, v) in row {
+            if let Some(p) = prev {
+                if c <= p {
+                    bail!("feature ids must be strictly increasing: id {c} after {p}");
+                }
+            }
+            prev = Some(c);
+            if !v.is_finite() {
+                bail!("non-finite value {v} for feature {c}");
+            }
+            if let Some(m) = self.mappers.get(c as usize) {
+                feat_out.push(c);
+                bin_out.push(m.bin_of(v));
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantize one raw sparse row (strictly increasing feature ids,
+    /// finite values) onto the cuts, appending `(feature, bin)` pairs to
+    /// the output buffers. Malformed rows (unordered ids, non-finite
+    /// values) fail; ids at or beyond [`BinCuts::n_features`] are
+    /// silently dropped — no tree built on these cuts ever tests them.
+    pub fn bin_row(
+        &self,
+        row: &[(u32, f32)],
+        feat_out: &mut Vec<u32>,
+        bin_out: &mut Vec<u8>,
+    ) -> Result<()> {
+        self.bin_row_inner(row.iter().copied(), feat_out, bin_out)
+    }
+
+    /// A zero-row [`BinnedDataset`] carrying these cuts, ready for
+    /// [`BinCuts::fill_batch`]. The serving loop builds one per model and
+    /// refills it per micro-batch, so the mapper clone is paid once per
+    /// hot-swap rather than once per batch.
+    pub fn empty_batch(&self) -> BinnedDataset {
+        BinnedDataset {
+            mappers: self.mappers.clone(),
+            indptr: vec![0],
+            feat_ids: Vec::new(),
+            bins: Vec::new(),
+            offsets: self.offsets.clone(),
+            n_rows: 0,
+            n_features: self.n_features(),
+        }
+    }
+
+    /// Rebin a batch of raw rows into a reusable [`BinCuts::empty_batch`]
+    /// scratch in place (the serving hot path — steady state allocates
+    /// nothing beyond buffer growth). Fails on the first malformed row;
+    /// the scratch is left cleared-but-partial, safe to refill.
+    pub fn fill_batch(&self, rows: &[&[(u32, f32)]], into: &mut BinnedDataset) -> Result<()> {
+        assert_eq!(
+            into.n_features,
+            self.n_features(),
+            "batch scratch was built from different cuts"
+        );
+        debug_assert_eq!(into.offsets, self.offsets);
+        into.indptr.clear();
+        into.indptr.push(0);
+        into.feat_ids.clear();
+        into.bins.clear();
+        into.n_rows = 0;
+        for row in rows {
+            self.bin_row_inner(row.iter().copied(), &mut into.feat_ids, &mut into.bins)?;
+            into.indptr.push(into.feat_ids.len());
+        }
+        into.n_rows = rows.len();
+        Ok(())
+    }
+
+    /// Quantize a whole raw CSR matrix on these cuts into a standalone
+    /// [`BinnedDataset`] — the same sparsity pattern and bin ids
+    /// training-time binning of the same matrix produces (the
+    /// `tests/test_properties.rs` equivalence), without re-deriving any
+    /// cut from the data.
+    pub fn bin_batch(&self, x: &CsrMatrix) -> Result<BinnedDataset> {
+        let mut out = self.empty_batch();
+        out.indptr.reserve(x.n_rows());
+        out.feat_ids.reserve(x.nnz());
+        out.bins.reserve(x.nnz());
+        for r in 0..x.n_rows() {
+            self.bin_row_inner(x.row(r), &mut out.feat_ids, &mut out.bins)?;
+            out.indptr.push(out.feat_ids.len());
+        }
+        out.n_rows = x.n_rows();
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -256,5 +410,89 @@ mod tests {
         let b2 = m.bin_of(2.0);
         let b3 = m.bin_of(3.0);
         assert!(b1 < b2 && b2 < b3);
+    }
+
+    fn sample_binned() -> (CsrMatrix, BinnedDataset) {
+        let x = CsrMatrix::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 5.0)],
+                vec![(1, 2.0)],
+                vec![(0, 3.0), (1, 4.0), (2, 6.0)],
+            ],
+        )
+        .unwrap();
+        let b = BinnedDataset::from_csr(&x, 16).unwrap();
+        (x, b)
+    }
+
+    #[test]
+    fn cuts_rebin_the_training_matrix_identically() {
+        let (x, b) = sample_binned();
+        let cuts = b.cuts();
+        assert_eq!(cuts.n_features(), b.n_features);
+        assert_eq!(cuts.total_bins(), b.total_bins());
+        let again = cuts.bin_batch(&x).unwrap();
+        assert_eq!(again.indptr, b.indptr);
+        assert_eq!(again.feat_ids, b.feat_ids);
+        assert_eq!(again.bins, b.bins);
+        assert_eq!(again.offsets, b.offsets);
+        assert_eq!(again.n_rows, b.n_rows);
+    }
+
+    #[test]
+    fn bin_row_matches_batch_and_drops_unknown_features() {
+        let (_, b) = sample_binned();
+        let cuts = b.cuts();
+        let (mut feats, mut bins) = (Vec::new(), Vec::new());
+        cuts.bin_row(&[(0, 3.0), (1, 4.0), (2, 6.0)], &mut feats, &mut bins)
+            .unwrap();
+        assert_eq!(feats, vec![0, 1, 2]);
+        assert_eq!(bins, (0..3).map(|f| b.bin_of(2, f)).collect::<Vec<u8>>());
+        // ids beyond the cuts' width are dropped, not an error — a tree
+        // built on these cuts never tests them
+        feats.clear();
+        bins.clear();
+        cuts.bin_row(&[(1, 2.0), (9, 1.0)], &mut feats, &mut bins)
+            .unwrap();
+        assert_eq!(feats, vec![1]);
+        assert_eq!(bins, vec![b.bin_of(1, 1)]);
+        // the empty row bins to the empty pattern (all-implicit zeros)
+        feats.clear();
+        bins.clear();
+        cuts.bin_row(&[], &mut feats, &mut bins).unwrap();
+        assert!(feats.is_empty() && bins.is_empty());
+    }
+
+    #[test]
+    fn bin_row_rejects_malformed_requests() {
+        let (_, b) = sample_binned();
+        let cuts = b.cuts();
+        let (mut feats, mut bins) = (Vec::new(), Vec::new());
+        let dup = cuts.bin_row(&[(1, 2.0), (1, 3.0)], &mut feats, &mut bins);
+        assert!(dup.unwrap_err().to_string().contains("strictly increasing"));
+        let unordered = cuts.bin_row(&[(2, 2.0), (0, 3.0)], &mut feats, &mut bins);
+        assert!(unordered.is_err());
+        let nan = cuts.bin_row(&[(0, f32::NAN)], &mut feats, &mut bins);
+        assert!(nan.unwrap_err().to_string().contains("non-finite"));
+    }
+
+    #[test]
+    fn fill_batch_reuses_scratch_across_refills() {
+        let (x, b) = sample_binned();
+        let cuts = b.cuts();
+        let mut scratch = cuts.empty_batch();
+        assert_eq!(scratch.n_rows, 0);
+        let rows: Vec<Vec<(u32, f32)>> = (0..x.n_rows()).map(|r| x.row(r).collect()).collect();
+        let refs: Vec<&[(u32, f32)]> = rows.iter().map(|r| r.as_slice()).collect();
+        cuts.fill_batch(&refs, &mut scratch).unwrap();
+        assert_eq!(scratch.indptr, b.indptr);
+        assert_eq!(scratch.bins, b.bins);
+        // refill with a different shape: state fully replaced
+        cuts.fill_batch(&refs[1..2], &mut scratch).unwrap();
+        assert_eq!(scratch.n_rows, 1);
+        assert_eq!(scratch.indptr, vec![0, 1]);
+        assert_eq!(scratch.bin_of(0, 1), b.bin_of(1, 1));
+        assert_eq!(scratch.bin_of(0, 0), b.mappers[0].zero_bin);
     }
 }

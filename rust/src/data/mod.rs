@@ -13,6 +13,6 @@ pub mod sparse;
 pub mod stats;
 pub mod synthetic;
 
-pub use binning::{BinMapper, BinnedDataset};
+pub use binning::{BinCuts, BinMapper, BinnedDataset};
 pub use dataset::Dataset;
 pub use sparse::CsrMatrix;

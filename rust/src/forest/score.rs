@@ -335,14 +335,33 @@ impl FlatForest {
         exec: &Executor,
         pool: &mut ScratchPool,
     ) -> Vec<f32> {
-        let mut f = vec![0.0f32; b.n_rows];
-        drive_blocks(&mut f, exec, pool, |start, chunk, scratch| {
+        let mut f = Vec::new();
+        self.predict_binned_into(b, &mut f, exec, pool);
+        f
+    }
+
+    /// [`FlatForest::predict_all_binned`] into a caller-owned buffer
+    /// (cleared and resized to `b.n_rows`). The serving loop
+    /// (`serve/service.rs`) scores every micro-batch through this so the
+    /// steady state allocates no fresh margin vector per batch. Each
+    /// row's margin is base + per-tree leaf adds in push order,
+    /// independent of block layout — so micro-batched scoring is
+    /// bit-identical to whole-matrix scoring of the same rows.
+    pub fn predict_binned_into(
+        &self,
+        b: &BinnedDataset,
+        out: &mut Vec<f32>,
+        exec: &Executor,
+        pool: &mut ScratchPool,
+    ) {
+        out.clear();
+        out.resize(b.n_rows, 0.0);
+        drive_blocks(out, exec, pool, |start, chunk, scratch| {
             chunk.fill(self.base_score);
             for (v, t) in &self.trees {
                 add_block_binned(t, b, *v, start, chunk, scratch);
             }
         });
-        f
     }
 }
 

@@ -43,6 +43,7 @@ pub mod metrics;
 pub mod ps;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod simulator;
 pub mod testkit;
 pub mod tree;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! asgbdt train [--data <spec>] [--test-frac 0.2] [--model out.json] [k=v ...]
+//! asgbdt serve --model model.json [--data <spec>] [--requests N] [--swap-at N]
 //! asgbdt experiment <fig4..fig10|ablation|all> [--scale smoke|paper] [--out results]
 //! asgbdt simulate [--workload realsim|e2006] [--workers 1,2,...] [--trees N]
 //! asgbdt datagen <realsim|higgs|e2006> <n_rows> <out.svm> [--seed N]
@@ -12,19 +13,23 @@
 //! `--data` spec: `synthetic:realsim:20000`, `synthetic:higgs:60000`,
 //! `synthetic:e2006:8000`, or a path to an svmlight file.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use asgbdt::cli::Args;
-use asgbdt::config::TrainConfig;
+use asgbdt::config::{TrainConfig, TrainMode};
 use asgbdt::coordinator;
-use asgbdt::data::{synthetic, Dataset};
+use asgbdt::data::{synthetic, BinnedDataset, Dataset};
 use asgbdt::experiments::{self, Scale};
+use asgbdt::forest::FlatForest;
 use asgbdt::io::svmlight;
 use asgbdt::runtime::Manifest;
+use asgbdt::serve::{drive_replay, ModelSlot, ServeOptions, Service};
 use asgbdt::simulator::{speedup_sweep, PhaseTimes};
-use asgbdt::util::Rng;
+use asgbdt::util::{Rng, Summary};
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -39,6 +44,7 @@ fn run(raw: &[String]) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "simulate" => cmd_simulate(&args),
         "datagen" => cmd_datagen(&args),
@@ -61,6 +67,8 @@ USAGE:
   asgbdt train [--data <spec>] [--test-frac F] [--config cfg.json]
                [--model out.json] [--curve out.csv] [key=value ...]
   asgbdt predict --model model.json --data <spec> [--out preds.csv]
+  asgbdt serve --model model.json [--data <spec>] [--requests N] [--inflight N]
+               [--swap-at N] [--swap-model other.json] [key=value ...]
   asgbdt experiment <fig4..fig10|ablation|all> [--scale smoke|paper] [--out DIR]
   asgbdt simulate [--workload realsim|e2006] [--workers 1,2,4,...] [--trees N]
   asgbdt datagen <realsim|higgs|e2006> <n_rows> <out.svm> [--seed N]
@@ -104,6 +112,16 @@ CONFIG OVERRIDES (key=value):
                                 async worker, with a fresh derived identity per
                                 incarnation; 0 is default — panicked workers
                                 retire and training degrades gracefully)
+  serve_batch=N                (serving micro-batch size: requests coalesced
+                                per scoring call; 64 is default)
+  serve_max_wait_us=N          (how long a non-full micro-batch waits for late
+                                arrivals before scoring anyway; 200 is default,
+                                0 legal only with serve_batch=1)
+  serve_threads=N              (scoring executor width of the service's
+                                server-lifetime pool; 1 is default)
+  serve_model=PATH|none        (forest to serve, as saved by train --model;
+                                required under mode=serve — `asgbdt serve
+                                --model PATH` sets it)
 "#;
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {
@@ -130,6 +148,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     for (k, v) in &args.overrides {
         cfg.set(k, v)?;
+    }
+    if cfg.mode == TrainMode::Serve {
+        // `--mode serve` through the train surface: same entrypoint, no
+        // trainer — hand the full arg set to the serving command
+        return cmd_serve(args);
     }
     cfg.validate()?;
 
@@ -183,6 +206,80 @@ fn cmd_train(args: &Args) -> Result<()> {
             .write_csv(Path::new(path), &format!("{}x{}", cfg.mode.as_str(), cfg.workers))?;
         println!("curve -> {path}");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => TrainConfig::load(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    cfg.set("mode", "serve")?;
+    if let Some(path) = args.opt("model") {
+        cfg.serve_model = Some(PathBuf::from(path));
+    }
+    cfg.validate()?;
+    let model_path = cfg.serve_model.clone().expect("validate requires serve_model");
+    let forest = asgbdt::forest::Forest::load(&model_path)?;
+
+    // the replayed stream: rows of --data become raw requests, and its
+    // quantile cuts are the ones the service bins those requests with
+    let spec = args.opt_or("data", "synthetic:realsim:8000");
+    let ds = load_data(spec, cfg.seed)?;
+    let cuts = BinnedDataset::from_dataset(&ds, cfg.max_bins)?.cuts();
+    let n_requests: usize = args.opt_or("requests", "2000").parse()?;
+    let inflight_default = (cfg.serve_batch * 2).to_string();
+    let inflight: usize = args.opt_or("inflight", &inflight_default).parse()?;
+    let swap_at: Option<usize> = match args.opt("swap-at") {
+        Some(s) => Some(s.parse()?),
+        None => None,
+    };
+    // --swap-model rolls out a different forest mid-stream; without it a
+    // swap republishes the same forest (a rollout of an identical model
+    // — the version tag still advances)
+    let swap_forest = match args.opt("swap-model") {
+        Some(path) => asgbdt::forest::Forest::load(Path::new(path))?,
+        None => forest.clone(),
+    };
+
+    let flat = FlatForest::from_forest(&forest);
+    println!(
+        "serving {} trees (base {:.4}) on {}: batch={} wait={}us threads={} requests={}",
+        flat.n_trees(),
+        flat.base_score,
+        ds.name,
+        cfg.serve_batch,
+        cfg.serve_max_wait_us,
+        cfg.serve_threads,
+        n_requests,
+    );
+    let slot = Arc::new(ModelSlot::new(flat, cuts.clone()));
+    let service = Service::start(Arc::clone(&slot), ServeOptions::from_config(&cfg));
+    let swap = swap_at.map(|at| (at, FlatForest::from_forest(&swap_forest), cuts));
+    let outcome = drive_replay(&service, &ds.x, n_requests, inflight, swap)?;
+    let stats = service.shutdown();
+
+    let lat = Summary::of(&outcome.latency_secs);
+    let rps = n_requests as f64 / outcome.wall_secs.max(1e-12);
+    let mut per_version: BTreeMap<u64, usize> = BTreeMap::new();
+    for &v in &outcome.version_of {
+        *per_version.entry(v).or_insert(0) += 1;
+    }
+    println!(
+        "latency p50 {:.1}us p99 {:.1}us mean {:.1}us | {:.0} req/s over {:.2}s",
+        lat.p50 * 1e6,
+        lat.p99 * 1e6,
+        lat.mean * 1e6,
+        rps,
+        outcome.wall_secs,
+    );
+    println!(
+        "{} micro-batches (max {} rows), {} swap(s) observed; responses per version: {:?}",
+        stats.batches, stats.max_batch, stats.swaps_seen, per_version,
+    );
     Ok(())
 }
 

@@ -1,0 +1,31 @@
+//! Low-latency batched prediction serving with versioned model
+//! hot-swap (DESIGN.md §15).
+//!
+//! The training side of this codebase ends at a saved forest; the
+//! paper's "millions of users" north star needs the other half —
+//! scoring raw feature vectors as they arrive. This subsystem is that
+//! half, built from parts the trainer already has: requests coalesce
+//! into micro-batches ([`queue`]), get quantized at request time on the
+//! training-derived cuts ([`crate::data::BinCuts`]), and are scored by
+//! the blocked [`crate::forest::FlatForest`] engine on a
+//! server-lifetime [`crate::util::Executor`] ([`service`]). Models
+//! hot-swap mid-traffic through [`swap`] — the serving twin of the
+//! parameter server's `Board`, with the same monotone-version
+//! `RwLock<Arc<_>>` publication contract — so every response is tagged
+//! with the forest version that scored it, in-flight batches finish on
+//! the old model, and no batch ever mixes two versions.
+//!
+//! Knobs: `serve_batch` (rows per micro-batch), `serve_max_wait_us`
+//! (coalescing wait), `serve_threads` (scoring width), `serve_model`
+//! (forest to load) — see `config::validate` for the rejected
+//! combinations and DESIGN.md §15 for the decision table. Entry point:
+//! `asgbdt serve`; measurements: `bench_serve_latency` and the
+//! `microbatch/*` group of `bench_predict`.
+
+pub mod queue;
+pub mod service;
+pub mod swap;
+
+pub use queue::{Pending, RequestQueue, ServeRequest, ServeResponse};
+pub use service::{drive_replay, ReplayOutcome, ServeOptions, Service, ServiceStats};
+pub use swap::{ModelSlot, ServingModel};

@@ -1,0 +1,224 @@
+//! The coalescing request queue: many producers submit raw feature
+//! vectors, one batcher thread drains them in micro-batches.
+//!
+//! [`RequestQueue::pop_batch`] implements the two serving knobs: it
+//! blocks until at least one request exists, then keeps waiting — up to
+//! `serve_max_wait_us` — for the batch to fill to `serve_batch` rows
+//! before draining, trading a bounded per-request wait for the much
+//! better per-row cost of blocked batch scoring (measured by the
+//! `microbatch/*` group of `bench_predict`). Closing the queue wakes
+//! everything: producers start failing fast, the consumer drains what
+//! is left (no request submitted before `close` is ever dropped) and
+//! then sees end-of-stream.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// One raw scoring request: caller-chosen id echoed in the response,
+/// plus the sparse feature vector (strictly increasing ids, finite
+/// values — validated at submit time by `Service::submit`).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Caller-chosen correlation id, echoed verbatim in the response.
+    pub id: u64,
+    /// Sparse raw features as `(feature id, value)` pairs.
+    pub features: Vec<(u32, f32)>,
+}
+
+/// One scored response: the margin and the version of the forest that
+/// produced it (every row of a micro-batch carries the same version —
+/// the swap protocol's no-mixed-batch guarantee, `swap.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeResponse {
+    /// The request's correlation id.
+    pub id: u64,
+    /// Raw margin F(x) of the forest that scored this request.
+    pub margin: f32,
+    /// Version of the [`super::ServingModel`] that scored this request.
+    pub model_version: u64,
+}
+
+/// A queued request plus the channel its response goes back on.
+#[derive(Debug)]
+pub struct Pending {
+    /// The request as submitted.
+    pub request: ServeRequest,
+    /// Where the scored response is sent (send errors are ignored — a
+    /// caller that dropped its receiver has abandoned the request).
+    pub reply: Sender<ServeResponse>,
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    pending: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// The MPSC coalescing queue between submitters and the batcher thread.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    state: Mutex<QueueState>,
+    arrived: Condvar,
+}
+
+impl RequestQueue {
+    /// An open, empty queue.
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    /// Enqueue one request (FIFO). Fails once the queue is closed.
+    pub fn push(&self, pending: Pending) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            bail!("serve queue is closed");
+        }
+        st.pending.push_back(pending);
+        drop(st);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    /// Requests currently waiting.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    /// Whether nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: subsequent pushes fail, and once the remaining
+    /// requests are drained `pop_batch` reports end-of-stream.
+    /// Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    /// Drain the next micro-batch (FIFO order) into `out`: block until
+    /// at least one request is queued, then wait up to `max_wait` for
+    /// the batch to fill to `max` rows (a closed queue or a full batch
+    /// cuts the wait short). Returns `false` — with `out` untouched —
+    /// only at end-of-stream: closed and fully drained. Spurious
+    /// condvar wakeups just re-run the checks.
+    pub fn pop_batch(&self, max: usize, max_wait: Duration, out: &mut Vec<Pending>) -> bool {
+        let max = max.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.pending.is_empty() {
+                break;
+            }
+            if st.closed {
+                return false;
+            }
+            st = self.arrived.wait(st).unwrap();
+        }
+        if max > 1 && !max_wait.is_zero() {
+            let deadline = Instant::now() + max_wait;
+            while st.pending.len() < max && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                st = self.arrived.wait_timeout(st, deadline - now).unwrap().0;
+            }
+        }
+        for _ in 0..max.min(st.pending.len()) {
+            out.push(st.pending.pop_front().unwrap());
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn pending(id: u64) -> (Pending, std::sync::mpsc::Receiver<ServeResponse>) {
+        let (tx, rx) = channel();
+        let request = ServeRequest {
+            id,
+            features: vec![(0, 1.0)],
+        };
+        (Pending { request, reply: tx }, rx)
+    }
+
+    #[test]
+    fn pops_in_fifo_order_capped_at_max() {
+        let q = RequestQueue::new();
+        let mut rxs = Vec::new();
+        for id in 0..5 {
+            let (p, rx) = pending(id);
+            q.push(p).unwrap();
+            rxs.push(rx);
+        }
+        assert_eq!(q.len(), 5);
+        let mut out = Vec::new();
+        assert!(q.pop_batch(3, Duration::ZERO, &mut out));
+        assert_eq!(
+            out.iter().map(|p| p.request.id).collect::<Vec<u64>>(),
+            vec![0, 1, 2]
+        );
+        out.clear();
+        assert!(q.pop_batch(3, Duration::ZERO, &mut out));
+        assert_eq!(
+            out.iter().map(|p| p.request.id).collect::<Vec<u64>>(),
+            vec![3, 4]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_fails_pushes_and_drains_then_ends_stream() {
+        let q = RequestQueue::new();
+        q.push(pending(7).0).unwrap();
+        q.close();
+        q.close(); // idempotent
+        assert!(q.push(pending(8).0).is_err());
+        let mut out = Vec::new();
+        assert!(q.pop_batch(16, Duration::from_millis(50), &mut out));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].request.id, 7);
+        out.clear();
+        assert!(!q.pop_batch(16, Duration::from_millis(50), &mut out));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pop_waits_for_late_arrivals_up_to_the_batch_size() {
+        let q = std::sync::Arc::new(RequestQueue::new());
+        let producer = {
+            let q = std::sync::Arc::clone(&q);
+            std::thread::spawn(move || {
+                for id in 0..4 {
+                    q.push(pending(id).0).unwrap();
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        };
+        // generous wait: the consumer should coalesce all 4 even though
+        // they arrive spread out
+        let mut out = Vec::new();
+        assert!(q.pop_batch(4, Duration::from_secs(2), &mut out));
+        assert_eq!(out.len(), 4);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn zero_wait_serves_singles_immediately() {
+        let q = RequestQueue::new();
+        q.push(pending(1).0).unwrap();
+        q.push(pending(2).0).unwrap();
+        let mut out = Vec::new();
+        // max=1: no coalescing wait even with a wait budget
+        assert!(q.pop_batch(1, Duration::from_secs(1), &mut out));
+        assert_eq!(out.len(), 1);
+    }
+}

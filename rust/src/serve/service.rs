@@ -1,0 +1,279 @@
+//! The serving loop: queue → micro-batch → bin → score → respond.
+//!
+//! [`Service::start`] spawns one batcher thread that owns the hot
+//! path's long-lived state — a server-lifetime [`Executor`]
+//! (`serve_threads` workers stay parked between batches under
+//! `pool=persistent`), a [`ScratchPool`], a reusable binned-batch
+//! scratch and a reusable margin buffer — so the steady state does no
+//! thread spawning and no per-batch allocation. Per micro-batch the
+//! loop: drains up to `serve_batch` requests ([`RequestQueue`]),
+//! snapshots the current model *once* ([`ModelSlot::load`] — the swap
+//! point; a publish lands between batches, never inside one), rebins
+//! the raw rows on that model's cuts ([`BinCuts::fill_batch`]), scores
+//! them blocked ([`FlatForest::predict_binned_into`]) and replies with
+//! the margin tagged by the version that scored it.
+//!
+//! [`drive_replay`] is the closed-loop driver shared by `asgbdt serve`,
+//! `bench_serve_latency` and the hot-swap tests: it replays matrix rows
+//! as requests with a bounded in-flight window and records per-request
+//! latency, version tag and margin.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{BinCuts, CsrMatrix};
+use crate::forest::{FlatForest, ScratchPool};
+use crate::util::{Executor, PoolMode};
+
+use super::queue::{Pending, RequestQueue, ServeRequest, ServeResponse};
+use super::swap::ModelSlot;
+
+/// The serving knobs, lifted out of [`TrainConfig`] (see the knob table
+/// in DESIGN.md §15).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Micro-batch size: rows coalesced per scoring call (`serve_batch`).
+    pub batch: usize,
+    /// How long a non-full batch waits for late arrivals
+    /// (`serve_max_wait_us`).
+    pub max_wait: Duration,
+    /// Scoring executor width (`serve_threads`).
+    pub threads: usize,
+    /// Executor flavour for the scoring threads (`pool`).
+    pub pool: PoolMode,
+}
+
+impl ServeOptions {
+    /// Lift the serve knobs from a validated config.
+    pub fn from_config(cfg: &TrainConfig) -> ServeOptions {
+        ServeOptions {
+            batch: cfg.serve_batch,
+            max_wait: Duration::from_micros(cfg.serve_max_wait_us),
+            threads: cfg.serve_threads,
+            pool: cfg.pool,
+        }
+    }
+}
+
+/// Lifetime counters the batcher thread reports at shutdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceStats {
+    /// Requests scored and replied to.
+    pub requests: u64,
+    /// Micro-batches scored.
+    pub batches: u64,
+    /// Largest micro-batch actually coalesced.
+    pub max_batch: usize,
+    /// Model swaps observed by the batcher (publishes that landed while
+    /// traffic was flowing).
+    pub swaps_seen: u64,
+}
+
+/// A running prediction service: the queue handle plus the batcher
+/// thread. Dropping it (or calling [`Service::shutdown`]) closes the
+/// queue, drains what was already submitted and joins the thread.
+#[derive(Debug)]
+pub struct Service {
+    queue: Arc<RequestQueue>,
+    slot: Arc<ModelSlot>,
+    batcher: Option<JoinHandle<ServiceStats>>,
+}
+
+impl Service {
+    /// Spawn the batcher thread serving models published to `slot`.
+    pub fn start(slot: Arc<ModelSlot>, opts: ServeOptions) -> Service {
+        let queue = Arc::new(RequestQueue::new());
+        let batcher = {
+            let queue = Arc::clone(&queue);
+            let slot = Arc::clone(&slot);
+            std::thread::Builder::new()
+                .name("serve-batcher".into())
+                .spawn(move || batcher_loop(&queue, &slot, opts))
+                .expect("spawn serve batcher")
+        };
+        Service {
+            queue,
+            slot,
+            batcher: Some(batcher),
+        }
+    }
+
+    /// The model slot this service scores from — publish here to
+    /// hot-swap mid-traffic.
+    pub fn slot(&self) -> &Arc<ModelSlot> {
+        &self.slot
+    }
+
+    /// Submit one raw request; the scored [`ServeResponse`] arrives on
+    /// `reply`. Validates the feature vector up front (strictly
+    /// increasing ids, finite values) so the batcher never sees a
+    /// malformed row; ids beyond the current model's width are legal and
+    /// ignored at binning time (the width may change across a swap).
+    pub fn submit(
+        &self,
+        id: u64,
+        features: Vec<(u32, f32)>,
+        reply: &Sender<ServeResponse>,
+    ) -> Result<()> {
+        for (i, &(c, v)) in features.iter().enumerate() {
+            if i > 0 && c <= features[i - 1].0 {
+                bail!(
+                    "request {id}: feature ids must be strictly increasing (id {c} after {})",
+                    features[i - 1].0
+                );
+            }
+            if !v.is_finite() {
+                bail!("request {id}: non-finite value {v} for feature {c}");
+            }
+        }
+        self.queue.push(Pending {
+            request: ServeRequest { id, features },
+            reply: reply.clone(),
+        })
+    }
+
+    /// Requests queued but not yet scored.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Stop accepting requests, drain and score everything already
+    /// queued, join the batcher and return its lifetime counters.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.queue.close();
+        let batcher = self.batcher.take().expect("batcher joined once");
+        batcher.join().expect("serve batcher panicked")
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        // shutdown() takes the handle; this covers early drops (tests,
+        // error paths) so the batcher never outlives its owner
+        self.queue.close();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(queue: &RequestQueue, slot: &ModelSlot, opts: ServeOptions) -> ServiceStats {
+    let exec = Executor::new(opts.pool, opts.threads);
+    let mut scratch_pool = ScratchPool::new();
+    let mut stats = ServiceStats::default();
+    let mut model = slot.load();
+    let mut batch = model.cuts.empty_batch();
+    let mut margins: Vec<f32> = Vec::new();
+    let mut pending: Vec<Pending> = Vec::new();
+    loop {
+        pending.clear();
+        if !queue.pop_batch(opts.batch, opts.max_wait, &mut pending) {
+            break;
+        }
+        // the swap point: snapshot the model once per micro-batch, so
+        // every row of this batch — bins and trees both — comes from
+        // exactly one version, and a concurrent publish takes effect at
+        // the next batch boundary
+        let cur = slot.load();
+        if cur.version() != model.version() {
+            batch = cur.cuts.empty_batch();
+            stats.swaps_seen += 1;
+            model = cur;
+        }
+        let mut rows: Vec<&[(u32, f32)]> = Vec::with_capacity(pending.len());
+        for p in &pending {
+            rows.push(p.request.features.as_slice());
+        }
+        model
+            .cuts
+            .fill_batch(&rows, &mut batch)
+            .expect("submit validated every feature vector");
+        model
+            .forest
+            .predict_binned_into(&batch, &mut margins, &exec, &mut scratch_pool);
+        for (p, &margin) in pending.iter().zip(margins.iter()) {
+            // a dropped receiver means the caller abandoned the request
+            let _ = p.reply.send(ServeResponse {
+                id: p.request.id,
+                margin,
+                model_version: model.version(),
+            });
+        }
+        stats.requests += pending.len() as u64;
+        stats.batches += 1;
+        stats.max_batch = stats.max_batch.max(pending.len());
+    }
+    stats
+}
+
+/// What [`drive_replay`] measured, indexed by request id (request `i`
+/// replays source row `i % n_rows`).
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// Wall-clock seconds for the whole replay (throughput basis).
+    pub wall_secs: f64,
+    /// Submit-to-response latency per request, seconds.
+    pub latency_secs: Vec<f64>,
+    /// Version tag each response carried.
+    pub version_of: Vec<u64>,
+    /// Margin each response carried.
+    pub margin_of: Vec<f32>,
+}
+
+/// Replay `n_requests` rows of `source` (round-robin) through a running
+/// service, closed-loop: at most `inflight` requests are outstanding at
+/// once, and each response admits the next submit. `swap` = `Some((at,
+/// forest, cuts))` publishes the new model to the service's slot
+/// immediately before request `at` is submitted (no-op if `at >=
+/// n_requests`) — the mid-stream hot-swap the version-tag tests and the
+/// CI smoke exercise. Used by `asgbdt serve`, `bench_serve_latency` and
+/// `tests/test_serve.rs` so they all measure the same loop.
+pub fn drive_replay(
+    service: &Service,
+    source: &CsrMatrix,
+    n_requests: usize,
+    inflight: usize,
+    swap: Option<(usize, FlatForest, BinCuts)>,
+) -> Result<ReplayOutcome> {
+    let inflight = inflight.max(1);
+    let (tx, rx): (Sender<ServeResponse>, Receiver<ServeResponse>) = channel();
+    let t0 = Instant::now();
+    let mut submitted_at = vec![t0; n_requests];
+    let mut out = ReplayOutcome {
+        wall_secs: 0.0,
+        latency_secs: vec![0.0; n_requests],
+        version_of: vec![0; n_requests],
+        margin_of: vec![0.0; n_requests],
+    };
+    let mut swap = swap;
+    let mut next = 0usize;
+    let mut done = 0usize;
+    let mut outstanding = 0usize;
+    while done < n_requests {
+        while outstanding < inflight && next < n_requests {
+            if swap.as_ref().is_some_and(|(at, _, _)| *at == next) {
+                let (_, forest, cuts) = swap.take().expect("checked above");
+                service.slot().publish(forest, cuts);
+            }
+            let features: Vec<(u32, f32)> = source.row(next % source.n_rows()).collect();
+            submitted_at[next] = Instant::now();
+            service.submit(next as u64, features, &tx)?;
+            outstanding += 1;
+            next += 1;
+        }
+        let resp = rx.recv().context("serve batcher dropped its replies")?;
+        let id = resp.id as usize;
+        out.latency_secs[id] = submitted_at[id].elapsed().as_secs_f64();
+        out.version_of[id] = resp.model_version;
+        out.margin_of[id] = resp.margin;
+        outstanding -= 1;
+        done += 1;
+    }
+    out.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(out)
+}

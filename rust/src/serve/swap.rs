@@ -1,0 +1,144 @@
+//! Versioned model hot-swap: the serving twin of `ps::server::Board`.
+//!
+//! A [`ModelSlot`] holds the current [`ServingModel`] behind
+//! `RwLock<Arc<_>>` — the same publication idiom the parameter server's
+//! `Board` uses for target snapshots, and the same contract: versions
+//! are monotone, a publish is an `Arc` pointer exchange under a
+//! microseconds-long write lock, and readers clone the `Arc` out so the
+//! snapshot they scored against can never be torn or freed under them.
+//! The serving hot path takes the lock exactly once per *micro-batch*
+//! (not per request, and never while scoring), so a swap lands between
+//! batches: in-flight batches finish on the old model, every response
+//! is tagged with the version that actually scored it, and no batch
+//! ever mixes trees from two versions.
+
+use std::sync::{Arc, RwLock};
+
+use crate::data::BinCuts;
+use crate::forest::FlatForest;
+
+/// One immutable published model: a compiled forest, the training cuts
+/// raw requests must be binned with, and the monotone version stamped
+/// into every response it scores.
+#[derive(Debug)]
+pub struct ServingModel {
+    version: u64,
+    /// The compiled forest that scores micro-batches.
+    pub forest: FlatForest,
+    /// The training-derived cuts that quantize raw request rows.
+    pub cuts: BinCuts,
+}
+
+impl ServingModel {
+    /// The monotone version tag (1 for the model a slot starts with,
+    /// incremented by one per [`ModelSlot::publish`]).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+/// The swap point: current model behind `RwLock<Arc<_>>`.
+///
+/// `load` is a read-lock + `Arc` clone; `publish` is a write-lock +
+/// pointer exchange. Neither ever blocks on scoring, because scoring
+/// happens entirely outside the lock on a cloned `Arc`.
+#[derive(Debug)]
+pub struct ModelSlot {
+    current: RwLock<Arc<ServingModel>>,
+}
+
+impl ModelSlot {
+    /// Install the initial model as version 1.
+    pub fn new(forest: FlatForest, cuts: BinCuts) -> ModelSlot {
+        ModelSlot {
+            current: RwLock::new(Arc::new(ServingModel {
+                version: 1,
+                forest,
+                cuts,
+            })),
+        }
+    }
+
+    /// Current model (cheap: read lock + `Arc` clone). The caller keeps
+    /// scoring on this snapshot even if a publish lands concurrently.
+    pub fn load(&self) -> Arc<ServingModel> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Current version without keeping the snapshot. Derived from the
+    /// snapshot itself (no side-channel counter), so it can never tear
+    /// against `load` — same reasoning as `Board::version`.
+    pub fn version(&self) -> u64 {
+        self.current.read().unwrap().version
+    }
+
+    /// Publish a new model, returning its version (`old + 1` — the
+    /// increment happens under the write lock, so versions are monotone
+    /// by construction even under concurrent publishers).
+    pub fn publish(&self, forest: FlatForest, cuts: BinCuts) -> u64 {
+        let mut cur = self.current.write().unwrap();
+        let version = cur.version + 1;
+        *cur = Arc::new(ServingModel {
+            version,
+            forest,
+            cuts,
+        });
+        version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{BinnedDataset, CsrMatrix};
+    use crate::forest::Forest;
+
+    fn fixture() -> (FlatForest, BinCuts) {
+        let x = CsrMatrix::from_dense(4, 2, &[1.0, 0.0, 2.0, 3.0, 0.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = BinnedDataset::from_csr(&x, 8).unwrap();
+        (FlatForest::from_forest(&Forest::new(0.5)), b.cuts())
+    }
+
+    #[test]
+    fn versions_are_monotone_and_snapshots_stable() {
+        let (flat, cuts) = fixture();
+        let slot = ModelSlot::new(flat.clone(), cuts.clone());
+        assert_eq!(slot.version(), 1);
+        let held = slot.load();
+        assert_eq!(held.version(), 1);
+        assert_eq!(slot.publish(flat.clone(), cuts.clone()), 2);
+        assert_eq!(slot.publish(flat, cuts), 3);
+        assert_eq!(slot.version(), 3);
+        // the snapshot loaded before the publishes is untouched
+        assert_eq!(held.version(), 1);
+        assert_eq!(slot.load().version(), 3);
+    }
+
+    #[test]
+    fn concurrent_publishers_never_skip_or_repeat_a_version() {
+        let (flat, cuts) = fixture();
+        let slot = std::sync::Arc::new(ModelSlot::new(flat.clone(), cuts.clone()));
+        let mut seen: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let slot = std::sync::Arc::clone(&slot);
+                    let (f, c) = (flat.clone(), cuts.clone());
+                    s.spawn(move || {
+                        (0..8)
+                            .map(|_| slot.publish(f.clone(), c.clone()))
+                            .collect::<Vec<u64>>()
+                    })
+                })
+                .collect();
+            let mut versions = Vec::new();
+            for h in handles {
+                versions.extend(h.join().unwrap());
+            }
+            versions
+        });
+        seen.sort_unstable();
+        // 32 publishes on top of version 1: exactly 2..=33, no gaps, no dups
+        assert_eq!(seen, (2..=33).collect::<Vec<u64>>());
+        assert_eq!(slot.version(), 33);
+    }
+}

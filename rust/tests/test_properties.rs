@@ -417,6 +417,62 @@ fn prop_binning_preserves_order() {
     });
 }
 
+/// Satellite of the serving layer: request-time binning on extracted
+/// cuts ([`asgbdt::data::BinCuts`]) must reproduce training-time
+/// binning of the same matrix exactly — pattern, bin ids, offsets —
+/// for sparse and dense matrices alike, and row-at-a-time `bin_row`
+/// must agree with the whole-matrix `bin_batch`.
+#[test]
+fn prop_request_time_binning_matches_training_binning() {
+    check("bin_batch_matches_training", 25, 131, |g| {
+        let max_bins = 4 + g.usize_in(0, 60);
+        // sparse: the random CSR the other properties use
+        let sparse = random_dataset(g).x;
+        // dense: every cell populated (from_dense drops exact zeros,
+        // which normal() draws with probability ~0)
+        let dn = 5 + g.usize_in(0, 40);
+        let dd = 2 + g.usize_in(0, 10);
+        let cells: Vec<f32> = (0..dn * dd)
+            .map(|_| g.rng.normal() as f32 * 2.0)
+            .collect();
+        let dense = CsrMatrix::from_dense(dn, dd, &cells).unwrap();
+        for (kind, x) in [("sparse", &sparse), ("dense", &dense)] {
+            let trained =
+                BinnedDataset::from_csr(x, max_bins).map_err(|e| format!("{kind}: {e}"))?;
+            let cuts = trained.cuts();
+            let served = cuts.bin_batch(x).map_err(|e| format!("{kind}: {e}"))?;
+            prop_assert!(served.indptr == trained.indptr, "{kind}: indptr diverged");
+            prop_assert!(served.feat_ids == trained.feat_ids, "{kind}: pattern diverged");
+            prop_assert!(served.bins == trained.bins, "{kind}: bin ids diverged");
+            prop_assert!(served.offsets == trained.offsets, "{kind}: offsets diverged");
+            prop_assert!(served.n_rows == trained.n_rows, "{kind}: row count diverged");
+            // row-at-a-time must agree with the batch, including the
+            // implicit-zero resolution of bin_of
+            let (mut feats, mut bins) = (Vec::new(), Vec::new());
+            for r in 0..x.n_rows() {
+                let row: Vec<(u32, f32)> = x.row(r).collect();
+                feats.clear();
+                bins.clear();
+                cuts.bin_row(&row, &mut feats, &mut bins)
+                    .map_err(|e| format!("{kind}: {e}"))?;
+                let lo = trained.indptr[r];
+                let hi = trained.indptr[r + 1];
+                prop_assert!(
+                    feats[..] == trained.feat_ids[lo..hi] && bins[..] == trained.bins[lo..hi],
+                    "{kind}: bin_row diverged at row {r}"
+                );
+                for f in 0..x.n_cols() as u32 {
+                    prop_assert!(
+                        served.bin_of(r, f) == trained.bin_of(r, f),
+                        "{kind}: bin_of diverged at ({r}, {f})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_dataset_split_preserves_rows() {
     check("split_preserves", 20, 109, |g| {

@@ -1,0 +1,239 @@
+//! Serving-layer integration tests: hot-swap version tagging and
+//! bit-identity of served margins against direct forest scoring, the
+//! batch/thread/pool equivalence sweep, shutdown draining, and request
+//! validation (DESIGN.md §15).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use asgbdt::data::{synthetic, BinCuts, BinnedDataset, CsrMatrix, Dataset};
+use asgbdt::forest::{FlatForest, Forest, ScratchPool};
+use asgbdt::loss::logistic;
+use asgbdt::serve::{drive_replay, ModelSlot, ServeOptions, Service};
+use asgbdt::tree::{build_tree, TreeParams};
+use asgbdt::util::{Executor, PoolMode, Rng};
+
+fn boosted(ds: &Dataset, b: &BinnedDataset, n_trees: usize, seed: u64) -> Forest {
+    let w = vec![1.0f32; ds.n_rows()];
+    let mut f = vec![0.0f32; ds.n_rows()];
+    let mut forest = Forest::new(0.3);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let params = TreeParams {
+        max_leaves: 12,
+        feature_rate: 0.9,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    for _ in 0..n_trees {
+        let gh = logistic::grad_hess_loss(&f, &ds.y, &w);
+        let t = build_tree(b, &rows, &gh.grad, &gh.hess, &params, &mut rng);
+        for r in 0..ds.n_rows() {
+            f[r] += 0.2 * t.predict_binned(b, r);
+        }
+        forest.push(0.2, t);
+    }
+    forest
+}
+
+/// Expected margin per source row under a forest, computed the
+/// reference way: rebin the whole matrix on the serving cuts, score it
+/// in one call. The service scores micro-batched subsets of these rows;
+/// per-row margins are base + per-tree adds in push order, independent
+/// of batch composition, so bit-equality is the requirement, not an
+/// approximation.
+fn reference_margins(flat: &FlatForest, cuts: &BinCuts, x: &CsrMatrix) -> Vec<f32> {
+    let batch = cuts.bin_batch(x).unwrap();
+    let exec = Executor::scoped(1);
+    let mut pool = ScratchPool::new();
+    flat.predict_all_binned(&batch, &exec, &mut pool)
+}
+
+fn opts(batch: usize, threads: usize, pool: PoolMode) -> ServeOptions {
+    ServeOptions {
+        batch,
+        max_wait: Duration::from_micros(500),
+        threads,
+        pool,
+    }
+}
+
+#[test]
+fn hot_swap_mid_stream_tags_versions_and_stays_bit_identical() {
+    let ds = synthetic::realsim_like(900, 31);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let cuts = b.cuts();
+    // two genuinely different forests, so a wrongly-tagged or
+    // mixed-version response cannot produce the right margin by luck
+    let flat_a = FlatForest::from_forest(&boosted(&ds, &b, 5, 1));
+    let flat_b = FlatForest::from_forest(&boosted(&ds, &b, 9, 2));
+    let exp_a = reference_margins(&flat_a, &cuts, &ds.x);
+    let exp_b = reference_margins(&flat_b, &cuts, &ds.x);
+
+    let slot = Arc::new(ModelSlot::new(flat_a, cuts.clone()));
+    let service = Service::start(Arc::clone(&slot), opts(16, 2, PoolMode::Persistent));
+    let n = 600;
+    let swap_at = 300;
+    let inflight = 32;
+    let outcome = drive_replay(
+        &service,
+        &ds.x,
+        n,
+        inflight,
+        Some((swap_at, flat_b, cuts.clone())),
+    )
+    .unwrap();
+    let stats = service.shutdown();
+    assert_eq!(stats.requests as usize, n);
+    assert_eq!(stats.swaps_seen, 1);
+
+    // every response must be bit-identical to scoring its row on the
+    // forest its version tag names — no response mixes two versions
+    for id in 0..n {
+        let row = id % ds.n_rows();
+        let expected = match outcome.version_of[id] {
+            1 => exp_a[row],
+            2 => exp_b[row],
+            v => panic!("request {id} tagged unknown version {v}"),
+        };
+        assert_eq!(
+            outcome.margin_of[id].to_bits(),
+            expected.to_bits(),
+            "request {id} (version {})",
+            outcome.version_of[id]
+        );
+    }
+    // the publish lands before request `swap_at` is submitted: by then
+    // all but `inflight` earlier requests were already answered under
+    // version 1, and everything submitted after must be tagged 2
+    let before = &outcome.version_of[..swap_at];
+    let v1_before = before.iter().filter(|&&v| v == 1).count();
+    assert!(v1_before >= swap_at - inflight);
+    assert!(outcome.version_of[swap_at..].iter().all(|&v| v == 2));
+    // FIFO queue + per-batch versioning: tags are monotone in id order
+    assert!(outcome.version_of.windows(2).all(|w| w[0] <= w[1]));
+}
+
+#[test]
+fn served_margins_bit_identical_across_batch_thread_pool_sweep() {
+    let ds = synthetic::realsim_like(500, 33);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let cuts = b.cuts();
+    let flat = FlatForest::from_forest(&boosted(&ds, &b, 3, 9));
+    let expected = reference_margins(&flat, &cuts, &ds.x);
+    let n = 120;
+    for batch in [1usize, 7, 64] {
+        for threads in [1usize, 2] {
+            for pool in [PoolMode::Persistent, PoolMode::Scoped] {
+                let slot = Arc::new(ModelSlot::new(flat.clone(), cuts.clone()));
+                let service = Service::start(Arc::clone(&slot), opts(batch, threads, pool));
+                let outcome = drive_replay(&service, &ds.x, n, 16, None).unwrap();
+                let stats = service.shutdown();
+                assert_eq!(stats.requests as usize, n);
+                assert_eq!(stats.swaps_seen, 0);
+                for id in 0..n {
+                    assert_eq!(outcome.version_of[id], 1);
+                    assert_eq!(
+                        outcome.margin_of[id].to_bits(),
+                        expected[id % ds.n_rows()].to_bits(),
+                        "batch={batch} threads={threads} pool={pool:?} id={id}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_overwide_rows_score_like_their_binned_equivalents() {
+    let ds = synthetic::realsim_like(400, 35);
+    let b = BinnedDataset::from_dataset(&ds, 32).unwrap();
+    let cuts = b.cuts();
+    let flat = FlatForest::from_forest(&boosted(&ds, &b, 4, 4));
+    let width = ds.n_features() as u32;
+    // reference: the all-implicit-zero row and a real row, binned directly
+    let empty_then_row0 = CsrMatrix::from_rows(
+        ds.n_features(),
+        &[Vec::new(), ds.x.row(0).collect::<Vec<(u32, f32)>>()],
+    )
+    .unwrap();
+    let expected = reference_margins(&flat, &cuts, &empty_then_row0);
+
+    let slot = Arc::new(ModelSlot::new(flat, cuts));
+    let service = Service::start(Arc::clone(&slot), opts(4, 1, PoolMode::Scoped));
+    let (tx, rx) = channel();
+    // an empty feature vector, and row 0 with a trailing feature id the
+    // model was never trained on (legal: dropped at binning time)
+    service.submit(0, Vec::new(), &tx).unwrap();
+    let mut overwide: Vec<(u32, f32)> = ds.x.row(0).collect();
+    overwide.push((width + 5, 3.25));
+    service.submit(1, overwide, &tx).unwrap();
+    let mut got = [0.0f32; 2];
+    for _ in 0..2 {
+        let resp = rx.recv().unwrap();
+        got[resp.id as usize] = resp.margin;
+    }
+    service.shutdown();
+    assert_eq!(got[0].to_bits(), expected[0].to_bits());
+    assert_eq!(got[1].to_bits(), expected[1].to_bits());
+}
+
+#[test]
+fn submit_rejects_malformed_feature_vectors() {
+    let ds = synthetic::realsim_like(300, 37);
+    let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+    let flat = FlatForest::from_forest(&boosted(&ds, &b, 2, 5));
+    let slot = Arc::new(ModelSlot::new(flat, b.cuts()));
+    let service = Service::start(Arc::clone(&slot), opts(1, 1, PoolMode::Scoped));
+    let (tx, rx) = channel();
+    let err = service
+        .submit(1, vec![(3, 1.0), (3, 2.0)], &tx)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("strictly increasing"), "got: {err}");
+    let err = service
+        .submit(2, vec![(5, 1.0), (2, 2.0)], &tx)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("strictly increasing"), "got: {err}");
+    let err = service
+        .submit(3, vec![(0, f32::NAN)], &tx)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("non-finite"), "got: {err}");
+    // rejected requests never reach the queue; a valid one still serves
+    service.submit(4, vec![(0, 1.5)], &tx).unwrap();
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.id, 4);
+    assert_eq!(resp.model_version, 1);
+    service.shutdown();
+}
+
+#[test]
+fn shutdown_drains_already_submitted_requests() {
+    let ds = synthetic::realsim_like(200, 39);
+    let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+    let flat = FlatForest::from_forest(&boosted(&ds, &b, 2, 6));
+    let slot = Arc::new(ModelSlot::new(flat, b.cuts()));
+    // a huge batch with a long wait: without the drain-on-close
+    // guarantee these would sit coalescing when shutdown lands
+    let service = Service::start(
+        Arc::clone(&slot),
+        ServeOptions {
+            batch: 64,
+            max_wait: Duration::from_millis(250),
+            threads: 1,
+            pool: PoolMode::Scoped,
+        },
+    );
+    let (tx, rx) = channel();
+    for id in 0..10u64 {
+        let row: Vec<(u32, f32)> = ds.x.row(id as usize).collect();
+        service.submit(id, row, &tx).unwrap();
+    }
+    let stats = service.shutdown();
+    assert_eq!(stats.requests, 10);
+    let mut ids: Vec<u64> = rx.try_iter().map(|resp| resp.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+}
