@@ -1,0 +1,170 @@
+//! Artifact-vs-JSON model load bench: wall time to get a saved model
+//! back into scoring shape, at 100 / 1k / 10k trees, for the legacy
+//! JSON dump (parse + tree walk + re-flatten) against the `.sgbdt`
+//! artifact (validate manifest + checksums + map the SoA bytes —
+//! DESIGN.md §16). Also measures first-score latency: cold load plus
+//! one scored batch, the "process restart to first prediction" path a
+//! serving rollout actually pays.
+//!
+//! Emits the machine-readable snapshot
+//! `results/BENCH_artifact_load.json` and verifies it parses back.
+//! `cargo bench --bench bench_artifact_load -- --test` runs tiny sizes
+//! — the CI smoke mode.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use asgbdt::bench_harness::{BenchConfig, Runner};
+use asgbdt::data::{synthetic, BinnedDataset, CsrMatrix};
+use asgbdt::forest::{FlatForest, Forest, ScratchPool};
+use asgbdt::io::artifact::{self, hex16, ArtifactMeta};
+use asgbdt::io::Json;
+use asgbdt::tree::{Node, Tree};
+use asgbdt::util::Executor;
+
+/// A valid n-tree forest of varied stumps, synthesized directly — the
+/// load path under test does not care how the trees were grown, and
+/// training 10k trees would dominate the bench's own setup.
+fn synth_forest(n_trees: usize, n_features: usize) -> Forest {
+    let mut f = Forest::new(0.1);
+    for i in 0..n_trees {
+        let feature = (i % n_features) as u32;
+        let threshold = (i % 7) as f32 * 0.5 - 1.0;
+        let v = 0.05 + (i % 3) as f32 * 0.01;
+        f.push(
+            v,
+            Tree {
+                nodes: vec![
+                    Node::Split {
+                        feature,
+                        bin: (i % 5) as u8,
+                        threshold,
+                        left: 1,
+                        right: 2,
+                    },
+                    Node::Leaf {
+                        value: -0.5 - (i % 11) as f32 * 0.01,
+                    },
+                    Node::Leaf {
+                        value: 0.5 + (i % 13) as f32 * 0.01,
+                    },
+                ],
+            },
+        );
+    }
+    f
+}
+
+fn first_score(flat: &FlatForest, x: &CsrMatrix) -> f32 {
+    let exec = Executor::scoped(1);
+    let mut pool = ScratchPool::new();
+    flat.predict_all_raw(x, &exec, &mut pool)[0]
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let mut r = Runner::new("artifact_load");
+    if test_mode {
+        r = r.with_config(BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.05,
+            min_iters: 1,
+            max_iters: 2,
+        });
+    }
+    let sizes: &[usize] = if test_mode {
+        &[50, 200]
+    } else {
+        &[100, 1_000, 10_000]
+    };
+
+    // one request batch + one set of cuts shared by every size
+    let ds = synthetic::realsim_like(400, 7);
+    let cuts = BinnedDataset::from_dataset(&ds, 32).unwrap().cuts();
+    let dir = std::env::temp_dir().join("asgbdt_bench_artifact_load");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut configs: BTreeMap<String, Json> = BTreeMap::new();
+    for &n in sizes {
+        let forest = synth_forest(n, ds.n_features());
+        let flat = FlatForest::from_forest(&forest);
+        let json_path: PathBuf = dir.join(format!("model_{n}.json"));
+        let sgbdt_path: PathBuf = dir.join(format!("model_{n}.sgbdt"));
+        forest.save(&json_path).unwrap();
+        let meta = ArtifactMeta {
+            config_fingerprint: hex16(0),
+            seed: 7,
+            loss: "logistic".to_string(),
+            train_secs: 0.0,
+            trainer: None,
+        };
+        artifact::save(&sgbdt_path, &flat, &cuts, &meta).unwrap();
+        let json_bytes = std::fs::metadata(&json_path).unwrap().len();
+        let sgbdt_bytes = std::fs::metadata(&sgbdt_path).unwrap().len();
+
+        // both loaders must produce the same margins before timing them
+        let via_json = FlatForest::from_forest(&Forest::load(&json_path).unwrap());
+        let via_artifact = artifact::load(&sgbdt_path).unwrap().forest;
+        assert_eq!(first_score(&via_json, &ds.x), first_score(&via_artifact, &ds.x));
+
+        let json_load = r
+            .bench(&format!("load/t{n}/json"), || {
+                FlatForest::from_forest(&Forest::load(&json_path).unwrap()).n_trees()
+            })
+            .mean();
+        let sgbdt_load = r
+            .bench(&format!("load/t{n}/sgbdt"), || {
+                artifact::load(&sgbdt_path).unwrap().forest.n_trees()
+            })
+            .mean();
+        let json_first = r
+            .bench(&format!("first_score/t{n}/json"), || {
+                let flat = FlatForest::from_forest(&Forest::load(&json_path).unwrap());
+                first_score(&flat, &ds.x)
+            })
+            .mean();
+        let sgbdt_first = r
+            .bench(&format!("first_score/t{n}/sgbdt"), || {
+                let a = artifact::load(&sgbdt_path).unwrap();
+                first_score(&a.forest, &ds.x)
+            })
+            .mean();
+        println!(
+            "  t{n}: load json {:.2}ms vs sgbdt {:.2}ms ({:.1}x) | first score {:.2}ms vs {:.2}ms | {} vs {} bytes",
+            json_load * 1e3,
+            sgbdt_load * 1e3,
+            json_load / sgbdt_load.max(1e-12),
+            json_first * 1e3,
+            sgbdt_first * 1e3,
+            json_bytes,
+            sgbdt_bytes,
+        );
+        configs.insert(
+            format!("t{n}"),
+            Json::obj(vec![
+                ("n_trees", Json::Num(n as f64)),
+                ("json_load_s", Json::Num(json_load)),
+                ("sgbdt_load_s", Json::Num(sgbdt_load)),
+                ("json_first_score_s", Json::Num(json_first)),
+                ("sgbdt_first_score_s", Json::Num(sgbdt_first)),
+                ("json_bytes", Json::Num(json_bytes as f64)),
+                ("sgbdt_bytes", Json::Num(sgbdt_bytes as f64)),
+                ("load_speedup", Json::Num(json_load / sgbdt_load.max(1e-12))),
+            ]),
+        );
+    }
+
+    r.write_csv().unwrap();
+    let path = r.write_json(vec![("configs", Json::Obj(configs))]).unwrap();
+    let back = Json::parse_file(&path).unwrap();
+    assert_eq!(back.req_str("group").unwrap(), "artifact_load");
+    assert!(!back.req("results").unwrap().as_arr().unwrap().is_empty());
+    let cfgs = back.req("configs").unwrap().as_obj().unwrap();
+    assert_eq!(cfgs.len(), sizes.len());
+    for (name, c) in cfgs {
+        for key in ["json_load_s", "sgbdt_load_s", "json_first_score_s", "sgbdt_first_score_s"] {
+            assert!(c.req_f64(key).unwrap() > 0.0, "{name}.{key}");
+        }
+    }
+    println!("-- snapshot {} parses back", path.display());
+}

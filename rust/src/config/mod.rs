@@ -96,6 +96,44 @@ impl GradMode {
     }
 }
 
+/// Format of the model file `asgbdt train --model` writes (config key
+/// `format`).
+///
+/// ```
+/// use asgbdt::config::ModelFormat;
+/// assert_eq!(ModelFormat::parse("sgbdt").unwrap(), ModelFormat::Sgbdt);
+/// assert_eq!(ModelFormat::Json.as_str(), "json");
+/// assert!(ModelFormat::parse("pickle").is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelFormat {
+    /// The versioned, checksummed `.sgbdt` artifact (`io/artifact.rs`,
+    /// DESIGN.md §16) — the default.
+    Sgbdt,
+    /// The legacy schema-free JSON dump (`Forest::save`), kept for one
+    /// release for downstream tooling still parsing it.
+    Json,
+}
+
+impl ModelFormat {
+    /// Parse the `format=` config/CLI value.
+    pub fn parse(s: &str) -> Result<ModelFormat> {
+        match s {
+            "sgbdt" => Ok(ModelFormat::Sgbdt),
+            "json" => Ok(ModelFormat::Json),
+            other => bail!("unknown model format '{other}' (sgbdt|json)"),
+        }
+    }
+
+    /// The config/CLI spelling of this format.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelFormat::Sgbdt => "sgbdt",
+            ModelFormat::Json => "json",
+        }
+    }
+}
+
 /// Full training configuration (paper defaults baked in: 400 trees,
 /// v = 0.01, sampling rate 0.8, feature rate 0.8, 100 leaves).
 #[derive(Debug, Clone)]
@@ -201,9 +239,22 @@ pub struct TrainConfig {
     /// Scoring executor width for the service's server-lifetime
     /// `Executor` (the serving twin of `score_threads`).
     pub serve_threads: usize,
-    /// Forest to serve, as saved by `asgbdt train --model` (`io/json.rs`
-    /// dump). Required under `mode=serve`; `none` resets.
+    /// Forest to serve, as saved by `asgbdt train --model` (`.sgbdt`
+    /// artifact or legacy JSON dump, auto-detected by magic sniff).
+    /// Required under `mode=serve`; `none` resets.
     pub serve_model: Option<PathBuf>,
+    /// What `asgbdt train --model` writes: the versioned `.sgbdt`
+    /// artifact (default) or the legacy JSON dump (config key `format`;
+    /// `json` stays available for one release).
+    pub model_format: ModelFormat,
+    /// Write a resumable checkpoint artifact every N accepted trees
+    /// (0, the default, turns checkpointing off entirely — no artifact
+    /// code runs on the training path). Requires `checkpoint_path`.
+    pub checkpoint_every: usize,
+    /// Where checkpoints land: the base path holds the latest, and each
+    /// checkpoint is also kept as `<stem>.tK.<ext>` at tree K. `none`
+    /// resets.
+    pub checkpoint_path: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -237,6 +288,9 @@ impl Default for TrainConfig {
             serve_max_wait_us: 200,
             serve_threads: 1,
             serve_model: None,
+            model_format: ModelFormat::Sgbdt,
+            checkpoint_every: 0,
+            checkpoint_path: None,
         }
     }
 }
@@ -319,6 +373,15 @@ impl TrainConfig {
                  scores a trained forest, not a trainer — set serve_model=path/to/model.json \
                  (as saved by `asgbdt train --model`) or mode=async|sync|serial (to train \
                  instead)"
+            );
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_path.is_none() {
+            bail!(
+                "conflicting knobs checkpoint_every={} and checkpoint_path=none: periodic \
+                 checkpoints need somewhere to land — set checkpoint_path=path/to/ck.sgbdt \
+                 (to write resumable artifacts) or checkpoint_every=0 (to keep \
+                 checkpointing off)",
+                self.checkpoint_every
             );
         }
         let rates = [
@@ -435,6 +498,15 @@ impl TrainConfig {
                     Some(PathBuf::from(value))
                 }
             }
+            "format" | "model_format" => self.model_format = ModelFormat::parse(value)?,
+            "checkpoint_every" => self.checkpoint_every = value.parse()?,
+            "checkpoint_path" => {
+                self.checkpoint_path = if value == "none" {
+                    None
+                } else {
+                    Some(PathBuf::from(value))
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -498,7 +570,42 @@ impl TrainConfig {
                     .map(|p| Json::Str(p.display().to_string()))
                     .unwrap_or(Json::Null),
             ),
+            ("format", Json::Str(self.model_format.as_str().into())),
+            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
+            (
+                "checkpoint_path",
+                self.checkpoint_path
+                    .as_ref()
+                    .map(|p| Json::Str(p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
         ])
+    }
+
+    /// Config fingerprint stored in `.sgbdt` manifests and checked on
+    /// `--resume`: FNV-1a 64 over the serialized config with the
+    /// byte-plumbing knobs removed (`format`, `checkpoint_every`,
+    /// `checkpoint_path`, `artifact_dir`, and the `serve_*` family) —
+    /// those change where bytes land or how a model is served, never
+    /// which forest gets trained, so resuming with a different
+    /// checkpoint cadence or dump format must not be refused.
+    pub fn fingerprint(&self) -> String {
+        let mut j = self.to_json();
+        if let Json::Obj(ref mut o) = j {
+            for k in [
+                "format",
+                "checkpoint_every",
+                "checkpoint_path",
+                "artifact_dir",
+                "serve_batch",
+                "serve_max_wait_us",
+                "serve_threads",
+                "serve_model",
+            ] {
+                o.remove(k);
+            }
+        }
+        crate::io::artifact::hex16(crate::io::artifact::fnv64(j.to_string().as_bytes()))
     }
 
     /// Build a config from a JSON object: defaults, then every present
@@ -832,6 +939,78 @@ mod tests {
         let mut c = TrainConfig::default();
         c.serve_model = Some(PathBuf::from("model.json"));
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn artifact_knobs_default_to_inert_and_roundtrip() {
+        // checkpointing must be opt-in: the default config writes no
+        // checkpoints and dumps the versioned artifact format
+        let c = TrainConfig::default();
+        assert_eq!(c.model_format, ModelFormat::Sgbdt);
+        assert_eq!(c.checkpoint_every, 0);
+        assert_eq!(c.checkpoint_path, None);
+        c.validate().unwrap();
+        let mut c = TrainConfig::default();
+        c.set("format", "json").unwrap();
+        c.set("checkpoint_every", "20").unwrap();
+        c.set("checkpoint_path", "out/ck.sgbdt").unwrap();
+        c.validate().unwrap();
+        let back = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.model_format, ModelFormat::Json);
+        assert_eq!(back.checkpoint_every, 20);
+        assert_eq!(back.checkpoint_path, Some(PathBuf::from("out/ck.sgbdt")));
+        // the CLI reset spelling mirrors serve_model/fault_seed
+        c.set("checkpoint_path", "none").unwrap();
+        c.set("checkpoint_every", "0").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("format", "pickle").is_err());
+        // a checkpoint path with no cadence is inert, not a conflict
+        // (one config file can drive both checkpointed and plain runs)
+        let mut c = TrainConfig::default();
+        c.checkpoint_path = Some(PathBuf::from("ck.sgbdt"));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn checkpoint_without_path_names_both_knobs() {
+        let mut c = TrainConfig::default();
+        c.checkpoint_every = 20;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("checkpoint_every=20") && msg.contains("checkpoint_path=none"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(
+            msg.contains("checkpoint_path=path") && msg.contains("checkpoint_every=0"),
+            "error must name the fix, got: {msg}"
+        );
+        c.checkpoint_path = Some(PathBuf::from("ck.sgbdt"));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fingerprint_pins_trajectory_not_plumbing() {
+        let base = TrainConfig::default().fingerprint();
+        assert_eq!(base.len(), 16, "fixed-width hex");
+        // byte-plumbing knobs must not move the fingerprint: a resumed
+        // run may checkpoint on a different cadence or dump a different
+        // format without being refused
+        let mut c = TrainConfig::default();
+        c.checkpoint_every = 20;
+        c.checkpoint_path = Some(PathBuf::from("ck.sgbdt"));
+        c.model_format = ModelFormat::Json;
+        c.serve_batch = 16;
+        assert_eq!(c.fingerprint(), base);
+        // anything that changes the trained forest must move it
+        let mut c = TrainConfig::default();
+        c.n_trees = 401;
+        assert_ne!(c.fingerprint(), base);
+        let mut c = TrainConfig::default();
+        c.seed = 43;
+        assert_ne!(c.fingerprint(), base);
+        let mut c = TrainConfig::default();
+        c.mode = TrainMode::Serial;
+        assert_ne!(c.fingerprint(), base);
     }
 
     #[test]

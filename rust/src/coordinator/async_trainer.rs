@@ -53,6 +53,7 @@ use anyhow::{bail, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
+use crate::io::artifact::SgbdtArtifact;
 use crate::metrics::SupervisionStats;
 use crate::ps::{run_worker_harnessed, Board, ServerCore, WorkerHarness};
 use crate::runtime::GradientEngine;
@@ -60,6 +61,7 @@ use crate::util::fault::worker_identity_seed;
 use crate::util::stats::Summary;
 use crate::util::{Executor, Stopwatch};
 
+use super::checkpoint::{self, Checkpointer};
 use super::report::TrainReport;
 
 /// What one worker thread's supervision loop reports back on exit.
@@ -90,12 +92,35 @@ pub fn train_async(
     train: &Dataset,
     test: Option<&Dataset>,
 ) -> Result<TrainReport> {
+    train_async_resumed(cfg, train, test, None)
+}
+
+/// [`train_async`], optionally picking up from a checkpoint artifact.
+/// The checkpointed trees are replayed through the accept pipeline
+/// *before* the first board publish, so workers start pulling at the
+/// checkpoint's target version. No RNG state is involved: worker builds
+/// draw nothing at `feature_rate=1`, and the server's Bernoulli sampler
+/// is counter-keyed on `(seed, version, row)` — both are functions of
+/// the replayed state. Resumed runs are bit-identical given the same
+/// determinism envelope that makes plain async runs repeatable
+/// (`max_staleness=0`, `feature_rate=1` — see `tests/test_artifact.rs`).
+pub fn train_async_resumed(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    resume: Option<&SgbdtArtifact>,
+) -> Result<TrainReport> {
     let cfg = cfg.clone();
     cfg.validate()?;
     let clock = Stopwatch::new();
     let binned = Arc::new(BinnedDataset::from_dataset(train, cfg.max_bins)?);
     let engine = GradientEngine::auto(&cfg.artifact_dir);
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
+    if let Some(a) = resume {
+        // async checkpoints carry no sequential RNG words — ignore them
+        let _ = checkpoint::restore(&mut core, a, &cfg, "async", &binned)?;
+    }
+    let ckpt = Checkpointer::new(&cfg, &binned, "async");
 
     // the fault plan and supervision flag drive everything below; with
     // the default config (`fault_seed=none`, `worker_restarts=0`) no
@@ -183,6 +208,9 @@ pub fn train_async(
             let outcome = core.apply_tree(push.tree, push.based_on)?;
             if outcome.accepted {
                 board.publish(core.snapshot());
+                if ckpt.due(core.n_trees()) {
+                    ckpt.write(&core, None, clock.elapsed())?;
+                }
             }
         }
 
@@ -250,6 +278,7 @@ pub fn train_async(
             workers_final,
         },
         fault_trace,
+        cuts: binned.cuts(),
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,

@@ -1,0 +1,270 @@
+//! Checkpoint/resume plumbing shared by all three trainers.
+//!
+//! A checkpoint is an ordinary `.sgbdt` artifact (`io/artifact.rs`) with
+//! the trainer stanza filled in: mode, accepted-tree count, and — for the
+//! sequential-RNG trainers — the raw xoshiro256** state of the
+//! tree-build RNG. Restore replays the checkpointed trees through
+//! [`ServerCore::replay_tree`], which re-runs the accept pipeline's
+//! deterministic arithmetic in the original operation order, so after
+//! replay the server state (F, targets, sampler keys, loss curve) is
+//! bit-identical to the uninterrupted run at the same tree count; the
+//! restored RNG state then continues the build stream exactly. The
+//! result: `train --resume <ck>` produces the same final forest, bit for
+//! bit, as the run that was never interrupted (pinned per-mode by
+//! `tests/test_artifact.rs`).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{BinCuts, BinnedDataset};
+use crate::forest::FlatForest;
+use crate::io::artifact::{self, ArtifactMeta, SgbdtArtifact, TrainerState};
+use crate::ps::ServerCore;
+use crate::util::Rng;
+
+/// The per-run checkpoint sink a trainer consults after every accepted
+/// tree. With `checkpoint_every=0` (the default) [`Checkpointer::due`]
+/// is a constant `false` and no artifact code runs — the same zero-cost
+/// contract as the fault layer.
+pub(crate) struct Checkpointer {
+    every: usize,
+    path: Option<PathBuf>,
+    n_trees_target: usize,
+    fingerprint: String,
+    seed: u64,
+    mode: &'static str,
+    cuts: BinCuts,
+}
+
+impl Checkpointer {
+    /// Capture what every checkpoint of this run shares (fingerprint,
+    /// cuts, mode). Cheap when checkpointing is off — the cuts clone is
+    /// the only cost, paid once per run.
+    pub fn new(cfg: &TrainConfig, binned: &BinnedDataset, mode: &'static str) -> Checkpointer {
+        Checkpointer {
+            every: cfg.checkpoint_every,
+            path: cfg.checkpoint_path.clone(),
+            n_trees_target: cfg.n_trees,
+            fingerprint: cfg.fingerprint(),
+            seed: cfg.seed,
+            mode,
+            cuts: binned.cuts(),
+        }
+    }
+
+    /// Whether the tree that took the accept counter to `n` triggers a
+    /// checkpoint. The final tree never does — the run is about to write
+    /// its real model artifact anyway.
+    pub fn due(&self, n: usize) -> bool {
+        self.every > 0 && n > 0 && n % self.every == 0 && n < self.n_trees_target
+    }
+
+    /// Write the checkpoint: the base path always holds the latest, and
+    /// a `<stem>.tK.<ext>` copy keeps every cadence point so a run can
+    /// be resumed from any of them.
+    pub fn write(&self, core: &ServerCore, rng: Option<&Rng>, wall_secs: f64) -> Result<()> {
+        let path = self
+            .path
+            .as_ref()
+            .expect("validate() rejects checkpoint_every>0 without checkpoint_path");
+        let flat = FlatForest::from_forest(&core.forest);
+        let meta = ArtifactMeta {
+            config_fingerprint: self.fingerprint.clone(),
+            seed: self.seed,
+            loss: "logistic".to_string(),
+            train_secs: wall_secs,
+            trainer: Some(TrainerState {
+                mode: self.mode.to_string(),
+                trees_done: core.n_trees(),
+                rng_state: rng.map(|r| r.state()),
+            }),
+        };
+        artifact::save(&artifact::checkpoint_file(path, core.n_trees()), &flat, &self.cuts, &meta)?;
+        artifact::save(path, &flat, &self.cuts, &meta)
+    }
+}
+
+/// Restore a fresh [`ServerCore`] to a checkpoint's state by replaying
+/// its trees, after verifying the checkpoint actually belongs to this
+/// run: same config fingerprint, same trainer mode, same bin cuts (i.e.
+/// the same training data), a step length matching every stored tree.
+/// Returns the checkpointed build-RNG state (`None` for async, whose
+/// builds draw nothing at `feature_rate=1` and whose sampling is
+/// counter-keyed inside the core).
+pub(crate) fn restore(
+    core: &mut ServerCore,
+    a: &SgbdtArtifact,
+    cfg: &TrainConfig,
+    mode: &str,
+    binned: &BinnedDataset,
+) -> Result<Option<[u64; 4]>> {
+    let trainer = a.trainer.as_ref().ok_or_else(|| {
+        anyhow!(
+            "--resume: artifact is a final model, not a checkpoint (no trainer stanza — \
+             checkpoints are written by checkpoint_every=N)"
+        )
+    })?;
+    if trainer.mode != mode {
+        bail!(
+            "--resume: checkpoint was written by mode={}, this run is mode={mode} — \
+             resume with the mode that wrote it",
+            trainer.mode
+        );
+    }
+    let expected = cfg.fingerprint();
+    if a.config_fingerprint != expected {
+        bail!(
+            "--resume: config fingerprint mismatch: this run is {expected}, checkpoint was \
+             trained under {} — resumed training must use the training-equivalent config \
+             (byte-plumbing knobs like checkpoint_every/format may differ)",
+            a.config_fingerprint
+        );
+    }
+    if trainer.trees_done != a.forest.n_trees() {
+        bail!(
+            "--resume: trainer stanza claims {} trees but the artifact holds {}",
+            trainer.trees_done,
+            a.forest.n_trees()
+        );
+    }
+    if a.forest.n_trees() > cfg.n_trees {
+        bail!(
+            "--resume: checkpoint already holds {} trees, past this run's n_trees={}",
+            a.forest.n_trees(),
+            cfg.n_trees
+        );
+    }
+    if a.cuts != binned.cuts() {
+        bail!(
+            "--resume: checkpoint bin cuts differ from this run's training data — resume \
+             must use the exact dataset (and max_bins) the checkpoint was trained on"
+        );
+    }
+    for (i, (v, ft)) in a.forest.trees.iter().enumerate() {
+        if *v != cfg.step_length {
+            bail!(
+                "--resume: tree {i} was pushed with step length {v}, this run uses {} — \
+                 the checkpoint belongs to a different configuration",
+                cfg.step_length
+            );
+        }
+        core.replay_tree(ft.to_tree())?;
+    }
+    Ok(trainer.rng_state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, Dataset};
+    use crate::runtime::GradientEngine;
+    use std::sync::Arc;
+
+    fn setup() -> (TrainConfig, Dataset, Arc<BinnedDataset>) {
+        let mut cfg = TrainConfig::default();
+        cfg.mode = crate::config::TrainMode::Serial;
+        cfg.n_trees = 8;
+        cfg.step_length = 0.3;
+        cfg.max_bins = 16;
+        cfg.tree.max_leaves = 4;
+        let ds = synthetic::realsim_like(120, 7);
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+        (cfg, ds, binned)
+    }
+
+    fn artifact_for(
+        cfg: &TrainConfig,
+        binned: &BinnedDataset,
+        mode: &str,
+        trees_done: usize,
+    ) -> SgbdtArtifact {
+        let core_forest = crate::forest::Forest::new(0.0);
+        let meta = ArtifactMeta {
+            config_fingerprint: cfg.fingerprint(),
+            seed: cfg.seed,
+            loss: "logistic".to_string(),
+            train_secs: 0.0,
+            trainer: Some(TrainerState {
+                mode: mode.to_string(),
+                trees_done,
+                rng_state: Some(Rng::new(1).state()),
+            }),
+        };
+        let bytes = artifact::to_bytes(
+            &FlatForest::from_forest(&core_forest),
+            &binned.cuts(),
+            &meta,
+        );
+        artifact::load_bytes(&bytes).unwrap()
+    }
+
+    #[test]
+    fn restore_rejects_foreign_checkpoints_by_name() {
+        let (cfg, ds, binned) = setup();
+        let engine = GradientEngine::auto(&cfg.artifact_dir);
+        let mut core = ServerCore::new(&cfg, &ds, binned.clone(), None, engine).unwrap();
+        // wrong mode
+        let a = artifact_for(&cfg, &binned, "async", 0);
+        let err = restore(&mut core, &a, &cfg, "serial", &binned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mode=async") && err.contains("mode=serial"), "{err}");
+        // wrong config fingerprint
+        let mut other = cfg.clone();
+        other.seed = 99;
+        let a = artifact_for(&other, &binned, "serial", 0);
+        let err = restore(&mut core, &a, &cfg, "serial", &binned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        // trainer stanza trees disagree with the payload
+        let a = artifact_for(&cfg, &binned, "serial", 3);
+        let err = restore(&mut core, &a, &cfg, "serial", &binned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("claims 3 trees") && err.contains("holds 0"), "{err}");
+        // a final model (no stanza) is not resumable
+        let meta = ArtifactMeta {
+            config_fingerprint: cfg.fingerprint(),
+            seed: cfg.seed,
+            loss: "logistic".to_string(),
+            train_secs: 0.0,
+            trainer: None,
+        };
+        let bytes = artifact::to_bytes(
+            &FlatForest::from_forest(&crate::forest::Forest::new(0.0)),
+            &binned.cuts(),
+            &meta,
+        );
+        let a = artifact::load_bytes(&bytes).unwrap();
+        let err = restore(&mut core, &a, &cfg, "serial", &binned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trainer stanza"), "{err}");
+        // different training data (different cuts)
+        let other_ds = synthetic::realsim_like(120, 8);
+        let other_binned = BinnedDataset::from_dataset(&other_ds, cfg.max_bins).unwrap();
+        let a = artifact_for(&cfg, &other_binned, "serial", 0);
+        let err = restore(&mut core, &a, &cfg, "serial", &binned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bin cuts"), "{err}");
+    }
+
+    #[test]
+    fn checkpointer_due_respects_cadence_and_skips_the_final_tree() {
+        let (mut cfg, _, binned) = setup();
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_path = Some(PathBuf::from("ck.sgbdt"));
+        let ck = Checkpointer::new(&cfg, &binned, "serial");
+        let due: Vec<usize> = (0..=8).filter(|&n| ck.due(n)).collect();
+        assert_eq!(due, vec![2, 4, 6], "n_trees=8: never at 0 or at the final tree");
+        // off by default: no artifact code on the plain path
+        cfg.checkpoint_every = 0;
+        cfg.checkpoint_path = None;
+        let off = Checkpointer::new(&cfg, &binned, "serial");
+        assert!((0..=8).all(|n| !off.due(n)));
+    }
+}

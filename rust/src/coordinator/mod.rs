@@ -7,26 +7,41 @@
 //! the parallelisation strategy alone — the comparison the paper makes.
 
 pub mod async_trainer;
+pub(crate) mod checkpoint;
 pub mod report;
 pub mod serial_trainer;
 pub mod sync_trainer;
 
-pub use async_trainer::train_async;
+pub use async_trainer::{train_async, train_async_resumed};
 pub use report::TrainReport;
-pub use serial_trainer::train_serial;
-pub use sync_trainer::train_sync;
+pub use serial_trainer::{train_serial, train_serial_resumed};
+pub use sync_trainer::{train_sync, train_sync_resumed};
 
 use anyhow::{bail, Result};
 
 use crate::config::{TrainConfig, TrainMode};
 use crate::data::Dataset;
+use crate::io::artifact::SgbdtArtifact;
 
 /// Train per `cfg.mode`. `test` enables held-out loss on the curve.
 pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainReport> {
+    train_resumed(cfg, train, test, None)
+}
+
+/// [`train`], optionally resuming from a checkpoint artifact
+/// (`asgbdt train --resume ck.sgbdt`). The checkpoint must have been
+/// written by the same `cfg.mode` under a training-equivalent config —
+/// `coordinator::checkpoint::restore` verifies both by name.
+pub fn train_resumed(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    resume: Option<&SgbdtArtifact>,
+) -> Result<TrainReport> {
     match cfg.mode {
-        TrainMode::Async => train_async(cfg, train, test),
-        TrainMode::Sync => train_sync(cfg, train, test),
-        TrainMode::Serial => train_serial(cfg, train, test),
+        TrainMode::Async => train_async_resumed(cfg, train, test, resume),
+        TrainMode::Sync => train_sync_resumed(cfg, train, test, resume),
+        TrainMode::Serial => train_serial_resumed(cfg, train, test, resume),
         TrainMode::Serve => bail!(
             "mode=serve is not a trainer — run `asgbdt serve --model path/to/model.json` \
              (serve::Service scores a saved forest; see DESIGN.md §15)"

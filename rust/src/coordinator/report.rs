@@ -4,6 +4,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::data::BinCuts;
 use crate::forest::Forest;
 use crate::io::Json;
 use crate::metrics::{LossCurve, StalenessStats, SupervisionStats};
@@ -17,6 +18,9 @@ use crate::util::timer::PhaseTimer;
 pub struct TrainReport {
     /// The trained model.
     pub forest: Forest,
+    /// The bin boundaries the model was trained against — what a
+    /// `.sgbdt` artifact embeds so serving never re-derives binning.
+    pub cuts: BinCuts,
     /// Train/test loss by accepted-tree count and wall clock.
     pub curve: LossCurve,
     /// Realised staleness of accepted (and count of rejected) pushes.

@@ -18,10 +18,11 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
+use crate::io::artifact::SgbdtArtifact;
 use crate::metrics::SupervisionStats;
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
@@ -29,6 +30,7 @@ use crate::tree::{build_tree_feature_parallel, HistogramPool};
 use crate::util::stats::Summary;
 use crate::util::{Executor, Rng, Stopwatch};
 
+use super::checkpoint::{self, Checkpointer};
 use super::report::TrainReport;
 
 /// Train strictly serially (Friedman's loop) — the τ ≡ 0 convergence
@@ -38,6 +40,19 @@ pub fn train_serial(
     train: &Dataset,
     test: Option<&Dataset>,
 ) -> Result<TrainReport> {
+    train_serial_resumed(cfg, train, test, None)
+}
+
+/// [`train_serial`], optionally picking up from a checkpoint artifact:
+/// the checkpointed trees are replayed through the accept pipeline and
+/// the build RNG restored, so the continuation is bit-identical to the
+/// run that was never interrupted.
+pub fn train_serial_resumed(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    resume: Option<&SgbdtArtifact>,
+) -> Result<TrainReport> {
     let cfg = cfg.clone();
     cfg.validate()?;
     let clock = Stopwatch::new();
@@ -45,6 +60,12 @@ pub fn train_serial(
     let engine = GradientEngine::auto(&cfg.artifact_dir);
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
     let mut rng = Rng::new(cfg.seed ^ 0x0ddb_a11);
+    if let Some(a) = resume {
+        let state = checkpoint::restore(&mut core, a, &cfg, "serial", &binned)?
+            .ok_or_else(|| anyhow!("--resume: serial checkpoint is missing its RNG state"))?;
+        rng = Rng::from_state(state);
+    }
+    let ckpt = Checkpointer::new(&cfg, &binned, "serial");
     let mut build_times = Vec::with_capacity(cfg.n_trees);
     // histogram buffers recycled across all n_trees builds
     let mut pool = HistogramPool::new(binned.total_bins());
@@ -69,6 +90,9 @@ pub fn train_serial(
         );
         build_times.push(sw.lap());
         core.apply_tree(tree, snapshot.version)?;
+        if ckpt.due(core.n_trees()) {
+            ckpt.write(&core, Some(&rng), clock.elapsed())?;
+        }
     }
 
     let engine = core.engine_kind();
@@ -82,6 +106,7 @@ pub fn train_serial(
         workers: 1,
         supervision: SupervisionStats::all_alive(1),
         fault_trace: Vec::new(),
+        cuts: binned.cuts(),
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,

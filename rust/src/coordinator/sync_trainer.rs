@@ -22,10 +22,11 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{BinnedDataset, Dataset};
+use crate::io::artifact::SgbdtArtifact;
 use crate::metrics::SupervisionStats;
 use crate::ps::ServerCore;
 use crate::runtime::GradientEngine;
@@ -33,6 +34,7 @@ use crate::tree::{build_tree_forkjoin_pooled, HistogramPool};
 use crate::util::stats::Summary;
 use crate::util::{Executor, Rng, Stopwatch};
 
+use super::checkpoint::{self, Checkpointer};
 use super::report::TrainReport;
 
 /// Train with the synchronous fork-join baseline: serial convergence,
@@ -42,6 +44,19 @@ pub fn train_sync(
     train: &Dataset,
     test: Option<&Dataset>,
 ) -> Result<TrainReport> {
+    train_sync_resumed(cfg, train, test, None)
+}
+
+/// [`train_sync`], optionally picking up from a checkpoint artifact —
+/// same replay-then-restore-RNG contract as
+/// [`super::train_serial_resumed`] (the sync trainer shares the serial
+/// sampling stream, so the same RNG state applies).
+pub fn train_sync_resumed(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    resume: Option<&SgbdtArtifact>,
+) -> Result<TrainReport> {
     let cfg = cfg.clone();
     cfg.validate()?;
     let clock = Stopwatch::new();
@@ -49,6 +64,12 @@ pub fn train_sync(
     let engine = GradientEngine::auto(&cfg.artifact_dir);
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
     let mut rng = Rng::new(cfg.seed ^ 0x0ddb_a11);
+    if let Some(a) = resume {
+        let state = checkpoint::restore(&mut core, a, &cfg, "sync", &binned)?
+            .ok_or_else(|| anyhow!("--resume: sync checkpoint is missing its RNG state"))?;
+        rng = Rng::from_state(state);
+    }
+    let ckpt = Checkpointer::new(&cfg, &binned, "sync");
     let mut build_times = Vec::with_capacity(cfg.n_trees);
     // merged per-leaf histograms recycled across all n_trees builds
     let mut pool = HistogramPool::new(binned.total_bins());
@@ -74,6 +95,9 @@ pub fn train_sync(
         );
         build_times.push(sw.lap());
         core.apply_tree(tree, snapshot.version)?;
+        if ckpt.due(core.n_trees()) {
+            ckpt.write(&core, Some(&rng), clock.elapsed())?;
+        }
     }
 
     let engine = core.engine_kind();
@@ -87,6 +111,7 @@ pub fn train_sync(
         workers: cfg.workers,
         supervision: SupervisionStats::all_alive(cfg.workers),
         fault_trace: Vec::new(),
+        cuts: binned.cuts(),
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,

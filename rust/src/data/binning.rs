@@ -19,7 +19,7 @@ pub const MAX_BINS: usize = 256;
 
 /// Per-feature quantizer: ordered upper bounds, `bin_of(v)` = first bin
 /// whose upper bound is >= v. The last bound is +inf.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BinMapper {
     /// Upper bound of each bin (ascending); last is f32::INFINITY.
     pub uppers: Vec<f32>,
@@ -207,13 +207,29 @@ impl BinnedDataset {
 /// ([`crate::tree::FlatTree::partition_binned`]): a tree split `bin_of(v)
 /// <= bin` decides identically to its raw-space twin `v <= upper_of(bin)`
 /// because both sides come from the same mapper.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BinCuts {
     mappers: Vec<BinMapper>,
     offsets: Vec<usize>,
 }
 
 impl BinCuts {
+    /// Rebuild cuts from bare per-feature mappers, recomputing the flat
+    /// histogram offsets as the prefix sums of each mapper's `n_bins()`
+    /// — the same arithmetic [`BinnedDataset::from_csr`] runs at
+    /// training time. This is the deserialization entry point: the
+    /// `.sgbdt` artifact (`io/artifact.rs`) persists only the mappers
+    /// (uppers + zero_bin) because the offsets are derived state.
+    pub fn from_mappers(mappers: Vec<BinMapper>) -> BinCuts {
+        let mut offsets = Vec::with_capacity(mappers.len() + 1);
+        let mut acc = 0usize;
+        for m in &mappers {
+            offsets.push(acc);
+            acc += m.n_bins();
+        }
+        offsets.push(acc);
+        BinCuts { mappers, offsets }
+    }
     /// Number of features the cuts were derived from.
     pub fn n_features(&self) -> usize {
         self.mappers.len()
@@ -462,6 +478,22 @@ mod tests {
         bins.clear();
         cuts.bin_row(&[], &mut feats, &mut bins).unwrap();
         assert!(feats.is_empty() && bins.is_empty());
+    }
+
+    #[test]
+    fn from_mappers_rederives_offsets_exactly() {
+        let (_, b) = sample_binned();
+        let cuts = b.cuts();
+        // round-trip through bare mappers — what the .sgbdt artifact
+        // persists — must reproduce the cuts bit for bit (PartialEq
+        // covers uppers, zero_bins, and the recomputed offsets)
+        let rebuilt = BinCuts::from_mappers(cuts.mappers().to_vec());
+        assert_eq!(rebuilt, cuts);
+        assert_eq!(rebuilt.total_bins(), b.total_bins());
+        // degenerate: zero features still yields a valid [0] offset table
+        let empty = BinCuts::from_mappers(Vec::new());
+        assert_eq!(empty.n_features(), 0);
+        assert_eq!(empty.total_bins(), 0);
     }
 
     #[test]

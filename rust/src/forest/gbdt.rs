@@ -132,18 +132,30 @@ impl Forest {
         ])
     }
 
-    /// Deserialize a forest produced by [`Forest::to_json`].
+    /// Deserialize a forest produced by [`Forest::to_json`]. Strict like
+    /// [`Tree::from_json`]: non-finite `base_score` or step lengths are
+    /// rejected — a NaN here would poison every margin the model ever
+    /// emits without failing a single later operation.
     pub fn from_json(j: &Json) -> Result<Forest> {
-        let base_score = j.req_f64("base_score")? as f32;
-        let mut forest = Forest::new(base_score);
-        for item in j
+        let base_score = j.req_f64("base_score")?;
+        if !base_score.is_finite() {
+            anyhow::bail!("field 'base_score': non-finite value {base_score}");
+        }
+        let mut forest = Forest::new(base_score as f32);
+        for (i, item) in j
             .req("trees")?
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("trees must be array"))?
+            .iter()
+            .enumerate()
         {
-            let v = item.req_f64("v")? as f32;
-            let t = Tree::from_json(item.req("tree")?)?;
-            forest.push(v, t);
+            let v = item.req_f64("v")?;
+            if !v.is_finite() {
+                anyhow::bail!("tree {i}: non-finite step length {v}");
+            }
+            let t = Tree::from_json(item.req("tree")?)
+                .map_err(|e| anyhow::anyhow!("tree {i}: {e}"))?;
+            forest.push(v as f32, t);
         }
         Ok(forest)
     }
@@ -241,5 +253,28 @@ mod tests {
         let loaded = Forest::load(&path).unwrap();
         assert_eq!(loaded.n_trees(), 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_models() {
+        let reject = |src: &str, needle: &str| {
+            let err = Forest::from_json(&Json::parse(src).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "{src}: {err}");
+        };
+        reject(r#"{"trees":[]}"#, "base_score");
+        reject(r#"{"base_score":1e400,"trees":[]}"#, "non-finite");
+        reject(r#"{"base_score":0.1,"trees":{}}"#, "must be array");
+        reject(
+            r#"{"base_score":0.1,"trees":[{"v":1e400,"tree":[{"leaf":0.0}]}]}"#,
+            "step length",
+        );
+        reject(r#"{"base_score":0.1,"trees":[{"tree":[{"leaf":0.0}]}]}"#, "'v'");
+        // malformed inner tree errors carry the tree index
+        reject(
+            r#"{"base_score":0.1,"trees":[{"v":0.1,"tree":[{"leaf":"x"}]}]}"#,
+            "tree 0",
+        );
     }
 }

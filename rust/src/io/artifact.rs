@@ -1,0 +1,918 @@
+//! The versioned `.sgbdt` model artifact (DESIGN.md §16).
+//!
+//! Layout: an 8-byte magic (`SGBDTART`), a little-endian u64 manifest
+//! length, a JSON manifest, then a flat little-endian binary payload
+//! that *is* the scoring-side state — the [`FlatForest`] breadth-first
+//! SoA arrays plus the [`BinCuts`] mappers. Loading is validate-manifest
+//! → verify-checksums → map the payload bytes straight into the SoA
+//! vectors: no JSON tree walk, no re-flatten, no re-binning of training
+//! data to recover cuts.
+//!
+//! The manifest carries schema version, a config fingerprint, the seed,
+//! tree count, loss, a bin-cut digest, per-section byte ranges with
+//! FNV-1a 64 checksums, provenance (build string + training wall time),
+//! and — for checkpoints — a trainer stanza (mode, trees done, raw RNG
+//! state) that makes `asgbdt train --resume` bit-identical to the
+//! uninterrupted run (`coordinator/checkpoint.rs`).
+//!
+//! Every reader failure is a [`SgbdtError`] naming the offending section
+//! and the expected-vs-found values; corruption can never surface as a
+//! panic or a silently-wrong forest (checksums run before any decode).
+//! The writer refuses to emit bytes it cannot itself read back
+//! ([`save`] round-trips in memory first).
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::json::Json;
+use crate::data::{BinCuts, BinMapper};
+use crate::forest::FlatForest;
+use crate::tree::FlatTree;
+
+/// File magic: the first 8 bytes of every `.sgbdt` artifact.
+pub const MAGIC: [u8; 8] = *b"SGBDTART";
+
+/// The one layout this build writes and reads. Bump on any payload or
+/// manifest layout change; the reader rejects anything else with
+/// [`SgbdtError::UnknownSchemaVersion`] instead of misparsing bytes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Bytes of fixed header before the manifest (magic + manifest length).
+const HEADER_LEN: usize = 16;
+
+// ------------------------------------------------------------------ hashing
+
+/// FNV-1a 64 — the section checksum. Hand-rolled (no crates in the
+/// offline vendor set); the golden-fixture generator re-implements these
+/// two constants in Python, pinned against each other by
+/// `tests/test_artifact.rs`.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fixed-width lowercase hex of a u64 — how checksums, digests, seeds
+/// and RNG state words are stored in the manifest. JSON numbers are f64
+/// (exact only to 2^53), so 64-bit values must travel as strings.
+pub fn hex16(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex16(s: &str, what: &str) -> std::result::Result<u64, SgbdtError> {
+    u64::from_str_radix(s, 16).map_err(|_| SgbdtError::MalformedManifest {
+        detail: format!("{what}: not a 64-bit hex value: \"{s}\""),
+    })
+}
+
+// ------------------------------------------------------------------- errors
+
+/// Every way an artifact can fail to load. Each variant names the
+/// offending section and the expected-vs-found values, so a corrupt
+/// model in production points at *which bytes* went bad, not just that
+/// something did.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SgbdtError {
+    /// The first 8 bytes are not [`MAGIC`] — not an `.sgbdt` file.
+    BadMagic {
+        /// The bytes actually found at offset 0.
+        found: [u8; 8],
+    },
+    /// The manifest declares a schema this reader does not speak.
+    UnknownSchemaVersion {
+        /// Version the manifest declares.
+        found: u64,
+        /// The one version this build reads ([`SCHEMA_VERSION`]).
+        supported: u64,
+    },
+    /// The file ends before a section's declared bytes do.
+    Truncated {
+        /// Which part ran out of bytes ("header", "manifest", "payload").
+        section: String,
+        /// Bytes the layout requires.
+        expected: u64,
+        /// Bytes actually present.
+        found: u64,
+    },
+    /// Manifest `payload_len` disagrees with the bytes after the manifest.
+    LengthMismatch {
+        /// Payload length the manifest declares.
+        manifest: u64,
+        /// Payload bytes actually in the file.
+        actual: u64,
+    },
+    /// A section's declared byte range exceeds the payload.
+    SectionOutOfBounds {
+        /// Section whose range is bad.
+        section: String,
+        /// `offset + len` the manifest declares.
+        end: u64,
+        /// Actual payload size.
+        payload_len: u64,
+    },
+    /// A section's bytes hash differently than the manifest recorded.
+    ChecksumMismatch {
+        /// Section whose checksum failed.
+        section: String,
+        /// Checksum the manifest recorded.
+        expected: u64,
+        /// Checksum of the bytes actually present.
+        found: u64,
+    },
+    /// The manifest is not the JSON object the schema requires.
+    MalformedManifest {
+        /// What was wrong (missing field, bad type, bad value).
+        detail: String,
+    },
+    /// A checksum-valid section decodes to inconsistent structures —
+    /// always a writer bug, never silent (the forest is rejected whole).
+    MalformedSection {
+        /// Section that failed to decode.
+        section: String,
+        /// What was inconsistent.
+        detail: String,
+    },
+}
+
+impl fmt::Display for SgbdtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SgbdtError::BadMagic { found } => write!(
+                f,
+                "artifact header: bad magic: expected {:?}, found {:?}",
+                String::from_utf8_lossy(&MAGIC),
+                String::from_utf8_lossy(found)
+            ),
+            SgbdtError::UnknownSchemaVersion { found, supported } => write!(
+                f,
+                "manifest field 'schema_version': expected {supported}, found {found} \
+                 (artifact written by a different asgbdt build?)"
+            ),
+            SgbdtError::Truncated {
+                section,
+                expected,
+                found,
+            } => write!(
+                f,
+                "section '{section}': truncated: expected {expected} bytes, found {found}"
+            ),
+            SgbdtError::LengthMismatch { manifest, actual } => write!(
+                f,
+                "payload length: manifest declares {manifest} bytes, file carries {actual}"
+            ),
+            SgbdtError::SectionOutOfBounds {
+                section,
+                end,
+                payload_len,
+            } => write!(
+                f,
+                "section '{section}': declared byte range ends at {end} but the payload \
+                 is only {payload_len} bytes"
+            ),
+            SgbdtError::ChecksumMismatch {
+                section,
+                expected,
+                found,
+            } => write!(
+                f,
+                "section '{section}': checksum mismatch: expected {}, found {}",
+                hex16(*expected),
+                hex16(*found)
+            ),
+            SgbdtError::MalformedManifest { detail } => write!(f, "manifest: {detail}"),
+            SgbdtError::MalformedSection { section, detail } => {
+                write!(f, "section '{section}': {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SgbdtError {}
+
+// ------------------------------------------------------------------- types
+
+/// The checkpoint stanza: which trainer wrote the artifact mid-run and
+/// the exact state needed to continue it bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainerState {
+    /// Trainer mode ("serial", "sync", "async").
+    pub mode: String,
+    /// Accepted trees at checkpoint time (also the forest's tree count).
+    pub trees_done: usize,
+    /// Raw xoshiro256** state of the tree-build RNG at the checkpoint
+    /// ([`crate::util::Rng::state`]); `None` for the async trainer,
+    /// whose determinism comes from the counter-based server RNG, not a
+    /// sequential stream.
+    pub rng_state: Option<[u64; 4]>,
+}
+
+/// What the caller supplies about the training run when writing an
+/// artifact (everything else in the manifest is derived from the
+/// forest/cuts bytes).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// [`crate::config::TrainConfig::fingerprint`] of the producing run.
+    pub config_fingerprint: String,
+    /// Training seed (for provenance; resume trusts `trainer.rng_state`).
+    pub seed: u64,
+    /// Loss name ("logistic" — the only loss this crate trains).
+    pub loss: String,
+    /// Training wall time in seconds at write time.
+    pub train_secs: f64,
+    /// Present iff this artifact is a mid-run checkpoint.
+    pub trainer: Option<TrainerState>,
+}
+
+/// A fully validated, decoded artifact: the scoring state plus the
+/// manifest facts a consumer may want to check or display.
+#[derive(Debug, Clone)]
+pub struct SgbdtArtifact {
+    /// The compiled forest, ready to score (zero re-flatten).
+    pub forest: FlatForest,
+    /// The training-derived bin cuts (zero re-binning of training data).
+    pub cuts: BinCuts,
+    /// Schema the artifact was written under.
+    pub schema_version: u64,
+    /// Config fingerprint of the producing run.
+    pub config_fingerprint: String,
+    /// Training seed.
+    pub seed: u64,
+    /// Loss name.
+    pub loss: String,
+    /// Build string of the producing binary.
+    pub build: String,
+    /// Training wall time (seconds) when the artifact was written.
+    pub train_secs: f64,
+    /// Checkpoint stanza, if this artifact is resumable.
+    pub trainer: Option<TrainerState>,
+}
+
+/// Read-only byte map of an artifact file, the "mmap or read-to-`Vec`
+/// fallback behind the same API" seam: every consumer goes through
+/// [`PayloadMap::bytes`], so an mmap-backed variant (not available in
+/// the offline vendor set — no memmap crate) can slot in without
+/// touching any caller.
+pub struct PayloadMap {
+    bytes: Vec<u8>,
+}
+
+impl PayloadMap {
+    /// Map a file's bytes read-only.
+    pub fn open(path: &Path) -> Result<PayloadMap> {
+        Ok(PayloadMap {
+            bytes: fs::read(path).with_context(|| format!("read {}", path.display()))?,
+        })
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+// ------------------------------------------------------------------ writing
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Forest section: u64 tree count, then per tree `f32 step-length, u32
+/// node count, feature[] u32, bin[] u8, threshold[] f32, left[] u32,
+/// leaf_value[] f32` — the SoA arrays verbatim, in order.
+fn encode_forest(forest: &FlatForest) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, forest.n_trees() as u64);
+    for (v, t) in &forest.trees {
+        put_f32(&mut out, *v);
+        put_u32(&mut out, t.n_nodes() as u32);
+        for &f in &t.feature {
+            put_u32(&mut out, f);
+        }
+        out.extend_from_slice(&t.bin);
+        for &x in &t.threshold {
+            put_f32(&mut out, x);
+        }
+        for &l in &t.left {
+            put_u32(&mut out, l);
+        }
+        for &x in &t.leaf_value {
+            put_f32(&mut out, x);
+        }
+    }
+    out
+}
+
+/// Cuts section: u64 feature count, then per feature `u8 zero_bin, u32
+/// upper-bound count, uppers[] f32`. Offsets are derived state
+/// ([`BinCuts::from_mappers`] recomputes them), so they are not stored.
+fn encode_cuts(cuts: &BinCuts) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, cuts.n_features() as u64);
+    for m in cuts.mappers() {
+        out.push(m.zero_bin);
+        put_u32(&mut out, m.uppers.len() as u32);
+        for &u in &m.uppers {
+            put_f32(&mut out, u);
+        }
+    }
+    out
+}
+
+fn build_string() -> String {
+    concat!("asgbdt-v", env!("CARGO_PKG_VERSION")).to_string()
+}
+
+/// Serialize to the on-disk byte layout (header + manifest + payload).
+/// Public so tests can corrupt specific bytes without touching disk.
+pub fn to_bytes(forest: &FlatForest, cuts: &BinCuts, meta: &ArtifactMeta) -> Vec<u8> {
+    to_bytes_with_schema(forest, cuts, meta, SCHEMA_VERSION)
+}
+
+/// Test seam: stamp an arbitrary schema version. [`save`]'s self-check
+/// makes the writer refuse any version the reader cannot load back.
+#[doc(hidden)]
+pub fn to_bytes_with_schema(
+    forest: &FlatForest,
+    cuts: &BinCuts,
+    meta: &ArtifactMeta,
+    schema_version: u64,
+) -> Vec<u8> {
+    let forest_bytes = encode_forest(forest);
+    let cuts_bytes = encode_cuts(cuts);
+    let payload_len = forest_bytes.len() + cuts_bytes.len();
+    let sections = Json::Arr(vec![
+        Json::obj(vec![
+            ("name", Json::Str("forest".into())),
+            ("offset", Json::Num(0.0)),
+            ("len", Json::Num(forest_bytes.len() as f64)),
+            ("checksum", Json::Str(hex16(fnv64(&forest_bytes)))),
+        ]),
+        Json::obj(vec![
+            ("name", Json::Str("cuts".into())),
+            ("offset", Json::Num(forest_bytes.len() as f64)),
+            ("len", Json::Num(cuts_bytes.len() as f64)),
+            ("checksum", Json::Str(hex16(fnv64(&cuts_bytes)))),
+        ]),
+    ]);
+    let mut fields = vec![
+        ("format", Json::Str("sgbdt".into())),
+        ("schema_version", Json::Num(schema_version as f64)),
+        ("config", Json::Str(meta.config_fingerprint.clone())),
+        ("seed", Json::Str(hex16(meta.seed))),
+        ("n_trees", Json::Num(forest.n_trees() as f64)),
+        ("loss", Json::Str(meta.loss.clone())),
+        ("base_score", Json::Num(forest.base_score as f64)),
+        ("cut_digest", Json::Str(hex16(fnv64(&cuts_bytes)))),
+        ("payload_len", Json::Num(payload_len as f64)),
+        ("sections", sections),
+        (
+            "provenance",
+            Json::obj(vec![
+                ("build", Json::Str(build_string())),
+                ("train_secs", Json::Num(meta.train_secs)),
+            ]),
+        ),
+    ];
+    if let Some(t) = &meta.trainer {
+        fields.push((
+            "trainer",
+            Json::obj(vec![
+                ("mode", Json::Str(t.mode.clone())),
+                ("trees", Json::Num(t.trees_done as f64)),
+                (
+                    "rng",
+                    match &t.rng_state {
+                        Some(s) => Json::Arr(s.iter().map(|&w| Json::Str(hex16(w))).collect()),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ));
+    }
+    let manifest = Json::obj(fields).to_string().into_bytes();
+    let mut out = Vec::with_capacity(HEADER_LEN + manifest.len() + payload_len);
+    out.extend_from_slice(&MAGIC);
+    put_u64(&mut out, manifest.len() as u64);
+    out.extend_from_slice(&manifest);
+    out.extend_from_slice(&forest_bytes);
+    out.extend_from_slice(&cuts_bytes);
+    out
+}
+
+/// Write an artifact, refusing to emit bytes this build cannot itself
+/// read back: the encoded buffer is loaded in memory first, so a
+/// schema/layout bug fails at save time, never at deploy time.
+pub fn save(path: &Path, forest: &FlatForest, cuts: &BinCuts, meta: &ArtifactMeta) -> Result<()> {
+    save_with_schema(path, forest, cuts, meta, SCHEMA_VERSION)
+}
+
+/// Test seam behind [`save`] — see [`to_bytes_with_schema`].
+#[doc(hidden)]
+pub fn save_with_schema(
+    path: &Path,
+    forest: &FlatForest,
+    cuts: &BinCuts,
+    meta: &ArtifactMeta,
+    schema_version: u64,
+) -> Result<()> {
+    let bytes = to_bytes_with_schema(forest, cuts, meta, schema_version);
+    load_bytes(&bytes).map_err(|e| {
+        anyhow!("writer self-check: refusing to emit an artifact this reader cannot load back: {e}")
+    })?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("create dir {}", parent.display()))?;
+        }
+    }
+    fs::write(path, &bytes).with_context(|| format!("write {}", path.display()))
+}
+
+// ------------------------------------------------------------------ reading
+
+/// Probe whether `path` starts with the `.sgbdt` magic (format
+/// auto-detection for `serve --model` / `predict --model`, which accept
+/// both artifacts and legacy JSON dumps). A file too short to hold the
+/// magic is simply "not an artifact", not an error.
+pub fn sniff(path: &Path) -> Result<bool> {
+    use std::io::Read;
+    let mut f = fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut head = [0u8; 8];
+    match f.read_exact(&mut head) {
+        Ok(()) => Ok(head == MAGIC),
+        Err(_) => Ok(false),
+    }
+}
+
+/// Load and fully validate an artifact file. Artifact-shaped failures
+/// carry a [`SgbdtError`] (downcastable from the returned error);
+/// filesystem failures carry the path.
+pub fn load(path: &Path) -> Result<SgbdtArtifact> {
+    let map = PayloadMap::open(path)?;
+    load_bytes(map.bytes()).with_context(|| format!("load {}", path.display()))
+}
+
+/// Decode cursor over one checksummed section; every overrun names the
+/// section instead of panicking.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    section: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8], section: &'static str) -> Cursor<'a> {
+        Cursor {
+            buf,
+            pos: 0,
+            section,
+        }
+    }
+
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], SgbdtError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(e) => {
+                let s = &self.buf[self.pos..e];
+                self.pos = e;
+                Ok(s)
+            }
+            None => Err(SgbdtError::MalformedSection {
+                section: self.section.to_string(),
+                detail: format!(
+                    "needs {n} bytes at offset {}, section holds {}",
+                    self.pos,
+                    self.buf.len()
+                ),
+            }),
+        }
+    }
+
+    fn u8(&mut self) -> std::result::Result<u8, SgbdtError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, SgbdtError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, SgbdtError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> std::result::Result<f32, SgbdtError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self, n: usize) -> std::result::Result<Vec<u32>, SgbdtError> {
+        let raw = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> std::result::Result<Vec<f32>, SgbdtError> {
+        let raw = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> std::result::Result<(), SgbdtError> {
+        if self.pos != self.buf.len() {
+            return Err(SgbdtError::MalformedSection {
+                section: self.section.to_string(),
+                detail: format!(
+                    "{} trailing bytes after the last decoded structure",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+fn decode_forest(
+    bytes: &[u8],
+    base_score: f32,
+) -> std::result::Result<FlatForest, SgbdtError> {
+    let bad = |detail: String| SgbdtError::MalformedSection {
+        section: "forest".to_string(),
+        detail,
+    };
+    let mut c = Cursor::new(bytes, "forest");
+    let n_trees = c.u64()? as usize;
+    let mut trees = Vec::with_capacity(n_trees.min(bytes.len() / 8 + 1));
+    for ti in 0..n_trees {
+        let v = c.f32()?;
+        let n = c.u32()? as usize;
+        if n == 0 {
+            return Err(bad(format!("tree {ti}: zero nodes")));
+        }
+        let feature = c.u32s(n)?;
+        let bin = c.take(n)?.to_vec();
+        let threshold = c.f32s(n)?;
+        let left = c.u32s(n)?;
+        let leaf_value = c.f32s(n)?;
+        // structural checks before to_tree (which assumes sane children)
+        for (i, &l) in left.iter().enumerate() {
+            if l != 0 && (l as usize <= i || l as usize + 1 >= n) {
+                return Err(bad(format!(
+                    "tree {ti} node {i}: left child {l} breaks the BFS layout \
+                     (expected 0 for a leaf, or {} < left, left + 1 < {n})",
+                    i
+                )));
+            }
+        }
+        let flat = FlatTree {
+            feature,
+            bin,
+            threshold,
+            left,
+            leaf_value,
+        };
+        // full validation (every node reachable exactly once, thresholds
+        // sane) through the enum twin's validator
+        flat.to_tree()
+            .validate()
+            .map_err(|e| bad(format!("tree {ti}: {e}")))?;
+        trees.push((v, flat));
+    }
+    c.done()?;
+    Ok(FlatForest { base_score, trees })
+}
+
+fn decode_cuts(bytes: &[u8]) -> std::result::Result<BinCuts, SgbdtError> {
+    let mut c = Cursor::new(bytes, "cuts");
+    let n_features = c.u64()? as usize;
+    let mut mappers = Vec::with_capacity(n_features.min(bytes.len() / 5 + 1));
+    for fi in 0..n_features {
+        let zero_bin = c.u8()?;
+        let n_uppers = c.u32()? as usize;
+        let uppers = c.f32s(n_uppers)?;
+        if uppers.is_empty() || (zero_bin as usize) >= uppers.len() {
+            return Err(SgbdtError::MalformedSection {
+                section: "cuts".to_string(),
+                detail: format!(
+                    "feature {fi}: zero_bin {zero_bin} out of range for {} bins",
+                    uppers.len()
+                ),
+            });
+        }
+        mappers.push(BinMapper { uppers, zero_bin });
+    }
+    c.done()?;
+    Ok(BinCuts::from_mappers(mappers))
+}
+
+/// Decode and validate an in-memory artifact image (the whole-file
+/// bytes). This is the entire read path; [`load`] is a thin file
+/// wrapper around it.
+pub fn load_bytes(bytes: &[u8]) -> std::result::Result<SgbdtArtifact, SgbdtError> {
+    let mf = |e: anyhow::Error| SgbdtError::MalformedManifest {
+        detail: e.to_string(),
+    };
+    // -- header
+    if bytes.len() < HEADER_LEN {
+        return Err(SgbdtError::Truncated {
+            section: "header".to_string(),
+            expected: HEADER_LEN as u64,
+            found: bytes.len() as u64,
+        });
+    }
+    if bytes[..8] != MAGIC {
+        return Err(SgbdtError::BadMagic {
+            found: bytes[..8].try_into().unwrap(),
+        });
+    }
+    let manifest_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let payload_start = HEADER_LEN.checked_add(manifest_len).unwrap_or(usize::MAX);
+    if payload_start > bytes.len() {
+        return Err(SgbdtError::Truncated {
+            section: "manifest".to_string(),
+            expected: manifest_len as u64,
+            found: (bytes.len() - HEADER_LEN) as u64,
+        });
+    }
+    // -- manifest
+    let text = std::str::from_utf8(&bytes[HEADER_LEN..payload_start]).map_err(|e| {
+        SgbdtError::MalformedManifest {
+            detail: format!("not UTF-8: {e}"),
+        }
+    })?;
+    let j = Json::parse(text).map_err(mf)?;
+    j.expect_str("format", "sgbdt").map_err(mf)?;
+    let schema_version = j.req_usize("schema_version").map_err(mf)? as u64;
+    if schema_version != SCHEMA_VERSION {
+        return Err(SgbdtError::UnknownSchemaVersion {
+            found: schema_version,
+            supported: SCHEMA_VERSION,
+        });
+    }
+    // -- payload length agreement
+    let payload = &bytes[payload_start..];
+    let declared = j.req_usize("payload_len").map_err(mf)? as u64;
+    if declared != payload.len() as u64 {
+        return Err(SgbdtError::LengthMismatch {
+            manifest: declared,
+            actual: payload.len() as u64,
+        });
+    }
+    // -- sections: bounds then checksums, before any decode
+    let mut ranges: Vec<(String, usize, usize, u64)> = Vec::new();
+    for s in j
+        .req("sections")
+        .map_err(mf)?
+        .as_arr()
+        .ok_or_else(|| SgbdtError::MalformedManifest {
+            detail: "field 'sections' is not an array".to_string(),
+        })?
+    {
+        let name = s.req_str("name").map_err(mf)?.to_string();
+        let offset = s.req_usize("offset").map_err(mf)?;
+        let len = s.req_usize("len").map_err(mf)?;
+        let sum = parse_hex16(s.req_str("checksum").map_err(mf)?, "section checksum")?;
+        let end = offset.checked_add(len).unwrap_or(usize::MAX);
+        if end > payload.len() {
+            return Err(SgbdtError::SectionOutOfBounds {
+                section: name,
+                end: end as u64,
+                payload_len: payload.len() as u64,
+            });
+        }
+        let found = fnv64(&payload[offset..end]);
+        if found != sum {
+            return Err(SgbdtError::ChecksumMismatch {
+                section: name,
+                expected: sum,
+                found,
+            });
+        }
+        ranges.push((name, offset, len, sum));
+    }
+    let section = |name: &str| -> std::result::Result<&[u8], SgbdtError> {
+        ranges
+            .iter()
+            .find(|(n, _, _, _)| n == name)
+            .map(|&(_, off, len, _)| &payload[off..off + len])
+            .ok_or_else(|| SgbdtError::MalformedManifest {
+                detail: format!("no '{name}' entry in 'sections'"),
+            })
+    };
+    // -- decode (bytes already integrity-checked)
+    let base_score = j.req_f64("base_score").map_err(mf)? as f32;
+    if !base_score.is_finite() {
+        return Err(SgbdtError::MalformedManifest {
+            detail: format!("field 'base_score': not finite: {base_score}"),
+        });
+    }
+    let forest = decode_forest(section("forest")?, base_score)?;
+    let n_trees = j.req_usize("n_trees").map_err(mf)?;
+    if n_trees != forest.n_trees() {
+        return Err(SgbdtError::MalformedSection {
+            section: "forest".to_string(),
+            detail: format!(
+                "manifest field 'n_trees' declares {n_trees} trees, payload encodes {}",
+                forest.n_trees()
+            ),
+        });
+    }
+    let cuts_bytes = section("cuts")?;
+    let declared_digest = parse_hex16(j.req_str("cut_digest").map_err(mf)?, "cut_digest")?;
+    let found_digest = fnv64(cuts_bytes);
+    if declared_digest != found_digest {
+        return Err(SgbdtError::ChecksumMismatch {
+            section: "cut_digest".to_string(),
+            expected: declared_digest,
+            found: found_digest,
+        });
+    }
+    let cuts = decode_cuts(cuts_bytes)?;
+    // -- provenance + optional trainer stanza
+    let prov = j.req("provenance").map_err(mf)?;
+    let build = prov.req_str("build").map_err(mf)?.to_string();
+    let train_secs = prov.req_f64("train_secs").map_err(mf)?;
+    let seed = parse_hex16(j.req_str("seed").map_err(mf)?, "seed")?;
+    let trainer = match j.get("trainer") {
+        None => None,
+        Some(t) => {
+            let rng_state = match t.req("rng").map_err(mf)? {
+                Json::Null => None,
+                Json::Arr(words) if words.len() == 4 => {
+                    let mut s = [0u64; 4];
+                    for (i, w) in words.iter().enumerate() {
+                        let ws = w.as_str().ok_or_else(|| SgbdtError::MalformedManifest {
+                            detail: "trainer rng word is not a string".to_string(),
+                        })?;
+                        s[i] = parse_hex16(ws, "trainer rng word")?;
+                    }
+                    Some(s)
+                }
+                other => {
+                    return Err(SgbdtError::MalformedManifest {
+                        detail: format!("trainer 'rng' must be null or 4 hex words, got {other}"),
+                    })
+                }
+            };
+            Some(TrainerState {
+                mode: t.req_str("mode").map_err(mf)?.to_string(),
+                trees_done: t.req_usize("trees").map_err(mf)?,
+                rng_state,
+            })
+        }
+    };
+    Ok(SgbdtArtifact {
+        forest,
+        cuts,
+        schema_version,
+        config_fingerprint: j.req_str("config").map_err(mf)?.to_string(),
+        seed,
+        loss: j.req_str("loss").map_err(mf)?.to_string(),
+        build,
+        train_secs,
+        trainer,
+    })
+}
+
+// --------------------------------------------------------------- checkpoints
+
+/// Per-checkpoint file name: `ck.sgbdt` at tree 20 → `ck.t20.sgbdt`.
+/// The base path is also always (re)written as the latest checkpoint,
+/// so `--resume <base>` picks up the newest without globbing.
+pub fn checkpoint_file(base: &Path, trees: usize) -> PathBuf {
+    match base.extension().and_then(|e| e.to_str()) {
+        Some(ext) => base.with_extension(format!("t{trees}.{ext}")),
+        None => base.with_extension(format!("t{trees}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BinnedDataset;
+    use crate::data::CsrMatrix;
+    use crate::forest::Forest;
+    use crate::tree::{Node, Tree};
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta {
+            config_fingerprint: hex16(0xdead_beef),
+            seed: 42,
+            loss: "logistic".to_string(),
+            train_secs: 1.25,
+            trainer: None,
+        }
+    }
+
+    fn fixture() -> (FlatForest, BinCuts) {
+        let x = CsrMatrix::from_dense(4, 2, &[1.0, 0.0, 2.0, 3.0, 0.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = BinnedDataset::from_csr(&x, 8).unwrap();
+        let mut f = Forest::new(0.5);
+        f.push(0.3, Tree {
+            nodes: vec![
+                Node::Split {
+                    feature: 0,
+                    bin: 1,
+                    threshold: 2.0,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        });
+        f.push(0.3, Tree::constant(0.25));
+        (FlatForest::from_forest(&f), b.cuts())
+    }
+
+    #[test]
+    fn fnv64_known_vectors() {
+        // published FNV-1a 64 test vectors — the Python fixture
+        // generator must agree with these exact constants
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(hex16(fnv64(b"")), "cbf29ce484222325");
+    }
+
+    #[test]
+    fn roundtrip_in_memory_is_exact() {
+        let (forest, cuts) = fixture();
+        let m = ArtifactMeta {
+            trainer: Some(TrainerState {
+                mode: "serial".to_string(),
+                trees_done: 2,
+                rng_state: Some([1, u64::MAX, 3, 0x0123_4567_89ab_cdef]),
+            }),
+            ..meta()
+        };
+        let bytes = to_bytes(&forest, &cuts, &m);
+        let a = load_bytes(&bytes).unwrap();
+        assert_eq!(a.forest.base_score, forest.base_score);
+        assert_eq!(a.forest.trees, forest.trees);
+        assert_eq!(a.cuts, cuts);
+        assert_eq!(a.schema_version, SCHEMA_VERSION);
+        assert_eq!(a.seed, 42);
+        assert_eq!(a.loss, "logistic");
+        assert_eq!(a.config_fingerprint, hex16(0xdead_beef));
+        assert_eq!(a.train_secs, 1.25);
+        let t = a.trainer.unwrap();
+        assert_eq!(t.mode, "serial");
+        assert_eq!(t.trees_done, 2);
+        // u64::MAX survives (hex strings, not f64 JSON numbers)
+        assert_eq!(t.rng_state.unwrap(), [1, u64::MAX, 3, 0x0123_4567_89ab_cdef]);
+    }
+
+    #[test]
+    fn writer_refuses_schema_it_cannot_read_back() {
+        let (forest, cuts) = fixture();
+        let dir = std::env::temp_dir().join("asgbdt_artifact_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.sgbdt");
+        let err = save_with_schema(&path, &forest, &cuts, &meta(), SCHEMA_VERSION + 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("self-check"), "{err}");
+        assert!(err.contains("schema_version"), "{err}");
+        assert!(!path.exists(), "refused artifact must not hit disk");
+        // the supported version does write, sniffs, and loads
+        save(&path, &forest, &cuts, &meta()).unwrap();
+        assert!(sniff(&path).unwrap());
+        assert_eq!(load(&path).unwrap().forest.trees, forest.trees);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn sniff_rejects_non_artifacts_without_erroring() {
+        let dir = std::env::temp_dir().join("asgbdt_artifact_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("legacy.json");
+        std::fs::write(&p, b"{\"base_score\":0.0,\"trees\":[]}").unwrap();
+        assert!(!sniff(&p).unwrap());
+        let tiny = dir.join("tiny.bin");
+        std::fs::write(&tiny, b"abc").unwrap();
+        assert!(!sniff(&tiny).unwrap());
+        assert!(sniff(&dir.join("missing.sgbdt")).is_err());
+    }
+
+    #[test]
+    fn checkpoint_file_tags_tree_count_before_extension() {
+        assert_eq!(
+            checkpoint_file(Path::new("out/ck.sgbdt"), 20),
+            PathBuf::from("out/ck.t20.sgbdt")
+        );
+        assert_eq!(
+            checkpoint_file(Path::new("ck"), 7),
+            PathBuf::from("ck.t7")
+        );
+    }
+}

@@ -110,6 +110,19 @@ impl Json {
             .ok_or_else(|| anyhow!("field '{key}' is not a number"))
     }
 
+    /// Require string field `key` to hold exactly `expected` — the
+    /// manifest format-tag guard shared by every manifest this crate
+    /// reads (the HLO artifact manifest in `runtime/artifacts.rs` and
+    /// the `.sgbdt` model manifest in `io/artifact.rs`). The error names
+    /// the field and the expected-vs-found values.
+    pub fn expect_str(&self, key: &str, expected: &str) -> Result<()> {
+        let found = self.req_str(key)?;
+        if found != expected {
+            bail!("field '{key}': expected \"{expected}\", found \"{found}\"");
+        }
+        Ok(())
+    }
+
     // ------------------------------------------------------- construction
 
     /// Build an object from `(key, value)` pairs.
@@ -431,5 +444,14 @@ mod tests {
         assert_eq!(j.req_f64("f").unwrap(), 1.5);
         assert!(j.req("missing").is_err());
         assert!(j.req_usize("f").is_err());
+    }
+
+    #[test]
+    fn expect_str_names_field_and_both_values() {
+        let j = Json::parse(r#"{"format":"hlo-text"}"#).unwrap();
+        j.expect_str("format", "hlo-text").unwrap();
+        let err = j.expect_str("format", "sgbdt").unwrap_err().to_string();
+        assert!(err.contains("format") && err.contains("sgbdt") && err.contains("hlo-text"));
+        assert!(j.expect_str("missing", "x").is_err());
     }
 }

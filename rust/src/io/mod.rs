@@ -1,9 +1,12 @@
 //! Minimal IO substrates: JSON (config + artifact manifests + metric
-//! dumps), CSV (experiment outputs), and svmlight/LIBSVM datasets.
+//! dumps), CSV (experiment outputs), svmlight/LIBSVM datasets, and the
+//! versioned `.sgbdt` model artifact (manifest + checksummed binary
+//! payload, DESIGN.md §16).
 //!
 //! serde is not available in the offline vendor set (see DESIGN.md §7), so
 //! these are small hand-rolled implementations with full tests.
 
+pub mod artifact;
 pub mod csv;
 pub mod json;
 pub mod svmlight;

@@ -1,8 +1,9 @@
 //! asgbdt — the asynch-SGBDT launcher.
 //!
 //! ```text
-//! asgbdt train [--data <spec>] [--test-frac 0.2] [--model out.json] [k=v ...]
-//! asgbdt serve --model model.json [--data <spec>] [--requests N] [--swap-at N]
+//! asgbdt train [--data <spec>] [--test-frac 0.2] [--model out.sgbdt]
+//!              [--resume ck.sgbdt] [k=v ...]
+//! asgbdt serve --model model.sgbdt [--data <spec>] [--requests N] [--swap-at N]
 //! asgbdt experiment <fig4..fig10|ablation|all> [--scale smoke|paper] [--out results]
 //! asgbdt simulate [--workload realsim|e2006] [--workers 1,2,...] [--trees N]
 //! asgbdt datagen <realsim|higgs|e2006> <n_rows> <out.svm> [--seed N]
@@ -20,11 +21,12 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use asgbdt::cli::Args;
-use asgbdt::config::{TrainConfig, TrainMode};
+use asgbdt::config::{ModelFormat, TrainConfig, TrainMode};
 use asgbdt::coordinator;
-use asgbdt::data::{synthetic, BinnedDataset, Dataset};
+use asgbdt::data::{synthetic, BinCuts, BinnedDataset, Dataset};
 use asgbdt::experiments::{self, Scale};
 use asgbdt::forest::FlatForest;
+use asgbdt::io::artifact::{self, ArtifactMeta};
 use asgbdt::io::svmlight;
 use asgbdt::runtime::Manifest;
 use asgbdt::serve::{drive_replay, ModelSlot, ServeOptions, Service};
@@ -65,10 +67,11 @@ const HELP: &str = r#"asgbdt — asynchronous parallel stochastic GBDT on a para
 
 USAGE:
   asgbdt train [--data <spec>] [--test-frac F] [--config cfg.json]
-               [--model out.json] [--curve out.csv] [key=value ...]
-  asgbdt predict --model model.json --data <spec> [--out preds.csv]
-  asgbdt serve --model model.json [--data <spec>] [--requests N] [--inflight N]
-               [--swap-at N] [--swap-model other.json] [key=value ...]
+               [--model out.sgbdt] [--curve out.csv] [--resume ck.sgbdt]
+               [key=value ...]
+  asgbdt predict --model model.sgbdt --data <spec> [--out preds.csv]
+  asgbdt serve --model model.sgbdt [--data <spec>] [--requests N] [--inflight N]
+               [--swap-at N] [--swap-model other.sgbdt] [key=value ...]
   asgbdt experiment <fig4..fig10|ablation|all> [--scale smoke|paper] [--out DIR]
   asgbdt simulate [--workload realsim|e2006] [--workers 1,2,4,...] [--trees N]
   asgbdt datagen <realsim|higgs|e2006> <n_rows> <out.svm> [--seed N]
@@ -121,8 +124,39 @@ CONFIG OVERRIDES (key=value):
                                 server-lifetime pool; 1 is default)
   serve_model=PATH|none        (forest to serve, as saved by train --model;
                                 required under mode=serve — `asgbdt serve
-                                --model PATH` sets it)
+                                --model PATH` sets it; .sgbdt artifacts and
+                                JSON forests are both accepted, sniffed by
+                                magic bytes rather than extension)
+  format=sgbdt|json            (what train --model writes: the versioned
+                                .sgbdt artifact — manifest + checksums +
+                                flat payload, DESIGN.md §16 — or the legacy
+                                JSON forest; sgbdt is default, json stays
+                                for one release)
+  checkpoint_every=N           (write a resumable checkpoint artifact every
+                                N accepted trees; 0 is default — no
+                                artifact code runs during training)
+  checkpoint_path=PATH|none    (where checkpoints land: PATH holds the
+                                latest, PATH with a .tK tag is kept per
+                                cadence point; required when
+                                checkpoint_every > 0)
 "#;
+
+/// Load a model for scoring, whichever format it is on disk: a `.sgbdt`
+/// artifact (sniffed by magic, not extension) yields the flat forest
+/// plus its own training-time bin cuts; a JSON forest is flattened here
+/// and served with the dataset-derived `fallback` cuts.
+fn load_model(path: &Path, fallback: Option<&BinCuts>) -> Result<(FlatForest, BinCuts)> {
+    if artifact::sniff(path)? {
+        let a = artifact::load(path)?;
+        Ok((a.forest, a.cuts))
+    } else {
+        let forest = asgbdt::forest::Forest::load(path)?;
+        let cuts = fallback
+            .context("JSON models carry no bin cuts — a --data spec is required")?
+            .clone();
+        Ok((FlatForest::from_forest(&forest), cuts))
+    }
+}
 
 fn load_data(spec: &str, seed: u64) -> Result<Dataset> {
     if let Some(rest) = spec.strip_prefix("synthetic:") {
@@ -179,7 +213,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         train_ds.n_rows(),
         train_ds.n_features()
     );
-    let report = coordinator::train(&cfg, &train_ds, test_ds.as_ref())?;
+    let resume = match args.opt("resume") {
+        Some(path) => {
+            let a = artifact::load(Path::new(path))?;
+            println!("resuming from {path}: {} checkpointed trees", a.forest.n_trees());
+            Some(a)
+        }
+        None => None,
+    };
+    let report = coordinator::train_resumed(&cfg, &train_ds, test_ds.as_ref(), resume.as_ref())?;
     println!(
         "done: {} trees in {:.2}s ({:.2} trees/s, engine {}) staleness mean {:.2} max {}",
         report.trees_accepted,
@@ -197,8 +239,24 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("-- phases --\n{}", report.timer.report());
     if let Some(path) = args.opt("model") {
-        report.forest.save(Path::new(path))?;
-        println!("model -> {path}");
+        match cfg.model_format {
+            ModelFormat::Sgbdt => {
+                let meta = ArtifactMeta {
+                    config_fingerprint: cfg.fingerprint(),
+                    seed: cfg.seed,
+                    loss: "logistic".to_string(),
+                    train_secs: report.wall_secs,
+                    trainer: None,
+                };
+                let flat = FlatForest::from_forest(&report.forest);
+                artifact::save(Path::new(path), &flat, &report.cuts, &meta)?;
+                println!("model -> {path} (sgbdt artifact)");
+            }
+            ModelFormat::Json => {
+                report.forest.save(Path::new(path))?;
+                println!("model -> {path} (json)");
+            }
+        }
     }
     if let Some(path) = args.opt("curve") {
         report
@@ -223,13 +281,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.validate()?;
     let model_path = cfg.serve_model.clone().expect("validate requires serve_model");
-    let forest = asgbdt::forest::Forest::load(&model_path)?;
 
-    // the replayed stream: rows of --data become raw requests, and its
-    // quantile cuts are the ones the service bins those requests with
+    // the replayed stream: rows of --data become raw requests; its
+    // quantile cuts bin those requests for JSON models, while a .sgbdt
+    // artifact overrides them with the cuts it was trained under
     let spec = args.opt_or("data", "synthetic:realsim:8000");
     let ds = load_data(spec, cfg.seed)?;
-    let cuts = BinnedDataset::from_dataset(&ds, cfg.max_bins)?.cuts();
+    let data_cuts = BinnedDataset::from_dataset(&ds, cfg.max_bins)?.cuts();
+    let (flat, cuts) = load_model(&model_path, Some(&data_cuts))?;
     let n_requests: usize = args.opt_or("requests", "2000").parse()?;
     let inflight_default = (cfg.serve_batch * 2).to_string();
     let inflight: usize = args.opt_or("inflight", &inflight_default).parse()?;
@@ -240,12 +299,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --swap-model rolls out a different forest mid-stream; without it a
     // swap republishes the same forest (a rollout of an identical model
     // — the version tag still advances)
-    let swap_forest = match args.opt("swap-model") {
-        Some(path) => asgbdt::forest::Forest::load(Path::new(path))?,
-        None => forest.clone(),
+    let (swap_flat, swap_cuts) = match args.opt("swap-model") {
+        Some(path) => load_model(Path::new(path), Some(&data_cuts))?,
+        None => (flat.clone(), cuts.clone()),
     };
 
-    let flat = FlatForest::from_forest(&forest);
     println!(
         "serving {} trees (base {:.4}) on {}: batch={} wait={}us threads={} requests={}",
         flat.n_trees(),
@@ -256,9 +314,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.serve_threads,
         n_requests,
     );
-    let slot = Arc::new(ModelSlot::new(flat, cuts.clone()));
+    let slot = Arc::new(ModelSlot::new(flat, cuts));
     let service = Service::start(Arc::clone(&slot), ServeOptions::from_config(&cfg));
-    let swap = swap_at.map(|at| (at, FlatForest::from_forest(&swap_forest), cuts));
+    let swap = swap_at.map(|at| (at, swap_flat, swap_cuts));
     let outcome = drive_replay(&service, &ds.x, n_requests, inflight, swap)?;
     let stats = service.shutdown();
 
@@ -285,15 +343,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
-    let forest = asgbdt::forest::Forest::load(Path::new(model_path))?;
     let spec = args.opt("data").context("--data required")?;
     let ds = load_data(spec, 0)?;
-    let margins = forest.predict_all(&ds.x);
+    // prediction walks raw thresholds, so no bin cuts are needed — either
+    // format yields a flat forest directly
+    let flat = if artifact::sniff(Path::new(model_path))? {
+        artifact::load(Path::new(model_path))?.forest
+    } else {
+        FlatForest::from_forest(&asgbdt::forest::Forest::load(Path::new(model_path))?)
+    };
+    let mut pool = asgbdt::forest::ScratchPool::new();
+    let exec = asgbdt::util::Executor::scoped(1);
+    let margins = flat.predict_all_raw(&ds.x, &exec, &mut pool);
     let w = vec![1.0f32; ds.n_rows()];
     println!(
         "model: {} trees (base {:.4}); data: {} rows",
-        forest.n_trees(),
-        forest.base_score,
+        flat.n_trees(),
+        flat.base_score,
         ds.n_rows()
     );
     println!(

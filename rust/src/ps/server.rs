@@ -296,6 +296,29 @@ impl ServerCore {
         })
     }
 
+    /// Replay one checkpointed tree during `--resume` restore: applied
+    /// as perfectly fresh (`based_on` = current version), so the accept
+    /// pipeline runs the exact F-update/target/eval arithmetic — in the
+    /// same deterministic operation order — that produced this state in
+    /// the original run. After replaying a checkpoint's k trees, `f`,
+    /// the targets, the sampler draws (keyed on `(sample_seed, version,
+    /// row)`, all replayed versions included) and the loss curve are
+    /// bit-identical to the uninterrupted run at tree k; only wall-clock
+    /// fields differ. Errors if the accept pipeline rejects the tree —
+    /// impossible for a fresh push, so any failure means a corrupt or
+    /// mismatched checkpoint.
+    pub fn replay_tree(&mut self, tree: Tree) -> Result<()> {
+        let based_on = self.forest.n_trees() as u64;
+        let out = self.apply_tree(tree, based_on)?;
+        if !out.accepted {
+            anyhow::bail!(
+                "checkpoint replay: tree {} was rejected by the accept pipeline",
+                based_on
+            );
+        }
+        Ok(())
+    }
+
     /// Whether the tree that takes the accept counter to `n_after`
     /// records a loss-curve point.
     fn eval_due(&self, n_after: usize) -> bool {

@@ -35,9 +35,8 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::parse_file(&dir.join("manifest.json"))?;
-        if j.req_str("format")? != "hlo-text" {
-            bail!("unsupported artifact format {}", j.req_str("format")?);
-        }
+        // same format-tag guard as the .sgbdt model manifest (io/artifact.rs)
+        j.expect_str("format", "hlo-text")?;
         let buckets: Vec<usize> = j
             .req("buckets")?
             .as_arr()

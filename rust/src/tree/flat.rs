@@ -110,6 +110,34 @@ impl FlatTree {
         self.left.len()
     }
 
+    /// Decompile back to the enum form — the inverse of
+    /// [`FlatTree::from_tree`]. The emitted `Tree` keeps this tree's
+    /// breadth-first layout (node i stays node i, right child `left +
+    /// 1`), so `from_tree(&f.to_tree()) == f` exactly; round-tripping is
+    /// lossless. This is what lets a `.sgbdt` artifact — whose payload
+    /// *is* these SoA arrays — feed `ServerCore` replay on resume, which
+    /// speaks `Tree`.
+    pub fn to_tree(&self) -> Tree {
+        let nodes = (0..self.n_nodes())
+            .map(|i| {
+                if self.left[i] == 0 {
+                    Node::Leaf {
+                        value: self.leaf_value[i],
+                    }
+                } else {
+                    Node::Split {
+                        feature: self.feature[i],
+                        bin: self.bin[i],
+                        threshold: self.threshold[i],
+                        left: self.left[i],
+                        right: self.left[i] + 1,
+                    }
+                }
+            })
+            .collect();
+        Tree { nodes }
+    }
+
     /// Whether `node` is a leaf (left-child sentinel 0).
     #[inline]
     pub fn is_leaf(&self, node: usize) -> bool {
@@ -286,6 +314,23 @@ mod tests {
         assert_eq!(f.left[2], 3);
         assert_eq!(f.leaf_value[3], 2.0);
         assert_eq!(f.leaf_value[4], 3.0);
+    }
+
+    #[test]
+    fn to_tree_inverts_from_tree_exactly() {
+        for t in [stump(), scrambled(), Tree::constant(0.25)] {
+            let f = FlatTree::from_tree(&t);
+            let back = f.to_tree();
+            // the decompiled tree is valid and predicts identically...
+            back.validate().unwrap();
+            let x = CsrMatrix::from_dense(3, 2, &[1.0, 1.0, 4.0, 0.0, 2.0, 2.0]).unwrap();
+            for r in 0..3 {
+                assert_eq!(back.predict_raw(&x, r), t.predict_raw(&x, r), "row {r}");
+            }
+            // ...and re-flattening reproduces the SoA arrays bit for bit
+            // (to_tree preserves BFS layout, so from_tree is identity on it)
+            assert_eq!(FlatTree::from_tree(&back), f);
+        }
     }
 
     #[test]

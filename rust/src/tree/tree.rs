@@ -212,21 +212,44 @@ impl Tree {
     }
 
     /// Deserialize (and validate) a tree written by `Tree::to_json`.
+    ///
+    /// Strict: non-numeric leaf values, non-finite thresholds/leaves,
+    /// and integer fields that do not fit their on-model width (`bin` is
+    /// a u8, `feature`/`left`/`right` are u32) are rejected rather than
+    /// defaulted or silently truncated — truncating a child index would
+    /// redirect rows to an unrelated subtree and still pass `validate`.
     pub fn from_json(j: &Json) -> Result<Tree> {
         let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("tree json must be array"))?;
+        let int_field = |item: &Json, key: &str, max: usize| -> Result<usize> {
+            let v = item.req_usize(key)?;
+            if v > max {
+                bail!("field '{key}': {v} exceeds the format's maximum {max}");
+            }
+            Ok(v)
+        };
         let mut nodes = Vec::with_capacity(arr.len());
-        for item in arr {
+        for (i, item) in arr.iter().enumerate() {
             if let Some(v) = item.get("leaf") {
+                let value = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("node {i}: 'leaf' is not a number"))?;
+                if !value.is_finite() {
+                    bail!("node {i}: non-finite leaf value {value}");
+                }
                 nodes.push(Node::Leaf {
-                    value: v.as_f64().unwrap_or(0.0) as f32,
+                    value: value as f32,
                 });
             } else {
+                let threshold = item.req_f64("threshold")?;
+                if !threshold.is_finite() {
+                    bail!("node {i}: non-finite threshold {threshold}");
+                }
                 nodes.push(Node::Split {
-                    feature: item.req_usize("feature")? as u32,
-                    bin: item.req_usize("bin")? as u8,
-                    threshold: item.req_f64("threshold")? as f32,
-                    left: item.req_usize("left")? as u32,
-                    right: item.req_usize("right")? as u32,
+                    feature: int_field(item, "feature", u32::MAX as usize)? as u32,
+                    bin: int_field(item, "bin", u8::MAX as usize)? as u8,
+                    threshold: threshold as f32,
+                    left: int_field(item, "left", u32::MAX as usize)? as u32,
+                    right: int_field(item, "right", u32::MAX as usize)? as u32,
                 });
             }
         }
@@ -356,5 +379,40 @@ mod tests {
         let j = t.to_json();
         let back = Tree::from_json(&j).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_nodes() {
+        let reject = |src: &str, needle: &str| {
+            let err = Tree::from_json(&Json::parse(src).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "{src}: {err}");
+        };
+        // non-numeric leaf used to default to 0.0 silently
+        reject(r#"[{"leaf":"oops"}]"#, "not a number");
+        reject(r#"[{"leaf":1e400}]"#, "non-finite");
+        // NaN/Infinity are not valid JSON, but an Infinity threshold can
+        // arrive via overflow literals
+        reject(
+            r#"[{"feature":0,"bin":0,"threshold":1e400,"left":1,"right":2},{"leaf":1},{"leaf":2}]"#,
+            "non-finite threshold",
+        );
+        // bin wider than u8 / child index wider than u32 must not truncate
+        reject(
+            r#"[{"feature":0,"bin":700,"threshold":1.0,"left":1,"right":2},{"leaf":1},{"leaf":2}]"#,
+            "'bin'",
+        );
+        reject(
+            r#"[{"feature":0,"bin":0,"threshold":1.0,"left":4294967297,"right":2},{"leaf":1},{"leaf":2}]"#,
+            "'left'",
+        );
+        // missing split field
+        reject(r#"[{"feature":0,"bin":0,"left":1,"right":2},{"leaf":1},{"leaf":2}]"#, "threshold");
+        // out-of-range children (post-parse structural validation)
+        reject(
+            r#"[{"feature":0,"bin":0,"threshold":1.0,"left":5,"right":6}]"#,
+            "out of range",
+        );
     }
 }

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Generate tests/fixtures/golden.sgbdt — the committed golden artifact.
+
+An independent (Python) implementation of the `.sgbdt` v1 writer, so the
+golden bytes pin the Rust reader against the documented layout (DESIGN.md
+S16) rather than against the Rust writer's own output. Model: base score
+0.5 plus one stump (feature 0, threshold 2.0, v=0.5, leaves -1.0 / +1.0),
+one binned feature with uppers [0.0, 2.0, inf].
+
+Re-run only on a deliberate schema bump:  python3 make_golden.py
+"""
+
+import json
+import math
+import struct
+from pathlib import Path
+
+MAGIC = b"SGBDTART"
+SCHEMA_VERSION = 1
+
+
+def fnv64(data: bytes) -> int:
+    # FNV-1a 64: must match io/artifact.rs (pinned there against the
+    # published vectors fnv64(b"") and fnv64(b"a"))
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def hex16(v: int) -> str:
+    return f"{v:016x}"
+
+
+assert hex16(fnv64(b"")) == "cbf29ce484222325"
+assert hex16(fnv64(b"a")) == "af63dc4c8601ec8c"
+
+u32 = lambda v: struct.pack("<I", v)
+u64 = lambda v: struct.pack("<Q", v)
+f32 = lambda v: struct.pack("<f", v)
+
+# forest section: u64 n_trees; per tree: f32 v, u32 n_nodes, then the
+# BFS SoA arrays feature[] u32, bin[] u8, threshold[] f32, left[] u32,
+# leaf_value[] f32 (left == 0 marks a leaf; right is implicitly left+1)
+forest = b"".join(
+    [
+        u64(1),
+        f32(0.5),  # step length v
+        u32(3),  # nodes: root split + two leaves
+        u32(0) + u32(0) + u32(0),  # feature
+        bytes([1, 0, 0]),  # bin
+        f32(2.0) + f32(0.0) + f32(0.0),  # threshold
+        u32(1) + u32(0) + u32(0),  # left (0 = leaf)
+        f32(0.0) + f32(-1.0) + f32(1.0),  # leaf_value
+    ]
+)
+
+# cuts section: u64 n_features; per feature: u8 zero_bin, u32 n_uppers,
+# uppers[] f32
+cuts = b"".join([u64(1), bytes([0]), u32(3), f32(0.0) + f32(2.0) + f32(math.inf)])
+
+payload = forest + cuts
+manifest = json.dumps(
+    {
+        "format": "sgbdt",
+        "schema_version": SCHEMA_VERSION,
+        "config": hex16(0),
+        "seed": hex16(42),
+        "n_trees": 1,
+        "loss": "logistic",
+        "base_score": 0.5,
+        "cut_digest": hex16(fnv64(cuts)),
+        "payload_len": len(payload),
+        "sections": [
+            {
+                "name": "forest",
+                "offset": 0,
+                "len": len(forest),
+                "checksum": hex16(fnv64(forest)),
+            },
+            {
+                "name": "cuts",
+                "offset": len(forest),
+                "len": len(cuts),
+                "checksum": hex16(fnv64(cuts)),
+            },
+        ],
+        "provenance": {"build": "make_golden.py", "train_secs": 0.0},
+    },
+    separators=(",", ":"),
+).encode()
+
+out = Path(__file__).parent / "golden.sgbdt"
+out.write_bytes(MAGIC + u64(len(manifest)) + manifest + payload)
+print(f"wrote {out} ({out.stat().st_size} bytes)")

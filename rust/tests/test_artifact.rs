@@ -1,0 +1,356 @@
+//! The `.sgbdt` artifact contract (DESIGN.md §16), pinned end to end:
+//! save→load round-trips are bit-identical, every corruption case fails
+//! with the named [`SgbdtError`] variant (never a panic, never a garbage
+//! forest), checkpoint/resume reproduces the uninterrupted run bit for
+//! bit in all three trainer modes, and the committed golden fixture —
+//! written by an independent Python implementation of the layout —
+//! loads and scores exactly.
+
+use std::path::{Path, PathBuf};
+
+use asgbdt::config::{TrainConfig, TrainMode};
+use asgbdt::coordinator::{train, train_resumed, TrainReport};
+use asgbdt::data::{synthetic, CsrMatrix, Dataset};
+use asgbdt::forest::{FlatForest, ScratchPool};
+use asgbdt::io::artifact::{
+    self, fnv64, hex16, ArtifactMeta, SgbdtError, MAGIC, SCHEMA_VERSION,
+};
+use asgbdt::io::Json;
+use asgbdt::util::{Executor, PoolMode, Rng};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("asgbdt_artifact_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn meta() -> ArtifactMeta {
+    ArtifactMeta {
+        config_fingerprint: hex16(0x1234),
+        seed: 7,
+        loss: "logistic".to_string(),
+        train_secs: 0.5,
+        trainer: None,
+    }
+}
+
+/// Train a small serial model so fixtures carry real split structure
+/// (negative thresholds, multi-level trees), not hand-built stumps.
+fn trained(ds: &Dataset) -> TrainReport {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = TrainMode::Serial;
+    cfg.n_trees = 10;
+    cfg.step_length = 0.3;
+    cfg.sampling_rate = 0.9;
+    cfg.tree.max_leaves = 8;
+    cfg.max_bins = 16;
+    cfg.eval_every = 5;
+    train(&cfg, ds, None).unwrap()
+}
+
+// ------------------------------------------------------------- round trips
+
+#[test]
+fn roundtrip_margins_bit_identical_across_pool_and_thread_sweeps() {
+    // one sparse fixture (real-sim-like) and one dense (higgs-like)
+    for (tag, ds) in [
+        ("sparse", synthetic::realsim_like(300, 7)),
+        ("dense", synthetic::higgs_like(200, 9)),
+    ] {
+        let rep = trained(&ds);
+        let flat = FlatForest::from_forest(&rep.forest);
+        let path = tmp_dir("roundtrip").join(format!("{tag}.sgbdt"));
+        artifact::save(&path, &flat, &rep.cuts, &meta()).unwrap();
+        let a = artifact::load(&path).unwrap();
+        assert_eq!(a.forest.trees, flat.trees, "{tag}: SoA arrays changed");
+        assert_eq!(a.forest.base_score, flat.base_score);
+        assert_eq!(a.cuts, rep.cuts, "{tag}: cuts changed");
+        // margins bit-identical whichever executor scores the loaded copy
+        for pool_mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            for threads in [1usize, 4] {
+                let exec = Executor::new(pool_mode, threads);
+                let mut sp = ScratchPool::new();
+                let want = flat.predict_all_raw(&ds.x, &exec, &mut sp);
+                let got = a.forest.predict_all_raw(&ds.x, &exec, &mut sp);
+                assert_eq!(got, want, "{tag}: pool={pool_mode:?} threads={threads}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- corruption matrix
+
+fn fixture_bytes() -> Vec<u8> {
+    let ds = synthetic::realsim_like(200, 13);
+    let rep = trained(&ds);
+    artifact::to_bytes(&FlatForest::from_forest(&rep.forest), &rep.cuts, &meta())
+}
+
+/// (payload start, parsed manifest) of an artifact byte image.
+fn manifest_of(bytes: &[u8]) -> (usize, Json) {
+    let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let j = Json::parse(std::str::from_utf8(&bytes[16..16 + mlen]).unwrap()).unwrap();
+    (16 + mlen, j)
+}
+
+fn section_range(j: &Json, name: &str) -> (usize, usize) {
+    let s = j
+        .req("sections")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|s| s.req_str("name").unwrap() == name)
+        .unwrap();
+    (s.req_usize("offset").unwrap(), s.req_usize("len").unwrap())
+}
+
+#[test]
+fn corruption_matrix_rejects_each_case_with_the_named_variant() {
+    let bytes = fixture_bytes();
+    let (payload_start, manifest) = manifest_of(&bytes);
+
+    // header truncated
+    match artifact::load_bytes(&bytes[..10]).unwrap_err() {
+        SgbdtError::Truncated { section, .. } => assert_eq!(section, "header"),
+        other => panic!("expected Truncated(header), got {other}"),
+    }
+    // manifest truncated
+    match artifact::load_bytes(&bytes[..payload_start - 1]).unwrap_err() {
+        SgbdtError::Truncated { section, .. } => assert_eq!(section, "manifest"),
+        other => panic!("expected Truncated(manifest), got {other}"),
+    }
+    // payload truncated: manifest/payload length disagreement
+    match artifact::load_bytes(&bytes[..bytes.len() - 5]).unwrap_err() {
+        SgbdtError::LengthMismatch { manifest, actual } => {
+            assert_eq!(manifest, actual + 5);
+        }
+        other => panic!("expected LengthMismatch, got {other}"),
+    }
+    // extra trailing bytes: same named failure, other direction
+    let mut longer = bytes.clone();
+    longer.push(0);
+    match artifact::load_bytes(&longer).unwrap_err() {
+        SgbdtError::LengthMismatch { manifest, actual } => assert_eq!(manifest + 1, actual),
+        other => panic!("expected LengthMismatch, got {other}"),
+    }
+    // one flipped byte inside each payload section -> that section's
+    // checksum fails, by name, before any decode
+    for name in ["forest", "cuts"] {
+        let (off, len) = section_range(&manifest, name);
+        assert!(len > 0);
+        let mut corrupt = bytes.clone();
+        corrupt[payload_start + off + len / 2] ^= 0x01;
+        match artifact::load_bytes(&corrupt).unwrap_err() {
+            SgbdtError::ChecksumMismatch { section, expected, found } => {
+                assert_eq!(section, name);
+                assert_ne!(expected, found);
+            }
+            other => panic!("flip in '{name}': expected ChecksumMismatch, got {other}"),
+        }
+    }
+    // a tampered manifest checksum is also a named mismatch: rewrite the
+    // forest section's recorded hex in place (manifest bytes only — the
+    // payload stays intact, so `found` is the true checksum)
+    let (off, len) = section_range(&manifest, "forest");
+    let sum = fnv64(&bytes[payload_start + off..payload_start + off + len]);
+    let needle = hex16(sum);
+    let pos = bytes[..payload_start]
+        .windows(16)
+        .position(|w| w == needle.as_bytes())
+        .expect("manifest records the forest checksum");
+    let mut tampered = bytes.clone();
+    tampered[pos..pos + 16].copy_from_slice(hex16(sum ^ 1).as_bytes());
+    match artifact::load_bytes(&tampered).unwrap_err() {
+        SgbdtError::ChecksumMismatch { section, expected, found } => {
+            assert_eq!(section, "forest");
+            assert_eq!(expected, sum ^ 1);
+            assert_eq!(found, sum);
+        }
+        other => panic!("expected ChecksumMismatch, got {other}"),
+    }
+    // unknown schema version (the writer itself refuses to produce one —
+    // io::artifact unit tests — so forge the bytes directly)
+    let ds = synthetic::realsim_like(200, 13);
+    let rep = trained(&ds);
+    let future = artifact::to_bytes_with_schema(
+        &FlatForest::from_forest(&rep.forest),
+        &rep.cuts,
+        &meta(),
+        99,
+    );
+    match artifact::load_bytes(&future).unwrap_err() {
+        SgbdtError::UnknownSchemaVersion { found, supported } => {
+            assert_eq!(found, 99);
+            assert_eq!(supported, SCHEMA_VERSION);
+        }
+        other => panic!("expected UnknownSchemaVersion, got {other}"),
+    }
+    // wrong magic: not an .sgbdt file at all
+    let mut not_ours = bytes.clone();
+    not_ours[0] ^= 0xff;
+    assert!(matches!(
+        artifact::load_bytes(&not_ours).unwrap_err(),
+        SgbdtError::BadMagic { .. }
+    ));
+    // a flipped byte inside the manifest itself (the format tag) is a
+    // manifest failure naming expected-vs-found
+    let fmt = bytes
+        .windows(7)
+        .position(|w| w == b"\"sgbdt\"")
+        .expect("manifest carries the format tag");
+    let mut bad_fmt = bytes.clone();
+    bad_fmt[fmt + 1] ^= 0x01; // "sgbdt" -> "rgbdt"
+    match artifact::load_bytes(&bad_fmt).unwrap_err() {
+        SgbdtError::MalformedManifest { detail } => {
+            assert!(detail.contains("sgbdt") && detail.contains("rgbdt"), "{detail}");
+        }
+        other => panic!("expected MalformedManifest, got {other}"),
+    }
+}
+
+#[test]
+fn corruption_never_panics_and_never_yields_a_garbage_forest() {
+    let bytes = fixture_bytes();
+    let reference = artifact::load_bytes(&bytes).unwrap();
+    // every strict prefix must be rejected
+    for cut in (0..bytes.len()).step_by(41).chain([bytes.len() - 1]) {
+        assert!(
+            artifact::load_bytes(&bytes[..cut]).is_err(),
+            "prefix of {cut} bytes loaded"
+        );
+    }
+    // single-byte flips across the whole image: either rejected, or (a
+    // flip in a non-load-bearing manifest field like provenance) the
+    // decoded forest and cuts are still exactly the reference — a wrong
+    // model can never come back without an error
+    for i in (0..bytes.len()).step_by(23) {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0x10;
+        if let Ok(a) = artifact::load_bytes(&corrupt) {
+            assert_eq!(a.forest.trees, reference.forest.trees, "flip at byte {i}");
+            assert_eq!(a.forest.base_score, reference.forest.base_score);
+            assert_eq!(a.cuts, reference.cuts, "flip at byte {i}");
+        }
+    }
+}
+
+// -------------------------------------------------------- checkpoint/resume
+
+fn resume_cfg(mode: TrainMode, dir: &Path) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.n_trees = 60;
+    cfg.step_length = 0.2;
+    cfg.sampling_rate = 0.8;
+    cfg.workers = 3;
+    cfg.tree.max_leaves = 8;
+    cfg.max_bins = 16;
+    cfg.eval_every = 10;
+    if mode == TrainMode::Async {
+        // the async determinism envelope: only fresh pushes are accepted
+        // (so the accepted sequence is timing-independent) and
+        // feature_rate=1 keeps worker builds pure functions of the
+        // target — see coordinator::train_async_resumed
+        cfg.max_staleness = Some(0);
+        cfg.tree.feature_rate = 1.0;
+    }
+    cfg.checkpoint_every = 20;
+    cfg.checkpoint_path = Some(dir.join(format!("ck_{}.sgbdt", mode.as_str())));
+    cfg
+}
+
+#[test]
+fn resume_is_bit_identical_in_all_three_modes() {
+    let ds = synthetic::realsim_like(300, 11);
+    let mut rng = Rng::new(5);
+    let (tr, te) = ds.split(0.2, &mut rng);
+    let dir = tmp_dir("resume");
+    for mode in [TrainMode::Serial, TrainMode::Sync, TrainMode::Async] {
+        let cfg = resume_cfg(mode, &dir);
+        let full = train(&cfg, &tr, Some(&te)).unwrap();
+        assert_eq!(full.trees_accepted, 60);
+        let full_json = full.forest.to_json().to_string();
+        let base = cfg.checkpoint_path.clone().unwrap();
+        for k in [20usize, 40] {
+            let ck = artifact::load(&artifact::checkpoint_file(&base, k)).unwrap();
+            assert_eq!(ck.forest.n_trees(), k, "{mode:?} checkpoint at {k}");
+            let t = ck.trainer.as_ref().expect("checkpoints carry a trainer stanza");
+            assert_eq!(t.mode, mode.as_str());
+            assert_eq!(t.trees_done, k);
+            let resumed = train_resumed(&cfg, &tr, Some(&te), Some(&ck)).unwrap();
+            // final forest bit-identical to the uninterrupted run
+            assert_eq!(
+                resumed.forest.to_json().to_string(),
+                full_json,
+                "{mode:?} resumed from {k} diverged"
+            );
+            // ...and so are the final test loss and test error
+            assert_eq!(
+                resumed.curve.final_test_loss(),
+                full.curve.final_test_loss(),
+                "{mode:?} from {k}"
+            );
+            let (rp, fp) = (
+                resumed.curve.points.last().unwrap(),
+                full.curve.points.last().unwrap(),
+            );
+            assert_eq!(rp.test_error, fp.test_error, "{mode:?} from {k}");
+        }
+    }
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_another_mode() {
+    let ds = synthetic::realsim_like(200, 12);
+    let dir = tmp_dir("resume_mode");
+    let mut serial = resume_cfg(TrainMode::Serial, &dir);
+    serial.n_trees = 30;
+    train(&serial, &ds, None).unwrap();
+    let ck = artifact::load(&artifact::checkpoint_file(
+        serial.checkpoint_path.as_ref().unwrap(),
+        20,
+    ))
+    .unwrap();
+    let mut sync = serial.clone();
+    sync.mode = TrainMode::Sync;
+    let err = train_resumed(&sync, &ds, None, Some(&ck)).unwrap_err().to_string();
+    assert!(err.contains("mode=serial") && err.contains("mode=sync"), "{err}");
+    // a final model (no trainer stanza) is refused by name, too
+    let flat = FlatForest::from_forest(&asgbdt::forest::Forest::new(0.0));
+    let final_bytes = artifact::to_bytes(&flat, &ck.cuts, &meta());
+    let final_model = artifact::load_bytes(&final_bytes).unwrap();
+    let err = train_resumed(&serial, &ds, None, Some(&final_model))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("trainer stanza"), "{err}");
+}
+
+// ----------------------------------------------------------- golden fixture
+
+#[test]
+fn golden_fixture_loads_and_scores_exactly() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden.sgbdt");
+    assert!(artifact::sniff(&path).unwrap(), "golden fixture lost its magic");
+    let a = artifact::load(&path).unwrap();
+    assert_eq!(a.schema_version, SCHEMA_VERSION);
+    assert_eq!(a.build, "make_golden.py", "golden bytes come from the Python twin");
+    assert_eq!(a.seed, 42);
+    assert_eq!(a.forest.n_trees(), 1);
+    assert_eq!(a.forest.base_score, 0.5);
+    assert_eq!(a.cuts.n_features(), 1);
+    assert!(a.trainer.is_none());
+    // the stump splits feature 0 at 2.0 with v=0.5, leaves -1/+1:
+    // margin(1.0) = 0.5 + 0.5*(-1) = 0.0; margin(3.0) = 0.5 + 0.5*1 = 1.0
+    let x = CsrMatrix::from_dense(2, 1, &[1.0, 3.0]).unwrap();
+    let exec = Executor::scoped(1);
+    let mut pool = ScratchPool::new();
+    assert_eq!(a.forest.predict_all_raw(&x, &exec, &mut pool), vec![0.0, 1.0]);
+}
+
+#[test]
+fn golden_fixture_magic_matches_the_crate_constant() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden.sgbdt");
+    let head = &std::fs::read(path).unwrap()[..8];
+    assert_eq!(head, MAGIC);
+}
