@@ -1,0 +1,89 @@
+//! Loss-kernel bench: per-loss whole-vector grad/hess and eval passes
+//! (the produce-target hot loop) plus the multiclass class-gradient
+//! pass, with a fixed-vs-adaptive trees-to-target section from the
+//! staleness convergence model. Emits `results/BENCH_loss_kernels.json`
+//! and parse-checks it before exiting.
+use asgbdt::bench_harness::Runner;
+use asgbdt::config::StepMode;
+use asgbdt::io::Json;
+use asgbdt::loss::{multiclass, ScalarLoss};
+use asgbdt::simulator::{convergence, simulate_sharded_ps_trace, ClusterSpec, PhaseTimes};
+use asgbdt::util::Rng;
+
+fn main() {
+    let mut r = Runner::new("loss_kernels");
+    let n = if std::env::var("ASGBDT_BENCH_FAST").is_ok() {
+        50_000
+    } else {
+        500_000
+    };
+    let mut rng = Rng::new(7);
+    let f: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+    let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+    let w: Vec<f32> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+
+    for (name, loss) in [
+        ("logistic", ScalarLoss::Logistic),
+        ("squared", ScalarLoss::Squared),
+        ("huber", ScalarLoss::Huber(1.0)),
+    ] {
+        r.bench(&format!("grad_hess/{name}"), || loss.grad_hess_loss(&f, &y, &w));
+        r.bench(&format!("eval_blocked/{name}"), || {
+            loss.eval_sums_blocked(&f, &y, &w, 2048)
+        });
+    }
+
+    // multiclass: K class-major margin vectors, one class gradient pass
+    // (what one boosting round publishes) + the full eval
+    let k = 3;
+    let rows = n / k;
+    let fk: Vec<f32> = (0..k * rows).map(|_| (rng.normal()) as f32).collect();
+    let yk: Vec<f32> = (0..rows).map(|i| (i % k) as f32).collect();
+    let wk: Vec<f32> = vec![1.0; rows];
+    r.bench("grad_hess/multiclass_k3_class0", || {
+        multiclass::grad_hess_class(&fk, &yk, &wk, k, 0)
+    });
+    r.bench("eval/multiclass_k3", || multiclass::eval_sums(&fk, &yk, &wk, k));
+
+    // fixed vs adaptive trees-to-target on simulated staleness traces —
+    // the headline table of the adaptive-step sweep, repriced here so
+    // the bench snapshot carries it
+    let times = PhaseTimes::realsim_like();
+    let mut rows_json = Vec::new();
+    for workers in [1usize, 8, 64] {
+        let (_, trace) = simulate_sharded_ps_trace(&ClusterSpec::new(workers), &times, 4_000, 1);
+        let fixed = convergence::trees_to_target(&trace, 0.3, StepMode::Fixed, 0.05);
+        let adaptive = convergence::trees_to_target(&trace, 0.3, StepMode::Adaptive, 0.05);
+        println!(
+            "trees-to-target @ {workers} workers: fixed {fixed:?} adaptive {adaptive:?}"
+        );
+        rows_json.push((
+            format!("workers={workers}"),
+            Json::Obj(
+                [
+                    (
+                        "trees_fixed".to_string(),
+                        fixed.map_or(Json::Null, |t| Json::Num(t as f64)),
+                    ),
+                    (
+                        "trees_adaptive".to_string(),
+                        adaptive.map_or(Json::Null, |t| Json::Num(t as f64)),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            ),
+        ));
+    }
+    let section = Json::Obj(rows_json.into_iter().collect());
+
+    let path = r
+        .write_json(vec![("trees_to_target", section)])
+        .expect("write BENCH_loss_kernels.json");
+    // self-check: the snapshot must parse back (CI re-checks with
+    // python json.tool)
+    let back = Json::parse_file(&path).expect("snapshot must re-parse");
+    assert_eq!(back.req_str("group").unwrap(), "loss_kernels");
+    assert!(back.req("trees_to_target").is_ok());
+    r.write_csv().unwrap();
+}

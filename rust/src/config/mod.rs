@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 
 use crate::forest::ScoreMode;
 use crate::io::Json;
+use crate::loss::{LossKind, ScalarLoss};
 use crate::ps::TargetMode;
 use crate::tree::{HistogramStrategy, TreeParams};
 use crate::util::fault::{FaultPlan, FaultSpec};
@@ -134,18 +135,96 @@ impl ModelFormat {
     }
 }
 
+/// How the step length responds to observed staleness (config key
+/// `step`).
+///
+/// ```
+/// use asgbdt::config::StepMode;
+/// assert_eq!(StepMode::parse("adaptive").unwrap(), StepMode::Adaptive);
+/// assert_eq!(StepMode::Fixed.as_str(), "fixed");
+/// assert!(StepMode::parse("warmup").is_err());
+/// // τ = 0 is exactly the fixed step — adaptive degrades to fixed on a
+/// // fresh push (v / 1.0 is bit-identical to v in IEEE-754)
+/// assert_eq!(StepMode::Adaptive.effective(0.3, 0), 0.3);
+/// assert_eq!(StepMode::Adaptive.effective(0.3, 2), 0.1);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Every accepted push applies the configured `step_length` v — the
+    /// paper's setting.
+    Fixed,
+    /// Each accepted push applies v / (1 + τ), where τ is that push's
+    /// recorded staleness — the Proposition 1 damping rule (DESIGN.md
+    /// §17). A pure per-push function of τ, so replaying a τ trace
+    /// reproduces the run bit-for-bit.
+    Adaptive,
+}
+
+impl StepMode {
+    /// Parse the `step=` config/CLI value.
+    pub fn parse(s: &str) -> Result<StepMode> {
+        match s {
+            "fixed" => Ok(StepMode::Fixed),
+            "adaptive" => Ok(StepMode::Adaptive),
+            other => bail!("unknown step mode '{other}' (fixed|adaptive)"),
+        }
+    }
+
+    /// The config/CLI spelling of this mode.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StepMode::Fixed => "fixed",
+            StepMode::Adaptive => "adaptive",
+        }
+    }
+
+    /// The effective step length for one accepted push of staleness
+    /// `tau`: `v` under `fixed`, `v / (1 + τ)` under `adaptive`. At
+    /// τ = 0 the two are bit-identical (IEEE division by exactly 1.0).
+    #[inline]
+    pub fn effective(self, v: f32, tau: u64) -> f32 {
+        match self {
+            StepMode::Fixed => v,
+            StepMode::Adaptive => v / (1.0 + tau as f32),
+        }
+    }
+}
+
+impl Default for StepMode {
+    fn default() -> Self {
+        StepMode::Fixed
+    }
+}
+
 /// Full training configuration (paper defaults baked in: 400 trees,
 /// v = 0.01, sampling rate 0.8, feature rate 0.8, 100 leaves).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Which trainer drives the run (async / sync / serial).
     pub mode: TrainMode,
+    /// Which objective the run trains (config key `loss`): the paper's
+    /// binary `logistic` (default), `squared`/`huber` regression, or
+    /// `multiclass` softmax over `n_classes` margin vectors.
+    pub loss: LossKind,
     /// Gradient-step (paper) vs Newton-step tree targets.
     pub grad_mode: GradMode,
     /// Total trees the server accepts before stopping (paper: 400/1000).
+    /// Under `loss=multiclass` this counts boosting *rounds*; each round
+    /// pushes `n_classes` structure-sharing trees into the forest.
     pub n_trees: usize,
     /// Step length v (paper: 0.01).
     pub step_length: f32,
+    /// Fixed v per push (default) vs the staleness-adaptive
+    /// v / (1 + τ) damping rule (config key `step`; DESIGN.md §17).
+    pub step: StepMode,
+    /// Huber transition width δ (config key `huber_delta`); only read
+    /// under `loss=huber`, and `validate` rejects a non-default value
+    /// with any other loss rather than silently ignoring it.
+    pub huber_delta: f64,
+    /// Number of classes K under `loss=multiclass` (labels are integer
+    /// class ids `0..K`). 2 (the default) means "binary" and belongs to
+    /// the scalar losses; `loss=multiclass` requires K ≥ 3.
+    pub n_classes: usize,
     /// Uniform Bernoulli sampling rate R (paper: 0.2–0.8; extreme 5e-6).
     pub sampling_rate: f64,
     /// Number of asynchronous workers (threads, as in the paper's
@@ -261,9 +340,13 @@ impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             mode: TrainMode::Async,
+            loss: LossKind::Logistic,
             grad_mode: GradMode::Gradient,
             n_trees: 400,
             step_length: 0.01,
+            step: StepMode::Fixed,
+            huber_delta: 1.0,
+            n_classes: 2,
             sampling_rate: 0.8,
             workers: 4,
             max_staleness: None,
@@ -342,6 +425,54 @@ impl TrainConfig {
         // Cross-field checks: name BOTH conflicting knobs and the fix, so
         // a rejected run tells the user which one to turn (DESIGN.md §11
         // has the full decision table).
+        if self.loss == LossKind::Huber
+            && (!self.huber_delta.is_finite() || self.huber_delta <= 0.0)
+        {
+            bail!(
+                "huber_delta must be positive and finite, got {}",
+                self.huber_delta
+            );
+        }
+        if self.loss != LossKind::Huber && self.huber_delta != 1.0 {
+            bail!(
+                "conflicting knobs huber_delta={} and loss={}: the transition width only \
+                 exists for the Huber loss (it would be silently ignored) — set loss=huber \
+                 (to use the δ knob) or huber_delta=1.0 (to keep loss={})",
+                self.huber_delta,
+                self.loss.as_str(),
+                self.loss.as_str()
+            );
+        }
+        if self.n_classes < 2 {
+            bail!("n_classes must be >= 2, got {}", self.n_classes);
+        }
+        if self.loss == LossKind::Multiclass && self.n_classes < 3 {
+            bail!(
+                "conflicting knobs loss=multiclass and n_classes={}: softmax over two \
+                 classes is binary data, which the scalar losses own — set n_classes=K \
+                 with K >= 3 (to train K-way softmax) or loss=logistic (to train the \
+                 binary objective)",
+                self.n_classes
+            );
+        }
+        if self.loss != LossKind::Multiclass && self.n_classes != 2 {
+            bail!(
+                "conflicting knobs n_classes={} and loss={}: only the multiclass softmax \
+                 trains more than two classes — set loss=multiclass (to use n_classes) or \
+                 n_classes=2 (to keep loss={})",
+                self.n_classes,
+                self.loss.as_str(),
+                self.loss.as_str()
+            );
+        }
+        if self.step == StepMode::Adaptive && self.mode == TrainMode::Serial {
+            bail!(
+                "conflicting knobs step=adaptive and mode=serial: the serial trainer \
+                 observes zero staleness on every push, so the damping rule never engages \
+                 (adaptive ≡ fixed there by definition) — set mode=async|sync (to train \
+                 where τ is measured) or step=fixed (to keep mode=serial)"
+            );
+        }
         if self.target == TargetMode::Fused && self.scoring == ScoreMode::PerRow {
             bail!(
                 "conflicting knobs scoring=perrow and target=fused: the per-row reference \
@@ -442,13 +573,29 @@ impl TrainConfig {
         self.fault_seed.is_some() || self.worker_restarts > 0
     }
 
+    /// The scalar dispatch value for this config's loss, or `None` under
+    /// `loss=multiclass` (which has no single-margin-vector kernel — the
+    /// server routes it through its own whole-vector accept path).
+    pub fn scalar_loss(&self) -> Option<ScalarLoss> {
+        match self.loss {
+            LossKind::Logistic => Some(ScalarLoss::Logistic),
+            LossKind::Squared => Some(ScalarLoss::Squared),
+            LossKind::Huber => Some(ScalarLoss::Huber(self.huber_delta as f32)),
+            LossKind::Multiclass => None,
+        }
+    }
+
     /// Apply a `key=value` override (CLI surface).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "mode" => self.mode = TrainMode::parse(value)?,
+            "loss" => self.loss = LossKind::parse(value)?,
             "grad_mode" => self.grad_mode = GradMode::parse(value)?,
             "n_trees" => self.n_trees = value.parse()?,
             "step_length" | "v" => self.step_length = value.parse()?,
+            "step" | "step_mode" => self.step = StepMode::parse(value)?,
+            "huber_delta" => self.huber_delta = value.parse()?,
+            "n_classes" => self.n_classes = value.parse()?,
             "sampling_rate" => self.sampling_rate = value.parse()?,
             "workers" => self.workers = value.parse()?,
             "max_staleness" => {
@@ -516,9 +663,13 @@ impl TrainConfig {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mode", Json::Str(self.mode.as_str().into())),
+            ("loss", Json::Str(self.loss.as_str().into())),
             ("grad_mode", Json::Str(self.grad_mode.as_str().into())),
             ("n_trees", Json::Num(self.n_trees as f64)),
             ("step_length", Json::Num(self.step_length as f64)),
+            ("step", Json::Str(self.step.as_str().into())),
+            ("huber_delta", Json::Num(self.huber_delta)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
             ("sampling_rate", Json::Num(self.sampling_rate)),
             ("workers", Json::Num(self.workers as f64)),
             (
@@ -783,6 +934,117 @@ mod tests {
             c.scoring = ScoreMode::PerRow;
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn loss_and_step_knobs_default_roundtrip_and_dispatch() {
+        let c = TrainConfig::default();
+        assert_eq!(c.loss, LossKind::Logistic);
+        assert_eq!(c.step, StepMode::Fixed);
+        assert_eq!(c.huber_delta, 1.0);
+        assert_eq!(c.n_classes, 2);
+        assert_eq!(c.scalar_loss(), Some(ScalarLoss::Logistic));
+        let mut c = TrainConfig::default();
+        c.set("loss", "huber").unwrap();
+        c.set("huber_delta", "0.5").unwrap();
+        c.set("step", "adaptive").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.scalar_loss(), Some(ScalarLoss::Huber(0.5)));
+        let back = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.loss, LossKind::Huber);
+        assert_eq!(back.step, StepMode::Adaptive);
+        assert!((back.huber_delta - 0.5).abs() < 1e-12);
+        let mut c = TrainConfig::default();
+        c.set("loss", "multiclass").unwrap();
+        c.set("n_classes", "5").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.scalar_loss(), None);
+        let back = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.loss, LossKind::Multiclass);
+        assert_eq!(back.n_classes, 5);
+        assert!(c.set("loss", "hinge").is_err());
+        assert!(c.set("step", "warmup").is_err());
+    }
+
+    #[test]
+    fn multiclass_with_binary_data_names_both_knobs() {
+        // K = 2 is binary data: softmax must not masquerade as logistic
+        let mut c = TrainConfig::default();
+        c.loss = LossKind::Multiclass;
+        assert_eq!(c.n_classes, 2);
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("loss=multiclass") && msg.contains("n_classes=2"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("loss=logistic"), "error must name the fix, got: {msg}");
+        c.n_classes = 3;
+        c.validate().unwrap();
+        // and K > 2 without multiclass is the mirror-image conflict
+        let mut c = TrainConfig::default();
+        c.n_classes = 4;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("n_classes=4") && msg.contains("loss=logistic"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("loss=multiclass"), "error must name the fix, got: {msg}");
+    }
+
+    #[test]
+    fn huber_delta_without_huber_names_both_knobs() {
+        let mut c = TrainConfig::default();
+        c.huber_delta = 2.5;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("huber_delta=2.5") && msg.contains("loss=logistic"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("loss=huber"), "error must name the fix, got: {msg}");
+        c.loss = LossKind::Huber;
+        c.validate().unwrap();
+        // δ must be a positive finite width under loss=huber
+        c.huber_delta = -1.0;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(msg.contains("huber_delta"), "got: {msg}");
+    }
+
+    #[test]
+    fn adaptive_step_in_serial_mode_names_both_knobs() {
+        let mut c = TrainConfig::default();
+        c.mode = TrainMode::Serial;
+        c.step = StepMode::Adaptive;
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(
+            msg.contains("step=adaptive") && msg.contains("mode=serial"),
+            "error must name the conflicting pair, got: {msg}"
+        );
+        assert!(msg.contains("step=fixed"), "error must name the fix, got: {msg}");
+        // either side moving resolves it
+        c.step = StepMode::Fixed;
+        c.validate().unwrap();
+        c.step = StepMode::Adaptive;
+        c.mode = TrainMode::Async;
+        c.validate().unwrap();
+        c.mode = TrainMode::Sync;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn loss_and_step_move_the_fingerprint() {
+        // the objective and the step policy both change which forest gets
+        // trained, so they must pin the resume fingerprint
+        let base = TrainConfig::default().fingerprint();
+        let mut c = TrainConfig::default();
+        c.loss = LossKind::Squared;
+        assert_ne!(c.fingerprint(), base);
+        let mut c = TrainConfig::default();
+        c.step = StepMode::Adaptive;
+        assert_ne!(c.fingerprint(), base);
+        let mut c = TrainConfig::default();
+        c.loss = LossKind::Huber;
+        c.huber_delta = 0.7;
+        assert_ne!(c.fingerprint(), base);
     }
 
     #[test]

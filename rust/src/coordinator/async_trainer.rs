@@ -114,7 +114,7 @@ pub fn train_async_resumed(
     cfg.validate()?;
     let clock = Stopwatch::new();
     let binned = Arc::new(BinnedDataset::from_dataset(train, cfg.max_bins)?);
-    let engine = GradientEngine::auto(&cfg.artifact_dir);
+    let engine = GradientEngine::auto_for(&cfg.artifact_dir, cfg.scalar_loss());
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
     if let Some(a) = resume {
         // async checkpoints carry no sequential RNG words — ignore them
@@ -282,6 +282,7 @@ pub fn train_async_resumed(
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,
+        steps: core.steps,
         timer: core.timer,
     })
 }

@@ -17,7 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::TrainConfig;
+use crate::config::{StepMode, TrainConfig};
 use crate::data::{BinCuts, BinnedDataset};
 use crate::forest::FlatForest;
 use crate::io::artifact::{self, ArtifactMeta, SgbdtArtifact, TrainerState};
@@ -34,6 +34,7 @@ pub(crate) struct Checkpointer {
     n_trees_target: usize,
     fingerprint: String,
     seed: u64,
+    loss: String,
     mode: &'static str,
     cuts: BinCuts,
 }
@@ -49,6 +50,7 @@ impl Checkpointer {
             n_trees_target: cfg.n_trees,
             fingerprint: cfg.fingerprint(),
             seed: cfg.seed,
+            loss: cfg.loss.as_str().to_string(),
             mode,
             cuts: binned.cuts(),
         }
@@ -73,7 +75,7 @@ impl Checkpointer {
         let meta = ArtifactMeta {
             config_fingerprint: self.fingerprint.clone(),
             seed: self.seed,
-            loss: "logistic".to_string(),
+            loss: self.loss.clone(),
             train_secs: wall_secs,
             trainer: Some(TrainerState {
                 mode: self.mode.to_string(),
@@ -88,8 +90,13 @@ impl Checkpointer {
 
 /// Restore a fresh [`ServerCore`] to a checkpoint's state by replaying
 /// its trees, after verifying the checkpoint actually belongs to this
-/// run: same config fingerprint, same trainer mode, same bin cuts (i.e.
-/// the same training data), a step length matching every stored tree.
+/// run: same loss, same config fingerprint, same trainer mode, same bin
+/// cuts (i.e. the same training data). Each tree is replayed at the
+/// step scale recorded in the artifact — that is what makes
+/// `step=adaptive` checkpoints (whose per-tree scales vary with the
+/// recorded staleness) restore bit for bit; under `step=fixed` every
+/// recorded scale must additionally equal this run's `step_length`.
+/// Multiclass checkpoints replay in rounds of `n_classes` class trees.
 /// Returns the checkpointed build-RNG state (`None` for async, whose
 /// builds draw nothing at `feature_rate=1` and whose sampling is
 /// counter-keyed inside the core).
@@ -113,6 +120,14 @@ pub(crate) fn restore(
             trainer.mode
         );
     }
+    if a.loss != cfg.loss.as_str() {
+        bail!(
+            "--resume: checkpoint was trained with loss={}, this run trains loss={} — \
+             resumed training must keep the loss that wrote the checkpoint",
+            a.loss,
+            cfg.loss.as_str()
+        );
+    }
     let expected = cfg.fingerprint();
     if a.config_fingerprint != expected {
         bail!(
@@ -122,17 +137,21 @@ pub(crate) fn restore(
             a.config_fingerprint
         );
     }
-    if trainer.trees_done != a.forest.n_trees() {
+    // trees_done counts accepted pushes: rounds for multiclass (the
+    // forest then holds n_classes trees per round), trees otherwise.
+    let k = if cfg.scalar_loss().is_some() { 1 } else { cfg.n_classes };
+    if trainer.trees_done * k != a.forest.n_trees() {
         bail!(
-            "--resume: trainer stanza claims {} trees but the artifact holds {}",
+            "--resume: trainer stanza claims {} trees{} but the artifact holds {}",
             trainer.trees_done,
+            if k > 1 { format!(" of {k} classes each") } else { String::new() },
             a.forest.n_trees()
         );
     }
-    if a.forest.n_trees() > cfg.n_trees {
+    if trainer.trees_done > cfg.n_trees {
         bail!(
             "--resume: checkpoint already holds {} trees, past this run's n_trees={}",
-            a.forest.n_trees(),
+            trainer.trees_done,
             cfg.n_trees
         );
     }
@@ -142,15 +161,37 @@ pub(crate) fn restore(
              must use the exact dataset (and max_bins) the checkpoint was trained on"
         );
     }
-    for (i, (v, ft)) in a.forest.trees.iter().enumerate() {
-        if *v != cfg.step_length {
-            bail!(
-                "--resume: tree {i} was pushed with step length {v}, this run uses {} — \
-                 the checkpoint belongs to a different configuration",
-                cfg.step_length
-            );
+    if k == 1 {
+        for (i, (v, ft)) in a.forest.trees.iter().enumerate() {
+            if cfg.step == StepMode::Fixed && *v != cfg.step_length {
+                bail!(
+                    "--resume: tree {i} was pushed with step length {v}, this run uses \
+                     step=fixed step_length={} — the checkpoint belongs to a different \
+                     configuration",
+                    cfg.step_length
+                );
+            }
+            core.replay_tree_with(ft.to_tree(), *v)?;
         }
-        core.replay_tree(ft.to_tree())?;
+    } else {
+        for (round, chunk) in a.forest.trees.chunks(k).enumerate() {
+            let v = chunk[0].0;
+            if chunk.iter().any(|(vi, _)| *vi != v) {
+                bail!(
+                    "--resume: multiclass round {round} stores mixed step scales — the \
+                     artifact's class trees are not from one accepted push"
+                );
+            }
+            if cfg.step == StepMode::Fixed && v != cfg.step_length {
+                bail!(
+                    "--resume: round {round} was pushed with step length {v}, this run \
+                     uses step=fixed step_length={} — the checkpoint belongs to a \
+                     different configuration",
+                    cfg.step_length
+                );
+            }
+            core.replay_round(chunk.iter().map(|(_, ft)| ft.to_tree()).collect(), v)?;
+        }
     }
     Ok(trainer.rng_state)
 }
@@ -184,7 +225,7 @@ mod tests {
         let meta = ArtifactMeta {
             config_fingerprint: cfg.fingerprint(),
             seed: cfg.seed,
-            loss: "logistic".to_string(),
+            loss: cfg.loss.as_str().to_string(),
             train_secs: 0.0,
             trainer: Some(TrainerState {
                 mode: mode.to_string(),
@@ -211,6 +252,15 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("mode=async") && err.contains("mode=serial"), "{err}");
+        // wrong loss (checked before the fingerprint so the error names
+        // the actual disagreement, not just "configs differ")
+        let mut sq = cfg.clone();
+        sq.loss = crate::loss::LossKind::Squared;
+        let a = artifact_for(&sq, &binned, "serial", 0);
+        let err = restore(&mut core, &a, &cfg, "serial", &binned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("loss=squared") && err.contains("loss=logistic"), "{err}");
         // wrong config fingerprint
         let mut other = cfg.clone();
         other.seed = 99;

@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::data::BinCuts;
 use crate::forest::Forest;
 use crate::io::Json;
-use crate::metrics::{LossCurve, StalenessStats, SupervisionStats};
+use crate::metrics::{LossCurve, StalenessStats, StepStats, SupervisionStats};
 use crate::runtime::EngineKind;
 use crate::util::fault::FaultEvent;
 use crate::util::stats::Summary;
@@ -25,6 +25,9 @@ pub struct TrainReport {
     pub curve: LossCurve,
     /// Realised staleness of accepted (and count of rejected) pushes.
     pub staleness: StalenessStats,
+    /// Effective step length of every accepted push (constant under
+    /// `step=fixed`; the τ-shrunk trace under `step=adaptive`).
+    pub steps: StepStats,
     /// Per-phase server/worker time accounting.
     pub timer: PhaseTimer,
     /// Total wall-clock of the training loop.
@@ -84,6 +87,8 @@ impl TrainReport {
             ),
             ("staleness_mean", Json::Num(self.staleness.mean())),
             ("staleness_max", Json::Num(self.staleness.max() as f64)),
+            ("step_effective_mean", Json::Num(self.steps.mean())),
+            ("step_effective_min", Json::Num(self.steps.min() as f64)),
             ("build_time_mean", Json::Num(self.build_times.mean)),
             ("worker_deaths", Json::Num(self.supervision.deaths as f64)),
             (

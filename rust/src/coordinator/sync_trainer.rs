@@ -61,7 +61,7 @@ pub fn train_sync_resumed(
     cfg.validate()?;
     let clock = Stopwatch::new();
     let binned = Arc::new(BinnedDataset::from_dataset(train, cfg.max_bins)?);
-    let engine = GradientEngine::auto(&cfg.artifact_dir);
+    let engine = GradientEngine::auto_for(&cfg.artifact_dir, cfg.scalar_loss());
     let mut core = ServerCore::new(&cfg, train, binned.clone(), test, engine)?;
     let mut rng = Rng::new(cfg.seed ^ 0x0ddb_a11);
     if let Some(a) = resume {
@@ -115,6 +115,7 @@ pub fn train_sync_resumed(
         forest: core.forest,
         curve: core.curve,
         staleness: core.staleness,
+        steps: core.steps,
         timer: core.timer,
     })
 }

@@ -118,6 +118,106 @@ pub fn e2006_like(n_rows: usize, seed: u64) -> Dataset {
     ds
 }
 
+/// Seeded sparse **regression** corpus for `loss=squared|huber`: same
+/// power-law sparse features as [`realsim_like`], continuous labels from
+/// the sparse linear response plus Gaussian noise, and a small fraction
+/// of heavy-tailed outliers (where huber's robustness shows). Labels
+/// are centred near 3.0 so the mean-label base score is exercised away
+/// from zero.
+pub fn regression_like(n_rows: usize, seed: u64) -> Dataset {
+    let spec = realsim_spec(n_rows);
+    let mut rng = Rng::new(seed ^ 0x5eed_4e97);
+    let d = spec.n_features;
+    let mut w = vec![0.0f64; d];
+    for wi in w.iter_mut() {
+        if rng.bernoulli(0.3) {
+            *wi = rng.normal();
+        }
+    }
+    let cum = power_law_cdf(d, spec.popularity_alpha);
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n_rows);
+    let mut labels = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let k = sample_row_nnz(&mut rng, spec.nnz_per_row, d);
+        let mut feats = std::collections::BTreeMap::new();
+        for _ in 0..k {
+            let f = sample_from_cdf(&cum, rng.uniform());
+            let v = (0.1 + rng.exponential() * 0.5) as f32;
+            feats.entry(f as u32).or_insert(v);
+        }
+        let response: f64 = feats
+            .iter()
+            .map(|(&f, &v)| w[f as usize] * v as f64)
+            .sum::<f64>();
+        let noise = if rng.bernoulli(0.03) {
+            rng.normal() * 8.0 // heavy-tailed outlier
+        } else {
+            rng.normal() * 0.3
+        };
+        labels.push((3.0 + response + noise) as f32);
+        rows.push(feats.into_iter().collect());
+    }
+    let x = CsrMatrix::from_rows(d, &rows).expect("generator emits valid CSR");
+    let mut ds = Dataset::new("regression-like", x, labels);
+    ds.name = "regression-like".into();
+    ds
+}
+
+/// Seeded sparse **K-class** corpus for `loss=multiclass`: K independent
+/// sparse ground-truth weight vectors; each row's label is the argmax
+/// class logit, flipped to a uniformly random class with small
+/// probability. Labels are integer class ids in `[0, K)` stored as f32
+/// (the layout `ps/server.rs` validates).
+pub fn multiclass_like(n_rows: usize, n_classes: usize, seed: u64) -> Dataset {
+    assert!(n_classes >= 2, "multiclass_like needs n_classes >= 2");
+    let spec = realsim_spec(n_rows);
+    let mut rng = Rng::new(seed ^ 0x3c1a_55e5);
+    let d = spec.n_features;
+    let mut w = vec![vec![0.0f64; d]; n_classes];
+    for wc in w.iter_mut() {
+        for wi in wc.iter_mut() {
+            if rng.bernoulli(0.3) {
+                *wi = rng.normal() * 2.0;
+            }
+        }
+    }
+    let cum = power_law_cdf(d, spec.popularity_alpha);
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n_rows);
+    let mut labels = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let k = sample_row_nnz(&mut rng, spec.nnz_per_row, d);
+        let mut feats = std::collections::BTreeMap::new();
+        for _ in 0..k {
+            let f = sample_from_cdf(&cum, rng.uniform());
+            let v = (0.1 + rng.exponential() * 0.5) as f32;
+            feats.entry(f as u32).or_insert(v);
+        }
+        let mut best = 0usize;
+        let mut best_logit = f64::NEG_INFINITY;
+        for (c, wc) in w.iter().enumerate() {
+            let logit: f64 = feats
+                .iter()
+                .map(|(&f, &v)| wc[f as usize] * v as f64)
+                .sum();
+            if logit > best_logit {
+                best_logit = logit;
+                best = c;
+            }
+        }
+        let y = if rng.bernoulli(spec.label_noise) {
+            rng.range(0, n_classes)
+        } else {
+            best
+        };
+        labels.push(y as f32);
+        rows.push(feats.into_iter().collect());
+    }
+    let x = CsrMatrix::from_rows(d, &rows).expect("generator emits valid CSR");
+    let mut ds = Dataset::new("multiclass-like", x, labels);
+    ds.name = "multiclass-like".into();
+    ds
+}
+
 /// higgs_like: 28 dense physics-like features, two overlapping Gaussian
 /// classes, high label noise — and crucially *low sample diversity*: rows
 /// are snapped to a coarse grid so many rows coincide (Figure 4(a)
@@ -299,6 +399,46 @@ mod tests {
         // weak but must differ from exact independence for learnability.
         let pos = ds.positive_rate();
         assert!(pos > 0.2 && pos < 0.8);
+    }
+
+    #[test]
+    fn regression_like_has_continuous_centred_labels() {
+        let ds = regression_like(2_000, 21);
+        assert_eq!(ds.n_rows(), 2_000);
+        assert!(ds.x.density() < 0.02, "density={}", ds.x.density());
+        // labels are continuous (not {0,1}) and centred near 3.0
+        let non_binary = ds.y.iter().filter(|&&y| y != 0.0 && y != 1.0).count();
+        assert!(non_binary > 1_900, "only {non_binary} non-binary labels");
+        let mean = ds.y.iter().map(|&y| y as f64).sum::<f64>() / ds.n_rows() as f64;
+        assert!((mean - 3.0).abs() < 0.5, "mean={mean}");
+        // the outlier tail exists but is rare
+        let spread = ds.y.iter().map(|&y| (y as f64 - mean).abs());
+        let far = spread.filter(|&d| d > 5.0).count();
+        assert!(far > 0 && far < ds.n_rows() / 10, "outliers={far}");
+        // deterministic per seed
+        let again = regression_like(2_000, 21);
+        assert_eq!(ds.y, again.y);
+        assert_ne!(ds.y, regression_like(2_000, 22).y);
+    }
+
+    #[test]
+    fn multiclass_like_labels_are_class_ids_all_present() {
+        for k in [3usize, 5] {
+            let ds = multiclass_like(1_500, k, 33);
+            assert_eq!(ds.n_rows(), 1_500);
+            let mut counts = vec![0usize; k];
+            for &y in &ds.y {
+                assert!(y >= 0.0 && y.fract() == 0.0 && (y as usize) < k, "label {y}");
+                counts[y as usize] += 1;
+            }
+            // every class occupied, none overwhelmingly dominant
+            for (c, &n) in counts.iter().enumerate() {
+                assert!(n > 0, "class {c} empty (k={k})");
+                assert!(n < 1_400, "class {c} has {n}/1500 rows (k={k})");
+            }
+            let again = multiclass_like(1_500, k, 33);
+            assert_eq!(ds.y, again.y);
+        }
     }
 
     #[test]

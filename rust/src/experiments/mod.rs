@@ -7,6 +7,7 @@
 //! vs `Paper` (paper-shaped sizes; minutes).
 
 pub mod ablation;
+pub mod adaptive;
 pub mod common;
 pub mod fig10;
 pub mod fig4;
@@ -24,7 +25,8 @@ use anyhow::{bail, Result};
 
 use crate::io::Json;
 
-/// Run an experiment by figure id ("fig4" … "fig10", "ablation").
+/// Run an experiment by figure id ("fig4" … "fig10", "ablation",
+/// "adaptive").
 pub fn run(id: &str, scale: Scale, out_dir: &Path) -> Result<Json> {
     match id {
         "fig4" => fig4::run(scale, out_dir),
@@ -35,11 +37,15 @@ pub fn run(id: &str, scale: Scale, out_dir: &Path) -> Result<Json> {
         "fig9" => fig9::run(scale, out_dir),
         "fig10" => fig10::run(scale, out_dir),
         "ablation" => ablation::run(scale, out_dir),
-        other => bail!("unknown experiment '{other}' (fig4..fig10, ablation)"),
+        "adaptive" => adaptive::run(scale, out_dir),
+        other => bail!("unknown experiment '{other}' (fig4..fig10, ablation, adaptive)"),
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (the adaptive-step sweep rides at
+/// the end — it extends fig9's sensitivity story past the paper).
 pub fn all_ids() -> &'static [&'static str] {
-    &["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablation"]
+    &[
+        "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablation", "adaptive",
+    ]
 }

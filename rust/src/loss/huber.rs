@@ -1,0 +1,182 @@
+//! Huber loss for robust regression, kink at |F − y| = δ:
+//!
+//! ```text
+//! l(y, F) = ½ r²             for |r| ≤ δ       (r = F − y)
+//!         = δ (|r| − ½ δ)    for |r| > δ
+//! ```
+//!
+//! Closed forms: l' = r (inside), δ·sign(r) (outside); l'' = 1 inside,
+//! 0 outside. A zero hessian is safe for leaf fitting because the
+//! builder's Newton step divides by H + λ with λ > 0. The eval "error"
+//! column is the weighted mean absolute error, same as `squared`.
+//!
+//! Structure mirrors [`super::logistic`] — zero-weight skip, f64
+//! accumulators — so fused and whole-vector passes are bit-identical.
+
+use super::GradHess;
+
+/// Per-element Huber loss at transition width `delta`.
+#[inline]
+pub fn loss_elem(f: f32, y: f32, delta: f32) -> f32 {
+    let r = f - y;
+    let a = r.abs();
+    if a <= delta {
+        0.5 * r * r
+    } else {
+        delta * (a - 0.5 * delta)
+    }
+}
+
+/// Per-row target: `(w·l', w·l'')` at margin `f` — the shared expression
+/// both the whole-vector pass and the fused accept pass compile.
+#[inline]
+pub fn grad_hess_at(f: f32, y: f32, w: f32, delta: f32) -> (f32, f32) {
+    let r = f - y;
+    if r.abs() <= delta {
+        (w * r, w)
+    } else {
+        (w * delta * r.signum(), 0.0)
+    }
+}
+
+/// Whole-vector produce-target pass; same contract as
+/// [`super::logistic::grad_hess_loss`].
+pub fn grad_hess_loss(f: &[f32], y: &[f32], w: &[f32], delta: f32) -> GradHess {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let n = f.len();
+    let mut grad = vec![0.0f32; n];
+    let mut hess = vec![0.0f32; n];
+    let mut loss_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    for i in 0..n {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue; // padding / unsampled rows are exact no-ops
+        }
+        let (g, h) = grad_hess_at(f[i], y[i], wi, delta);
+        grad[i] = g;
+        hess[i] = h;
+        loss_sum += (wi * loss_elem(f[i], y[i], delta)) as f64;
+        weight_sum += wi as f64;
+    }
+    GradHess {
+        grad,
+        hess,
+        loss_sum,
+        weight_sum,
+    }
+}
+
+/// Weighted evaluation pass: (loss_sum, abs_err_sum, weight_sum).
+pub fn eval_sums(f: &[f32], y: &[f32], w: &[f32], delta: f32) -> (f64, f64, f64) {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let mut loss_sum = 0.0f64;
+    let mut err_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    for i in 0..f.len() {
+        let wi = w[i] as f64;
+        if wi == 0.0 {
+            continue;
+        }
+        loss_sum += wi * loss_elem(f[i], y[i], delta) as f64;
+        err_sum += wi * (f[i] - y[i]).abs() as f64;
+        weight_sum += wi;
+    }
+    (loss_sum, err_sum, weight_sum)
+}
+
+/// [`eval_sums`] with the deterministic blocked reduction (see
+/// [`super::logistic::eval_sums_blocked`]).
+pub fn eval_sums_blocked(
+    f: &[f32],
+    y: &[f32],
+    w: &[f32],
+    delta: f32,
+    block: usize,
+) -> (f64, f64, f64) {
+    assert!(block > 0, "block size must be positive");
+    let n = f.len();
+    let (mut loss, mut err, mut weight) = (0.0f64, 0.0f64, 0.0f64);
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + block).min(n);
+        let (l, e, wsum) = eval_sums(&f[start..end], &y[start..end], &w[start..end], delta);
+        loss += l;
+        err += e;
+        weight += wsum;
+        start = end;
+    }
+    (loss, err, weight)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_inside_linear_outside() {
+        let d = 1.0;
+        assert_eq!(loss_elem(0.5, 0.0, d), 0.125);
+        // outside: δ(|r| − δ/2) = 1·(3 − 0.5) = 2.5
+        assert_eq!(loss_elem(3.0, 0.0, d), 2.5);
+        let (g, h) = grad_hess_at(0.5, 0.0, 1.0, d);
+        assert_eq!((g, h), (0.5, 1.0));
+        let (g, h) = grad_hess_at(-3.0, 0.0, 1.0, d);
+        assert_eq!((g, h), (-1.0, 0.0));
+    }
+
+    #[test]
+    fn loss_is_continuous_at_the_kink() {
+        let d = 1.5f32;
+        let eps = 1e-4f32;
+        let inside = loss_elem(d - eps, 0.0, d);
+        let outside = loss_elem(d + eps, 0.0, d);
+        assert!((inside - outside).abs() < 1e-3, "{inside} vs {outside}");
+        // gradient is continuous too (r → δ·sign(r) at |r| = δ)
+        let (gi, _) = grad_hess_at(d - eps, 0.0, 1.0, d);
+        let (go, _) = grad_hess_at(d + eps, 0.0, 1.0, d);
+        assert!((gi - go).abs() < 1e-3, "{gi} vs {go}");
+    }
+
+    #[test]
+    fn zero_weight_rows_are_noops() {
+        let gh = grad_hess_loss(&[5.0, -3.0], &[0.0, 1.0], &[0.0, 2.0], 1.0);
+        assert_eq!(gh.grad[0], 0.0);
+        assert_eq!(gh.hess[0], 0.0);
+        assert!((gh.weight_sum - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_hess_at_matches_whole_vector_pass_bitwise() {
+        let d = 0.8f32;
+        let f = [0.3f32, -0.8, 1.2, 0.0, 4.0];
+        let y = [1.0f32, 0.0, 1.0, 0.0, 1.0];
+        let w = [1.0f32, 0.0, 2.5, 0.7, 1.0];
+        let gh = grad_hess_loss(&f, &y, &w, d);
+        for i in 0..f.len() {
+            if w[i] == 0.0 {
+                continue;
+            }
+            let (g, h) = grad_hess_at(f[i], y[i], w[i], d);
+            assert_eq!(g, gh.grad[i]);
+            assert_eq!(h, gh.hess[i]);
+        }
+    }
+
+    #[test]
+    fn blocked_eval_matches_whole_sweep() {
+        let n = 257;
+        let f: Vec<f32> = (0..n).map(|i| (i as f32) / 40.0 - 3.0).collect();
+        let y: Vec<f32> = (0..n).map(|i| ((i * 3) % 7) as f32 / 2.0).collect();
+        let w = vec![1.0f32; n];
+        let whole = eval_sums_blocked(&f, &y, &w, 1.0, n);
+        for block in [1usize, 64, 256] {
+            let b = eval_sums_blocked(&f, &y, &w, 1.0, block);
+            assert!((b.0 - whole.0).abs() < 1e-9 * (1.0 + whole.0.abs()));
+            assert!((b.1 - whole.1).abs() < 1e-9 * (1.0 + whole.1.abs()));
+            assert_eq!(b.2, whole.2);
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! The pluggable loss layer: the `loss=` knob ([`LossKind`]) and the
+//! scalar dispatch point ([`ScalarLoss`]) compiled into every
+//! produce-target path.
+//!
+//! Design (DESIGN.md §17): the three scalar losses (logistic, squared,
+//! huber) share one margin vector and one per-row `(w·l', w·l'')`
+//! expression, so the fused sharded accept pass (`ps/shard.rs`), the
+//! whole-vector fallback ([`crate::runtime::GradientEngine`]) and the
+//! serial reference sweeps all stay bit-identical per loss — exactly
+//! the discipline the logistic path already obeys. Multiclass softmax
+//! is *not* a [`ScalarLoss`]: it carries K class-major margin vectors
+//! and goes through its own whole-vector accept path in `ps/server.rs`
+//! (the same shape as the AOT bucket fallback), so the scalar kernels
+//! never see it.
+
+use anyhow::{bail, Result};
+
+use super::{huber, logistic, multiclass, squared, GradHess};
+
+/// Which objective the run trains (`loss=` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Binary logistic loss on y ∈ {0, 1} — the paper's objective and
+    /// the default.
+    Logistic,
+    /// Squared error ½(F − y)² for regression targets.
+    Squared,
+    /// Huber loss for robust regression; transition width `huber_delta`.
+    Huber,
+    /// K-class softmax over `n_classes` parallel margin vectors.
+    Multiclass,
+}
+
+impl LossKind {
+    /// Parse the `loss=` knob.
+    ///
+    /// ```
+    /// use asgbdt::loss::LossKind;
+    /// assert_eq!(LossKind::parse("huber").unwrap(), LossKind::Huber);
+    /// assert_eq!(LossKind::parse("logistic").unwrap(), LossKind::default());
+    /// assert!(LossKind::parse("hinge").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<LossKind> {
+        match s {
+            "logistic" => Ok(LossKind::Logistic),
+            "squared" => Ok(LossKind::Squared),
+            "huber" => Ok(LossKind::Huber),
+            "multiclass" => Ok(LossKind::Multiclass),
+            other => bail!(
+                "unknown loss '{other}' (expected 'logistic', 'squared', 'huber' or 'multiclass')"
+            ),
+        }
+    }
+
+    /// The knob spelling (inverse of [`LossKind::parse`]); also the name
+    /// recorded in `.sgbdt` artifact manifests.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LossKind::Logistic => "logistic",
+            LossKind::Squared => "squared",
+            LossKind::Huber => "huber",
+            LossKind::Multiclass => "multiclass",
+        }
+    }
+}
+
+impl Default for LossKind {
+    fn default() -> Self {
+        LossKind::Logistic
+    }
+}
+
+/// A scalar (single-margin-vector) loss, dispatched per row inside the
+/// fused accept kernel and per vector inside the gradient engine. `Copy`
+/// so it travels by value into [`crate::ps::AcceptInputs`] and shard
+/// closures.
+///
+/// The `Logistic` arm delegates verbatim to [`logistic`] — same
+/// functions the pre-pluggable code called — so logistic runs are
+/// bit-identical to the logistic-only trainer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalarLoss {
+    /// Binary logistic loss.
+    Logistic,
+    /// Squared error.
+    Squared,
+    /// Huber loss with its transition width δ.
+    Huber(f32),
+}
+
+impl ScalarLoss {
+    /// Per-row target `(w·l', w·l'')` at margin `f` — the one shared
+    /// expression the fused shard kernel and the whole-vector pass both
+    /// compile (see [`logistic::grad_hess_at`]).
+    #[inline]
+    pub fn grad_hess_at(self, f: f32, y: f32, w: f32) -> (f32, f32) {
+        match self {
+            ScalarLoss::Logistic => logistic::grad_hess_at(f, y, w),
+            ScalarLoss::Squared => squared::grad_hess_at(f, y, w),
+            ScalarLoss::Huber(d) => huber::grad_hess_at(f, y, w, d),
+        }
+    }
+
+    /// Per-element loss l(y, F).
+    #[inline]
+    pub fn loss_elem(self, f: f32, y: f32) -> f32 {
+        match self {
+            ScalarLoss::Logistic => logistic::loss_elem(f, y),
+            ScalarLoss::Squared => squared::loss_elem(f, y),
+            ScalarLoss::Huber(d) => huber::loss_elem(f, y, d),
+        }
+    }
+
+    /// Whole-vector produce-target pass (the AOT-style bucket fallback
+    /// and the serial reference path).
+    pub fn grad_hess_loss(self, f: &[f32], y: &[f32], w: &[f32]) -> GradHess {
+        match self {
+            ScalarLoss::Logistic => logistic::grad_hess_loss(f, y, w),
+            ScalarLoss::Squared => squared::grad_hess_loss(f, y, w),
+            ScalarLoss::Huber(d) => huber::grad_hess_loss(f, y, w, d),
+        }
+    }
+
+    /// Weighted evaluation pass: (loss_sum, err_sum, weight_sum).
+    pub fn eval_sums(self, f: &[f32], y: &[f32], w: &[f32]) -> (f64, f64, f64) {
+        match self {
+            ScalarLoss::Logistic => logistic::eval_sums(f, y, w),
+            ScalarLoss::Squared => squared::eval_sums(f, y, w),
+            ScalarLoss::Huber(d) => huber::eval_sums(f, y, w, d),
+        }
+    }
+
+    /// [`ScalarLoss::eval_sums`] with the deterministic blocked
+    /// reduction that pins fused-path evals to the serial path bitwise.
+    pub fn eval_sums_blocked(
+        self,
+        f: &[f32],
+        y: &[f32],
+        w: &[f32],
+        block: usize,
+    ) -> (f64, f64, f64) {
+        match self {
+            ScalarLoss::Logistic => logistic::eval_sums_blocked(f, y, w, block),
+            ScalarLoss::Squared => squared::eval_sums_blocked(f, y, w, block),
+            ScalarLoss::Huber(d) => huber::eval_sums_blocked(f, y, w, d, block),
+        }
+    }
+}
+
+impl Default for ScalarLoss {
+    fn default() -> Self {
+        ScalarLoss::Logistic
+    }
+}
+
+/// The base (tree-zero) margin for a scalar loss: the constant F that
+/// minimises the weighted training loss, mirroring the logistic path's
+/// positive-rate logit. For squared/huber this is the weighted label
+/// mean (huber shares it — exact for symmetric residuals, and the
+/// boosting rounds correct any remainder).
+pub fn scalar_base_score(loss: ScalarLoss, y: &[f32], positive_rate: f64) -> f32 {
+    match loss {
+        ScalarLoss::Logistic => {
+            crate::forest::Forest::base_from_positive_rate(positive_rate)
+        }
+        ScalarLoss::Squared | ScalarLoss::Huber(_) => {
+            if y.is_empty() {
+                return 0.0;
+            }
+            let sum: f64 = y.iter().map(|&v| v as f64).sum();
+            (sum / y.len() as f64) as f32
+        }
+    }
+}
+
+/// Re-export point for the multiclass kernels so callers can treat
+/// `loss::kernel` as the dispatch hub (`multiclass` has no
+/// [`ScalarLoss`] arm — see the module docs).
+pub use multiclass::{eval_sums as multiclass_eval_sums, grad_hess_class};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        for kind in [
+            LossKind::Logistic,
+            LossKind::Squared,
+            LossKind::Huber,
+            LossKind::Multiclass,
+        ] {
+            assert_eq!(LossKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        let err = LossKind::parse("absolute").unwrap_err().to_string();
+        assert!(err.contains("unknown loss"), "{err}");
+    }
+
+    #[test]
+    fn logistic_arm_is_the_legacy_kernel_bitwise() {
+        let f = [0.3f32, -0.8, 1.2, 0.0];
+        let y = [1.0f32, 0.0, 1.0, 0.0];
+        let w = [1.0f32, 0.5, 2.5, 0.0];
+        let a = ScalarLoss::Logistic.grad_hess_loss(&f, &y, &w);
+        let b = logistic::grad_hess_loss(&f, &y, &w);
+        assert_eq!(a.grad, b.grad);
+        assert_eq!(a.hess, b.hess);
+        assert_eq!(a.loss_sum, b.loss_sum);
+        assert_eq!(
+            ScalarLoss::Logistic.eval_sums_blocked(&f, &y, &w, 2),
+            logistic::eval_sums_blocked(&f, &y, &w, 2)
+        );
+    }
+
+    #[test]
+    fn dispatch_reaches_each_kernel() {
+        let (g, h) = ScalarLoss::Squared.grad_hess_at(3.0, 1.0, 1.0);
+        assert_eq!((g, h), (2.0, 1.0));
+        let (g, h) = ScalarLoss::Huber(1.0).grad_hess_at(3.0, 0.0, 1.0);
+        assert_eq!((g, h), (1.0, 0.0));
+        let (g, _) = ScalarLoss::Logistic.grad_hess_at(0.0, 1.0, 1.0);
+        assert_eq!(g, -1.0);
+    }
+
+    #[test]
+    fn base_scores_per_loss() {
+        let y = [1.0f32, 2.0, 3.0, 6.0];
+        let b = scalar_base_score(ScalarLoss::Squared, &y, 0.5);
+        assert!((b - 3.0).abs() < 1e-6);
+        let b = scalar_base_score(ScalarLoss::Huber(1.0), &y, 0.5);
+        assert!((b - 3.0).abs() < 1e-6);
+        // logistic ignores y and uses the positive-rate logit
+        let b = scalar_base_score(ScalarLoss::Logistic, &y, 0.5);
+        assert_eq!(b, 0.0);
+        assert_eq!(scalar_base_score(ScalarLoss::Squared, &[], 0.5), 0.0);
+    }
+}

@@ -41,6 +41,41 @@ pub fn accuracy(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
     1.0 - error_rate(f, y, w)
 }
 
+/// Weighted root-mean-square error of raw predictions against labels.
+pub fn rmse(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..f.len() {
+        let r = (f[i] - y[i]) as f64;
+        num += w[i] as f64 * r * r;
+        den += w[i] as f64;
+    }
+    if den > 0.0 {
+        (num / den).sqrt()
+    } else {
+        0.0
+    }
+}
+
+/// Weighted mean absolute error of raw predictions against labels.
+pub fn mae(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..f.len() {
+        num += w[i] as f64 * (f[i] - y[i]).abs() as f64;
+        den += w[i] as f64;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
 /// Weighted ROC-AUC via the rank statistic (ties get midranks).
 pub fn auc(f: &[f32], y: &[f32], w: &[f32]) -> f64 {
     assert_eq!(f.len(), y.len());
@@ -136,6 +171,17 @@ mod tests {
     fn auc_degenerate_classes_half() {
         let f = vec![0.1f32, 0.2];
         assert_eq!(auc(&f, &[1.0, 1.0], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn regression_metrics_match_hand_sums() {
+        let f = vec![1.0f32, 3.0, -2.0];
+        let y = vec![0.0f32, 1.0, -2.0];
+        let w = vec![1.0f32; 3];
+        // residuals 1, 2, 0 => rmse sqrt(5/3), mae 1
+        assert!((rmse(&f, &y, &w) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((mae(&f, &y, &w) - 1.0).abs() < 1e-12);
+        assert_eq!(rmse(&[], &[], &[]), 0.0);
     }
 
     #[test]

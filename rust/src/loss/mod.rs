@@ -1,13 +1,22 @@
-//! Logistic loss (the paper's §III.A parameterisation) and evaluation
-//! metrics.
+//! Loss kernels (the paper's §III.A logistic parameterisation plus the
+//! pluggable regression/multiclass objectives) and evaluation metrics.
 //!
 //! `logistic` is the pure-Rust implementation — the cross-check oracle and
 //! fallback for the AOT (JAX/Pallas → HLO) path executed by [`crate::runtime`].
 //! Numerics are pinned to `python/compile/kernels/ref.py` by tests in
-//! `rust/tests/test_runtime.rs`.
+//! `rust/tests/test_runtime.rs`. `squared`, `huber` and `multiclass`
+//! mirror its structure; `kernel` is the dispatch layer (`loss=` knob +
+//! [`ScalarLoss`]) the engine and the fused accept pass compile against.
+//! Conformance (finite-difference grad/hess checks, bit-identity across
+//! execution paths) is pinned by `rust/tests/test_loss.rs`.
 
+pub mod huber;
+pub mod kernel;
 pub mod logistic;
 pub mod metrics;
+pub mod multiclass;
+pub mod squared;
 
+pub use kernel::{scalar_base_score, LossKind, ScalarLoss};
 pub use logistic::{grad_hess_loss, GradHess};
-pub use metrics::{accuracy, auc, error_rate, logloss};
+pub use metrics::{accuracy, auc, error_rate, logloss, mae, rmse};

@@ -1,0 +1,204 @@
+//! Multiclass softmax loss over K parallel margin vectors.
+//!
+//! Layout: the margin state is **class-major** — one `Vec<f32>` of
+//! length `K · n`, where class `c`'s margin for row `i` lives at
+//! `f[c · n + i]`. Labels are integer class ids `0 ≤ y < K` stored in
+//! the dataset's `f32` label vector. With
+//!
+//! ```text
+//! p_c(i) = exp(F_c(i)) / Σ_j exp(F_j(i))      (stable: max-shifted)
+//! l(y, F) = −log p_y
+//! ```
+//!
+//! the per-class diagonal-Newton targets are the standard softmax forms
+//! l'_c = p_c − 1{y = c} and l''_c = p_c (1 − p_c).
+//!
+//! The eval "error" column counts argmax misclassifications (ties break
+//! toward the lowest class id, matching a first-max scan).
+
+use super::GradHess;
+
+/// Stable in-place softmax of one row's K scores.
+#[inline]
+pub fn softmax(scores: &mut [f32]) {
+    let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        sum += *s;
+    }
+    for s in scores.iter_mut() {
+        *s /= sum;
+    }
+}
+
+/// Copy row `i`'s K margins out of the class-major state `f` (length
+/// `k · n`) into `out` and softmax them in place.
+#[inline]
+pub fn probs_at(f: &[f32], k: usize, n: usize, i: usize, out: &mut [f32]) {
+    debug_assert_eq!(f.len(), k * n);
+    debug_assert_eq!(out.len(), k);
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = f[c * n + i];
+    }
+    softmax(out);
+}
+
+/// Per-row loss −log p_y via the max-shifted log-sum-exp (stable for
+/// margins far from zero). `scores` is the row's K raw margins.
+#[inline]
+pub fn loss_elem(scores: &[f32], y_class: usize) -> f32 {
+    let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = scores.iter().map(|&s| (s - m).exp()).sum::<f32>().ln() + m;
+    lse - scores[y_class]
+}
+
+/// Whole-vector produce-target pass for **one class** `c`: grad/hess of
+/// length `n` against the class-major margin state `f` (length `k · n`).
+/// Same zero-weight-skip contract as [`super::logistic::grad_hess_loss`];
+/// `loss_sum` is the full softmax loss (summed once, not per class).
+pub fn grad_hess_class(f: &[f32], y: &[f32], w: &[f32], k: usize, c: usize) -> GradHess {
+    let n = y.len();
+    assert_eq!(f.len(), k * n);
+    assert_eq!(w.len(), n);
+    assert!(c < k);
+    let mut grad = vec![0.0f32; n];
+    let mut hess = vec![0.0f32; n];
+    let mut loss_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    let mut scores = vec![0.0f32; k];
+    for i in 0..n {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue; // padding / unsampled rows are exact no-ops
+        }
+        for (cc, s) in scores.iter_mut().enumerate() {
+            *s = f[cc * n + i];
+        }
+        let yc = y[i] as usize;
+        loss_sum += (wi * loss_elem(&scores, yc)) as f64;
+        weight_sum += wi as f64;
+        softmax(&mut scores);
+        let p = scores[c];
+        let ind = if yc == c { 1.0 } else { 0.0 };
+        grad[i] = wi * (p - ind);
+        hess[i] = wi * p * (1.0 - p);
+    }
+    GradHess {
+        grad,
+        hess,
+        loss_sum,
+        weight_sum,
+    }
+}
+
+/// Weighted evaluation pass over the class-major state: (softmax
+/// loss_sum, argmax misclassification count, weight_sum).
+pub fn eval_sums(f: &[f32], y: &[f32], w: &[f32], k: usize) -> (f64, f64, f64) {
+    let n = y.len();
+    assert_eq!(f.len(), k * n);
+    assert_eq!(w.len(), n);
+    let mut loss_sum = 0.0f64;
+    let mut err_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    let mut scores = vec![0.0f32; k];
+    for i in 0..n {
+        let wi = w[i] as f64;
+        if wi == 0.0 {
+            continue;
+        }
+        for (cc, s) in scores.iter_mut().enumerate() {
+            *s = f[cc * n + i];
+        }
+        let yc = y[i] as usize;
+        loss_sum += wi * loss_elem(&scores, yc) as f64;
+        let mut best = 0usize;
+        for (cc, &s) in scores.iter().enumerate() {
+            if s > scores[best] {
+                best = cc;
+            }
+        }
+        if best != yc {
+            err_sum += wi;
+        }
+        weight_sum += wi;
+    }
+    (loss_sum, err_sum, weight_sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut s = [1.0f32, 2.0, 0.5];
+        softmax(&mut s);
+        let total: f32 = s.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!(s[1] > s[0] && s[0] > s[2]);
+    }
+
+    #[test]
+    fn softmax_is_shift_stable() {
+        let mut a = [1000.0f32, 1001.0, 999.0];
+        softmax(&mut a);
+        let mut b = [0.0f32, 1.0, -1.0];
+        softmax(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn uniform_scores_give_log_k_loss() {
+        let scores = [0.0f32; 4];
+        assert!((loss_elem(&scores, 2) - (4.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grads_sum_to_zero_across_classes() {
+        // Σ_c (p_c − 1{y=c}) = 1 − 1 = 0 per row
+        let k = 3;
+        let n = 5;
+        let f: Vec<f32> = (0..k * n).map(|i| ((i * 13 % 17) as f32 - 8.0) / 4.0).collect();
+        let y = vec![0.0f32, 1.0, 2.0, 1.0, 0.0];
+        let w = vec![1.0f32, 2.0, 1.0, 0.0, 1.5];
+        let per_class: Vec<GradHess> =
+            (0..k).map(|c| grad_hess_class(&f, &y, &w, k, c)).collect();
+        for i in 0..n {
+            let s: f32 = per_class.iter().map(|gh| gh.grad[i]).sum();
+            assert!(s.abs() < 1e-5, "row {i}: grads sum to {s}");
+        }
+        // zero-weight row is a no-op in every class
+        for gh in &per_class {
+            assert_eq!(gh.grad[3], 0.0);
+            assert_eq!(gh.hess[3], 0.0);
+        }
+    }
+
+    #[test]
+    fn eval_counts_argmax_errors() {
+        // 2 rows, k=2, class-major: f = [f0(r0), f0(r1), f1(r0), f1(r1)]
+        let f = [2.0f32, -1.0, 0.0, 1.0]; // row0 → class 0, row1 → class 1
+        let y = [0.0f32, 0.0];
+        let w = [1.0f32, 1.0];
+        let (loss, err, wsum) = eval_sums(&f, &y, &w, 2);
+        assert!((err - 1.0).abs() < 1e-12); // row1 predicted 1, labelled 0
+        assert!((wsum - 2.0).abs() < 1e-12);
+        assert!(loss > 0.0);
+    }
+
+    #[test]
+    fn probs_at_reads_class_major_layout() {
+        let n = 2;
+        let f = [0.0f32, 5.0, 1.0, 5.0, 2.0, 5.0]; // k=3: row0 scores 0,1,2
+        let mut p = [0.0f32; 3];
+        probs_at(&f, 3, n, 0, &mut p);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        probs_at(&f, 3, n, 1, &mut p);
+        for v in p {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6); // row1 scores all 5.0
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Squared-error loss for regression:  l(y, F) = ½ (F − y)².
+//!
+//! Closed forms: l' = F − y, l'' = 1. The eval "error" column is the
+//! weighted mean absolute error |F − y| (the natural analogue of the
+//! logistic misclassification count for a regression target).
+//!
+//! Structure mirrors [`super::logistic`] exactly — same zero-weight
+//! skip, same f64 accumulator discipline — so the fused per-row kernel
+//! and the whole-vector pass stay bit-identical by construction.
+
+use super::GradHess;
+
+/// Per-element loss ½ (F − y)².
+#[inline]
+pub fn loss_elem(f: f32, y: f32) -> f32 {
+    let r = f - y;
+    0.5 * r * r
+}
+
+/// Per-row target: `(w·l', w·l'')` at margin `f`. The one shared
+/// expression both the whole-vector pass ([`grad_hess_loss`]) and the
+/// fused sharded accept pass (`ps/shard.rs`) compile.
+#[inline]
+pub fn grad_hess_at(f: f32, y: f32, w: f32) -> (f32, f32) {
+    (w * (f - y), w)
+}
+
+/// Whole-vector produce-target pass; same contract as
+/// [`super::logistic::grad_hess_loss`].
+pub fn grad_hess_loss(f: &[f32], y: &[f32], w: &[f32]) -> GradHess {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let n = f.len();
+    let mut grad = vec![0.0f32; n];
+    let mut hess = vec![0.0f32; n];
+    let mut loss_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    for i in 0..n {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue; // padding / unsampled rows are exact no-ops
+        }
+        let (g, h) = grad_hess_at(f[i], y[i], wi);
+        grad[i] = g;
+        hess[i] = h;
+        loss_sum += (wi * loss_elem(f[i], y[i])) as f64;
+        weight_sum += wi as f64;
+    }
+    GradHess {
+        grad,
+        hess,
+        loss_sum,
+        weight_sum,
+    }
+}
+
+/// Weighted evaluation pass: (loss_sum, abs_err_sum, weight_sum).
+pub fn eval_sums(f: &[f32], y: &[f32], w: &[f32]) -> (f64, f64, f64) {
+    assert_eq!(f.len(), y.len());
+    assert_eq!(f.len(), w.len());
+    let mut loss_sum = 0.0f64;
+    let mut err_sum = 0.0f64;
+    let mut weight_sum = 0.0f64;
+    for i in 0..f.len() {
+        let wi = w[i] as f64;
+        if wi == 0.0 {
+            continue;
+        }
+        loss_sum += wi * loss_elem(f[i], y[i]) as f64;
+        err_sum += wi * (f[i] - y[i]).abs() as f64;
+        weight_sum += wi;
+    }
+    (loss_sum, err_sum, weight_sum)
+}
+
+/// [`eval_sums`] with the deterministic blocked reduction — see
+/// [`super::logistic::eval_sums_blocked`] for why block partials folded
+/// in order pin the fused path's eval to the serial path's bitwise.
+pub fn eval_sums_blocked(f: &[f32], y: &[f32], w: &[f32], block: usize) -> (f64, f64, f64) {
+    assert!(block > 0, "block size must be positive");
+    let n = f.len();
+    let (mut loss, mut err, mut weight) = (0.0f64, 0.0f64, 0.0f64);
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + block).min(n);
+        let (l, e, wsum) = eval_sums(&f[start..end], &y[start..end], &w[start..end]);
+        loss += l;
+        err += e;
+        weight += wsum;
+        start = end;
+    }
+    (loss, err, weight)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_grad_hess_closed_forms() {
+        assert_eq!(loss_elem(3.0, 1.0), 2.0);
+        let (g, h) = grad_hess_at(3.0, 1.0, 2.0);
+        assert_eq!(g, 4.0); // w (F − y)
+        assert_eq!(h, 2.0); // w
+    }
+
+    #[test]
+    fn zero_weight_rows_are_noops() {
+        let gh = grad_hess_loss(&[5.0, -3.0], &[0.0, 1.0], &[0.0, 2.0]);
+        assert_eq!(gh.grad[0], 0.0);
+        assert_eq!(gh.hess[0], 0.0);
+        assert!((gh.weight_sum - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_hess_at_matches_whole_vector_pass_bitwise() {
+        let f = [0.3f32, -0.8, 1.2, 0.0, 4.0];
+        let y = [1.0f32, 0.0, 1.0, 0.0, 1.0];
+        let w = [1.0f32, 0.0, 2.5, 0.7, 1.0];
+        let gh = grad_hess_loss(&f, &y, &w);
+        for i in 0..f.len() {
+            if w[i] == 0.0 {
+                continue;
+            }
+            let (g, h) = grad_hess_at(f[i], y[i], w[i]);
+            assert_eq!(g, gh.grad[i]);
+            assert_eq!(h, gh.hess[i]);
+        }
+    }
+
+    #[test]
+    fn eval_reports_absolute_error() {
+        let (loss, err, w) = eval_sums(&[1.0, 2.0], &[0.0, 2.0], &[1.0, 3.0]);
+        assert!((loss - 0.5).abs() < 1e-12);
+        assert!((err - 1.0).abs() < 1e-12); // |1−0|·1 + |2−2|·3
+        assert!((w - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocked_eval_matches_whole_sweep() {
+        let n = 513;
+        let f: Vec<f32> = (0..n).map(|i| (i as f32) / 100.0 - 2.5).collect();
+        let y: Vec<f32> = (0..n).map(|i| ((i * 7) % 10) as f32 / 3.0).collect();
+        let w: Vec<f32> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+        let whole = eval_sums_blocked(&f, &y, &w, n);
+        for block in [1usize, 64, 512] {
+            let b = eval_sums_blocked(&f, &y, &w, block);
+            assert!((b.0 - whole.0).abs() < 1e-9 * (1.0 + whole.0.abs()));
+            assert!((b.1 - whole.1).abs() < 1e-9 * (1.0 + whole.1.abs()));
+            assert_eq!(b.2, whole.2);
+        }
+    }
+}

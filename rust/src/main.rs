@@ -29,7 +29,7 @@ use asgbdt::forest::FlatForest;
 use asgbdt::io::artifact::{self, ArtifactMeta};
 use asgbdt::io::svmlight;
 use asgbdt::runtime::Manifest;
-use asgbdt::serve::{drive_replay, ModelSlot, ServeOptions, Service};
+use asgbdt::serve::{drive_replay, require_scalar_loss, ModelSlot, ServeOptions, Service};
 use asgbdt::simulator::{speedup_sweep, PhaseTimes};
 use asgbdt::util::{Rng, Summary};
 
@@ -79,12 +79,30 @@ USAGE:
 
 DATA SPECS:
   synthetic:realsim:<rows> | synthetic:higgs:<rows> | synthetic:e2006:<rows>
+  synthetic:regression:<rows> | synthetic:multiclass:<classes>:<rows>
   <path to svmlight file>
 
 CONFIG OVERRIDES (key=value):
   mode=async|sync|serial   workers=N        n_trees=N      step_length=V
   sampling_rate=R          max_leaves=N     feature_rate=R max_bins=N
   grad_mode=gradient|newton max_staleness=N|none  seed=N   eval_every=N
+  loss=logistic|squared|huber|multiclass
+                               (training objective: binary logloss, squared
+                                error, Huber-robust regression, or K-class
+                                softmax — K trees per boosting round sharing
+                                one sampled structure pass; logistic is
+                                default)
+  huber_delta=D                (Huber transition point between the quadratic
+                                and linear regimes; only legal with
+                                loss=huber; 1.0 is default)
+  n_classes=K                  (class count for loss=multiclass, K >= 3;
+                                labels must be integer ids in [0, K))
+  step=fixed|adaptive          (push step scale: fixed uses step_length for
+                                every accepted tree; adaptive shrinks it to
+                                step_length/(1+tau) per accepted push as a
+                                pure function of the recorded staleness tau
+                                — deterministic, replays bit for bit; fixed
+                                is default, adaptive needs mode=async|sync)
   histogram=subtract|rebuild   (sibling-subtraction child histograms vs
                                 whole-node rebuild; subtract is default)
   target=fused|serial          (server accept pipeline: one fused row-sharded
@@ -143,18 +161,20 @@ CONFIG OVERRIDES (key=value):
 
 /// Load a model for scoring, whichever format it is on disk: a `.sgbdt`
 /// artifact (sniffed by magic, not extension) yields the flat forest
-/// plus its own training-time bin cuts; a JSON forest is flattened here
-/// and served with the dataset-derived `fallback` cuts.
-fn load_model(path: &Path, fallback: Option<&BinCuts>) -> Result<(FlatForest, BinCuts)> {
+/// plus its own training-time bin cuts and manifest loss name; a JSON
+/// forest is flattened here and served with the dataset-derived
+/// `fallback` cuts (legacy JSON predates the loss stanza and is always
+/// "logistic").
+fn load_model(path: &Path, fallback: Option<&BinCuts>) -> Result<(FlatForest, BinCuts, String)> {
     if artifact::sniff(path)? {
         let a = artifact::load(path)?;
-        Ok((a.forest, a.cuts))
+        Ok((a.forest, a.cuts, a.loss))
     } else {
         let forest = asgbdt::forest::Forest::load(path)?;
         let cuts = fallback
             .context("JSON models carry no bin cuts — a --data spec is required")?
             .clone();
-        Ok((FlatForest::from_forest(&forest), cuts))
+        Ok((FlatForest::from_forest(&forest), cuts, "logistic".to_string()))
     }
 }
 
@@ -163,11 +183,20 @@ fn load_data(spec: &str, seed: u64) -> Result<Dataset> {
         let (kind, rows) = rest
             .split_once(':')
             .context("synthetic spec must be synthetic:<kind>:<rows>")?;
+        if kind == "multiclass" {
+            let (k, n) = rows
+                .split_once(':')
+                .context("multiclass spec must be synthetic:multiclass:<classes>:<rows>")?;
+            let k: usize = k.parse().context("bad class count")?;
+            let n: usize = n.parse().context("bad row count")?;
+            return Ok(synthetic::multiclass_like(n, k, seed));
+        }
         let n: usize = rows.parse().context("bad row count")?;
         Ok(match kind {
             "realsim" => synthetic::realsim_like(n, seed),
             "higgs" => synthetic::higgs_like(n, seed),
             "e2006" => synthetic::e2006_like(n, seed),
+            "regression" => synthetic::regression_like(n, seed),
             other => bail!("unknown synthetic kind '{other}'"),
         })
     } else {
@@ -202,8 +231,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "training mode={} workers={} trees={} v={} rate={} leaves={} on {} ({} rows x {} features)",
+        "training mode={} loss={} step={} workers={} trees={} v={} rate={} leaves={} on {} ({} rows x {} features)",
         cfg.mode.as_str(),
+        cfg.loss.as_str(),
+        cfg.step.as_str(),
         cfg.workers,
         cfg.n_trees,
         cfg.step_length,
@@ -244,7 +275,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 let meta = ArtifactMeta {
                     config_fingerprint: cfg.fingerprint(),
                     seed: cfg.seed,
-                    loss: "logistic".to_string(),
+                    loss: cfg.loss.as_str().to_string(),
                     train_secs: report.wall_secs,
                     trainer: None,
                 };
@@ -288,7 +319,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spec = args.opt_or("data", "synthetic:realsim:8000");
     let ds = load_data(spec, cfg.seed)?;
     let data_cuts = BinnedDataset::from_dataset(&ds, cfg.max_bins)?.cuts();
-    let (flat, cuts) = load_model(&model_path, Some(&data_cuts))?;
+    let (flat, cuts, loss) = load_model(&model_path, Some(&data_cuts))?;
+    require_scalar_loss(&loss, "serve")?;
     let n_requests: usize = args.opt_or("requests", "2000").parse()?;
     let inflight_default = (cfg.serve_batch * 2).to_string();
     let inflight: usize = args.opt_or("inflight", &inflight_default).parse()?;
@@ -300,12 +332,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // swap republishes the same forest (a rollout of an identical model
     // — the version tag still advances)
     let (swap_flat, swap_cuts) = match args.opt("swap-model") {
-        Some(path) => load_model(Path::new(path), Some(&data_cuts))?,
+        Some(path) => {
+            let (sf, sc, swap_loss) = load_model(Path::new(path), Some(&data_cuts))?;
+            require_scalar_loss(&swap_loss, "serve --swap-model")?;
+            if swap_loss != loss {
+                bail!(
+                    "serve: --swap-model was trained with loss={swap_loss} but the live \
+                     model serves loss={loss} — a hot swap must not change what the \
+                     margins mean"
+                );
+            }
+            (sf, sc)
+        }
         None => (flat.clone(), cuts.clone()),
     };
 
     println!(
-        "serving {} trees (base {:.4}) on {}: batch={} wait={}us threads={} requests={}",
+        "serving {} trees (base {:.4}, loss {loss}) on {}: batch={} wait={}us threads={} requests={}",
         flat.n_trees(),
         flat.base_score,
         ds.name,
@@ -347,36 +390,56 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let ds = load_data(spec, 0)?;
     // prediction walks raw thresholds, so no bin cuts are needed — either
     // format yields a flat forest directly
-    let flat = if artifact::sniff(Path::new(model_path))? {
-        artifact::load(Path::new(model_path))?.forest
+    let (flat, loss) = if artifact::sniff(Path::new(model_path))? {
+        let a = artifact::load(Path::new(model_path))?;
+        (a.forest, a.loss)
     } else {
-        FlatForest::from_forest(&asgbdt::forest::Forest::load(Path::new(model_path))?)
+        (
+            FlatForest::from_forest(&asgbdt::forest::Forest::load(Path::new(model_path))?),
+            "logistic".to_string(),
+        )
     };
+    let kind = require_scalar_loss(&loss, "predict")?;
     let mut pool = asgbdt::forest::ScratchPool::new();
     let exec = asgbdt::util::Executor::scoped(1);
     let margins = flat.predict_all_raw(&ds.x, &exec, &mut pool);
     let w = vec![1.0f32; ds.n_rows()];
     println!(
-        "model: {} trees (base {:.4}); data: {} rows",
+        "model: {} trees (base {:.4}, loss {loss}); data: {} rows",
         flat.n_trees(),
         flat.base_score,
         ds.n_rows()
     );
-    println!(
-        "logloss {:.5}  error {:.4}  auc {:.4}",
-        asgbdt::loss::metrics::logloss(&margins, &ds.y, &w),
-        asgbdt::loss::metrics::error_rate(&margins, &ds.y, &w),
-        asgbdt::loss::metrics::auc(&margins, &ds.y, &w),
-    );
+    let classification = kind == asgbdt::loss::LossKind::Logistic;
+    if classification {
+        println!(
+            "logloss {:.5}  error {:.4}  auc {:.4}",
+            asgbdt::loss::metrics::logloss(&margins, &ds.y, &w),
+            asgbdt::loss::metrics::error_rate(&margins, &ds.y, &w),
+            asgbdt::loss::metrics::auc(&margins, &ds.y, &w),
+        );
+    } else {
+        // squared/huber models predict the label directly: report the
+        // regression residual metrics instead of threshold statistics
+        println!(
+            "rmse {:.5}  mae {:.5}",
+            asgbdt::loss::metrics::rmse(&margins, &ds.y, &w),
+            asgbdt::loss::metrics::mae(&margins, &ds.y, &w),
+        );
+    }
     if let Some(out) = args.opt("out") {
-        let mut csv = asgbdt::io::csv::CsvWriter::new(&["row", "margin", "p", "label"]);
+        let mut csv = if classification {
+            asgbdt::io::csv::CsvWriter::new(&["row", "margin", "p", "label"])
+        } else {
+            asgbdt::io::csv::CsvWriter::new(&["row", "pred", "residual", "label"])
+        };
         for (r, &m) in margins.iter().enumerate() {
-            csv.row(&[
-                r.to_string(),
-                format!("{m:.6}"),
-                format!("{:.6}", asgbdt::loss::logistic::prob(m)),
-                format!("{}", ds.y[r]),
-            ]);
+            let third = if classification {
+                format!("{:.6}", asgbdt::loss::logistic::prob(m))
+            } else {
+                format!("{:.6}", m - ds.y[r])
+            };
+            csv.row(&[r.to_string(), format!("{m:.6}"), third, format!("{}", ds.y[r])]);
         }
         csv.write(Path::new(out))?;
         println!("predictions -> {out}");

@@ -141,6 +141,42 @@ impl StalenessStats {
     }
 }
 
+/// Effective step lengths actually applied to accepted pushes. Under
+/// `step=fixed` every sample equals `step_length`; under
+/// `step=adaptive` each sample is `StepMode::effective(v, τ)` for that
+/// push's recorded τ, so the trace doubles as a replayable record of
+/// the adaptive rule (DESIGN.md §17).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    /// Effective v of every accepted push, in acceptance order.
+    pub samples: Vec<f32>,
+}
+
+impl StepStats {
+    /// Record one accepted push's effective step length.
+    pub fn record(&mut self, v_eff: f32) {
+        self.samples.push(v_eff);
+    }
+
+    /// Mean effective step length (0 if none recorded).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    /// Smallest effective step length applied (0 if none recorded).
+    pub fn min(&self) -> f32 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().copied().fold(f32::INFINITY, f32::min)
+        }
+    }
+}
+
 /// Worker supervision outcome of one training run: how many workers the
 /// run was configured with, how many lives were lost to (injected or
 /// real) panics, how many restarts the supervisor granted, and how many
@@ -240,6 +276,19 @@ mod tests {
         assert!((s.mean() - 3.2).abs() < 1e-12);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.summary().n, 5);
+    }
+
+    #[test]
+    fn step_stats_trace_mean_and_min() {
+        let mut s = StepStats::default();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        for v in [0.3f32, 0.15, 0.1] {
+            s.record(v);
+        }
+        assert_eq!(s.samples, vec![0.3, 0.15, 0.1]);
+        assert!((s.mean() - (0.3f32 as f64 + 0.15f32 as f64 + 0.1f32 as f64) / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 0.1);
     }
 
     #[test]

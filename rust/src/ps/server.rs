@@ -10,7 +10,8 @@ use crate::data::sparse::CsrMatrix;
 use crate::data::{BinnedDataset, Dataset};
 use crate::forest::score::{self, ScoreMode, ScratchPool, ROW_BLOCK};
 use crate::forest::Forest;
-use crate::metrics::{CurvePoint, LossCurve, StalenessStats};
+use crate::loss::{multiclass, scalar_base_score, ScalarLoss};
+use crate::metrics::{CurvePoint, LossCurve, StalenessStats, StepStats};
 use crate::runtime::GradientEngine;
 use crate::sampling::{BernoulliSampler, SampleKey};
 use crate::tree::{FlatTree, Tree};
@@ -173,7 +174,20 @@ pub struct ServerCore {
     /// Seed of the server's sampling pass keys: pass j is the pure
     /// function of `(sample_seed, j, row)` — no sequential RNG state.
     sample_seed: u64,
-    /// Current prediction vector **F** over training rows.
+    /// The scalar loss driving every per-row kernel (`cfg.loss`). Under
+    /// `loss=multiclass` this stays at its `Logistic` default and is
+    /// never consulted — the multiclass accept path bypasses the scalar
+    /// kernels entirely.
+    scalar: ScalarLoss,
+    /// Parallel margin vectors: 1 for the scalar losses, `n_classes`
+    /// under `loss=multiclass` (class-major F of length `k·n`).
+    k: usize,
+    /// Multiclass only: the sampled weights of the current target pass,
+    /// held between target production and the next accept's per-leaf
+    /// refit sums (scalar runs keep this empty).
+    mc_w: Vec<f32>,
+    /// Current prediction vector **F** over training rows (class-major,
+    /// length `k · n_rows`; `k = 1` for scalar losses).
     f: Vec<f32>,
     /// Pooled scoring scratch for the blocked F-update (step 2) — row-id
     /// blocks + partition stacks recycled across every accepted tree.
@@ -197,6 +211,10 @@ pub struct ServerCore {
     pub curve: LossCurve,
     /// Realised staleness distribution over accepted/rejected pushes.
     pub staleness: StalenessStats,
+    /// Effective step length applied to every accepted push: constant
+    /// `step_length` under `step=fixed`, `StepMode::effective(v, τ)`
+    /// under `step=adaptive`.
+    pub steps: StepStats,
     /// Per-phase wall-clock accounting of the accept path.
     pub timer: PhaseTimer,
     clock: Stopwatch,
@@ -214,12 +232,36 @@ impl ServerCore {
         engine: GradientEngine,
     ) -> Result<ServerCore> {
         cfg.validate()?;
-        let base = Forest::base_from_positive_rate(train.positive_rate());
+        let scalar = cfg.scalar_loss();
+        let k = if scalar.is_some() { 1 } else { cfg.n_classes };
+        if let Some(s) = scalar {
+            anyhow::ensure!(
+                engine.loss() == s,
+                "engine was built for loss {:?} but the config trains loss={} — \
+                 construct it with GradientEngine::auto_for(dir, cfg.scalar_loss())",
+                engine.loss(),
+                cfg.loss.as_str()
+            );
+        } else {
+            validate_class_labels(&train.y, k, "train")?;
+            if let Some(t) = test {
+                validate_class_labels(&t.y, k, "test")?;
+            }
+        }
+        let scalar = scalar.unwrap_or_default();
+        // multiclass starts every class margin at 0 (uniform softmax);
+        // scalar losses keep their per-loss base (positive-rate logit
+        // for logistic, weighted label mean for squared/huber)
+        let base = if k > 1 {
+            0.0
+        } else {
+            scalar_base_score(scalar, &train.y, train.positive_rate())
+        };
         let forest = Forest::new(base);
-        let f = vec![base; train.n_rows()];
+        let f = vec![base; k * train.n_rows()];
         let sampler = BernoulliSampler::uniform(train, cfg.sampling_rate);
         let test = test.map(|t| TestSet {
-            f: vec![base; t.n_rows()],
+            f: vec![base; k * t.n_rows()],
             y: t.y.clone(),
             w: t.m.clone(),
             x: t.x.clone(),
@@ -234,6 +276,9 @@ impl ServerCore {
             engine,
             sampler,
             sample_seed: cfg.seed ^ SERVER_SEED_SALT,
+            scalar,
+            k,
+            mc_w: Vec::new(),
             f,
             score_pool: ScratchPool::new(),
             exec: Executor::new(cfg.pool, cfg.score_threads),
@@ -243,11 +288,16 @@ impl ServerCore {
             test,
             curve: LossCurve::default(),
             staleness: StalenessStats::default(),
+            steps: StepStats::default(),
             timer: PhaseTimer::new(),
             clock: Stopwatch::new(),
             current: TargetSnapshot::empty(),
         };
-        core.produce_target(0)?;
+        if core.k > 1 {
+            core.produce_target_multiclass(0)?;
+        } else {
+            core.produce_target(0)?;
+        }
         core.eval_point()?; // curve point at 0 trees
         Ok(core)
     }
@@ -262,16 +312,25 @@ impl ServerCore {
         self.current.clone()
     }
 
-    /// Trees accepted so far (== the current target version).
+    /// Accepted pushes so far (== the current target version). For the
+    /// scalar losses this is the forest size; under `loss=multiclass`
+    /// one accepted push lands K class trees, so this counts *rounds*
+    /// (`forest.n_trees() / n_classes`).
     pub fn n_trees(&self) -> usize {
-        self.forest.n_trees()
+        self.forest.n_trees() / self.k
     }
 
     /// Apply one pushed tree (Algorithm 3 server steps 1–5). Returns the
     /// outcome; on acceptance the new target has been produced and
     /// `snapshot()` reflects version j+1.
+    ///
+    /// The effective step length of the push is
+    /// `cfg.step.effective(cfg.step_length, τ)` — the constant v under
+    /// `step=fixed`, the Proposition-1-style shrink `v/(1+τ)` under
+    /// `step=adaptive` (DESIGN.md §17). A pure function of the recorded
+    /// τ, so replaying a τ trace reproduces the run bit for bit.
     pub fn apply_tree(&mut self, tree: Tree, based_on: u64) -> Result<ApplyOutcome> {
-        let version = self.forest.n_trees() as u64;
+        let version = self.n_trees() as u64;
         let tau = version.saturating_sub(based_on);
         if let Some(max_tau) = self.cfg.max_staleness {
             if tau > max_tau {
@@ -279,20 +338,26 @@ impl ServerCore {
                 return Ok(ApplyOutcome {
                     staleness: tau,
                     accepted: false,
-                    n_trees: self.forest.n_trees(),
+                    n_trees: self.n_trees(),
                 });
             }
         }
         self.staleness.record(tau);
+        let v_eff = self.cfg.step.effective(self.cfg.step_length, tau);
+        self.steps.record(v_eff);
 
-        match self.cfg.target {
-            TargetMode::Fused => self.apply_tree_fused(tree)?,
-            TargetMode::Serial => self.apply_tree_serial(tree)?,
+        if self.k > 1 {
+            self.apply_tree_multiclass(tree, v_eff)?;
+        } else {
+            match self.cfg.target {
+                TargetMode::Fused => self.apply_tree_fused(tree, v_eff)?,
+                TargetMode::Serial => self.apply_tree_serial(tree, v_eff)?,
+            }
         }
         Ok(ApplyOutcome {
             staleness: tau,
             accepted: true,
-            n_trees: self.forest.n_trees(),
+            n_trees: self.n_trees(),
         })
     }
 
@@ -308,13 +373,56 @@ impl ServerCore {
     /// impossible for a fresh push, so any failure means a corrupt or
     /// mismatched checkpoint.
     pub fn replay_tree(&mut self, tree: Tree) -> Result<()> {
-        let based_on = self.forest.n_trees() as u64;
-        let out = self.apply_tree(tree, based_on)?;
-        if !out.accepted {
-            anyhow::bail!(
-                "checkpoint replay: tree {} was rejected by the accept pipeline",
-                based_on
-            );
+        self.replay_tree_with(tree, self.cfg.step_length)
+    }
+
+    /// [`ServerCore::replay_tree`] at an *explicit* step length: replay
+    /// the tree with the exact v the original accept applied (recorded
+    /// per tree in the checkpoint's forest). Under `step=adaptive` a
+    /// push accepted at τ>0 shrank its v below `step_length`; replaying
+    /// at the fresh-push τ=0 would recompute a different v, so restore
+    /// hands the recorded value back in instead (`coordinator/
+    /// checkpoint.rs`). Under `step=fixed` the recorded v always equals
+    /// `step_length` and this is exactly the old replay.
+    pub fn replay_tree_with(&mut self, tree: Tree, v: f32) -> Result<()> {
+        anyhow::ensure!(
+            self.k == 1,
+            "checkpoint replay: multiclass forests replay in rounds of {} class trees \
+             (replay_round), not single trees",
+            self.k
+        );
+        self.staleness.record(0);
+        self.steps.record(v);
+        match self.cfg.target {
+            TargetMode::Fused => self.apply_tree_fused(tree, v),
+            TargetMode::Serial => self.apply_tree_serial(tree, v),
+        }
+    }
+
+    /// Replay one checkpointed **multiclass round**: the K class trees a
+    /// single accept pushed, leaves already refit, at the recorded step
+    /// length. Margin updates, the next target pass and the eval point
+    /// re-run in the original operation order, so the restored state is
+    /// bit-identical to the uninterrupted run after that round.
+    pub fn replay_round(&mut self, trees: Vec<Tree>, v: f32) -> Result<()> {
+        anyhow::ensure!(
+            self.k > 1,
+            "checkpoint replay: replay_round is multiclass-only (loss={})",
+            self.cfg.loss.as_str()
+        );
+        anyhow::ensure!(
+            trees.len() == self.k,
+            "checkpoint replay: round carries {} trees, expected n_classes={}",
+            trees.len(),
+            self.k
+        );
+        self.staleness.record(0);
+        self.steps.record(v);
+        self.apply_class_trees(trees, v);
+        let new_version = self.n_trees() as u64;
+        self.produce_target_multiclass(new_version)?;
+        if self.eval_due(self.n_trees()) {
+            self.eval_point()?;
         }
         Ok(())
     }
@@ -330,8 +438,7 @@ impl ServerCore {
     /// (`ps/shard.rs`), instead of the serial path's 3–4 separate
     /// sweeps. Held-out margins keep their own incremental blocked
     /// update — the fused pass covers the training side.
-    fn apply_tree_fused(&mut self, tree: Tree) -> Result<()> {
-        let v = self.cfg.step_length;
+    fn apply_tree_fused(&mut self, tree: Tree, v: f32) -> Result<()> {
         let flat = self
             .timer
             .time("server/flatten_tree", || FlatTree::from_tree(&tree));
@@ -351,6 +458,7 @@ impl ServerCore {
                 seed: self.sample_seed,
                 version: new_version,
             },
+            loss: self.scalar,
             compute_target: native,
             want_eval: eval_due && native,
         };
@@ -437,12 +545,11 @@ impl ServerCore {
     /// sampling, target production and eval. Same counter-based sample
     /// keys and same blocked eval reduction as the fused path, so the
     /// two stay bit-identical (the shard-invariance tests' anchor).
-    fn apply_tree_serial(&mut self, tree: Tree) -> Result<()> {
+    fn apply_tree_serial(&mut self, tree: Tree, v: f32) -> Result<()> {
         // step 2: F^j = F^{j-1} + v * Tree. The blocked SoA engine and the
         // per-row enum reference produce bit-identical F vectors (same f32
         // ops in the same per-row order); `scoring=perrow` keeps the
         // reference selectable for equivalence tests and ablation.
-        let v = self.cfg.step_length;
         match self.cfg.scoring {
             ScoreMode::Flat => {
                 let flat = self
@@ -495,6 +602,115 @@ impl ServerCore {
         if self.eval_due(self.forest.n_trees()) {
             self.eval_point()?;
         }
+        Ok(())
+    }
+
+    /// The multiclass accept pipeline (whole-vector, the same shape as
+    /// the AOT bucket fallback): one structure pass shared by all K
+    /// classes. The pushed tree's *structure* routes every training row
+    /// to a leaf once; per-leaf per-class Newton sums over the round's
+    /// sampled weights refit K leaf-value sets; the K class clones then
+    /// update the class-major margins like K serial scalar accepts and
+    /// land in the forest together. Bypasses `target=`/`ps_shards` —
+    /// the scalar fused kernels never see multiclass (DESIGN.md §17).
+    fn apply_tree_multiclass(&mut self, tree: Tree, v: f32) -> Result<()> {
+        let n = self.train_y.len();
+        let k = self.k;
+        let lambda = self.cfg.tree.lambda;
+        let t0 = std::time::Instant::now();
+        let n_nodes = tree.n_nodes();
+        let mut gsum = vec![0.0f64; n_nodes * k];
+        let mut hsum = vec![0.0f64; n_nodes * k];
+        let mut scores = vec![0.0f32; k];
+        for i in 0..n {
+            let wi = self.mc_w[i];
+            if wi == 0.0 {
+                continue; // unsampled rows are exact no-ops
+            }
+            let leaf = tree.leaf_of_binned(&self.binned, i) as usize;
+            multiclass::probs_at(&self.f, k, n, i, &mut scores);
+            let yc = self.train_y[i] as usize;
+            for (c, &p) in scores.iter().enumerate() {
+                let ind = if c == yc { 1.0f32 } else { 0.0 };
+                gsum[leaf * k + c] += (wi * (p - ind)) as f64;
+                hsum[leaf * k + c] += (wi * p * (1.0 - p)) as f64;
+            }
+        }
+        let class_trees: Vec<Tree> = (0..k)
+            .map(|c| {
+                tree.with_leaf_values(&mut |node| {
+                    let (g, h) = (gsum[node * k + c], hsum[node * k + c]);
+                    // same guard as the builder's leaf_value: a leaf no
+                    // sampled row reached predicts 0
+                    if h + lambda <= 0.0 {
+                        0.0
+                    } else {
+                        (-g / (h + lambda)) as f32
+                    }
+                })
+            })
+            .collect();
+        self.timer.record("server/multiclass_refit", t0.elapsed());
+        self.apply_class_trees(class_trees, v);
+        let new_version = self.n_trees() as u64;
+        self.produce_target_multiclass(new_version)?;
+        if self.eval_due(self.n_trees()) {
+            self.eval_point()?;
+        }
+        Ok(())
+    }
+
+    /// Push K refit class trees and apply their margin updates — the
+    /// tail shared by the live multiclass accept and checkpoint replay
+    /// ([`ServerCore::replay_round`]), so both run the identical f32
+    /// operation order per class, per row.
+    fn apply_class_trees(&mut self, trees: Vec<Tree>, v: f32) {
+        let n = self.train_y.len();
+        let t0 = std::time::Instant::now();
+        for (c, tree) in trees.into_iter().enumerate() {
+            for r in 0..n {
+                self.f[c * n + r] += v * tree.predict_binned(&self.binned, r);
+            }
+            if let Some(test) = &mut self.test {
+                let nt = test.y.len();
+                for r in 0..nt {
+                    test.f[c * nt + r] += v * tree.predict_raw(&test.x, r);
+                }
+            }
+            self.forest.push(v, tree);
+        }
+        self.timer.record("server/update_f", t0.elapsed());
+    }
+
+    /// Multiclass steps 3–5: one keyed sampling pass (the same
+    /// counter-based keys as the scalar paths), softmax targets for the
+    /// *structure class* `version mod K`, publish. The full weight
+    /// vector is held for the next accept's refit sums; the published
+    /// grad/hess is the one class whose descent the workers' structure
+    /// tree follows — round-robin, so every class shapes structure
+    /// equally often.
+    fn produce_target_multiclass(&mut self, version: u64) -> Result<()> {
+        let key = SampleKey {
+            seed: self.sample_seed,
+            version,
+        };
+        let pass = self.timer.time("server/sample", || self.sampler.draw(key));
+        let c = version as usize % self.k;
+        let t0 = std::time::Instant::now();
+        let gh = multiclass::grad_hess_class(&self.f, &self.train_y, &pass.weights, self.k, c);
+        self.timer.record("server/produce_target", t0.elapsed());
+        let hess = match self.cfg.grad_mode {
+            GradMode::Newton => gh.hess,
+            // gradient mode: weighted-LS fit => h_i := m'_i
+            GradMode::Gradient => pass.weights.clone(),
+        };
+        self.mc_w = pass.weights;
+        self.current = TargetSnapshot {
+            version: self.advance_shards(version),
+            grad: Arc::new(gh.grad),
+            hess: Arc::new(hess),
+            rows: Arc::new(pass.rows),
+        };
         Ok(())
     }
 
@@ -555,9 +771,12 @@ impl ServerCore {
     /// Held-out metrics on the incrementally-maintained test margins.
     fn test_eval(&mut self) -> Result<(f64, f64)> {
         if let Some(test) = &self.test {
-            let (tl, te, tw) = self
-                .engine
-                .eval_sums_blocked(&test.f, &test.y, &test.w, ROW_BLOCK)?;
+            let (tl, te, tw) = if self.k > 1 {
+                multiclass::eval_sums(&test.f, &test.y, &test.w, self.k)
+            } else {
+                self.engine
+                    .eval_sums_blocked(&test.f, &test.y, &test.w, ROW_BLOCK)?
+            };
             if tw > 0.0 {
                 Ok((tl / tw, te / tw))
             } else {
@@ -569,17 +788,21 @@ impl ServerCore {
     }
 
     /// Record a loss-curve point (full-weight train loss + test metrics)
-    /// with the blocked eval reduction both accept pipelines share.
+    /// with the blocked eval reduction both accept pipelines share
+    /// (multiclass: the softmax/argmax sweep over the class-major state).
     fn eval_point(&mut self) -> Result<()> {
         let t0 = std::time::Instant::now();
-        let (l, _e, w) =
+        let (l, _e, w) = if self.k > 1 {
+            multiclass::eval_sums(&self.f, &self.train_y, &self.train_m, self.k)
+        } else {
             self.engine
-                .eval_sums_blocked(&self.f, &self.train_y, &self.train_m, ROW_BLOCK)?;
+                .eval_sums_blocked(&self.f, &self.train_y, &self.train_m, ROW_BLOCK)?
+        };
         let train_loss = if w > 0.0 { l / w } else { 0.0 };
         let (test_loss, test_error) = self.test_eval()?;
         self.timer.record("server/eval", t0.elapsed());
         self.curve.push(CurvePoint {
-            n_trees: self.forest.n_trees(),
+            n_trees: self.n_trees(),
             train_loss,
             test_loss,
             test_error,
@@ -592,6 +815,22 @@ impl ServerCore {
 /// Salt separating the server's sampling stream from worker streams that
 /// share the same user seed.
 const SERVER_SEED_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// `loss=multiclass` labels must be integer class ids in `[0, K)` —
+/// anything else (a binary {0,1} corpus with K=5, regression targets,
+/// a stray 7.5) trains garbage silently, so it is refused by name here.
+fn validate_class_labels(y: &[f32], k: usize, split: &str) -> Result<()> {
+    for (i, &v) in y.iter().enumerate() {
+        let ok = v.is_finite() && v >= 0.0 && v.fract() == 0.0 && (v as usize) < k;
+        if !ok {
+            anyhow::bail!(
+                "loss=multiclass: {split} row {i} has label {v}, expected an integer \
+                 class id in [0, {k}) — check n_classes against the dataset"
+            );
+        }
+    }
+    Ok(())
+}
 
 #[cfg(test)]
 mod tests {
@@ -1012,6 +1251,226 @@ mod tests {
             let h = s.hess[r as usize];
             assert!(h > 0.0 && h < 1.2 / 0.9, "h={h}");
         }
+    }
+
+    #[test]
+    fn adaptive_step_shrinks_with_staleness_and_matches_fixed_when_fresh() {
+        use crate::config::StepMode;
+        let ds = synthetic::realsim_like(400, 71);
+        let cfg_fixed = mini_cfg(6);
+        let mut cfg_adaptive = cfg_fixed.clone();
+        cfg_adaptive.step = StepMode::Adaptive;
+        let mut fixed = core_on(&ds, &cfg_fixed);
+        let mut adaptive = core_on(&ds, &cfg_adaptive);
+        let mut rng = Rng::new(5);
+        // all-fresh pushes: τ=0, so v/(1+0) == v and the two cores are
+        // bit-identical (satellite 2's anchor at the unit level)
+        for _ in 0..4 {
+            let s = fixed.snapshot();
+            let tree = crate::tree::build_tree(
+                &fixed.binned.clone(),
+                &s.rows,
+                &s.grad,
+                &s.hess,
+                &cfg_fixed.tree,
+                &mut rng,
+            );
+            fixed.apply_tree(tree.clone(), s.version).unwrap();
+            adaptive.apply_tree(tree, adaptive.snapshot().version).unwrap();
+        }
+        assert_eq!(adaptive.f, fixed.f, "adaptive diverged from fixed at τ=0");
+        assert_eq!(adaptive.steps.samples, fixed.steps.samples);
+        assert_eq!(adaptive.steps.samples, vec![0.3f32; 4]);
+        // now a stale push: based_on 0 at version 4 ⇒ τ=4 ⇒ v_eff = 0.3/5
+        let s = adaptive.snapshot();
+        let tree = crate::tree::build_tree(
+            &adaptive.binned.clone(),
+            &s.rows,
+            &s.grad,
+            &s.hess,
+            &cfg_adaptive.tree,
+            &mut rng,
+        );
+        let out = adaptive.apply_tree(tree.clone(), 0).unwrap();
+        assert!(out.accepted);
+        assert_eq!(out.staleness, 4);
+        assert_eq!(*adaptive.steps.samples.last().unwrap(), 0.3 / 5.0);
+        // the fixed core applies the same stale push at full v
+        fixed.apply_tree(tree, 0).unwrap();
+        assert_eq!(*fixed.steps.samples.last().unwrap(), 0.3);
+        assert_ne!(adaptive.f, fixed.f, "stale push should now differ");
+        // the forest records the shrunken per-tree scale
+        assert_eq!(adaptive.forest.trees.last().unwrap().0, 0.3 / 5.0);
+    }
+
+    #[test]
+    fn replay_tree_with_reproduces_an_adaptive_run_bitwise() {
+        use crate::config::StepMode;
+        let ds = synthetic::realsim_like(500, 73);
+        let mut cfg = mini_cfg(5);
+        cfg.step = StepMode::Adaptive;
+        let mut live = core_on(&ds, &cfg);
+        let mut rng = Rng::new(17);
+        // drive with artificial staleness: every push claims based_on 0
+        for _ in 0..5 {
+            let s = live.snapshot();
+            let tree = crate::tree::build_tree(
+                &live.binned.clone(),
+                &s.rows,
+                &s.grad,
+                &s.hess,
+                &cfg.tree,
+                &mut rng,
+            );
+            live.apply_tree(tree, 0).unwrap();
+        }
+        // restore path: replay each tree at its recorded per-tree scale
+        let mut replayed = core_on(&ds, &cfg);
+        for (v, tree) in live.forest.trees.iter() {
+            replayed.replay_tree_with(tree.clone(), *v).unwrap();
+        }
+        assert_eq!(replayed.f, live.f, "replayed F diverged");
+        assert_eq!(replayed.steps.samples, live.steps.samples);
+        let lc: Vec<f64> = live.curve.points.iter().map(|p| p.train_loss).collect();
+        let rc: Vec<f64> = replayed.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_eq!(lc, rc, "loss curves diverged");
+    }
+
+    #[test]
+    fn squared_loss_core_uses_mean_base_and_descends() {
+        use crate::loss::LossKind;
+        let ds = synthetic::regression_like(500, 81);
+        let mut cfg = mini_cfg(10);
+        cfg.loss = LossKind::Squared;
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+        let mut core = ServerCore::new(
+            &cfg,
+            &ds,
+            binned,
+            None,
+            GradientEngine::native_for(crate::loss::ScalarLoss::Squared),
+        )
+        .unwrap();
+        let mean = ds.y.iter().map(|&y| y as f64).sum::<f64>() / ds.n_rows() as f64;
+        assert!((core.f[0] as f64 - mean).abs() < 1e-4, "base is not the label mean");
+        let mut rng = Rng::new(19);
+        for _ in 0..10 {
+            let s = core.snapshot();
+            let tree = crate::tree::build_tree(
+                &core.binned.clone(),
+                &s.rows,
+                &s.grad,
+                &s.hess,
+                &cfg.tree,
+                &mut rng,
+            );
+            core.apply_tree(tree, s.version).unwrap();
+        }
+        let first = core.curve.points.first().unwrap().train_loss;
+        let last = core.curve.points.last().unwrap().train_loss;
+        assert!(last < first * 0.98, "squared loss did not descend: {first} -> {last}");
+    }
+
+    #[test]
+    fn engine_loss_mismatch_is_refused_by_name() {
+        use crate::loss::LossKind;
+        let ds = synthetic::regression_like(120, 82);
+        let mut cfg = mini_cfg(2);
+        cfg.loss = LossKind::Squared;
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+        let err = ServerCore::new(&cfg, &ds, binned, None, GradientEngine::native())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("loss=squared"), "{err}");
+        assert!(err.contains("auto_for"), "{err}");
+    }
+
+    #[test]
+    fn multiclass_core_lands_k_trees_per_round_and_descends() {
+        use crate::loss::LossKind;
+        let k = 3usize;
+        let ds = synthetic::multiclass_like(600, k, 91);
+        let mut rng0 = Rng::new(1);
+        let (tr, te) = ds.split(0.25, &mut rng0);
+        let mut cfg = mini_cfg(6);
+        cfg.loss = LossKind::Multiclass;
+        cfg.n_classes = k;
+        let binned = Arc::new(BinnedDataset::from_dataset(&tr, cfg.max_bins).unwrap());
+        let mut core =
+            ServerCore::new(&cfg, &tr, binned.clone(), Some(&te), GradientEngine::native())
+                .unwrap();
+        // uniform softmax at init: train loss starts at ln K
+        let p0 = core.curve.points.first().unwrap();
+        assert!((p0.train_loss - (k as f64).ln()).abs() < 1e-5, "{}", p0.train_loss);
+        let mut rng = Rng::new(23);
+        for round in 0..6 {
+            let s = core.snapshot();
+            assert_eq!(s.grad.len(), tr.n_rows(), "structure target is per-row");
+            let tree = crate::tree::build_tree(
+                &binned, &s.rows, &s.grad, &s.hess, &cfg.tree, &mut rng,
+            );
+            let out = core.apply_tree(tree, s.version).unwrap();
+            assert!(out.accepted);
+            assert_eq!(out.n_trees, round + 1, "rounds, not raw trees");
+            assert_eq!(core.forest.n_trees(), (round + 1) * k, "K class trees per round");
+        }
+        let first = core.curve.points.first().unwrap().train_loss;
+        let last = core.curve.points.last().unwrap().train_loss;
+        assert!(last < first - 0.02, "softmax loss did not descend: {first} -> {last}");
+        // held-out error is a real argmax rate in [0, 1]
+        let te_err = core.curve.points.last().unwrap().test_error;
+        assert!((0.0..=1.0).contains(&te_err), "test_error={te_err}");
+    }
+
+    #[test]
+    fn multiclass_replay_round_is_bit_identical() {
+        use crate::loss::LossKind;
+        let k = 3usize;
+        let ds = synthetic::multiclass_like(400, k, 93);
+        let mut cfg = mini_cfg(4);
+        cfg.loss = LossKind::Multiclass;
+        cfg.n_classes = k;
+        let mut live = core_on(&ds, &cfg);
+        let mut rng = Rng::new(29);
+        for _ in 0..4 {
+            let s = live.snapshot();
+            let tree = crate::tree::build_tree(
+                &live.binned.clone(),
+                &s.rows,
+                &s.grad,
+                &s.hess,
+                &cfg.tree,
+                &mut rng,
+            );
+            live.apply_tree(tree, s.version).unwrap();
+        }
+        let mut replayed = core_on(&ds, &cfg);
+        for round in live.forest.trees.chunks(k) {
+            let v = round[0].0;
+            let trees: Vec<Tree> = round.iter().map(|(_, t)| t.clone()).collect();
+            replayed.replay_round(trees, v).unwrap();
+        }
+        assert_eq!(replayed.f, live.f, "replayed multiclass F diverged");
+        assert_eq!(replayed.n_trees(), live.n_trees());
+        let lc: Vec<f64> = live.curve.points.iter().map(|p| p.train_loss).collect();
+        let rc: Vec<f64> = replayed.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_eq!(lc, rc, "multiclass loss curves diverged");
+    }
+
+    #[test]
+    fn multiclass_rejects_labels_outside_the_class_range() {
+        use crate::loss::LossKind;
+        let mut ds = synthetic::multiclass_like(100, 3, 95);
+        ds.y[7] = 5.0; // out of [0, 3)
+        let mut cfg = mini_cfg(2);
+        cfg.loss = LossKind::Multiclass;
+        cfg.n_classes = 3;
+        let binned = Arc::new(BinnedDataset::from_dataset(&ds, cfg.max_bins).unwrap());
+        let err = ServerCore::new(&cfg, &ds, binned, None, GradientEngine::native())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("row 7"), "{err}");
+        assert!(err.contains("[0, 3)"), "{err}");
     }
 
     #[test]

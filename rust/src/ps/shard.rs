@@ -32,10 +32,10 @@
 //!   `(seed, version, row)` (see `sampling/bernoulli.rs`), a pure
 //!   function of the key: any contiguous sharding reproduces the
 //!   sequential row set exactly.
-//! * *Targets* — grad/hess per row are `logistic::grad_hess_at` on the
-//!   updated margin, the same expression the whole-vector engine
-//!   compiles; rows are independent, so sharding cannot reorder
-//!   anything.
+//! * *Targets* — grad/hess per row are the configured scalar loss's
+//!   `grad_hess_at` ([`crate::loss::ScalarLoss`]) on the updated
+//!   margin, the same expression the whole-vector engine compiles; rows
+//!   are independent, so sharding cannot reorder anything.
 //! * *Eval* — f64 loss/error partials are taken per global
 //!   [`ROW_BLOCK`] (each partial starts from 0.0) and folded in block
 //!   order after the join ([`logistic::fold_eval_blocks`]); the serial
@@ -53,7 +53,7 @@ use std::sync::Mutex;
 
 use crate::data::BinnedDataset;
 use crate::forest::score::{self, ScoreScratch, ScratchPool, ROW_BLOCK};
-use crate::loss::logistic;
+use crate::loss::{logistic, ScalarLoss};
 use crate::sampling::{BernoulliSampler, SampleKey};
 use crate::tree::FlatTree;
 use crate::util::Executor;
@@ -116,6 +116,11 @@ pub struct AcceptInputs<'a> {
     pub sampler: &'a BernoulliSampler,
     /// Key of the sampling pass being produced (version = j + 1).
     pub key: SampleKey,
+    /// The scalar loss whose per-row `(w·l', w·l'')` expression and eval
+    /// sums the shard kernel compiles — the same dispatch value the
+    /// whole-vector engine holds, so fused and fallback paths agree
+    /// bitwise per loss.
+    pub loss: ScalarLoss,
     /// Compute grad/hess in-shard (native engine); off under AOT, where
     /// the server falls back to a whole-vector engine call.
     pub compute_target: bool,
@@ -194,7 +199,7 @@ pub(super) fn run_shard(
                 weights[i] = w;
                 rows.push(r as u32);
                 if inp.compute_target {
-                    let (g, h) = logistic::grad_hess_at(f[i], inp.y[r], w);
+                    let (g, h) = inp.loss.grad_hess_at(f[i], inp.y[r], w);
                     grad[i] = g;
                     hess[i] = h;
                 }
@@ -204,7 +209,8 @@ pub(super) fn run_shard(
         if inp.want_eval {
             let gend = start_row + end;
             eval[bi] =
-                logistic::eval_sums(&f[local..end], &inp.y[gstart..gend], &inp.m[gstart..gend]);
+                inp.loss
+                    .eval_sums(&f[local..end], &inp.y[gstart..gend], &inp.m[gstart..gend]);
         }
         bi += 1;
         local = end;
@@ -374,6 +380,7 @@ mod tests {
             m: &ds.m,
             sampler,
             key,
+            loss: ScalarLoss::Logistic,
             compute_target: true,
             want_eval,
         }
@@ -413,6 +420,42 @@ mod tests {
             assert_eq!(out.grad, gh.grad);
             assert_eq!(out.hess, gh.hess);
             assert_eq!(out.eval.unwrap(), ev_ref);
+        }
+    }
+
+    #[test]
+    fn fused_pass_matches_the_serial_recipe_for_every_scalar_loss() {
+        // the same four-sweep reference, per loss kernel: whatever the
+        // dispatch value, the fused pass must equal the whole-vector
+        // recipe bit for bit (0/1 labels double as regression targets)
+        let (ds, b, flat) = setup(1_100, 26);
+        let n = ds.n_rows();
+        let sampler = BernoulliSampler::uniform(&ds, 0.6);
+        let key = SampleKey { seed: 8, version: 4 };
+        for loss in [ScalarLoss::Squared, ScalarLoss::Huber(0.7)] {
+            let mut f_ref = vec![0.1f32; n];
+            score::add_tree_binned(
+                &flat,
+                &b,
+                0.2,
+                &mut f_ref,
+                &Executor::scoped(1),
+                &mut ScratchPool::new(),
+            );
+            let pass = sampler.draw(key);
+            let gh = loss.grad_hess_loss(&f_ref, &ds.y, &pass.weights);
+            let ev_ref = loss.eval_sums_blocked(&f_ref, &ds.y, &ds.m, ROW_BLOCK);
+
+            let mut inp = inputs(&ds, &b, Some(&flat), &sampler, key, true);
+            inp.loss = loss;
+            let mut f = vec![0.1f32; n];
+            let mut pool = ScratchPool::new();
+            let out = fused_accept_pass(&inp, &mut f, &Executor::scoped(3), &mut pool);
+            assert_eq!(f, f_ref, "{loss:?}: fused F diverged");
+            assert_eq!(out.weights, pass.weights, "{loss:?}");
+            assert_eq!(out.grad, gh.grad, "{loss:?}");
+            assert_eq!(out.hess, gh.hess, "{loss:?}");
+            assert_eq!(out.eval.unwrap(), ev_ref, "{loss:?}");
         }
     }
 

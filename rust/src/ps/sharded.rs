@@ -518,6 +518,7 @@ mod tests {
     use super::super::shard::fused_accept_pass;
     use super::*;
     use crate::data::{synthetic, Dataset};
+    use crate::loss::ScalarLoss;
     use crate::sampling::{BernoulliSampler, SampleKey};
     use crate::tree::{build_tree, FlatTree, TreeParams};
     use crate::util::{PoolMode, Rng};
@@ -749,6 +750,7 @@ mod tests {
             m: &ds.m,
             sampler: &sampler,
             key,
+            loss: ScalarLoss::Logistic,
             compute_target: true,
             want_eval: true,
         };
@@ -792,6 +794,7 @@ mod tests {
                 m: &ds.m,
                 sampler: &sampler,
                 key: SampleKey { seed: 2, version: v },
+                loss: ScalarLoss::Logistic,
                 compute_target: true,
                 want_eval: v % 2 == 0,
             };

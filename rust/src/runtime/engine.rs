@@ -10,6 +10,7 @@ use anyhow::Context;
 use anyhow::Result;
 
 use crate::loss::logistic::{self, GradHess};
+use crate::loss::ScalarLoss;
 
 use super::artifacts::Manifest;
 
@@ -56,6 +57,11 @@ pub struct GradientEngine {
     aot: Option<AotState>,
     #[cfg(not(feature = "aot"))]
     aot: Option<NoAot>,
+    /// The scalar loss the native path dispatches on. Always `Logistic`
+    /// in Aot mode — the HLO artifacts are compiled logistic kernels, so
+    /// [`GradientEngine::auto_for`] only attempts the AOT upgrade for
+    /// the logistic objective.
+    loss: ScalarLoss,
 }
 
 impl GradientEngine {
@@ -74,6 +80,7 @@ impl GradientEngine {
                 pad_y: Vec::new(),
                 pad_w: Vec::new(),
             }),
+            loss: ScalarLoss::Logistic,
         })
     }
 
@@ -84,14 +91,20 @@ impl GradientEngine {
         anyhow::bail!("this binary was built without the `aot` feature (PJRT/XLA bindings)")
     }
 
-    /// Pure-Rust engine.
+    /// Pure-Rust engine on the logistic loss (the historical default).
     pub fn native() -> GradientEngine {
-        GradientEngine { aot: None }
+        GradientEngine::native_for(ScalarLoss::Logistic)
     }
 
-    /// AOT if artifacts exist under `dir`, else native. This is what the
-    /// trainers use: `make artifacts` upgrades the hot path, its absence
-    /// never breaks the build.
+    /// Pure-Rust engine dispatching on `loss`.
+    pub fn native_for(loss: ScalarLoss) -> GradientEngine {
+        GradientEngine { aot: None, loss }
+    }
+
+    /// AOT if artifacts exist under `dir`, else native — logistic loss
+    /// (the objective the HLO artifacts are compiled for). `make
+    /// artifacts` upgrades the hot path, its absence never breaks the
+    /// build.
     pub fn auto(dir: &Path) -> GradientEngine {
         if Manifest::exists(dir) {
             match GradientEngine::aot(dir) {
@@ -102,6 +115,21 @@ impl GradientEngine {
             }
         }
         GradientEngine::native()
+    }
+
+    /// The engine for a training config's loss — what the trainers call.
+    /// Only `Some(Logistic)` may upgrade to AOT (the artifacts are
+    /// compiled logistic kernels); any other scalar loss runs native.
+    /// `None` is the multiclass objective, whose K-vector targets never
+    /// go through the scalar engine at all (`ps/server.rs` calls
+    /// `loss::multiclass` directly) — it gets an inert native engine so
+    /// [`GradientEngine::kind`] still reports a backend.
+    pub fn auto_for(dir: &Path, loss: Option<ScalarLoss>) -> GradientEngine {
+        match loss {
+            Some(ScalarLoss::Logistic) => GradientEngine::auto(dir),
+            Some(other) => GradientEngine::native_for(other),
+            None => GradientEngine::native(),
+        }
     }
 
     /// Which backend this engine currently runs on.
@@ -118,7 +146,7 @@ impl GradientEngine {
         assert_eq!(f.len(), y.len());
         assert_eq!(f.len(), w.len());
         match &mut self.aot {
-            None => Ok(logistic::grad_hess_loss(f, y, w)),
+            None => Ok(self.loss.grad_hess_loss(f, y, w)),
             #[cfg(feature = "aot")]
             Some(state) => state.grad_hess_loss(f, y, w),
             #[cfg(not(feature = "aot"))]
@@ -131,7 +159,7 @@ impl GradientEngine {
         assert_eq!(f.len(), y.len());
         assert_eq!(f.len(), w.len());
         match &mut self.aot {
-            None => Ok(logistic::eval_sums(f, y, w)),
+            None => Ok(self.loss.eval_sums(f, y, w)),
             #[cfg(feature = "aot")]
             Some(state) => state.eval_sums(f, y, w),
             #[cfg(not(feature = "aot"))]
@@ -200,10 +228,15 @@ impl GradientEngine {
         if self.supports_ranges() {
             assert_eq!(f.len(), y.len());
             assert_eq!(f.len(), w.len());
-            Ok(logistic::eval_sums_blocked(f, y, w, block))
+            Ok(self.loss.eval_sums_blocked(f, y, w, block))
         } else {
             self.eval_sums(f, y, w)
         }
+    }
+
+    /// The scalar loss this engine's native kernels dispatch on.
+    pub fn loss(&self) -> ScalarLoss {
+        self.loss
     }
 }
 
@@ -359,6 +392,40 @@ mod tests {
             e.eval_sums_blocked(&f, &y, &w, 512).unwrap(),
             logistic::eval_sums_blocked(&f, &y, &w, 512)
         );
+    }
+
+    #[test]
+    fn native_for_dispatches_on_the_requested_loss() {
+        let f = [0.5f32, -1.0, 2.0];
+        let y = [1.0f32, 0.0, 1.0];
+        let w = [1.0f32, 2.0, 0.5];
+        let mut e = GradientEngine::native_for(ScalarLoss::Squared);
+        assert_eq!(e.loss(), ScalarLoss::Squared);
+        let gh = e.grad_hess_loss(&f, &y, &w).unwrap();
+        let direct = crate::loss::squared::grad_hess_loss(&f, &y, &w);
+        assert_eq!(gh.grad, direct.grad);
+        assert_eq!(gh.hess, direct.hess);
+        let mut e = GradientEngine::native_for(ScalarLoss::Huber(0.8));
+        let gh = e.grad_hess_loss(&f, &y, &w).unwrap();
+        let direct = crate::loss::huber::grad_hess_loss(&f, &y, &w, 0.8);
+        assert_eq!(gh.grad, direct.grad);
+        assert_eq!(
+            e.eval_sums_blocked(&f, &y, &w, 2).unwrap(),
+            crate::loss::huber::eval_sums_blocked(&f, &y, &w, 0.8, 2)
+        );
+    }
+
+    #[test]
+    fn auto_for_only_upgrades_logistic() {
+        let dir = Path::new("/definitely/not/a/dir");
+        let e = GradientEngine::auto_for(dir, Some(ScalarLoss::Huber(1.0)));
+        assert_eq!(e.kind(), EngineKind::Native);
+        assert_eq!(e.loss(), ScalarLoss::Huber(1.0));
+        // multiclass (None) gets an inert native engine
+        let e = GradientEngine::auto_for(dir, None);
+        assert_eq!(e.kind(), EngineKind::Native);
+        let e = GradientEngine::auto_for(dir, Some(ScalarLoss::Logistic));
+        assert_eq!(e.loss(), ScalarLoss::Logistic);
     }
 
     // AOT-path numerics are covered by rust/tests/test_runtime.rs, which

@@ -29,3 +29,45 @@ pub mod swap;
 pub use queue::{Pending, RequestQueue, ServeRequest, ServeResponse};
 pub use service::{drive_replay, ReplayOutcome, ServeOptions, Service, ServiceStats};
 pub use swap::{ModelSlot, ServingModel};
+
+use anyhow::{bail, Context, Result};
+
+use crate::loss::LossKind;
+
+/// Gate a model's manifest loss name before it reaches a scalar scoring
+/// surface (`serve`, `predict`): any known scalar loss passes; a
+/// `multiclass` manifest (whose forest holds one tree per class per
+/// round, meaningless as a single margin) and an unknown name are both
+/// refused by name. `surface` prefixes the error so the caller's
+/// command is visible in it.
+pub fn require_scalar_loss(loss: &str, surface: &str) -> Result<LossKind> {
+    let kind = LossKind::parse(loss)
+        .with_context(|| format!("{surface}: model manifest names a loss this build cannot score"))?;
+    if kind == LossKind::Multiclass {
+        bail!(
+            "{surface}: model was trained with loss=multiclass — its forest holds one tree \
+             per class per round and the scalar margin path cannot score it"
+        );
+    }
+    Ok(kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_losses_pass_the_serving_gate() {
+        for name in ["logistic", "squared", "huber"] {
+            assert_eq!(require_scalar_loss(name, "serve").unwrap().as_str(), name);
+        }
+    }
+
+    #[test]
+    fn multiclass_and_unknown_losses_are_refused_by_name() {
+        let err = format!("{:#}", require_scalar_loss("multiclass", "serve").unwrap_err());
+        assert!(err.contains("serve") && err.contains("loss=multiclass"), "{err}");
+        let err = format!("{:#}", require_scalar_loss("hinge", "predict").unwrap_err());
+        assert!(err.contains("predict") && err.contains("hinge"), "{err}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Analytic convergence model for stale boosting pushes — the bridge
+//! between a simulated staleness trace and a trees-to-target-error
+//! count, used by the fig9-style fixed-vs-adaptive step sweep
+//! (`experiments/adaptive.rs`).
+//!
+//! Model (DESIGN.md §17): one accepted push at effective step `v_eff`
+//! built against a target `τ` versions old multiplies the optimality
+//! gap by the quadratic upper bound
+//!
+//! ```text
+//! m(v_eff, τ) = 1 − 2·v_eff + v_eff²·(1 + τ)
+//! ```
+//!
+//! — the standard `(1 − v)²` contraction of a fresh functional-gradient
+//! step, plus a curvature term inflated by staleness (a stale direction
+//! is still a descent direction in expectation, but its second-order
+//! error grows with how far the margin vector moved since the pull;
+//! this is the shape behind the paper's Proposition 1 step-length
+//! condition). Under `step=fixed` the multiplier exceeds 1 — divergence
+//! — once `τ > (2 − v)·(1 − v)/v + …`, i.e. at any fixed `v` there is a
+//! staleness beyond which pushes hurt. Under `step=adaptive`
+//! (`v_eff = v/(1+τ)`) the multiplier becomes
+//! `1 − v·(2 − v)/(1 + τ)`, strictly below 1 for every τ whenever
+//! `0 < v < 2`: adaptive steps never diverge, they just slow down.
+//!
+//! The model is deliberately deterministic — a pure fold over the τ
+//! trace — so the sweep is replayable and testable without RNG.
+
+use crate::config::StepMode;
+
+/// One-push contraction factor of the optimality gap at effective step
+/// `v_eff` and staleness `τ`, clamped at 0 (a gap cannot go negative).
+pub fn contraction(v_eff: f64, tau: u64) -> f64 {
+    let m = 1.0 - 2.0 * v_eff + v_eff * v_eff * (1.0 + tau as f64);
+    m.max(0.0)
+}
+
+/// Fold the contraction over an accepted-push staleness trace: the
+/// modelled optimality gap after each push, starting from 1.0. The
+/// effective step of push `j` is `mode.effective(v, trace[j])` — the
+/// same rule the live server applies (`config::StepMode::effective`).
+pub fn gap_curve(trace: &[u64], v: f32, mode: StepMode) -> Vec<f64> {
+    let mut gap = 1.0f64;
+    trace
+        .iter()
+        .map(|&tau| {
+            let v_eff = mode.effective(v, tau) as f64;
+            gap *= contraction(v_eff, tau);
+            gap
+        })
+        .collect()
+}
+
+/// Pushes needed to drive the modelled gap to `target` (< 1.0) under
+/// the given step rule, or `None` if the trace ends (or the model
+/// plateaus/diverges) before reaching it — the y-axis of the
+/// fixed-vs-adaptive sweep.
+pub fn trees_to_target(trace: &[u64], v: f32, mode: StepMode, target: f64) -> Option<usize> {
+    let mut gap = 1.0f64;
+    for (j, &tau) in trace.iter().enumerate() {
+        let v_eff = mode.effective(v, tau) as f64;
+        gap *= contraction(v_eff, tau);
+        if gap <= target {
+            return Some(j + 1);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_pushes_contract_identically_under_both_rules() {
+        // τ ≡ 0: adaptive divides by 1.0, so the two rules are the same
+        // model point for point.
+        let trace = vec![0u64; 40];
+        let fixed = gap_curve(&trace, 0.3, StepMode::Fixed);
+        let adaptive = gap_curve(&trace, 0.3, StepMode::Adaptive);
+        assert_eq!(fixed, adaptive);
+        assert!(fixed.last().unwrap() < &1e-6, "fresh steps must converge fast");
+    }
+
+    #[test]
+    fn fixed_steps_diverge_past_the_proposition_1_staleness() {
+        // v = 0.3: m(0.3, τ) = 1 − 0.6 + 0.09(1+τ) > 1 ⇔ τ > 5.67
+        assert!(contraction(0.3, 0) < 1.0);
+        assert!(contraction(0.3, 5) < 1.0);
+        assert!(contraction(0.3, 7) > 1.0, "stale fixed push must inflate the gap");
+        let trace = vec![8u64; 200];
+        assert_eq!(trees_to_target(&trace, 0.3, StepMode::Fixed, 0.1), None);
+    }
+
+    #[test]
+    fn adaptive_steps_contract_at_every_staleness() {
+        for tau in [0u64, 1, 4, 16, 64, 1024] {
+            let v_eff = StepMode::Adaptive.effective(0.3, tau) as f64;
+            let m = contraction(v_eff, tau);
+            assert!(m < 1.0, "τ={tau}: adaptive multiplier {m} must contract");
+        }
+        // ...so adaptive reaches any target on a trace where fixed diverges
+        let trace = vec![8u64; 2_000];
+        let adaptive = trees_to_target(&trace, 0.3, StepMode::Adaptive, 0.1).unwrap();
+        assert!(adaptive > 0);
+        assert_eq!(trees_to_target(&trace, 0.3, StepMode::Fixed, 0.1), None);
+    }
+
+    #[test]
+    fn staler_traces_need_more_adaptive_trees() {
+        let fresh = trees_to_target(&vec![0u64; 500], 0.3, StepMode::Adaptive, 0.01).unwrap();
+        let stale = trees_to_target(&vec![6u64; 500], 0.3, StepMode::Adaptive, 0.01).unwrap();
+        assert!(
+            stale > fresh,
+            "staleness must cost trees even under adaptive ({stale} vs {fresh})"
+        );
+    }
+}

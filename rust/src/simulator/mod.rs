@@ -35,10 +35,12 @@
 //! simulated shapes inherit the real compute/communication ratios.
 
 pub mod cluster;
+pub mod convergence;
 pub mod models;
 pub mod speedup;
 
 pub use cluster::{ClusterSpec, FailureModel, NetworkSpec, PhaseTimes};
+pub use convergence::{contraction, gap_curve, trees_to_target};
 pub use models::{
     simulate_async_ps, simulate_async_ps_churn, simulate_dimboost, simulate_lightgbm_fp,
     simulate_sharded_ps, simulate_sharded_ps_trace, SimResult,

@@ -109,6 +109,48 @@ impl Tree {
         }
     }
 
+    /// Node index of the leaf a binned training row reaches — the same
+    /// bin-space walk as [`Tree::predict_binned`], returning the leaf's
+    /// position instead of its value. The multiclass accept path routes
+    /// every row once and then refits K per-class values onto the shared
+    /// structure (`ps/server.rs`).
+    #[inline]
+    pub fn leaf_of_binned(&self, binned: &BinnedDataset, row: usize) -> u32 {
+        let mut i = 0u32;
+        loop {
+            match &self.nodes[i as usize] {
+                Node::Leaf { .. } => return i,
+                Node::Split {
+                    feature,
+                    bin,
+                    left,
+                    right,
+                    ..
+                } => {
+                    let b = binned.bin_of(row, *feature);
+                    i = if b <= *bin { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Clone this tree's structure with every leaf's value replaced by
+    /// `value_of(node_index)` — the multiclass per-class leaf refit
+    /// (split nodes are copied verbatim, so the clone routes rows
+    /// identically to `self`).
+    pub fn with_leaf_values(&self, value_of: &mut dyn FnMut(usize) -> f32) -> Tree {
+        let nodes = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| match n {
+                Node::Leaf { .. } => Node::Leaf { value: value_of(i) },
+                split => split.clone(),
+            })
+            .collect();
+        Tree { nodes }
+    }
+
     /// Predict from a raw sparse row (threshold-space traversal — used for
     /// held-out data binned with no mapper). Reference implementation;
     /// see [`Tree::predict_binned`] on where the batch paths live.
@@ -364,6 +406,43 @@ mod tests {
         let mut t = stump();
         t.nodes.push(Node::Leaf { value: 9.0 }); // orphan
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn leaf_routing_and_refit_share_the_prediction_walk() {
+        let x = CsrMatrix::from_dense(4, 1, &[1.0, 3.0, 0.0, 5.0]).unwrap();
+        let ds = Dataset::new("t", x.clone(), vec![0.0; 4]);
+        let b = BinnedDataset::from_dataset(&ds, 16).unwrap();
+        let bin = b.mappers[0].bin_of(2.0);
+        let t = Tree {
+            nodes: vec![
+                Node::Split {
+                    feature: 0,
+                    bin,
+                    threshold: b.mappers[0].upper_of(bin),
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        };
+        // the routed leaf's value is exactly the prediction
+        for r in 0..4 {
+            let leaf = t.leaf_of_binned(&b, r) as usize;
+            match &t.nodes[leaf] {
+                Node::Leaf { value } => assert_eq!(*value, t.predict_binned(&b, r)),
+                _ => panic!("leaf_of_binned returned a split"),
+            }
+        }
+        // refit keeps structure, replaces values by node index
+        let refit = t.with_leaf_values(&mut |i| i as f32 * 10.0);
+        assert_eq!(refit.n_nodes(), t.n_nodes());
+        assert_eq!(refit.nodes[1], Node::Leaf { value: 10.0 });
+        assert_eq!(refit.nodes[2], Node::Leaf { value: 20.0 });
+        for r in 0..4 {
+            assert_eq!(refit.leaf_of_binned(&b, r), t.leaf_of_binned(&b, r), "row {r}");
+        }
     }
 
     #[test]

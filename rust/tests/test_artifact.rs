@@ -16,6 +16,8 @@ use asgbdt::io::artifact::{
     self, fnv64, hex16, ArtifactMeta, SgbdtError, MAGIC, SCHEMA_VERSION,
 };
 use asgbdt::io::Json;
+use asgbdt::loss::LossKind;
+use asgbdt::serve::require_scalar_loss;
 use asgbdt::util::{Executor, PoolMode, Rng};
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -324,6 +326,69 @@ fn resume_refuses_a_checkpoint_from_another_mode() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("trainer stanza"), "{err}");
+}
+
+// ------------------------------------------------------------ loss metadata
+
+#[test]
+fn manifest_round_trips_every_loss_name() {
+    let ds = synthetic::realsim_like(200, 17);
+    let rep = trained(&ds);
+    let flat = FlatForest::from_forest(&rep.forest);
+    for name in ["logistic", "squared", "huber", "multiclass"] {
+        let mut m = meta();
+        m.loss = name.to_string();
+        let bytes = artifact::to_bytes(&flat, &rep.cuts, &m);
+        let a = artifact::load_bytes(&bytes).unwrap();
+        assert_eq!(a.loss, name, "manifest dropped the loss name");
+    }
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_another_loss() {
+    // a squared-loss checkpoint's margins are squared-loss margins;
+    // resuming them under huber would silently change what every
+    // F-update means, so restore refuses by naming both losses
+    let ds = synthetic::regression_like(220, 19);
+    let dir = tmp_dir("resume_loss");
+    let mut sq = resume_cfg(TrainMode::Serial, &dir);
+    sq.loss = LossKind::Squared;
+    sq.n_trees = 30;
+    sq.checkpoint_path = Some(dir.join("ck_sq.sgbdt"));
+    train(&sq, &ds, None).unwrap();
+    let ck = artifact::load(&artifact::checkpoint_file(
+        sq.checkpoint_path.as_ref().unwrap(),
+        20,
+    ))
+    .unwrap();
+    assert_eq!(ck.loss, "squared", "checkpoints must record their loss");
+    let mut hu = sq.clone();
+    hu.loss = LossKind::Huber;
+    let err = train_resumed(&hu, &ds, None, Some(&ck)).unwrap_err().to_string();
+    assert!(
+        err.contains("loss=squared") && err.contains("loss=huber"),
+        "error must name both losses: {err}"
+    );
+}
+
+#[test]
+fn the_serving_gate_refuses_a_multiclass_artifact_by_name() {
+    let ds = synthetic::realsim_like(200, 23);
+    let rep = trained(&ds);
+    let mut m = meta();
+    m.loss = "multiclass".to_string();
+    let bytes = artifact::to_bytes(&FlatForest::from_forest(&rep.forest), &rep.cuts, &m);
+    let a = artifact::load_bytes(&bytes).unwrap();
+    // the artifact itself loads fine — only the scalar scoring surfaces
+    // (serve/predict) refuse it, by name
+    let err = format!("{:#}", require_scalar_loss(&a.loss, "serve").unwrap_err());
+    assert!(
+        err.contains("serve") && err.contains("loss=multiclass"),
+        "{err}"
+    );
+    for scalar in ["logistic", "squared", "huber"] {
+        assert!(require_scalar_loss(scalar, "serve").is_ok());
+    }
 }
 
 // ----------------------------------------------------------- golden fixture
